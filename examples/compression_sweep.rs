@@ -1,0 +1,58 @@
+//! Compare every quantizer in the library (PQ, OPQ, RQ, LSQ, QINCo2) on
+//! one dataset flavor — a compact version of the paper's Table 3.
+//!
+//! Run: `cargo run --release --example compression_sweep [-- deep]`
+
+use qinco2::data::{self, Flavor};
+use qinco2::experiments as exp;
+use qinco2::metrics::recall_at;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::quantizers::{lsq::Lsq, opq::Opq, pq::Pq, rq::Rq, VectorQuantizer};
+use qinco2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let flavor = std::env::args()
+        .nth(1)
+        .and_then(|s| Flavor::parse(&s))
+        .unwrap_or(Flavor::Deep);
+    let ds = data::load(flavor, 5_000, 5_000, 500, 32, 123);
+    println!("=== compression sweep on {}-like (d=32, 8 codes, K=64) ===", flavor.name());
+    println!("{:<10} {:>10} {:>8} {:>12}", "method", "MSE", "R@1", "train+enc(s)");
+
+    let report = |label: &str, dec: &qinco2::tensor::Matrix, secs: f64, ds: &data::Dataset| {
+        let mse = qinco2::tensor::mse(&ds.database, dec);
+        let res = data::brute_force_gt_k(dec, &ds.queries, 1);
+        let r1 = recall_at(&res, &ds.ground_truth, 1);
+        println!("{label:<10} {mse:>10.5} {:>7.1}% {secs:>12.1}", 100.0 * r1);
+    };
+
+    let t = std::time::Instant::now();
+    let pq = Pq::train(&ds.train, 8, 64, 1);
+    report("PQ", &pq.decode(&pq.encode(&ds.database)), t.elapsed().as_secs_f64(), &ds);
+
+    let t = std::time::Instant::now();
+    let opq = Opq::train(&ds.train, 8, 64, 3, 2);
+    report("OPQ", &opq.decode(&opq.encode(&ds.database)), t.elapsed().as_secs_f64(), &ds);
+
+    let t = std::time::Instant::now();
+    let rq = Rq::train(&ds.train, 8, 64, 5, 3);
+    report("RQ(B=5)", &rq.decode(&rq.encode(&ds.database)), t.elapsed().as_secs_f64(), &ds);
+
+    let t = std::time::Instant::now();
+    let lsq = Lsq::train(&ds.train, 8, 64, 3, 4);
+    report("LSQ", &lsq.decode(&lsq.encode(&ds.database)), t.elapsed().as_secs_f64(), &ds);
+
+    // QINCo2 through the three-layer stack (prefix of the M=16 model)
+    let t = std::time::Instant::now();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let cfg = TrainCfg { epochs: 6, a: 8, b: 8, ..Default::default() };
+    let params = exp::trained_model(&mut engine, "qinco2_xs",
+                                    &format!("{}_sweep", flavor.name()), &ds.train, &cfg)?;
+    let codec = Codec::new(&engine, "qinco2_xs", 16, 16)?;
+    let (codes, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+    let partials = codec.decode_partial(&mut engine, &params, &codes)?;
+    report("QINCo2", &partials[7], t.elapsed().as_secs_f64(), &ds);
+
+    println!("\n(expected ordering, as in paper Table 3: PQ < OPQ < RQ < LSQ < QINCo2)");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Serving demo: run the vLLM-router-style coordinator (ingress queue →
+//! dynamic batcher → worker fan-out) over a built search index, fire a
+//! load burst, and report QPS + latency percentiles (the §B experiment).
+//!
+//! Run: `cargo run --release --example serving`
+
+use qinco2::data::{self, Flavor};
+use qinco2::experiments as exp;
+use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::runtime::Engine;
+use qinco2::server::{Router, ServerCfg};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let ds = data::load(Flavor::Deep, 6_000, 20_000, 1_000, 32, 777);
+    let bcfg = BuildCfg { k_ivf: 128, m_tilde: 2, ..Default::default() };
+    let ivf = qinco2::index::ivf::Ivf::build(&ds.train, &ds.train, bcfg.k_ivf, bcfg.seed);
+    let residuals = ivf.residuals(&ds.train);
+    let cfg = TrainCfg { epochs: 5, a: 8, b: 8, seed: 0xA11CE ^ 0x1F, ..Default::default() };
+    let params = exp::trained_model(&mut engine, "qinco2_xs", "deep_ivfres_srv", &residuals, &cfg)?;
+    let codec = Codec::new(&engine, "qinco2_xs", 8, 8)?;
+    let index = Arc::new(SearchIndex::build(
+        &mut engine, &codec, params, &ds.train, &ds.database, &bcfg)?);
+
+    for workers in [1usize, 4, qinco2::util::pool::default_threads()] {
+        let router = Router::start(index.clone(), ServerCfg { workers, ..Default::default() });
+        let sp = SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 };
+        let n = 2_000;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n)
+            .map(|i| router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp))
+            .collect();
+        for rx in pending {
+            rx.recv().expect("worker died");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let st = router.stats();
+        println!(
+            "workers {workers:2}: {:7.0} QPS | latency mean {:>9.2?} p50 {:>9.2?} p99 {:>9.2?}",
+            n as f64 / secs, st.mean_latency, st.p50, st.p99
+        );
+        router.shutdown();
+    }
+    println!("serving demo OK");
+    Ok(())
+}

@@ -1,0 +1,336 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts + manifest.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust coordinator
+loads `artifacts/<name>.hlo.txt` through the PJRT CPU client and never
+imports Python again.
+
+Interchange format is HLO text, NOT `lowered.compile()`/`.serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every artifact is a pure function: (params..., data...) -> outputs. The
+manifest (artifacts/manifest.json) is the ABI: it lists, per artifact, the
+exact input/output tensor names, shapes and dtypes in positional order,
+plus per-model parameter inventories so Rust can allocate/initialize the
+parameter store itself.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_specs(cfg):
+    return [_spec(n, s) for n, s in M.param_shapes(cfg).items()]
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders: each returns (jitted_fn, example_args, in_specs, out_specs)
+# ---------------------------------------------------------------------------
+
+
+def _params_struct(cfg):
+    return {n: jax.ShapeDtypeStruct(s, jnp.float32)
+            for n, s in M.param_shapes(cfg).items()}
+
+
+def _build_encode(cfg, A, B, n):
+    names = M.param_names(cfg)
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        return M.encode(params, args[-1], A, B)
+
+    struct = _params_struct(cfg)
+    ex = [struct[n_] for n_ in names] + [
+        jax.ShapeDtypeStruct((n, cfg.d), jnp.float32)]
+    ins = _param_specs(cfg) + [_spec("x", (n, cfg.d))]
+    outs = [_spec("codes", (n, cfg.M), "i32"), _spec("xhat", (n, cfg.d)),
+            _spec("err", (n,))]
+    return fn, ex, ins, outs
+
+
+_DEC_NAMES = ["codebooks"] + M._F_NAMES
+
+
+def _build_decode(cfg, n, partial=False):
+    def fn(*args):
+        params = dict(zip(_DEC_NAMES, args[:-1]))
+        if partial:
+            return (M.decode_partial(params, args[-1]),)
+        return (M.decode(params, args[-1]),)
+
+    struct = _params_struct(cfg)
+    ex = [struct[n_] for n_ in _DEC_NAMES] + [
+        jax.ShapeDtypeStruct((n, cfg.M), jnp.int32)]
+    shapes = M.param_shapes(cfg)
+    ins = [_spec(n_, shapes[n_]) for n_ in _DEC_NAMES] + [
+        _spec("codes", (n, cfg.M), "i32")]
+    if partial:
+        outs = [_spec("xhat_partial", (cfg.M, n, cfg.d))]
+    else:
+        outs = [_spec("xhat", (n, cfg.d))]
+    return fn, ex, ins, outs
+
+
+def _build_train(cfg, n, optimizer):
+    names = M.param_names(cfg)
+    np_ = len(names)
+
+    def fn(*args):
+        params = dict(zip(names, args[:np_]))
+        m_state = dict(zip(names, args[np_:2 * np_]))
+        v_state = dict(zip(names, args[2 * np_:3 * np_]))
+        x, codes, lr, t = args[3 * np_:]
+        new_p, new_m, new_v, loss, step_losses, res_mean, res_m2 = M.train_step(
+            params, m_state, v_state, x, codes, lr, t, optimizer=optimizer)
+        flat = [new_p[n_] for n_ in names] + [new_m[n_] for n_ in names] \
+            + [new_v[n_] for n_ in names]
+        return tuple(flat) + (loss, step_losses, res_mean, res_m2)
+
+    struct = _params_struct(cfg)
+    pex = [struct[n_] for n_ in names]
+    ex = pex * 3 + [
+        jax.ShapeDtypeStruct((n, cfg.d), jnp.float32),
+        jax.ShapeDtypeStruct((n, cfg.M), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    ps = _param_specs(cfg)
+    ins = ps \
+        + [_spec("m_" + s["name"], s["shape"]) for s in ps] \
+        + [_spec("v_" + s["name"], s["shape"]) for s in ps] \
+        + [_spec("x", (n, cfg.d)), _spec("codes", (n, cfg.M), "i32"),
+           _spec("lr", ()), _spec("t", ())]
+    outs = [_spec("new_" + s["name"], s["shape"]) for s in ps] \
+        + [_spec("new_m_" + s["name"], s["shape"]) for s in ps] \
+        + [_spec("new_v_" + s["name"], s["shape"]) for s in ps] \
+        + [_spec("loss", ()), _spec("step_losses", (cfg.M,)),
+           _spec("res_mean", (cfg.M, cfg.d)), _spec("res_m2", (cfg.M, cfg.d))]
+    return fn, ex, ins, outs
+
+
+def _build_f_step(cfg, n):
+    """Single f_theta application (per-step weights) — runtime smoke tests
+    and Table S2 decode micro-timing."""
+
+    def fn(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w):
+        return (M.f_eval(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w),)
+
+    d, de, dh, L = cfg.d, cfg.de, cfg.dh, cfg.L
+    shapes = [(n, d), (n, d), (d, de), (de + d, de), (de,),
+              (L, de, dh), (L, dh, de), (de, d)]
+    names = ["c", "xhat", "in_w", "cond_w", "cond_b", "up_w", "down_w", "out_w"]
+    ex = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    ins = [_spec(nm, s) for nm, s in zip(names, shapes)]
+    outs = [_spec("f", (n, d))]
+    return fn, ex, ins, outs
+
+
+# ---------------------------------------------------------------------------
+# Catalogs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Art:
+    name: str
+    kind: str  # encode | decode | decode_partial | train_adamw | train_adam | f_step
+    model: str
+    A: int = 0
+    B: int = 0
+    N: int = 0
+
+
+# Model registry: scaled-down counterparts of the paper's Table 2, sized
+# for CPU training (see DESIGN.md §Substitutions). d=32 synthetic data,
+# K=64 codebooks, M=16 steps (8-code operating points use prefixes, which
+# the per-step loss trains directly — Fig. S3 justifies multi-rate use).
+MODELS: Dict[str, M.ModelCfg] = {
+    # tiny config for unit/integration tests
+    "test": M.ModelCfg(d=8, M=3, K=8, L=1, de=8, dh=16),
+    "test_g": M.ModelCfg(d=8, M=2, K=8, L=1, de=8, dh=16, Ls=1, dhg=16),
+    # "QINCo (reproduction)": de = d, QINCo-ish width, greedy encoding
+    "qinco1": M.ModelCfg(d=32, M=16, K=64, L=2, de=32, dh=64),
+    # QINCo2 improved architecture (de != d, wider, deeper)
+    "qinco2_xs": M.ModelCfg(d=32, M=16, K=64, L=2, de=48, dh=96),
+    "qinco2_s": M.ModelCfg(d=32, M=16, K=64, L=4, de=48, dh=96),
+    "qinco2_m": M.ModelCfg(d=32, M=16, K=64, L=8, de=64, dh=128),
+    # shorter-code variants of XS for the multi-rate study (Fig. S3)
+    "qinco2_xs_m8": M.ModelCfg(d=32, M=8, K=64, L=2, de=48, dh=96),
+    "qinco2_xs_m4": M.ModelCfg(d=32, M=4, K=64, L=2, de=48, dh=96),
+}
+
+# Fig. 5 sweep grid (L, de, dh)
+for _L in (1, 2, 4):
+    for _de, _dh in ((32, 64), (48, 96), (64, 128)):
+        MODELS[f"sw_L{_L}_de{_de}"] = M.ModelCfg(
+            d=32, M=8, K=64, L=_L, de=_de, dh=_dh)
+# Fig. 4-left: pre-selection network depth L_s
+for _ls in (1, 2):
+    MODELS[f"qinco2_xs_Ls{_ls}"] = M.ModelCfg(
+        d=32, M=16, K=64, L=2, de=48, dh=96, Ls=_ls, dhg=64)
+
+
+def _model_arts(model, train_ab, eval_abs, n_enc=512, n_dec=512, n_train=256,
+                optimizers=("adamw",)):
+    """Standard artifact set for one model."""
+    arts = []
+    seen = set()
+    for a, b in [train_ab] + list(eval_abs):
+        if (a, b) in seen:
+            continue
+        seen.add((a, b))
+        arts.append(Art(f"enc_{model}_A{a}_B{b}_N{n_enc}", "encode", model,
+                        a, b, n_enc))
+    arts.append(Art(f"dec_{model}_N{n_dec}", "decode", model, N=n_dec))
+    arts.append(Art(f"dec_{model}_N32", "decode", model, N=32))
+    arts.append(Art(f"decp_{model}_N{n_dec}", "decode_partial", model, N=n_dec))
+    for opt in optimizers:
+        arts.append(Art(f"train_{opt}_{model}_N{n_train}", f"train_{opt}",
+                        model, N=n_train))
+    return arts
+
+
+def catalog(which: str) -> List[Art]:
+    if which == "test":
+        arts = []
+        arts += _model_arts("test", (4, 4), [(8, 1), (4, 1)], n_enc=16,
+                            n_dec=16, n_train=16,
+                            optimizers=("adamw", "adam"))
+        arts += _model_arts("test_g", (4, 2), [], n_enc=16, n_dec=16,
+                            n_train=16)
+        arts.append(Art("fstep_test_N16", "f_step", "test", N=16))
+        return arts
+    if which == "base":
+        arts = []
+        # QINCo reproduction: exact greedy (A=K, B=1), old + new recipe
+        arts += _model_arts("qinco1", (64, 1), [], optimizers=("adamw", "adam"))
+        # QINCo2: pre-selection-only (A8 B1), beam (A8 B8), larger eval beam
+        arts += _model_arts("qinco2_xs", (8, 8),
+                            [(8, 1), (16, 16), (64, 1), (8, 4)])
+        arts += _model_arts("qinco2_s", (8, 8), [(16, 16)])
+        arts += _model_arts("qinco2_m", (8, 8), [(16, 16)])
+        arts += _model_arts("qinco2_xs_m8", (8, 8), [(16, 16)])
+        arts += _model_arts("qinco2_xs_m4", (8, 8), [(16, 16)])
+        arts.append(Art("fstep_qinco2_xs_N512", "f_step", "qinco2_xs", N=512))
+        # single-vector-ish encode for latency-style timing (Table S2)
+        arts.append(Art("enc_qinco2_xs_A8_B8_N32", "encode", "qinco2_xs",
+                        8, 8, 32))
+        return arts
+    if which == "sweep":  # Fig. 5
+        arts = []
+        for name in MODELS:
+            if name.startswith("sw_"):
+                arts += _model_arts(name, (8, 8),
+                                    [(4, 1), (8, 4), (16, 16), (16, 32)])
+        return arts
+    if which == "fig4":  # pre-selection depth + enc/dec tradeoff
+        arts = []
+        for name in ("qinco2_xs_Ls1", "qinco2_xs_Ls2"):
+            arts += _model_arts(name, (8, 8), [(4, 4), (16, 16)])
+        # extra A/B eval points on the base models (Fig. 4 right, S4, S5)
+        for a, b in [(2, 8), (4, 8), (16, 8), (8, 2), (8, 16), (8, 32),
+                     (2, 16), (4, 16), (32, 16), (16, 64)]:
+            arts.append(Art(f"enc_qinco2_xs_A{a}_B{b}_N512", "encode",
+                            "qinco2_xs", a, b, 512))
+        return arts
+    raise ValueError(f"unknown catalog {which!r}")
+
+
+BUILDERS = {
+    "encode": lambda cfg, a: _build_encode(cfg, a.A, a.B, a.N),
+    "decode": lambda cfg, a: _build_decode(cfg, a.N),
+    "decode_partial": lambda cfg, a: _build_decode(cfg, a.N, partial=True),
+    "train_adamw": lambda cfg, a: _build_train(cfg, a.N, "adamw"),
+    "train_adam": lambda cfg, a: _build_train(cfg, a.N, "adam"),
+    "f_step": lambda cfg, a: _build_f_step(cfg, a.N),
+}
+
+
+def build(arts: List[Art], out_dir: str, manifest_path: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": {}, "artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    used_models = {a.model for a in arts}
+    for name in used_models:
+        cfg = MODELS[name]
+        manifest["models"][name] = {
+            "cfg": dataclasses.asdict(cfg),
+            "params": _param_specs(cfg),
+            "num_params": M.num_params(cfg),
+        }
+
+    existing = {a["name"] for a in manifest["artifacts"]}
+    for art in arts:
+        if art.name in existing:
+            continue
+        cfg = MODELS[art.model]
+        t0 = time.time()
+        fn, ex, ins, outs = BUILDERS[art.kind](cfg, art)
+        lowered = jax.jit(fn).lower(*ex)
+        text = to_hlo_text(lowered)
+        fname = f"{art.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": art.name, "file": fname, "kind": art.kind,
+            "model": art.model, "A": art.A, "B": art.B, "N": art.N,
+            "inputs": ins, "outputs": outs,
+        })
+        print(f"  {art.name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)")
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO text + manifest")
+    ap.add_argument("--catalog", default="test,base",
+                    help="comma-separated catalogs: test,base,sweep,fig4")
+    args = ap.parse_args()
+
+    arts, seen = [], set()
+    for c in args.catalog.split(","):
+        for a in catalog(c.strip()):
+            if a.name not in seen:
+                seen.add(a.name)
+                arts.append(a)
+    print(f"lowering {len(arts)} artifacts -> {args.out}")
+    t0 = time.time()
+    build(arts, args.out, os.path.join(args.out, "manifest.json"))
+    print(f"done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: pre-selection distance scoring.
+
+Computes the [rows, K] matrix of squared L2 distances between residuals
+and the pre-selection codebook C~^m (paper Eq. 6 with L_s = 0, where
+g(c|x) = c). Expressed as a norm-expanded matmul so the MXU does the heavy
+lifting: ||r - c||^2 = ||r||^2 - 2 r.c + ||c||^2.
+
+The top-A cut itself is done outside the kernel with jax.lax.top_k, which
+XLA lowers to an efficient sort-free selection.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# large tile => grid of 1 on CPU artifacts (see qinco_step.DEFAULT_TILE)
+DEFAULT_TILE = 32768
+
+
+def _kernel(r_ref, cb_ref, o_ref):
+    r = r_ref[...]
+    cb = cb_ref[...]
+    rn = jnp.sum(r * r, axis=-1, keepdims=True)
+    cn = jnp.sum(cb * cb, axis=-1)[None, :]
+    o_ref[...] = rn - 2.0 * (r @ cb.T) + cn
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def presel_scores(r, cb, tile: int = DEFAULT_TILE):
+    """[N, d] residuals x [K, d] codebook -> [N, K] squared distances."""
+    n, d = r.shape
+    k = cb.shape[0]
+    t = min(tile, max(n, 1))
+    n_pad = (-n) % t
+    if n_pad:
+        r = jnp.concatenate([r, jnp.zeros((n_pad, d), r.dtype)], axis=0)
+    rows = r.shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(rows // t,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # codebook VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), r.dtype),
+        interpret=True,
+    )(r, cb)
+    return out[:n]

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: fused QINCo2 candidate evaluator f_theta.
+
+This is the compute hot-spot of the whole system: during encoding every
+vector evaluates f_theta over A pre-selected candidates for each of B beam
+hypotheses at each of M steps, i.e. rows = N*B*A evaluations of a small
+residual MLP. The kernel fuses the whole network (input projection,
+concat-conditioning, L residual blocks, output projection, final codeword
+skip) over a tile of candidate rows so the intermediate activations never
+leave VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the candidate
+rows; per-step weights (a few hundred KiB) use a constant index_map so
+they stay VMEM-resident across the grid, and each tile issues
+[TILE, de] x [de, dh] MXU matmuls. interpret=True is mandatory here — the
+CPU PJRT client cannot execute Mosaic custom-calls — so correctness flows
+through the interpreter while the BlockSpec structure documents the real
+HBM<->VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of candidate rows processed per grid step.
+#
+# TPU sizing: 512 rows x de floats of activations (3 live tensors) stays
+# well under VMEM for every config in the catalog (see DESIGN.md §Perf),
+# so 512 is the tile the BlockSpec schedule is designed around.
+#
+# CPU-artifact sizing: interpret=True lowers the grid into a serial XLA
+# while-loop of small matmuls, which the CPU backend cannot parallelize.
+# A large tile (grid of 1 for every catalog shape) turns the kernel into
+# a handful of big matmuls that Eigen threads across cores — measured 20x
+# faster end-to-end encode (EXPERIMENTS.md §Perf L1). The TPU tiling
+# remains documented/enforced by vmem_footprint_bytes.
+DEFAULT_TILE = 32768
+TPU_TILE = 512
+
+
+def _kernel(c_ref, xhat_ref, in_w_ref, cond_w_ref, cond_b_ref, up_w_ref,
+            down_w_ref, out_w_ref, o_ref):
+    c = c_ref[...]
+    xh = xhat_ref[...]
+    c_emb = c @ in_w_ref[...]
+    v = c_emb + (jnp.concatenate([c_emb, xh], axis=-1) @ cond_w_ref[...]
+                 + cond_b_ref[...])
+    num_blocks = up_w_ref.shape[0]
+    for i in range(num_blocks):  # static unroll over residual blocks
+        v = v + jnp.maximum(v @ up_w_ref[i], 0.0) @ down_w_ref[i]
+    o_ref[...] = c + v @ out_w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def f_theta(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w,
+            tile: int = DEFAULT_TILE):
+    """Fused f_theta(c | xhat) over a batch of candidate rows.
+
+    Shapes as in kernels.ref.f_theta_ref. Rows are padded up to a multiple
+    of the tile size and the pad is stripped afterwards, so any N works.
+    """
+    n, d = c.shape
+    de = in_w.shape[1]
+    if up_w.shape[0] == 0:
+        # L=0: pallas rejects zero-sized blocks; a single zeroed block is
+        # mathematically identical (v + relu(v@0)@0 = v).
+        dh = max(up_w.shape[2], 1) if up_w.ndim == 3 else 1
+        up_w = jnp.zeros((1, de, dh), c.dtype)
+        down_w = jnp.zeros((1, dh, de), c.dtype)
+    t = min(tile, max(n, 1))
+    n_pad = (-n) % t
+    if n_pad:
+        c = jnp.concatenate([c, jnp.zeros((n_pad, d), c.dtype)], axis=0)
+        xhat = jnp.concatenate([xhat, jnp.zeros((n_pad, d), xhat.dtype)], axis=0)
+    rows = c.shape[0]
+    grid = (rows // t,)
+
+    def row_tiled(_d):
+        return pl.BlockSpec((t, _d), lambda i: (i, 0))
+
+    def resident(shape):
+        # index_map pinned to block 0: the whole tensor is one block that
+        # stays resident in VMEM across every grid step.
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            row_tiled(d),
+            row_tiled(d),
+            resident(in_w.shape),
+            resident(cond_w.shape),
+            resident(cond_b.shape),
+            resident(up_w.shape),
+            resident(down_w.shape),
+            resident(out_w.shape),
+        ],
+        out_specs=row_tiled(d),
+        out_shape=jax.ShapeDtypeStruct((rows, d), c.dtype),
+        interpret=True,
+    )(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w)
+    return out[:n]
+
+
+def vmem_footprint_bytes(d, de, dh, L, tile=DEFAULT_TILE, bytes_per=4):
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    Weights (resident) + activation tiles (c, xhat, c_emb, v, hidden, out).
+    """
+    weights = d * de + (de + d) * de + de + L * (de * dh + dh * de) + de * d
+    acts = tile * (2 * d + 2 * de + dh + d)
+    return (weights + acts) * bytes_per
+
+
+def mxu_flops(d, de, dh, L):
+    """Matmul FLOPs per candidate row (2*m*k per output elem)."""
+    return 2 * (d * de + (de + d) * de + L * (de * dh + dh * de) + de * d)

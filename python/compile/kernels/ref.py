@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas kernels are validated against in
+``python/tests``: same math, no tiling, no pallas machinery. Keep them
+boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def f_theta_ref(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w):
+    """QINCo2 implicit-codebook network f_theta (paper Eqs. 10-13).
+
+    Args:
+      c:      [N, d]  base codewords for the candidates.
+      xhat:   [N, d]  partial reconstruction x^{m-1} per candidate.
+      in_w:   [d, de]   P_d^{de} input projection (identity-initialized
+              when d == de, matching the paper's P convention).
+      cond_w: [de+d, de] concat-conditioning layer (the only biased layer).
+      cond_b: [de]
+      up_w:   [L, de, dh] residual block up projections.
+      down_w: [L, dh, de] residual block down projections.
+      out_w:  [de, d]   P_{de}^d output projection.
+
+    Returns:
+      [N, d] f_theta(c | xhat) = c + P(v_L), per Eq. 13.
+    """
+    c_emb = c @ in_w  # Eq. 10
+    v = c_emb + (jnp.concatenate([c_emb, xhat], axis=-1) @ cond_w + cond_b)  # Eq. 11
+    for i in range(up_w.shape[0]):  # Eq. 12, static unroll
+        v = v + jnp.maximum(v @ up_w[i], 0.0) @ down_w[i]
+    return c + v @ out_w  # Eq. 13
+
+
+def presel_scores_ref(r, cb):
+    """Squared L2 distances between residuals and a lookup codebook.
+
+    Pre-selection with L_s = 0 (paper Sec. 3.2): g(c|x) = c, so candidate
+    scores are plain ||r - c~_k||^2.
+
+    Args:
+      r:  [N, d] residuals.
+      cb: [K, d] pre-selection codebook C~^m.
+
+    Returns:
+      [N, K] squared distances.
+    """
+    diff = r[:, None, :] - cb[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

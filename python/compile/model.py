@@ -1,0 +1,447 @@
+"""L2: the QINCo2 model as pure JAX functions over an explicit pytree.
+
+Everything here is a *pure function* of (params, data): the Rust
+coordinator owns the parameter store, and these functions are AOT-lowered
+to HLO text by ``aot.py`` so the Rust runtime can execute them via PJRT.
+The compute hot-spot (f_theta over candidate rows, pre-selection scoring)
+is delegated to the L1 Pallas kernels in ``kernels/``.
+
+Paper mapping:
+  decode        -> Eq. 4 (F_QI) with f_theta per Eqs. 10-13
+  encode        -> Q_QI-B: pre-selection (Eq. 6) + beam search (Fig. 2);
+                   Q_QI-A and greedy RQ are the B=1 / A=K special cases
+  train_step    -> App. A.2: alternating optimization outer step — the
+                   inner encode is done by a separate artifact, this one
+                   does the forward-backward on the selected codes with
+                   AdamW(+clip) or Adam (the "old recipe" ablation)
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import preselect as presel_kernel
+from compile.kernels import qinco_step as qinco_kernel
+from compile.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Config and parameter pytree
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Static architecture of a QINCo2 model (Table 2 of the paper)."""
+
+    d: int      # data dimension
+    M: int      # number of quantization steps (bytes when K=256)
+    K: int      # codebook size per step
+    L: int      # residual blocks in f_theta
+    de: int     # embedding (backbone) dimension
+    dh: int     # hidden dimension of the residual MLPs
+    Ls: int = 0     # depth of the pre-selection network g (0 = pure lookup)
+    dhg: int = 128  # hidden dim of g when Ls > 0 (paper fixes 128)
+
+    @property
+    def name(self) -> str:
+        s = f"d{self.d}_M{self.M}_K{self.K}_L{self.L}_de{self.de}_dh{self.dh}"
+        if self.Ls:
+            s += f"_Ls{self.Ls}"
+        return s
+
+
+# Parameter order is the ABI between aot.py, the manifest and the Rust
+# runtime: artifacts take/return tensors in exactly this order.
+PARAM_NAMES: List[str] = [
+    "codebooks",  # [M, K, d]   base codebooks C^m
+    "presel",     # [M, K, d]   pre-selection codebooks C~^m
+    "in_w",       # [M, d, de]  P_d^{de}
+    "cond_w",     # [M, de+d, de]
+    "cond_b",     # [M, de]
+    "up_w",       # [M, L, de, dh]
+    "down_w",     # [M, L, dh, de]
+    "out_w",      # [M, de, d]  P_{de}^d
+]
+
+G_PARAM_NAMES: List[str] = [  # only present when cfg.Ls > 0
+    "g_cond_w",  # [M, 2d, d]
+    "g_cond_b",  # [M, d]
+    "g_up_w",    # [M, Ls, d, dhg]
+    "g_down_w",  # [M, Ls, dhg, d]
+]
+
+# Parameters that receive weight decay under AdamW (weight matrices only;
+# codebooks, pre-selection codebooks and biases are exempt).
+DECAYED = {"in_w", "cond_w", "up_w", "down_w", "out_w", "g_cond_w", "g_up_w", "g_down_w"}
+
+
+def param_names(cfg: ModelCfg) -> List[str]:
+    return PARAM_NAMES + (G_PARAM_NAMES if cfg.Ls > 0 else [])
+
+
+def param_shapes(cfg: ModelCfg) -> Dict[str, Tuple[int, ...]]:
+    d, M, K, L, de, dh = cfg.d, cfg.M, cfg.K, cfg.L, cfg.de, cfg.dh
+    shapes = {
+        "codebooks": (M, K, d),
+        "presel": (M, K, d),
+        "in_w": (M, d, de),
+        "cond_w": (M, de + d, de),
+        "cond_b": (M, de),
+        "up_w": (M, L, de, dh),
+        "down_w": (M, L, dh, de),
+        "out_w": (M, de, d),
+    }
+    if cfg.Ls > 0:
+        shapes.update({
+            "g_cond_w": (M, 2 * d, d),
+            "g_cond_b": (M, d),
+            "g_up_w": (M, cfg.Ls, d, cfg.dhg),
+            "g_down_w": (M, cfg.Ls, cfg.dhg, d),
+        })
+    return shapes
+
+
+def num_params(cfg: ModelCfg) -> int:
+    """Trainable parameter count (Table S1)."""
+    return sum(
+        functools.reduce(lambda a, b: a * b, shp, 1)
+        for shp in param_shapes(cfg).values()
+    )
+
+
+def init_params(cfg: ModelCfg, key) -> Dict[str, jnp.ndarray]:
+    """Reference initializer (App. A.2), mirrored by the Rust trainer.
+
+    Kaiming-uniform weights, zero biases and zero down-projections,
+    identity-initialized P projections when square. Codebooks here are
+    N(0,1); the Rust side overwrites them with noisy RQ codebooks trained
+    on the actual data (the paper's init), which aot.py cannot know.
+    """
+    d, M, K, L, de, dh = cfg.d, cfg.M, cfg.K, cfg.L, cfg.de, cfg.dh
+    ks = jax.random.split(key, 8)
+
+    def kaiming(key, shape, fan_in):
+        bound = (6.0 / fan_in) ** 0.5
+        return jax.random.uniform(key, shape, jnp.float32, -bound, bound)
+
+    def proj(key, rows, cols, zero=False):
+        if rows == cols:
+            return jnp.eye(rows, dtype=jnp.float32)
+        if zero:
+            return jnp.zeros((rows, cols), jnp.float32)
+        return kaiming(key, (rows, cols), rows)
+
+    params = {
+        "codebooks": jax.random.normal(ks[0], (M, K, d), jnp.float32) * 0.1,
+        "presel": jax.random.normal(ks[1], (M, K, d), jnp.float32) * 0.1,
+        "in_w": jnp.stack([proj(k, d, de) for k in jax.random.split(ks[2], M)]),
+        # zero: keeps f independent of xhat at init so the M-step
+        # recursion cannot compound (mirrors the Rust initializer)
+        "cond_w": jnp.zeros((M, de + d, de), jnp.float32),
+        "cond_b": jnp.zeros((M, de), jnp.float32),
+        "up_w": kaiming(ks[4], (M, L, de, dh), de),
+        "down_w": jnp.zeros((M, L, dh, de), jnp.float32),
+        # zero-init when de != d so f_theta(c|x) == c at init: training
+        # starts exactly at the RQ operating point (the QINCo guarantee)
+        # instead of compounding random projections across M steps, which
+        # destabilizes the first epochs at small batch sizes.
+        "out_w": jnp.stack([proj(k, de, d, zero=True) for k in jax.random.split(ks[5], M)]),
+    }
+    if cfg.Ls > 0:
+        params.update({
+            "g_cond_w": kaiming(ks[6], (M, 2 * d, d), 2 * d),
+            "g_cond_b": jnp.zeros((M, d), jnp.float32),
+            "g_up_w": kaiming(ks[7], (M, cfg.Ls, d, cfg.dhg), d),
+            "g_down_w": jnp.zeros((M, cfg.Ls, cfg.dhg, d), jnp.float32),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# f_theta and pre-selection
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _f_eval_pallas(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w):
+    """Pallas forward with a pure-jnp VJP (interpret-mode pallas_call does
+    not support reverse-mode AD; the ref oracle is mathematically
+    identical, so gradients are exact)."""
+    return qinco_kernel.f_theta(c, xhat, in_w, cond_w, cond_b, up_w,
+                                down_w, out_w)
+
+
+def _f_eval_fwd(*args):
+    return _f_eval_pallas(*args), args
+
+
+def _f_eval_bwd(res, g):
+    _, vjp = jax.vjp(kref.f_theta_ref, *res)
+    return vjp(g)
+
+
+_f_eval_pallas.defvjp(_f_eval_fwd, _f_eval_bwd)
+
+
+def f_eval(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w, use_pallas=True):
+    """One-step implicit codebook network over candidate rows."""
+    if use_pallas:
+        return _f_eval_pallas(c, xhat, in_w, cond_w, cond_b, up_w, down_w,
+                              out_w)
+    return kref.f_theta_ref(c, xhat, in_w, cond_w, cond_b, up_w, down_w, out_w)
+
+
+def presel_eval(r, cb, use_pallas=True):
+    """[rows, K] squared distances for pre-selection (L_s = 0)."""
+    if use_pallas:
+        return presel_kernel.presel_scores(r, cb)
+    return kref.presel_scores_ref(r, cb)
+
+
+def g_eval(cb, xhat, g_cond_w, g_cond_b, g_up_w, g_down_w):
+    """Pre-selection network g (L_s >= 1): same architecture as f_theta but
+    operating in data space (identity P projections) with hidden dim dhg.
+
+    Args:
+      cb:   [K, d] pre-selection codebook.
+      xhat: [rows, d] partial reconstructions.
+    Returns:
+      [rows, K, d] transformed candidates g(c~_k | xhat).
+    """
+    rows, d = xhat.shape
+    k = cb.shape[0]
+    c = jnp.broadcast_to(cb[None, :, :], (rows, k, d)).reshape(-1, d)
+    xh = jnp.broadcast_to(xhat[:, None, :], (rows, k, d)).reshape(-1, d)
+    v = c + (jnp.concatenate([c, xh], axis=-1) @ g_cond_w + g_cond_b)
+    for i in range(g_up_w.shape[0]):
+        v = v + jnp.maximum(v @ g_up_w[i], 0.0) @ g_down_w[i]
+    return (c + v).reshape(rows, k, d)
+
+
+def _step_params(params, names):
+    """Tuple of per-name arrays, for lax.scan stacking over the M axis."""
+    return tuple(params[n] for n in names)
+
+
+def smallest_k(scores, k):
+    """Indices of the k smallest entries along the last axis (ascending).
+
+    Implemented with a stable argsort rather than lax.top_k: jax lowers
+    top_k to the `topk(..., largest=true)` HLO op, which the pinned
+    xla_extension 0.5.1 text parser rejects; `sort` is a classic HLO op
+    and round-trips fine. K here is small (<= a few hundred), so the
+    O(K log K) sort is immaterial.
+    """
+    return jnp.argsort(scores, axis=-1, stable=True)[..., :k]
+
+
+_F_NAMES = ["in_w", "cond_w", "cond_b", "up_w", "down_w", "out_w"]
+
+
+# ---------------------------------------------------------------------------
+# Decoding (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def decode(params, codes, use_pallas=True):
+    """Reconstruct x_hat from codes.
+
+    Args:
+      params: parameter dict.
+      codes:  [N, M] int32.
+    Returns:
+      [N, d] reconstructions.
+    """
+    n = codes.shape[0]
+    d = params["codebooks"].shape[2]
+
+    def step(xhat, xs):
+        code_m, cb, fw = xs[0], xs[1], xs[2:]
+        c = cb[code_m]
+        f = f_eval(c, xhat, *fw, use_pallas=use_pallas)
+        return xhat + f, None
+
+    xs = (codes.T, params["codebooks"]) + _step_params(params, _F_NAMES)
+    xhat, _ = lax.scan(step, jnp.zeros((n, d), jnp.float32), xs)
+    return xhat
+
+
+def decode_partial(params, codes, use_pallas=True):
+    """Like decode but returns every partial reconstruction.
+
+    Returns:
+      [M, N, d]: x_hat^1 .. x_hat^M (multi-rate decoding, Fig. S3).
+    """
+    n = codes.shape[0]
+    d = params["codebooks"].shape[2]
+
+    def step(xhat, xs):
+        code_m, cb, fw = xs[0], xs[1], xs[2:]
+        f = f_eval(cb[code_m], xhat, *fw, use_pallas=use_pallas)
+        nxt = xhat + f
+        return nxt, nxt
+
+    xs = (codes.T, params["codebooks"]) + _step_params(params, _F_NAMES)
+    _, partials = lax.scan(step, jnp.zeros((n, d), jnp.float32), xs)
+    return partials
+
+
+# ---------------------------------------------------------------------------
+# Encoding: pre-selection + beam search (Q_QI-B, Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, x, A: int, B: int, use_pallas=True):
+    """Beam-search encoding with codeword pre-selection.
+
+    Maintains B hypotheses; each step scores the K pre-selection codewords
+    per hypothesis (L1 kernel), keeps the top-A, evaluates f_theta on the
+    A*B expansions (L1 kernel), and keeps the best B by exact
+    reconstruction error. B=1 gives greedy Q_QI-A; A=K disables
+    pre-selection (exact QINCo-style greedy when also B=1).
+
+    Args:
+      x: [N, d] vectors to encode.
+    Returns:
+      codes [N, M] int32, xhat [N, d], err [N] (squared L2).
+    """
+    n, d = x.shape
+    cfg_m, k = params["codebooks"].shape[0], params["codebooks"].shape[1]
+    m_steps = cfg_m
+    use_g = "g_cond_w" in params
+
+    xhat0 = jnp.zeros((n, B, d), jnp.float32)
+    err0 = jnp.full((n, B), jnp.inf, jnp.float32).at[:, 0].set(0.0)
+    codes0 = jnp.zeros((n, B, m_steps), jnp.int32)
+
+    g_names = G_PARAM_NAMES if use_g else []
+
+    def step(carry, xs):
+        xhat, err, codes = carry
+        m_idx = xs[0]
+        cb, pcb = xs[1], xs[2]
+        fw = xs[3:3 + len(_F_NAMES)]
+        gw = xs[3 + len(_F_NAMES):]
+
+        r = (x[:, None, :] - xhat).reshape(-1, d)          # [n*B, d]
+        if use_g:
+            gcand = g_eval(pcb, xhat.reshape(-1, d), *gw)  # [n*B, K, d]
+            diff = r[:, None, :] - gcand
+            scores = jnp.sum(diff * diff, axis=-1)         # [n*B, K]
+        else:
+            scores = presel_eval(r, pcb, use_pallas)       # [n*B, K]
+        top_a = smallest_k(scores, A).reshape(n, B, A)     # [n, B, A]
+
+        c = cb[top_a].reshape(-1, d)                       # [n*B*A, d]
+        xh_b = jnp.broadcast_to(xhat[:, :, None, :], (n, B, A, d))
+        f = f_eval(c, xh_b.reshape(-1, d), *fw, use_pallas=use_pallas)
+        new_xhat = xh_b + f.reshape(n, B, A, d)
+
+        diff = x[:, None, None, :] - new_xhat
+        e = jnp.sum(diff * diff, axis=-1)                  # [n, B, A]
+        e = jnp.where(jnp.isinf(err)[:, :, None], jnp.inf, e)
+
+        e_flat = e.reshape(n, B * A)
+        sel = smallest_k(e_flat, B)                        # best B expansions
+        nxt_err = jnp.take_along_axis(e_flat, sel, axis=1)
+        b_idx, a_idx = sel // A, sel % A
+        batch = jnp.arange(n)[:, None]
+        nxt_xhat = new_xhat[batch, b_idx, a_idx]
+        nxt_codes = codes[batch, b_idx]
+        chosen = top_a[batch, b_idx, a_idx]
+        nxt_codes = nxt_codes.at[:, :, m_idx].set(chosen)
+        return (nxt_xhat, nxt_err, nxt_codes), None
+
+    xs = (jnp.arange(m_steps), params["codebooks"], params["presel"]) \
+        + _step_params(params, _F_NAMES) + _step_params(params, g_names)
+    (xhat, err, codes), _ = lax.scan(step, (xhat0, err0, codes0), xs)
+    return codes[:, 0, :], xhat[:, 0, :], err[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Training step (App. A.2)
+# ---------------------------------------------------------------------------
+
+
+def _loss_and_stats(params, x, codes, use_pallas=True):
+    """Differentiable reconstruction loss on fixed codes + residual stats.
+
+    Loss = mean over steps of per-step reconstruction MSE (trains every
+    prefix, enabling multi-rate use, Fig. S3) + auxiliary pre-selection
+    loss pulling C~^m (and g when present) toward the step-m residuals
+    (stop-gradient on the target, k-means-flavoured).
+    """
+    n, d = x.shape
+    use_g = "g_cond_w" in params
+    g_names = G_PARAM_NAMES if use_g else []
+
+    def step(xhat, xs):
+        code_m, cb, pcb = xs[0], xs[1], xs[2]
+        fw = xs[3:3 + len(_F_NAMES)]
+        gw = xs[3 + len(_F_NAMES):]
+        r = lax.stop_gradient(x - xhat)                    # residual r^m
+        c = cb[code_m]
+        f = f_eval(c, xhat, *fw, use_pallas=use_pallas)
+        nxt = xhat + f
+        step_loss = jnp.mean(jnp.sum((x - nxt) ** 2, axis=-1))
+        if use_g:
+            gsel = g_eval(pcb, lax.stop_gradient(xhat), *gw)  # [n, K, d]
+            psel = jnp.take_along_axis(
+                gsel, code_m[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        else:
+            psel = pcb[code_m]
+        aux = jnp.mean(jnp.sum((r - psel) ** 2, axis=-1))
+        stats = (jnp.mean(r, axis=0), jnp.mean(r * r, axis=0))
+        return nxt, (step_loss, aux, stats)
+
+    xs = (codes.T, params["codebooks"], params["presel"]) \
+        + _step_params(params, _F_NAMES) + _step_params(params, g_names)
+    _, (step_losses, auxes, (res_mean, res_m2)) = lax.scan(
+        step, jnp.zeros((n, d), jnp.float32), xs)
+    loss_main = jnp.mean(step_losses)
+    loss = loss_main + jnp.mean(auxes)
+    return loss, (loss_main, step_losses, res_mean, res_m2)
+
+
+def train_step(params, m_state, v_state, x, codes, lr, t,
+               optimizer="adamw", clip=0.1, wd=0.1, use_pallas=True):
+    """One outer optimization step on pre-encoded codes.
+
+    Args:
+      params/m_state/v_state: parameter dict + Adam moments (same keys).
+      x: [N, d] batch. codes: [N, M] int32 (from the encode artifact).
+      lr: scalar learning rate (schedule lives in the Rust driver).
+      t: scalar step count (1-based) for bias correction.
+      optimizer: "adamw" (new recipe: clip + decoupled wd) or "adam"
+        (QINCo's old recipe: no clip, no wd) — the Table 3 ablation.
+    Returns:
+      (new_params, new_m, new_v, loss, step_losses [M], res_mean [M,d],
+       res_m2 [M,d]).
+    """
+    grad_fn = jax.value_and_grad(_loss_and_stats, has_aux=True)
+    (loss, (loss_main, step_losses, res_mean, res_m2)), grads = grad_fn(
+        params, x, codes, use_pallas)
+
+    if optimizer == "adamw" and clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, clip / (gnorm + 1e-12))
+        grads = {k: g * scale for k, g in grads.items()}
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_p, new_m, new_v = {}, {}, {}
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    for name, g in grads.items():
+        m = b1 * m_state[name] + (1 - b1) * g
+        v = b2 * v_state[name] + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        p = params[name] - lr * upd
+        if optimizer == "adamw" and name in DECAYED:
+            p = p - lr * wd * params[name]
+        new_p[name], new_m[name], new_v[name] = p, m, v
+    return new_p, new_m, new_v, loss_main, step_losses, res_mean, res_m2

@@ -1,0 +1,155 @@
+"""pytest: L1 Pallas kernels vs the pure-jnp oracle — the CORE
+correctness signal for the kernel layer.
+
+hypothesis sweeps shapes and value ranges; dtype coverage is f32 (the
+model ABI) plus a bf16 smoke check for the TPU story.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import preselect, qinco_step, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _weights(key, d, de, dh, L, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return dict(
+        in_w=_rand(ks[0], (d, de), dtype, 0.5),
+        cond_w=_rand(ks[1], (de + d, de), dtype, 0.3),
+        cond_b=_rand(ks[2], (de,), dtype, 0.1),
+        up_w=_rand(ks[3], (L, de, dh), dtype, 0.3),
+        down_w=_rand(ks[4], (L, dh, de), dtype, 0.3),
+        out_w=_rand(ks[5], (de, d), dtype, 0.5),
+    )
+
+
+# ---------------------------------------------------------------------------
+# f_theta kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 600),
+    d=st.integers(2, 24),
+    de=st.integers(2, 24),
+    dh=st.integers(2, 32),
+    L=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_f_theta_matches_ref(n, d, de, dh, L, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = _weights(k1, d, de, dh, L)
+    c = _rand(k2, (n, d))
+    xhat = _rand(k3, (n, d))
+    got = qinco_step.f_theta(c, xhat, **w)
+    want = ref.f_theta_ref(c, xhat, **w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [1, 3, 64, 512, 1024])
+def test_f_theta_tile_sizes(tile):
+    """Tiling (incl. padding path) must not change results."""
+    key = jax.random.PRNGKey(0)
+    w = _weights(key, 8, 12, 16, 2)
+    c = _rand(jax.random.PRNGKey(1), (130, 8))
+    xhat = _rand(jax.random.PRNGKey(2), (130, 8))
+    got = qinco_step.f_theta(c, xhat, tile=tile, **w)
+    want = ref.f_theta_ref(c, xhat, **w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_f_theta_zero_blocks_is_affine_residual():
+    """With L=0 and zeroed cond layer, f(c|x) = c + P_out(P_in(c))."""
+    d, de = 6, 6
+    w = dict(
+        in_w=jnp.eye(d), cond_w=jnp.zeros((de + d, de)),
+        cond_b=jnp.zeros((de,)), up_w=jnp.zeros((0, de, 8)),
+        down_w=jnp.zeros((0, 8, de)), out_w=jnp.eye(de),
+    )
+    c = _rand(jax.random.PRNGKey(3), (17, d))
+    xhat = _rand(jax.random.PRNGKey(4), (17, d))
+    got = qinco_step.f_theta(c, xhat, **w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(2 * c), rtol=1e-6)
+
+
+def test_f_theta_bf16_smoke():
+    """bf16 path (the MXU dtype) must run and stay close to f32 ref."""
+    w = _weights(jax.random.PRNGKey(5), 8, 8, 16, 1, jnp.bfloat16)
+    c = _rand(jax.random.PRNGKey(6), (32, 8), jnp.bfloat16)
+    xhat = _rand(jax.random.PRNGKey(7), (32, 8), jnp.bfloat16)
+    got = qinco_step.f_theta(c, xhat, **w).astype(jnp.float32)
+    wf = {k: v.astype(jnp.float32) for k, v in w.items()}
+    want = ref.f_theta_ref(c.astype(jnp.float32), xhat.astype(jnp.float32), **wf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.1, atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# pre-selection kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    k=st.integers(1, 64),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_presel_matches_ref(n, k, d, seed):
+    key = jax.random.PRNGKey(seed)
+    r = _rand(key, (n, d))
+    cb = _rand(jax.random.fold_in(key, 1), (k, d))
+    got = preselect.presel_scores(r, cb)
+    want = ref.presel_scores_ref(r, cb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_presel_self_distance_zero():
+    cb = _rand(jax.random.PRNGKey(8), (16, 12))
+    got = preselect.presel_scores(cb, cb)
+    diag = np.asarray(jnp.diagonal(got))
+    np.testing.assert_allclose(diag, np.zeros(16), atol=1e-4)
+
+
+def test_presel_argmin_is_nearest():
+    """Argmin over kernel scores == brute-force nearest neighbor."""
+    r = _rand(jax.random.PRNGKey(9), (50, 16))
+    cb = _rand(jax.random.PRNGKey(10), (32, 16))
+    got = np.asarray(jnp.argmin(preselect.presel_scores(r, cb), axis=1))
+    want = np.asarray(jnp.argmin(ref.presel_scores_ref(r, cb), axis=1))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# footprint / flops helpers (used by DESIGN.md §Perf numbers)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_model():
+    # At the documented TPU tile (512 rows): QINCo2-S/M fit fully
+    # resident; QINCo2-L (L=16) exceeds 16 MiB and would stream per-block
+    # weights on real TPU (DESIGN.md §Perf). The CPU artifacts use a much
+    # larger tile because interpret-mode grids serialize on CPU.
+    t = qinco_step.TPU_TILE
+    assert qinco_step.vmem_footprint_bytes(d=128, de=128, dh=256, L=2, tile=t) < 16 * 2**20
+    assert qinco_step.vmem_footprint_bytes(d=128, de=384, dh=384, L=4, tile=t) < 16 * 2**20
+    assert qinco_step.vmem_footprint_bytes(d=128, de=384, dh=384, L=16, tile=t) > 16 * 2**20
+
+
+def test_mxu_flops_positive():
+    assert qinco_step.mxu_flops(32, 48, 96, 2) > 0

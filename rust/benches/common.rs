@@ -1,0 +1,36 @@
+//! Shared helpers for the bench harnesses (criterion is unavailable
+//! offline; each bench is a `harness = false` binary that prints the
+//! paper's rows and writes a CSV under bench_out/).
+
+#![allow(dead_code)]
+
+use qinco2::data::Flavor;
+
+/// Flavors to run, controllable via `QINCO2_DATASETS=bigann,deep`.
+pub fn flavors() -> Vec<Flavor> {
+    match std::env::var("QINCO2_DATASETS") {
+        Ok(list) => list
+            .split(',')
+            .filter_map(|s| Flavor::parse(s.trim()))
+            .collect(),
+        Err(_) => vec![Flavor::BigAnn, Flavor::Deep],
+    }
+}
+
+pub fn hr(width: usize) {
+    println!("{}", "-".repeat(width));
+}
+
+/// Paper-style percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn banner(title: &str, paper_ref: &str) {
+    println!();
+    hr(78);
+    println!("{title}");
+    println!("(reproduces {paper_ref}; absolute values differ from the paper — synthetic");
+    println!(" data at reduced scale — orderings and ratios are the comparison target)");
+    hr(78);
+}

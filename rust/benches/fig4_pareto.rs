@@ -1,0 +1,87 @@
+//! Figure 4: Pareto fronts of MSE vs encoding time.
+//!
+//! Left: pre-selection network depth L_s ∈ {0, 1, 2} at fixed decode
+//! cost, sweeping (A, B) — requires the `fig4` artifact catalog
+//! (`make artifacts-fig4`); L_s > 0 points are skipped if absent.
+//! Right: encode-time/decode-time tradeoff across model depths (XS/S/M)
+//! at several (A, B) settings.
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::Flavor;
+use qinco2::experiments as exp;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("FIGURE 4 — MSE vs encode time pareto fronts", "Fig. 4 left+right");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let mut ds = exp::dataset(Flavor::BigAnn, 32, &scale);
+    ds.database = ds.database.gather_rows(&(0..1536.min(ds.database.rows)).collect::<Vec<_>>());
+    let sample = ds.database.gather_rows(&(0..512.min(ds.database.rows)).collect::<Vec<_>>());
+    let mut csv = Vec::new();
+
+    // ---- left: pre-selection depth L_s ----
+    println!("\n[Fig 4 left] pre-selection depth (skips configs without artifacts):");
+    println!("{:<16} {:>4} {:>4} {:>10} {:>10}", "model", "A", "B", "enc µs/vec", "MSE");
+    common::hr(50);
+    for model in ["qinco2_xs", "qinco2_xs_Ls1", "qinco2_xs_Ls2"] {
+        if !engine.manifest.models.contains_key(model) {
+            println!("{model:<16} (not lowered; run `make artifacts-fig4`)");
+            continue;
+        }
+        let cfg = TrainCfg { epochs: scale.epochs.min(4), a: 8, b: 8, ..Default::default() };
+        let params = exp::trained_model(&mut engine, model, "bigann_f4", &ds.train, &cfg)?;
+        // L_s >= 1 evaluates g on all K candidates (no lookup shortcut),
+        // so encoding is inherently expensive — keep the grid small and
+        // time the MSE encode itself instead of a separate timing pass
+        for (a, b) in [(4usize, 4usize), (8, 8)] {
+            let Ok(codec) = Codec::new(&engine, model, a, b) else { continue };
+            let t0 = std::time::Instant::now();
+            let (codes, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let enc_us = t0.elapsed().as_secs_f64() * 1e6 / ds.database.rows as f64;
+            let dec = codec.decode(&mut engine, &params, &codes)?;
+            let mse = qinco2::tensor::mse(&ds.database, &dec);
+            println!("{model:<16} {a:>4} {b:>4} {enc_us:>10.2} {:>10.5}", mse);
+            csv.push(format!("left,{model},{a},{b},{enc_us},{mse}"));
+        }
+    }
+    let _ = &sample;
+
+    // ---- right: encode vs decode time across depths ----
+    println!("\n[Fig 4 right] encode/decode tradeoff across model depths:");
+    println!("{:<12} {:>4} {:>4} {:>12} {:>12} {:>10}", "model", "A", "B", "enc µs/vec", "dec µs/vec", "MSE");
+    common::hr(60);
+    for model in ["qinco1", "qinco2_xs", "qinco2_s", "qinco2_m"] {
+        let cfg = TrainCfg {
+            epochs: scale.epochs.min(4),
+            a: if model == "qinco1" { 64 } else { 8 },
+            b: if model == "qinco1" { 1 } else { 8 },
+            ..Default::default()
+        };
+        let params = exp::trained_model(&mut engine, model, "bigann_f4r", &ds.train, &cfg)?;
+        let settings: Vec<(usize, usize, usize)> = engine
+            .manifest
+            .encode_settings(model)
+            .into_iter()
+            .filter(|&(a, b, _)| a * b <= 256)
+            .collect();
+        for (a, b, _) in settings {
+            let Ok(codec) = Codec::new(&engine, model, a, b) else { continue };
+            let t0 = std::time::Instant::now();
+            let (codes, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let enc_us = t0.elapsed().as_secs_f64() * 1e6 / ds.database.rows as f64;
+            let t1 = std::time::Instant::now();
+            let dec = codec.decode(&mut engine, &params, &codes)?;
+            let dec_us = t1.elapsed().as_secs_f64() * 1e6 / ds.database.rows as f64;
+            let mse = qinco2::tensor::mse(&ds.database, &dec);
+            println!("{model:<12} {a:>4} {b:>4} {enc_us:>12.2} {dec_us:>12.2} {:>10.5}", mse);
+            csv.push(format!("right,{model},{a},{b},{enc_us},{mse}"));
+        }
+    }
+    let path = exp::write_csv("fig4.csv", "panel,model,a,b,enc_us,mse", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

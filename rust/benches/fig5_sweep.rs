@@ -1,0 +1,83 @@
+//! Figure 5: joint architecture sweep — MSE vs encoding time across
+//! (L, de, dh) × (A, B), marking the Pareto-optimal front.
+//!
+//! Uses the `sweep` artifact catalog (`make artifacts-sweep`); falls back
+//! to the base models if the sweep catalog is absent.
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::Flavor;
+use qinco2::experiments as exp;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("FIGURE 5 — architecture sweep pareto front", "Fig. 5");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let mut ds = exp::dataset(Flavor::BigAnn, 32, &scale);
+    // MSE-vs-encode-time sweep: a compact db keeps the grid affordable
+    ds.database = ds.database.gather_rows(&(0..1536.min(ds.database.rows)).collect::<Vec<_>>());
+
+    let sweep_models: Vec<String> = engine
+        .manifest
+        .models
+        .keys()
+        .filter(|n| n.starts_with("sw_"))
+        .cloned()
+        .collect();
+    let models: Vec<String> = if sweep_models.is_empty() {
+        println!("(sweep catalog not lowered; run `make artifacts-sweep` for the full grid — using base models)");
+        vec!["qinco1".into(), "qinco2_xs".into(), "qinco2_s".into(), "qinco2_m".into()]
+    } else {
+        sweep_models
+    };
+
+    // train all sweep models concurrently
+    let jobs: Vec<exp::TrainJob> = models
+        .iter()
+        .map(|m| exp::TrainJob {
+            model: m.clone(),
+            tag: "bigann_f5".into(),
+            train: ds.train.clone(),
+            cfg: TrainCfg { epochs: scale.epochs.min(4), a: 8, b: 8, ..Default::default() },
+        })
+        .collect();
+    let trained = exp::parallel_train(jobs);
+
+    let mut points: Vec<(String, usize, usize, f64, f64)> = Vec::new();
+    for (model, params) in models.iter().zip(trained) {
+        let params = params?;
+        for (a, b, _) in engine.manifest.encode_settings(model) {
+            if a * b > 256 {
+                continue; // keep the grid affordable on CPU-XLA
+            }
+            let Ok(codec) = Codec::new(&engine, model, a, b) else { continue };
+            let t0 = std::time::Instant::now();
+            let (codes, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let enc_us = t0.elapsed().as_secs_f64() * 1e6 / ds.database.rows as f64;
+            let dec = codec.decode(&mut engine, &params, &codes)?;
+            let mse = qinco2::tensor::mse(&ds.database, &dec);
+            points.push((model.clone(), a, b, enc_us, mse));
+        }
+    }
+    // mark the pareto front (min MSE for any encode time budget)
+    points.sort_by(|x, y| x.3.partial_cmp(&y.3).unwrap());
+    let mut best = f64::INFINITY;
+    println!("{:<16} {:>4} {:>4} {:>12} {:>10}  pareto", "model", "A", "B", "enc µs/vec", "MSE");
+    common::hr(62);
+    let mut csv = Vec::new();
+    for (model, a, b, enc_us, mse) in &points {
+        let on_front = *mse < best;
+        if on_front {
+            best = *mse;
+        }
+        println!("{model:<16} {a:>4} {b:>4} {enc_us:>12.2} {mse:>10.5}  {}",
+                 if on_front { "*" } else { "" });
+        csv.push(format!("{model},{a},{b},{enc_us},{mse},{}", on_front as u8));
+    }
+    let path = exp::write_csv("fig5.csv", "model,a,b,enc_us,mse,pareto", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

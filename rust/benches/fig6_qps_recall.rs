@@ -1,0 +1,229 @@
+//! Figure 6 (+ Fig. S2, §B latency): QPS vs R@1 pareto for IVF-PQ,
+//! IVF-RQ and IVF-QINCo2 on the scaled billion-search setup.
+//!
+//! Sweeps the paper's knobs — nprobe, efSearch and the shortlist sizes —
+//! and reports queries/second (batched, all cores) and R@1. Also prints
+//! the single-query latency comparison of §B.
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::{brute_force_gt_k, Flavor};
+use qinco2::experiments as exp;
+use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
+use qinco2::metrics::recall_at;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::quantizers::{pq::Pq, rq::Rq, VectorQuantizer};
+use qinco2::runtime::Engine;
+use qinco2::tensor::Matrix;
+use qinco2::util::prng::Rng;
+use std::time::Instant;
+
+/// Simple IVF-PQ/RQ baseline searcher: probe + LUT scan + top-k.
+struct IvfLut {
+    ivf: qinco2::index::ivf::Ivf,
+    codes: qinco2::quantizers::Codes,
+    terms: Vec<f32>,
+    lut_of: Box<dyn Fn(&[f32]) -> Vec<Vec<f32>> + Sync>,
+    m: usize,
+}
+
+impl IvfLut {
+    fn search(&self, q: &[f32], nprobe: usize, ef: usize, topk: usize) -> Vec<u32> {
+        let probes = self.ivf.probe(q, nprobe, ef);
+        let tables = (self.lut_of)(q);
+        let mut best: Vec<(f32, u32)> = Vec::with_capacity(topk + 1);
+        let mut worst = f32::INFINITY;
+        for &(probe_d, bucket) in &probes {
+            for &id in &self.ivf.lists[bucket as usize] {
+                let i = id as usize;
+                let mut s = probe_d + self.terms[i];
+                for (p, &c) in self.codes.row(i).iter().enumerate() {
+                    s += tables[p][c as usize];
+                }
+                if best.len() < topk || s < worst {
+                    let pos = best.partition_point(|&(d, _)| d <= s);
+                    best.insert(pos, (s, id));
+                    if best.len() > topk {
+                        best.pop();
+                    }
+                    worst = best.last().unwrap().0;
+                }
+            }
+        }
+        best.into_iter().map(|(_, id)| id).collect()
+    }
+}
+
+/// Build an IVF-RQ (or PQ) residual-coded baseline.
+fn build_lut_baseline(
+    train: &Matrix, db: &Matrix, k_ivf: usize, m: usize, use_pq: bool, seed: u64,
+) -> IvfLut {
+    let ivf = qinco2::index::ivf::Ivf::build(train, db, k_ivf, seed);
+    let residuals = ivf.residuals(db);
+    // train fine quantizer on train-split residuals
+    let t_ivf_assign = qinco2::tensor::assign_all(train, &ivf.centroids, qinco2::util::pool::default_threads());
+    let mut t_res = train.clone();
+    for i in 0..t_res.rows {
+        let c = ivf.centroids.row(t_ivf_assign[i] as usize).to_vec();
+        qinco2::tensor::sub_assign(t_res.row_mut(i), &c);
+    }
+    if use_pq {
+        let pq = Pq::train(&t_res, m, 64, seed ^ 1);
+        let codes = pq.encode(&residuals);
+        let dec = pq.decode(&codes);
+        let terms = term_cache(&ivf, &dec);
+        IvfLut {
+            ivf,
+            codes,
+            terms,
+            m,
+            // LUT over ⟨q,·⟩ is folded into PQ's subspace distance form:
+            // score = probe + Σ_s (||c_s||² - 2⟨q_s, c_s⟩) (+ const ||q||²)
+            lut_of: Box::new(move |q: &[f32]| {
+                pq.lut(q)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(s, tbl)| {
+                        // convert slice distance to (-2⟨q_s,c⟩ + ||c||²):
+                        // ||q_s - c||² - ||q_s||²
+                        let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
+                        let qn = qinco2::tensor::sqnorm(&q[lo..hi]);
+                        tbl.into_iter().map(|d| d - qn).collect()
+                    })
+                    .collect()
+            }),
+        }
+    } else {
+        let rq = Rq::train(&t_res, m, 64, 5, seed ^ 2);
+        let codes = rq.encode(&residuals);
+        let dec = rq.decode(&codes);
+        let terms = term_cache(&ivf, &dec);
+        let cbs: Vec<Matrix> = rq.codebooks.clone();
+        IvfLut {
+            ivf,
+            codes,
+            terms,
+            m,
+            lut_of: Box::new(move |q: &[f32]| {
+                cbs.iter()
+                    .map(|cb| (0..cb.rows).map(|c| -2.0 * qinco2::tensor::dot(q, cb.row(c))).collect())
+                    .collect()
+            }),
+        }
+    }
+}
+
+/// term_i = ||x̂_r||² + 2⟨cent_i, x̂_r⟩ (see pipeline.rs distance algebra).
+fn term_cache(ivf: &qinco2::index::ivf::Ivf, dec: &Matrix) -> Vec<f32> {
+    (0..dec.rows)
+        .map(|i| {
+            let cent = ivf.centroids.row(ivf.assign[i] as usize);
+            qinco2::tensor::sqnorm(dec.row(i)) + 2.0 * qinco2::tensor::dot(cent, dec.row(i))
+        })
+        .collect()
+}
+
+fn qps_of<F: Fn(usize) -> Vec<u32> + Sync>(n_queries: usize, f: F) -> (f64, Vec<Vec<u32>>) {
+    let mut results = vec![Vec::new(); n_queries];
+    let t0 = Instant::now();
+    qinco2::util::pool::par_map_into(&mut results, qinco2::util::pool::default_threads(), |i, slot| {
+        *slot = f(i);
+    });
+    (n_queries as f64 / t0.elapsed().as_secs_f64(), results)
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("FIGURE 6 / S2 — QPS vs R@1 on the scaled billion-search setup", "Fig. 6, Fig. S2, §B");
+    let mut scale = exp::Scale::bench();
+    // search wants a bigger database than the compression benches
+    // (QINCO2_SCALE=large raises this to the full configured size)
+    scale.n_db = scale.n_db.max(10_000);
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let mut csv = Vec::new();
+    let k_ivf = 256;
+
+    for flavor in common::flavors() {
+        let ds = exp::dataset(flavor, 32, &scale);
+        println!("\n=== {}1B-scaled: db {}, {} queries, K_IVF={k_ivf} ===",
+                 flavor.name(), ds.database.rows, ds.queries.rows);
+        println!("{:<14} {:>7} {:>6} {:>6} {:>8} {:>8} {:>8}",
+                 "method", "nprobe", "ef", "naq", "npairs", "QPS", "R@1");
+        common::hr(64);
+
+        // ---- baselines ----
+        for (label, use_pq) in [("IVF-PQ", true), ("IVF-RQ", false)] {
+            let base = build_lut_baseline(&ds.train, &ds.database, k_ivf, 8, use_pq, 7);
+            for (nprobe, ef) in [(1usize, 16usize), (4, 32), (16, 64), (64, 128)] {
+                let (qps, results) =
+                    qps_of(ds.queries.rows, |i| base.search(ds.queries.row(i), nprobe, ef, 10));
+                let r1 = recall_at(&results, &ds.ground_truth, 1);
+                println!("{label:<14} {nprobe:>7} {ef:>6} {:>6} {:>8} {qps:>8.0} {:>8}",
+                         "-", "-", common::pct(r1));
+                csv.push(format!("{},{label},{nprobe},{ef},0,0,{qps:.0},{r1:.4}", flavor.name()));
+            }
+        }
+
+        // ---- IVF-QINCo2 (XS and S) ----
+        for model in ["qinco2_xs", "qinco2_s"] {
+            let bcfg = BuildCfg { k_ivf, m_tilde: 2, ..Default::default() };
+            let ivf = qinco2::index::ivf::Ivf::build(&ds.train, &ds.train, k_ivf, bcfg.seed);
+            let t_res = ivf.residuals(&ds.train);
+            let cfg = TrainCfg { epochs: scale.epochs, a: 8, b: 8, seed: 0xA11CE ^ 0x1F, ..Default::default() };
+            let params = exp::trained_model(
+                &mut engine, model, &format!("{}_ivfres", flavor.name()), &t_res, &cfg)?;
+            let codec = Codec::new(&engine, model, 8, 8)?;
+            let index = SearchIndex::build(&mut engine, &codec, params, &ds.train, &ds.database, &bcfg)?;
+            for (nprobe, ef, n_aq, n_pairs) in [
+                (1usize, 16usize, 64usize, 16usize),
+                (4, 32, 128, 32),
+                (16, 64, 256, 64),
+                (64, 128, 1024, 128),
+            ] {
+                let sp = SearchParams { nprobe, ef_search: ef, n_aq, n_pairs, n_final: 10 };
+                let (qps, results) = qps_of(ds.queries.rows, |i| {
+                    index.search(ds.queries.row(i), &sp).into_iter().map(|(_, id)| id).collect()
+                });
+                let r1 = recall_at(&results, &ds.ground_truth, 1);
+                let label = format!("IVF-{}", model.replace("qinco2_", "QINCo2-"));
+                println!("{label:<14} {nprobe:>7} {ef:>6} {n_aq:>6} {n_pairs:>8} {qps:>8.0} {:>8}",
+                         common::pct(r1));
+                csv.push(format!("{},{label},{nprobe},{ef},{n_aq},{n_pairs},{qps:.0},{r1:.4}",
+                                 flavor.name()));
+            }
+
+            // ---- §B: single-query latency at a matched operating point ----
+            if model == "qinco2_xs" {
+                let sp = SearchParams { nprobe: 16, ef_search: 64, n_aq: 256, n_pairs: 64, n_final: 10 };
+                let mut rng = Rng::new(1);
+                let mut lat_q = Vec::new();
+                for _ in 0..50 {
+                    let qi = rng.below(ds.queries.rows);
+                    let t0 = Instant::now();
+                    std::hint::black_box(index.search(ds.queries.row(qi), &sp));
+                    lat_q.push(t0.elapsed().as_secs_f64());
+                }
+                let base = build_lut_baseline(&ds.train, &ds.database, k_ivf, 8, false, 7);
+                let mut lat_r = Vec::new();
+                for _ in 0..50 {
+                    let qi = rng.below(ds.queries.rows);
+                    let t0 = Instant::now();
+                    std::hint::black_box(base.search(ds.queries.row(qi), 64, 128, 10));
+                    lat_r.push(t0.elapsed().as_secs_f64());
+                }
+                lat_q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                lat_r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                println!("[§B latency] single-query p50: IVF-QINCo2 {:.2} ms vs IVF-RQ(max-accuracy) {:.2} ms",
+                         lat_q[25] * 1e3, lat_r[25] * 1e3);
+            }
+        }
+        // recall ceiling for context
+        let exact = brute_force_gt_k(&ds.database, &ds.queries, 1);
+        println!("(exact-search ceiling R@1 = {})",
+                 common::pct(recall_at(&exact, &ds.ground_truth, 1)));
+    }
+    let path = exp::write_csv("fig6.csv",
+        "dataset,method,nprobe,ef,n_aq,n_pairs,qps,r1", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

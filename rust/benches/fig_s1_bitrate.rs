@@ -1,0 +1,54 @@
+//! Figure S1: MSE as a function of bitrate (number of code steps) for
+//! QINCo2 vs RQ/OPQ, plus the implied bitrate reduction at iso-MSE.
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::Flavor;
+use qinco2::experiments as exp;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::quantizers::{opq::Opq, rq::Rq, VectorQuantizer};
+use qinco2::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("FIGURE S1 — MSE vs bitrate", "Fig. S1");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let ds = exp::dataset(Flavor::BigAnn, 32, &scale);
+    let mut csv = Vec::new();
+
+    // QINCo2: one M=16 model, every prefix = one bitrate point
+    let cfg = TrainCfg { epochs: scale.epochs, a: 8, b: 8, ..Default::default() };
+    let params = exp::trained_model(&mut engine, "qinco2_xs", "bigann_s1", &ds.train, &cfg)?;
+    let codec = Codec::new(&engine, "qinco2_xs", 16, 16)?;
+    let q_curve = exp::eval_multirate(&mut engine, &codec, &params, &ds.database)?;
+
+    // RQ / OPQ at a few explicit code counts
+    println!("{:>6} {:>12} {:>12} {:>12}", "codes", "QINCo2", "RQ", "OPQ");
+    common::hr(46);
+    for m in [2usize, 4, 8, 12, 16] {
+        let rq = Rq::train(&ds.train, m, 64, 5, 31);
+        let e_rq = rq.eval_mse(&ds.database);
+        let e_opq = if m >= 2 && 32 % m == 0 {
+            let opq = Opq::train(&ds.train, m, 64, 3, 32);
+            format!("{:.5}", opq.eval_mse(&ds.database))
+        } else {
+            "-".into()
+        };
+        println!("{m:>6} {:>12.5} {e_rq:>12.5} {e_opq:>12}", q_curve[m - 1]);
+        csv.push(format!("{m},{},{e_rq},{e_opq}", q_curve[m - 1]));
+    }
+    // bitrate reduction: smallest QINCo2 prefix beating RQ at m codes
+    println!("\nbitrate reduction at iso-MSE (vs RQ):");
+    for m in [8usize, 16] {
+        let rq = Rq::train(&ds.train, m, 64, 5, 31);
+        let target = rq.eval_mse(&ds.database);
+        if let Some(mq) = (1..=16).find(|&i| q_curve[i - 1] <= target) {
+            println!("  RQ {m} codes (MSE {target:.5}) ~= QINCo2 {mq} codes  ({:.0}% fewer)",
+                     100.0 * (m as f64 - mq as f64) / m as f64);
+        }
+    }
+    let path = exp::write_csv("fig_s1.csv", "codes,qinco2,rq,opq", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Table 3 + Table S1 + Table S4: compression (MSE) and retrieval
+//! (R@1/R@10/R@100) across datasets and code lengths, with the QINCo →
+//! QINCo2 ablation ladder and the classical baselines.
+//!
+//! Rows (paper Table 3):
+//!   OPQ / RQ / LSQ                      (pure-Rust baselines)
+//!   QINCo (reproduction)                qinco1 arch, Adam, exact greedy
+//!   + improved training                 qinco1 arch, AdamW recipe
+//!   + improved architecture             qinco2_xs arch, exact greedy
+//!   + candidates pre-selection          A=8,  B=1
+//!   + beam-search                       A=8,  B=8
+//!   + evaluate with larger beam         A=16, B=16 (same checkpoint)
+//!
+//! Both code lengths (8 and 16 codes) come from one M=16 model via
+//! prefix decoding, which the per-step training loss optimizes directly
+//! (Fig. S3 shows prefixes of larger-M models are near-optimal).
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::brute_force_gt_k;
+use qinco2::experiments as exp;
+use qinco2::metrics::recall_triple;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::quantizers::{lsq::Lsq, opq::Opq, rq::Rq, VectorQuantizer};
+use qinco2::runtime::Engine;
+use qinco2::tensor::Matrix;
+
+struct Row {
+    label: String,
+    mse: [f64; 2],      // [8 codes, 16 codes]
+    r: [(f64, f64, f64); 2],
+    train_s: f64,
+}
+
+fn eval_decoded_rates(db: &Matrix, q: &Matrix, gt: &[u32], dec8: &Matrix, dec16: &Matrix)
+    -> ([f64; 2], [(f64, f64, f64); 2]) {
+    let m8 = qinco2::tensor::mse(db, dec8);
+    let m16 = qinco2::tensor::mse(db, dec16);
+    let r8 = recall_triple(&brute_force_gt_k(dec8, q, 100), gt);
+    let r16 = recall_triple(&brute_force_gt_k(dec16, q, 100), gt);
+    ([m8, m16], [r8, r16])
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("TABLE 3 — compression MSE and R@1 across datasets", "Table 3, S1, S4");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+
+    // Table S1: parameter counts
+    println!("\n[Table S1] trainable parameters:");
+    for name in ["qinco1", "qinco2_xs", "qinco2_s", "qinco2_m"] {
+        let spec = engine.manifest.model(name)?;
+        println!("  {name:12} {:>10} params", spec.num_params);
+    }
+
+    let mut csv: Vec<String> = Vec::new();
+    for flavor in common::flavors() {
+        let ds = exp::dataset(flavor, 32, &scale);
+        println!("\n=== dataset: {}1M-scaled (train {}, db {}, q {}) ===",
+                 flavor.name(), ds.train.rows, ds.database.rows, ds.queries.rows);
+        let mut rows: Vec<Row> = Vec::new();
+
+        // ---- classical baselines (both rates trained separately) ----
+        for (label, build) in [
+            ("OPQ", 0usize),
+            ("RQ", 1),
+            ("LSQ", 2),
+        ] {
+            let t0 = std::time::Instant::now();
+            let (dec8, dec16): (Matrix, Matrix) = match build {
+                0 => {
+                    let q8 = Opq::train(&ds.train, 8, 64, 3, 11);
+                    let q16 = Opq::train(&ds.train, 16, 64, 3, 12);
+                    (q8.decode(&q8.encode(&ds.database)), q16.decode(&q16.encode(&ds.database)))
+                }
+                1 => {
+                    let q8 = Rq::train(&ds.train, 8, 64, 5, 13);
+                    let q16 = Rq::train(&ds.train, 16, 64, 5, 14);
+                    (q8.decode(&q8.encode(&ds.database)), q16.decode(&q16.encode(&ds.database)))
+                }
+                _ => {
+                    let q8 = Lsq::train(&ds.train, 8, 64, 3, 15);
+                    let q16 = Lsq::train(&ds.train, 16, 64, 3, 16);
+                    (q8.decode(&q8.encode(&ds.database)), q16.decode(&q16.encode(&ds.database)))
+                }
+            };
+            let (mse, r) = eval_decoded_rates(&ds.database, &ds.queries, &ds.ground_truth, &dec8, &dec16);
+            rows.push(Row { label: label.into(), mse, r, train_s: t0.elapsed().as_secs_f64() });
+        }
+
+        // ---- the QINCo→QINCo2 ablation ladder (trained in parallel) ----
+        let ladder: Vec<(&str, &str, &str, usize, usize)> = vec![
+            // label, model, optimizer, eval A, eval B
+            ("QINCo (reproduction)", "qinco1", "adam", 64, 1),
+            ("+ improved training", "qinco1", "adamw", 64, 1),
+            ("+ improved architecture", "qinco2_xs", "adamw", 64, 1),
+            ("+ candidates pre-selection", "qinco2_xs", "adamw", 8, 1),
+            ("+ beam-search", "qinco2_xs", "adamw", 8, 8),
+        ];
+        let jobs: Vec<exp::TrainJob> = ladder
+            .iter()
+            .map(|&(_, model, opt, a, b)| exp::TrainJob {
+                model: model.into(),
+                tag: format!("{}_t3_{}_A{a}B{b}", flavor.name(), opt),
+                train: ds.train.clone(),
+                cfg: TrainCfg {
+                    epochs: scale.epochs,
+                    optimizer: opt.into(),
+                    // training-time encode = eval-time setting for the
+                    // ablation rows (beam row trains A8 B8 like the paper)
+                    a: if a == 64 { 64 } else { a.min(8) },
+                    b: b.min(8),
+                    ..Default::default()
+                },
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let trained = exp::parallel_train(jobs);
+        let wave_secs = t0.elapsed().as_secs_f64();
+
+        for (i, ((label, model, _opt, a, b), params)) in
+            ladder.iter().zip(trained).enumerate()
+        {
+            let params = params?;
+            let codec = Codec::new(&engine, model, *a, *b)?;
+            let (codes, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let partials = codec.decode_partial(&mut engine, &params, &codes)?;
+            let (mse, r) = eval_decoded_rates(
+                &ds.database, &ds.queries, &ds.ground_truth, &partials[7], &partials[15]);
+            rows.push(Row { label: label.to_string(), mse, r, train_s: wave_secs / 5.0 });
+            // the final ladder rung: same checkpoint, larger eval beam
+            if i == ladder.len() - 1 {
+                let codec2 = Codec::new(&engine, model, 16, 16)?;
+                let (codes, _, _) = codec2.encode(&mut engine, &params, &ds.database)?;
+                let partials = codec2.decode_partial(&mut engine, &params, &codes)?;
+                let (mse, r) = eval_decoded_rates(
+                    &ds.database, &ds.queries, &ds.ground_truth, &partials[7], &partials[15]);
+                rows.push(Row {
+                    label: "+ larger eval beam (QINCo2)".into(),
+                    mse,
+                    r,
+                    train_s: 0.0,
+                });
+            }
+        }
+
+        // ---- print ----
+        for (ri, rate) in ["8 codes", "16 codes"].iter().enumerate() {
+            println!("\n--- {rate} (K=64) ---");
+            println!("{:<30} {:>9} {:>6} {:>6} {:>6} {:>8}",
+                     "method", "MSE", "R@1", "R@10", "R@100", "train(s)");
+            common::hr(70);
+            for row in &rows {
+                println!(
+                    "{:<30} {:>9.5} {:>6} {:>6} {:>6} {:>8.1}",
+                    row.label,
+                    row.mse[ri],
+                    common::pct(row.r[ri].0),
+                    common::pct(row.r[ri].1),
+                    common::pct(row.r[ri].2),
+                    row.train_s
+                );
+                csv.push(format!(
+                    "{},{},{},{:.6},{:.4},{:.4},{:.4},{:.1}",
+                    flavor.name(), rate, row.label.replace(',', ";"),
+                    row.mse[ri], row.r[ri].0, row.r[ri].1, row.r[ri].2, row.train_s
+                ));
+            }
+        }
+    }
+    let path = exp::write_csv("table3.csv",
+        "dataset,rate,method,mse,r1,r10,r100,train_s", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Table 4 + Table S3: approximate decoders for QINCo2 codes.
+//!
+//! Compares, on fixed QINCo2-S codes: the AQ joint-least-squares decoder,
+//! the sequential RQ refit, consecutive code-pairs (M/2 pairs) and the
+//! optimized pairwise decoder (2M pairs) — both by direct R@1 and by the
+//! recall of QINCo2 re-ranking a 10-element shortlist built by each
+//! method. Then prints the pairwise pair-selection trace with IVF codes
+//! (Table S3).
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::brute_force_gt_k;
+use qinco2::experiments as exp;
+use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
+use qinco2::metrics::recall_at;
+use qinco2::qinco::{reference, Codec, TrainCfg};
+use qinco2::quantizers::aq_lut::AdditiveDecoder;
+use qinco2::quantizers::pairwise::PairwiseDecoder;
+use qinco2::runtime::Engine;
+use qinco2::tensor::{self, Matrix};
+
+/// Rank the db for each query by a decoded approximation, then optionally
+/// re-rank the top `shortlist` with the exact QINCo2 reconstruction.
+fn eval_decoder(
+    decoded: &Matrix,
+    exact: &Matrix,
+    queries: &Matrix,
+    gt: &[u32],
+    shortlist: usize,
+) -> (f64, f64) {
+    let direct = brute_force_gt_k(decoded, queries, shortlist.max(1));
+    let r1_direct = recall_at(&direct, gt, 1);
+    // re-rank the shortlist by the exact (neural) reconstruction
+    let mut reranked = Vec::with_capacity(queries.rows);
+    for (qi, cands) in direct.iter().enumerate() {
+        let q = queries.row(qi);
+        let mut scored: Vec<(f32, u32)> = cands
+            .iter()
+            .map(|&id| (tensor::l2_sq(q, exact.row(id as usize)), id))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        reranked.push(scored.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
+    }
+    let r1_rerank = recall_at(&reranked, gt, 1);
+    (r1_direct, r1_rerank)
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("TABLE 4 — approximate decoders for QINCo2 codes", "Table 4, Table S3");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let mut csv = Vec::new();
+
+    for flavor in common::flavors() {
+        let ds = exp::dataset(flavor, 32, &scale);
+        let cfg = TrainCfg { epochs: scale.epochs, a: 8, b: 8, ..Default::default() };
+        let params = exp::trained_model(
+            &mut engine, "qinco2_xs", &format!("{}_t4", flavor.name()), &ds.train, &cfg)?;
+        let codec = Codec::new(&engine, "qinco2_xs", 8, 8)?;
+
+        for (rate_label, m_rate) in [("8 codes", 8usize), ("16 codes", 16)] {
+            // db codes + exact neural reconstruction at this rate
+            let (codes_full, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let codes = codes_full.truncate(m_rate);
+            let partials = codec.decode_partial(&mut engine, &params, &codes_full)?;
+            let exact = partials[m_rate - 1].clone();
+            // decoder fitting needs samples per K^2 bucket: use a large
+            // dedicated split from the same distribution (the paper fits
+            // on millions of training vectors)
+            let fit_x = ds.extra_split(4 * ds.train.rows.max(4000), 7);
+            let (tr_codes_full, _, _) = codec.encode(&mut engine, &params, &fit_x)?;
+            let tr_codes = tr_codes_full.truncate(m_rate);
+
+            let no_short = {
+                let r = brute_force_gt_k(&exact, &ds.queries, 1);
+                recall_at(&r, &ds.ground_truth, 1)
+            };
+            println!(
+                "\n--- {} / {rate_label}: QINCo2-XS (no shortlist) R@1 = {} ---",
+                flavor.name(), common::pct(no_short)
+            );
+            println!("{:<42} {:>6} {:>14}", "decoder", "R@1", "R@1 nshort=10");
+            common::hr(66);
+
+            let k = params.cfg.k;
+            let rows: Vec<(String, Matrix)> = vec![
+                ("AQ".into(),
+                 AdditiveDecoder::fit_aq(&fit_x, &tr_codes, k)?.decode(&codes)),
+                ("RQ".into(),
+                 AdditiveDecoder::fit_rq(&fit_x, &tr_codes, k).decode(&codes)),
+                (format!("RQ w/ M/2={} consecutive code-pairs", m_rate / 2),
+                 PairwiseDecoder::train_consecutive(&fit_x, &tr_codes, k).decode(&codes)),
+                (format!("RQ w/ 2M={} optimized code-pairs", 2 * m_rate),
+                 PairwiseDecoder::train(&fit_x, &tr_codes, k, 2 * m_rate).decode(&codes)),
+            ];
+            for (label, decoded) in rows {
+                let (r1, r1_short) =
+                    eval_decoder(&decoded, &exact, &ds.queries, &ds.ground_truth, 10);
+                println!("{:<42} {:>6} {:>14}", label, common::pct(r1), common::pct(r1_short));
+                csv.push(format!(
+                    "{},{},{},{:.4},{:.4},{:.4}",
+                    flavor.name(), rate_label, label.replace(',', ";"), no_short, r1, r1_short
+                ));
+            }
+        }
+
+        // ---- Table S3: pair selection trace with IVF integration ----
+        if flavor == qinco2::data::Flavor::Deep {
+            println!("\n[Table S3] pairwise decoder pairs on deep-like, 8 codes, with IVF codes:");
+            let bcfg = BuildCfg { k_ivf: 32, m_tilde: 2, ..Default::default() };
+            let ivf = qinco2::index::ivf::Ivf::build(&ds.train, &ds.train, bcfg.k_ivf, bcfg.seed);
+            let residuals = ivf.residuals(&ds.train);
+            let cfg2 = TrainCfg { epochs: scale.epochs, a: 8, b: 8, seed: cfg.seed ^ 0x1F, ..Default::default() };
+            let params_r = exp::trained_model(
+                &mut engine, "qinco2_xs", &format!("{}_ivfres_t4", flavor.name()),
+                &residuals, &cfg2)?;
+            let index = SearchIndex::build(
+                &mut engine, &codec, params_r, &ds.train, &ds.database, &bcfg)?;
+            let m = index.codes.m;
+            print!("  pairs: ");
+            for (i, j, mse) in index.pairwise_trace.iter().take(16) {
+                let f = |p: &usize| if *p >= m { format!("~{}", p - m + 1) } else { format!("{}", p + 1) };
+                print!("({},{})={:.3} ", f(i), f(j), mse);
+            }
+            println!();
+            // sanity: the index still searches
+            let sp = SearchParams::default();
+            let res = index.search_batch(&ds.queries, &sp);
+            println!("  pipeline R@10 with defaults: {}",
+                     common::pct(recall_at(&res, &ds.ground_truth, 10)));
+        }
+    }
+    let path = exp::write_csv("table4.csv",
+        "dataset,rate,decoder,r1_noshort,r1,r1_short10", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

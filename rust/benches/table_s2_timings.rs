@@ -1,0 +1,94 @@
+//! Table S2: encoding/decoding complexity — analytic FLOPs plus measured
+//! CPU µs per vector for OPQ, RQ, QINCo2-XS/S (and the QINCo1-style
+//! greedy configuration).
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::Flavor;
+use qinco2::experiments as exp;
+use qinco2::qinco::{Codec, TrainCfg};
+use qinco2::quantizers::{opq::Opq, rq::Rq, VectorQuantizer};
+use qinco2::runtime::Engine;
+use qinco2::util::timer;
+
+fn flops_qinco2(d: usize, de: usize, dh: usize, l: usize, m: usize, k: usize,
+                a: usize, b: usize) -> (f64, f64) {
+    // paper Table S2: enc = A·B·M·de(d + L·dh) + B·K·d ; dec = M·de(d + L·dh)
+    let per_eval = de as f64 * (d as f64 + (l * dh) as f64);
+    let enc = (a * b * m) as f64 * per_eval + (b * k) as f64 * d as f64;
+    let dec = m as f64 * per_eval;
+    (enc, dec)
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("TABLE S2 — encode/decode FLOPs and CPU timings", "Table S2");
+    let scale = exp::Scale::bench();
+    let mut engine = Engine::open(exp::artifacts_dir())?;
+    let flavor = Flavor::BigAnn;
+    let ds = exp::dataset(flavor, 32, &scale);
+    let sample = ds.database.gather_rows(&(0..512.min(ds.database.rows)).collect::<Vec<_>>());
+    let mut csv = Vec::new();
+
+    println!("{:<24} {:>14} {:>10} {:>14} {:>10}", "method", "enc FLOPs", "enc µs", "dec FLOPs", "dec µs");
+    common::hr(78);
+
+    // ---- OPQ ----
+    {
+        let opq = Opq::train(&ds.train, 8, 64, 3, 1);
+        let (enc_s, _) = timer::time_median(1, 3, || {
+            std::hint::black_box(opq.encode(&sample));
+        });
+        let codes = opq.encode(&sample);
+        let (dec_s, _) = timer::time_median(1, 3, || {
+            std::hint::black_box(opq.decode(&codes));
+        });
+        let d = 32f64;
+        let (ef, df) = (d * d + 64.0 * d, d * (d + 1.0));
+        let (e_us, d_us) = (enc_s * 1e6 / sample.rows as f64, dec_s * 1e6 / sample.rows as f64);
+        println!("{:<24} {:>14.0} {:>10.2} {:>14.0} {:>10.2}", "OPQ", ef, e_us, df, d_us);
+        csv.push(format!("OPQ,{ef},{e_us},{df},{d_us}"));
+    }
+    // ---- RQ (beam 5) ----
+    {
+        let rq = Rq::train(&ds.train, 8, 64, 5, 2);
+        let (enc_s, _) = timer::time_median(1, 3, || {
+            std::hint::black_box(rq.encode(&sample));
+        });
+        let codes = rq.encode(&sample);
+        let (dec_s, _) = timer::time_median(1, 3, || {
+            std::hint::black_box(rq.decode(&codes));
+        });
+        let (ef, df) = ((64 * 8 * 32 * 5) as f64, (8 * 32) as f64);
+        let (e_us, d_us) = (enc_s * 1e6 / sample.rows as f64, dec_s * 1e6 / sample.rows as f64);
+        println!("{:<24} {:>14.0} {:>10.2} {:>14.0} {:>10.2}", "RQ (B=5)", ef, e_us, df, d_us);
+        csv.push(format!("RQ,{ef},{e_us},{df},{d_us}"));
+    }
+    // ---- QINCo2 variants through the XLA artifacts ----
+    for (label, model, a, b) in [
+        ("QINCo-style (A=K greedy)", "qinco2_xs", 64usize, 1usize),
+        ("QINCo2-XS (A=8,B=8)", "qinco2_xs", 8, 8),
+        ("QINCo2-S  (A=8,B=8)", "qinco2_s", 8, 8),
+        ("QINCo2-M  (A=8,B=8)", "qinco2_m", 8, 8),
+    ] {
+        let cfg = TrainCfg { epochs: 2, a: 8, b: 8, ..Default::default() };
+        let params = exp::trained_model(
+            &mut engine, model, &format!("{}_s2", flavor.name()), &ds.train, &cfg)?;
+        let codec = match Codec::new(&engine, model, a, b) {
+            Ok(c) => c,
+            Err(_) => {
+                println!("{label:<24} (no artifact for A={a},B={b}; skipped)");
+                continue;
+            }
+        };
+        let t = exp::time_codec(&mut engine, &codec, &params, &sample)?;
+        let c = &params.cfg;
+        let (ef, df) = flops_qinco2(c.d, c.de, c.dh, c.l, c.m, c.k, a, b);
+        println!("{:<24} {:>14.0} {:>10.2} {:>14.0} {:>10.2}",
+                 label, ef, t.encode_us, df, t.decode_us);
+        csv.push(format!("{label},{ef},{},{df},{}", t.encode_us, t.decode_us));
+    }
+    let path = exp::write_csv("table_s2.csv", "method,enc_flops,enc_us,dec_flops,dec_us", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}

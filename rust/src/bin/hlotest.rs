@@ -1,0 +1,23 @@
+//! `hlotest` — verify that HLO text artifacts parse under the pinned
+//! xla_extension (0.5.1) text parser. Useful when touching the L2
+//! lowering: newer jax emits ops (e.g. `topk(..., largest=true)`) that
+//! the old parser rejects; this surfaces the exact line.
+//!
+//! Usage: `cargo run --release --bin hlotest artifacts/*.hlo.txt`
+
+fn main() {
+    let mut bad = 0;
+    for f in std::env::args().skip(1) {
+        match xla::HloModuleProto::from_text_file(&f) {
+            Ok(_) => println!("OK   {f}"),
+            Err(e) => {
+                bad += 1;
+                let msg: String = format!("{e}").chars().take(400).collect();
+                println!("FAIL {f}: {msg}");
+            }
+        }
+    }
+    if bad > 0 {
+        std::process::exit(1);
+    }
+}

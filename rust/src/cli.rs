@@ -1,0 +1,373 @@
+//! Command-line interface (clap is unavailable offline; a small
+//! flag parser lives here). Subcommands:
+//!
+//! ```text
+//! qinco2 train   --model qinco2_xs --dataset bigann [--epochs N] [--out ckpt]
+//! qinco2 eval    --model qinco2_xs --dataset bigann [--a A --b B]
+//! qinco2 encode  --model qinco2_xs --dataset bigann --out codes.qnpz
+//! qinco2 search  --model qinco2_xs --dataset bigann [--nprobe ..]
+//! qinco2 serve   --model qinco2_xs --dataset bigann [--workers N]
+//! qinco2 info
+//! ```
+
+use crate::data::Flavor;
+use crate::experiments as exp;
+use crate::index::{BuildCfg, SearchIndex, SearchParams};
+use crate::qinco::{Codec, ParamStore, TrainCfg, Trainer};
+use crate::runtime::Engine;
+use crate::server::{Router, ServerCfg};
+use crate::util::qnpz::{Store, Tensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Minimal `--flag value` / `--flag` parser.
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+}
+
+fn flavor_of(args: &Args) -> Result<Flavor> {
+    let name = args.str_or("dataset", "bigann");
+    Flavor::parse(&name).with_context(|| format!("unknown dataset {name:?}"))
+}
+
+fn common_setup(args: &Args) -> Result<(Engine, String, Flavor, exp::Scale)> {
+    let engine = Engine::open(exp::artifacts_dir())?;
+    let model = args.str_or("model", "qinco2_xs");
+    if !engine.manifest.models.contains_key(&model) {
+        bail!(
+            "model {model:?} not in manifest; available: {:?}",
+            engine.manifest.models.keys().collect::<Vec<_>>()
+        );
+    }
+    let flavor = flavor_of(args)?;
+    let mut scale = exp::Scale::from_env();
+    scale.n_train = args.usize_or("n-train", scale.n_train);
+    scale.n_db = args.usize_or("n-db", scale.n_db);
+    scale.n_query = args.usize_or("n-query", scale.n_query);
+    scale.epochs = args.usize_or("epochs", scale.epochs);
+    Ok((engine, model, flavor, scale))
+}
+
+fn train_cfg(args: &Args, scale: &exp::Scale) -> TrainCfg {
+    TrainCfg {
+        epochs: scale.epochs,
+        lr_max: args.f32_or("lr", 8e-4),
+        optimizer: args.str_or("optimizer", "adamw"),
+        a: args.usize_or("a", 8),
+        b: args.usize_or("b", 8),
+        seed: args.usize_or("seed", 0xA11CE) as u64,
+        log_every: 1,
+    }
+}
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    if argv.is_empty() {
+        return cmd_help();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "encode" => cmd_encode(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => cmd_help(),
+        other => bail!("unknown subcommand {other:?} (try `qinco2 help`)"),
+    }
+}
+
+fn cmd_help() -> Result<()> {
+    println!("{}", HELP.trim());
+    Ok(())
+}
+
+const HELP: &str = r#"
+qinco2 — vector compression & billion-scale search with implicit neural codebooks
+
+USAGE: qinco2 <subcommand> [--flag value ...]
+
+SUBCOMMANDS
+  train    train a QINCo2 model on a synthetic dataset flavor
+  eval     MSE + recall of a trained model (trains/caches if needed)
+  encode   encode a database split to codes (.qnpz)
+  search   build the IVF search index and report recall/QPS
+  serve    run the serving coordinator over a built index
+  info     list models and artifacts in the manifest
+
+COMMON FLAGS
+  --model qinco2_xs|qinco2_s|qinco2_m|qinco1|test   (default qinco2_xs)
+  --dataset bigann|deep|contriever|ssnpp            (default bigann)
+  --n-train / --n-db / --n-query / --epochs         (default: QINCO2_SCALE)
+  --a / --b      encode-time pre-selection + beam (must exist as artifact)
+  --optimizer adamw|adam    --lr 8e-4    --seed N
+
+SEARCH FLAGS
+  --k-ivf 64  --nprobe 8  --ef 64  --n-aq 256  --n-pairs 32  --topk 10
+SERVE FLAGS
+  --workers N  --queries N
+"#;
+
+fn cmd_info() -> Result<()> {
+    let engine = Engine::open(exp::artifacts_dir())?;
+    println!("platform: {}", engine.platform());
+    println!("models:");
+    for (name, spec) in &engine.manifest.models {
+        let c = &spec.cfg;
+        println!(
+            "  {name:12} d={} M={} K={} L={} de={} dh={} ({} params)",
+            c.d, c.m, c.k, c.l, c.de, c.dh, spec.num_params
+        );
+        let settings = engine.manifest.encode_settings(name);
+        println!("               encode settings (A,B,N): {settings:?}");
+    }
+    println!("artifacts: {}", engine.manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (mut engine, model, flavor, scale) = common_setup(args)?;
+    let spec = engine.manifest.model(&model)?.clone();
+    let ds = exp::dataset(flavor, spec.cfg.d, &scale);
+    let cfg = train_cfg(args, &scale);
+    let mut params = ParamStore::init(&spec, &model, &ds.train, cfg.seed);
+    let trainer = Trainer::new(&engine, &model, cfg)?;
+    let stats = trainer.train(&mut engine, &mut params, &ds.train)?;
+    let out = args.str_or(
+        "out",
+        exp::artifacts_dir().join(format!("models/{model}_{}.qnpz", flavor.name())).to_str().unwrap(),
+    );
+    std::fs::create_dir_all(std::path::Path::new(&out).parent().unwrap()).ok();
+    params.save(std::path::Path::new(&out))?;
+    println!(
+        "trained {model} on {}: {} steps in {:.1}s, final loss {:.5}; saved {out}",
+        flavor.name(),
+        stats.steps,
+        stats.secs,
+        stats.epoch_losses.last().unwrap_or(&f64::NAN)
+    );
+    Ok(())
+}
+
+fn load_or_train(
+    engine: &mut Engine,
+    args: &Args,
+    model: &str,
+    flavor: Flavor,
+    scale: &exp::Scale,
+    train: &crate::tensor::Matrix,
+) -> Result<ParamStore> {
+    if let Some(ckpt) = args.get("ckpt") {
+        let spec = engine.manifest.model(model)?.clone();
+        return ParamStore::load(std::path::Path::new(ckpt), &spec, model);
+    }
+    let cfg = train_cfg(args, scale);
+    exp::trained_model(engine, model, flavor.name(), train, &cfg)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (mut engine, model, flavor, scale) = common_setup(args)?;
+    let spec = engine.manifest.model(&model)?.clone();
+    let ds = exp::dataset(flavor, spec.cfg.d, &scale);
+    let params = load_or_train(&mut engine, args, &model, flavor, &scale, &ds.train)?;
+    let (a, b) = (args.usize_or("a", 16), args.usize_or("b", 16));
+    let codec = Codec::new(&engine, &model, a, b)?;
+    let ev = exp::eval_compression(&mut engine, &codec, &params, &ds.database, &ds.queries, &ds.ground_truth)?;
+    println!(
+        "{model} on {}1M-scaled (A={a}, B={b}): MSE {:.5}  R@1 {:.1}%  R@10 {:.1}%  R@100 {:.1}%",
+        flavor.name(),
+        ev.mse,
+        100.0 * ev.r1,
+        100.0 * ev.r10,
+        100.0 * ev.r100
+    );
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    let (mut engine, model, flavor, scale) = common_setup(args)?;
+    let spec = engine.manifest.model(&model)?.clone();
+    let ds = exp::dataset(flavor, spec.cfg.d, &scale);
+    let params = load_or_train(&mut engine, args, &model, flavor, &scale, &ds.train)?;
+    let (a, b) = (args.usize_or("a", 16), args.usize_or("b", 16));
+    let codec = Codec::new(&engine, &model, a, b)?;
+    let t0 = std::time::Instant::now();
+    let (codes, _, errs) = codec.encode(&mut engine, &params, &ds.database)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let out = args.str_or("out", "codes.qnpz");
+    let mut store = Store::new();
+    store.insert(
+        "codes",
+        Tensor::i32(vec![codes.n, codes.m], &codes.data.iter().map(|&c| c as i32).collect::<Vec<_>>()),
+    );
+    store.insert("errs", Tensor::f32(vec![errs.len()], errs.clone()));
+    store.save(std::path::Path::new(&out))?;
+    let mse: f64 = errs.iter().map(|&e| e as f64).sum::<f64>() / errs.len() as f64;
+    println!(
+        "encoded {} vectors in {:.2}s ({:.1} µs/vec), MSE {:.5}; wrote {out}",
+        codes.n,
+        secs,
+        secs * 1e6 / codes.n as f64,
+        mse
+    );
+    Ok(())
+}
+
+fn build_index(
+    args: &Args,
+    engine: &mut Engine,
+    model: &str,
+    flavor: Flavor,
+    scale: &exp::Scale,
+) -> Result<(SearchIndex, crate::data::Dataset)> {
+    let spec = engine.manifest.model(model)?.clone();
+    let ds = exp::dataset(flavor, spec.cfg.d, scale);
+    let bcfg = BuildCfg {
+        k_ivf: args.usize_or("k-ivf", 64),
+        m_tilde: args.usize_or("m-tilde", 2),
+        ..Default::default()
+    };
+    // the fine quantizer is trained on IVF residuals (Fig. 3 pipeline)
+    let ivf = crate::index::ivf::Ivf::build(&ds.train, &ds.train, bcfg.k_ivf, bcfg.seed);
+    let residuals = ivf.residuals(&ds.train);
+    let mut cfg = train_cfg(args, scale);
+    cfg.seed ^= 0x1F; // distinct cache key from the raw-data model
+    let params = exp::trained_model(engine, model, &format!("{}_ivfres", flavor.name()), &residuals, &cfg)?;
+    let codec = Codec::new(engine, model, args.usize_or("a", cfg.a), args.usize_or("b", cfg.b))?;
+    let index = SearchIndex::build(engine, &codec, params, &ds.train, &ds.database, &bcfg)?;
+    Ok((index, ds))
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let (mut engine, model, flavor, scale) = common_setup(args)?;
+    let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
+    let sp = SearchParams {
+        nprobe: args.usize_or("nprobe", 8),
+        ef_search: args.usize_or("ef", 64),
+        n_aq: args.usize_or("n-aq", 256),
+        n_pairs: args.usize_or("n-pairs", 32),
+        n_final: args.usize_or("topk", 10),
+    };
+    let t0 = std::time::Instant::now();
+    let results = index.search_batch(&ds.queries, &sp);
+    let secs = t0.elapsed().as_secs_f64();
+    let (r1, r10, r100) = crate::metrics::recall_triple(&results, &ds.ground_truth);
+    println!(
+        "IVF-{model} on {}: R@1 {:.1}%  R@10 {:.1}%  R@100 {:.1}%  ({:.0} QPS, {} queries)",
+        flavor.name(),
+        100.0 * r1,
+        100.0 * r10,
+        100.0 * r100,
+        ds.queries.rows as f64 / secs,
+        ds.queries.rows
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (mut engine, model, flavor, scale) = common_setup(args)?;
+    let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
+    let workers = args.usize_or("workers", crate::util::pool::default_threads());
+    let router = Router::start(
+        Arc::new(index),
+        ServerCfg { workers, ..Default::default() },
+    );
+    let sp = SearchParams {
+        nprobe: args.usize_or("nprobe", 8),
+        ef_search: args.usize_or("ef", 64),
+        n_aq: args.usize_or("n-aq", 256),
+        n_pairs: args.usize_or("n-pairs", 32),
+        n_final: args.usize_or("topk", 10),
+    };
+    let n = args.usize_or("queries", ds.queries.rows);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n)
+        .map(|i| router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("worker died");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = router.stats();
+    println!(
+        "served {n} queries with {workers} workers: {:.0} QPS, mean {:.2?}, p50 {:.2?}, p99 {:.2?}",
+        n as f64 / secs,
+        stats.mean_latency,
+        stats.p50,
+        stats.p99
+    );
+    router.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parser_flags_and_positional() {
+        let argv: Vec<String> =
+            ["pos1", "--a", "5", "--flag", "--b", "x", "pos2"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.usize_or("a", 0), 5);
+        assert!(a.flag("flag"));
+        assert_eq!(a.str_or("b", ""), "x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn flavor_parse() {
+        let a = Args::parse(&["--dataset".to_string(), "deep".to_string()]);
+        assert_eq!(flavor_of(&a).unwrap(), Flavor::Deep);
+        let bad = Args::parse(&["--dataset".to_string(), "nope".to_string()]);
+        assert!(flavor_of(&bad).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! k-means (Lloyd) with k-means++ seeding — the substrate under RQ/PQ
+//! codebook training, IVF coarse quantizers and the QINCo2 codebook
+//! initialization (App. A.2: "10 k-means iterations per codebook").
+
+use crate::tensor::{self, Matrix};
+use crate::util::{pool, prng::Rng};
+
+#[derive(Clone, Debug)]
+pub struct KMeansCfg {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub nthreads: usize,
+}
+
+impl KMeansCfg {
+    pub fn new(k: usize) -> Self {
+        KMeansCfg { k, iters: 10, seed: 0x5EED, nthreads: pool::default_threads() }
+    }
+
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Matrix,
+    /// final assignment of the training rows
+    pub assign: Vec<u32>,
+    /// mean squared distance at the last iteration
+    pub inertia: f64,
+}
+
+/// k-means++ seeding: D^2-weighted sampling of initial centroids.
+fn seed_pp(xs: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let n = xs.rows;
+    let mut cents = Matrix::zeros(k, xs.cols);
+    let first = rng.below(n);
+    cents.row_mut(0).copy_from_slice(xs.row(first));
+    let mut d2: Vec<f32> = (0..n)
+        .map(|i| tensor::l2_sq(xs.row(i), cents.row(0)))
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        cents.row_mut(c).copy_from_slice(xs.row(pick));
+        for i in 0..n {
+            let d = tensor::l2_sq(xs.row(i), cents.row(c));
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    cents
+}
+
+/// Lloyd iterations with empty-cluster splitting (an empty cluster takes
+/// a random point from the largest cluster — same policy as Faiss).
+pub fn kmeans(xs: &Matrix, cfg: &KMeansCfg) -> KMeans {
+    assert!(xs.rows > 0, "kmeans on empty data");
+    let k = cfg.k.min(xs.rows);
+    let mut rng = Rng::new(cfg.seed);
+    let mut cents = seed_pp(xs, k, &mut rng);
+    let mut assign = vec![0u32; xs.rows];
+    let mut inertia = f64::INFINITY;
+
+    for _ in 0..cfg.iters.max(1) {
+        assign = tensor::assign_all(xs, &cents, cfg.nthreads);
+        // recompute centroids
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, xs.cols);
+        for (i, &a) in assign.iter().enumerate() {
+            counts[a as usize] += 1;
+            tensor::add_assign(sums.row_mut(a as usize), xs.row(i));
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // split: steal a random member of the biggest cluster
+                let big = (0..k).max_by_key(|&j| counts[j]).unwrap();
+                let members: Vec<usize> = assign
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a as usize == big)
+                    .map(|(i, _)| i)
+                    .collect();
+                let pick = members[rng.below(members.len())];
+                let mut row = xs.row(pick).to_vec();
+                for v in row.iter_mut() {
+                    *v += 1e-4 * rng.normal_f32();
+                }
+                cents.row_mut(c).copy_from_slice(&row);
+            } else {
+                let inv = 1.0 / counts[c] as f32;
+                let sum_row = sums.row(c).to_vec();
+                for (o, s) in cents.row_mut(c).iter_mut().zip(sum_row) {
+                    *o = s * inv;
+                }
+            }
+        }
+        // inertia for convergence reporting
+        let mut acc = 0.0f64;
+        for (i, &a) in assign.iter().enumerate() {
+            acc += tensor::l2_sq(xs.row(i), cents.row(a as usize)) as f64;
+        }
+        inertia = acc / xs.rows as f64;
+    }
+    // final assignment must be consistent with the *final* centroids
+    assign = tensor::assign_all(xs, &cents, cfg.nthreads);
+    let mut acc = 0.0f64;
+    for (i, &a) in assign.iter().enumerate() {
+        acc += tensor::l2_sq(xs.row(i), cents.row(a as usize)) as f64;
+    }
+    inertia = inertia.min(acc / xs.rows as f64);
+    KMeans { centroids: cents, assign, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[[f32; 2]], spread: f32, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for c in centers {
+            for _ in 0..n_per {
+                data.push(c[0] + spread * rng.normal_f32());
+                data.push(c[1] + spread * rng.normal_f32());
+            }
+        }
+        Matrix::from_vec(n_per * centers.len(), 2, data)
+    }
+
+    #[test]
+    fn finds_well_separated_blobs() {
+        let centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let xs = blobs(100, &centers, 0.3, 1);
+        let km = kmeans(&xs, &KMeansCfg::new(3).iters(15));
+        assert!(km.inertia < 0.5, "inertia {}", km.inertia);
+        // every true center must be close to some learned centroid
+        for c in &centers {
+            let (_, d) = tensor::argmin_l2(c, &km.centroids);
+            assert!(d < 0.5, "center {c:?} unmatched (d={d})");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let xs = blobs(2, &[[0.0, 0.0]], 0.1, 2);
+        let km = kmeans(&xs, &KMeansCfg::new(16).iters(3));
+        assert_eq!(km.centroids.rows, 2);
+    }
+
+    #[test]
+    fn more_iters_no_worse() {
+        let xs = blobs(200, &[[0.0, 0.0], [5.0, 5.0]], 1.0, 3);
+        let i1 = kmeans(&xs, &KMeansCfg::new(8).iters(1).seed(42)).inertia;
+        let i10 = kmeans(&xs, &KMeansCfg::new(8).iters(12).seed(42)).inertia;
+        assert!(i10 <= i1 + 1e-6, "{i10} > {i1}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let xs = blobs(50, &[[0.0, 0.0], [3.0, 3.0]], 0.5, 4);
+        let a = kmeans(&xs, &KMeansCfg::new(4).seed(9));
+        let b = kmeans(&xs, &KMeansCfg::new(4).seed(9));
+        assert_eq!(a.centroids.data, b.centroids.data);
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn assignments_are_nearest() {
+        let xs = blobs(100, &[[0.0, 0.0], [4.0, 4.0]], 0.8, 5);
+        let km = kmeans(&xs, &KMeansCfg::new(5).iters(8));
+        for i in 0..xs.rows {
+            let (best, _) = tensor::argmin_l2(xs.row(i), &km.centroids);
+            assert_eq!(best as u32, km.assign[i]);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! fvecs/ivecs/bvecs readers and writers — the interchange formats of the
+//! BigANN/Deep1B benchmark ecosystem — so the library also runs on the
+//! real corpora when they are available on disk.
+//!
+//! fvecs layout per vector: `u32 d` (little-endian) then `d` f32 values;
+//! ivecs is the same with i32 payloads, bvecs with u8.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+fn read_all(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    )
+    .read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read an .fvecs file, optionally capping the number of vectors.
+pub fn read_fvecs(path: &Path, limit: Option<usize>) -> Result<Matrix> {
+    let buf = read_all(path)?;
+    let mut rows: Vec<f32> = Vec::new();
+    let mut d0: Option<usize> = None;
+    let mut i = 0usize;
+    let mut n = 0usize;
+    while i + 4 <= buf.len() {
+        if let Some(l) = limit {
+            if n >= l {
+                break;
+            }
+        }
+        let d = u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if d == 0 || d > 1 << 20 {
+            bail!("implausible dimension {d} at byte {i} of {path:?}");
+        }
+        match d0 {
+            None => d0 = Some(d),
+            Some(dd) if dd != d => bail!("ragged fvecs: {dd} vs {d}"),
+            _ => {}
+        }
+        if i + 4 * d > buf.len() {
+            bail!("truncated fvecs {path:?}");
+        }
+        for j in 0..d {
+            rows.push(f32::from_le_bytes(buf[i + 4 * j..i + 4 * j + 4].try_into().unwrap()));
+        }
+        i += 4 * d;
+        n += 1;
+    }
+    let d = d0.unwrap_or(0);
+    Ok(Matrix::from_vec(n, d, rows))
+}
+
+/// Read a .bvecs file (u8 payload) into f32.
+pub fn read_bvecs(path: &Path, limit: Option<usize>) -> Result<Matrix> {
+    let buf = read_all(path)?;
+    let mut rows: Vec<f32> = Vec::new();
+    let mut d0: Option<usize> = None;
+    let mut i = 0usize;
+    let mut n = 0usize;
+    while i + 4 <= buf.len() {
+        if let Some(l) = limit {
+            if n >= l {
+                break;
+            }
+        }
+        let d = u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if d == 0 || d > 1 << 20 {
+            bail!("implausible dimension {d} in {path:?}");
+        }
+        match d0 {
+            None => d0 = Some(d),
+            Some(dd) if dd != d => bail!("ragged bvecs"),
+            _ => {}
+        }
+        if i + d > buf.len() {
+            bail!("truncated bvecs {path:?}");
+        }
+        rows.extend(buf[i..i + d].iter().map(|&b| b as f32));
+        i += d;
+        n += 1;
+    }
+    Ok(Matrix::from_vec(n, d0.unwrap_or(0), rows))
+}
+
+/// Read an .ivecs file (ground-truth index lists).
+pub fn read_ivecs(path: &Path, limit: Option<usize>) -> Result<Vec<Vec<i32>>> {
+    let buf = read_all(path)?;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 4 <= buf.len() {
+        if let Some(l) = limit {
+            if out.len() >= l {
+                break;
+            }
+        }
+        let d = u32::from_le_bytes(buf[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if i + 4 * d > buf.len() {
+            bail!("truncated ivecs {path:?}");
+        }
+        let mut row = Vec::with_capacity(d);
+        for j in 0..d {
+            row.push(i32::from_le_bytes(buf[i + 4 * j..i + 4 * j + 4].try_into().unwrap()));
+        }
+        i += 4 * d;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+pub fn write_fvecs(path: &Path, m: &Matrix) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..m.rows {
+        w.write_all(&(m.cols as u32).to_le_bytes())?;
+        for &v in m.row(i) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("qinco_io_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let dir = tmpdir();
+        let p = dir.join("a.fvecs");
+        let m = Matrix::from_vec(3, 4, (0..12).map(|i| i as f32 * 0.5).collect());
+        write_fvecs(&p, &m).unwrap();
+        let m2 = read_fvecs(&p, None).unwrap();
+        assert_eq!(m, m2);
+        let m1 = read_fvecs(&p, Some(2)).unwrap();
+        assert_eq!(m1.rows, 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fvecs_rejects_truncation() {
+        let dir = tmpdir();
+        let p = dir.join("bad.fvecs");
+        std::fs::write(&p, 4u32.to_le_bytes()).unwrap(); // header only
+        assert!(read_fvecs(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_parse() {
+        let dir = tmpdir();
+        let p = dir.join("g.ivecs");
+        let mut bytes = Vec::new();
+        for row in [[1i32, 2], [3, 4]] {
+            bytes.extend(2u32.to_le_bytes());
+            for v in row {
+                bytes.extend(v.to_le_bytes());
+            }
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let rows = read_ivecs(&p, None).unwrap();
+        assert_eq!(rows, vec![vec![1, 2], vec![3, 4]]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bvecs_parse() {
+        let dir = tmpdir();
+        let p = dir.join("b.bvecs");
+        let mut bytes = Vec::new();
+        bytes.extend(3u32.to_le_bytes());
+        bytes.extend([10u8, 20, 30]);
+        std::fs::write(&p, &bytes).unwrap();
+        let m = read_bvecs(&p, None).unwrap();
+        assert_eq!(m.data, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_file(&p).ok();
+    }
+}

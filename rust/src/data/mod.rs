@@ -1,0 +1,357 @@
+//! Datasets: synthetic generators standing in for the paper's corpora
+//! (DESIGN.md §Substitutions), fvecs/ivecs I/O for real data, and
+//! brute-force ground truth.
+//!
+//! The four generators mimic the *structure* that drives multi-codebook
+//! quantization behaviour on the paper's four benchmarks: cluster
+//! anisotropy, heavy tails, non-negativity/sparsity and low intrinsic
+//! dimension. All methods are compared on identical draws, so orderings
+//! and ratios are meaningful even though absolute MSE differs from the
+//! paper's corpora.
+
+pub mod io;
+
+use crate::tensor::{self, Matrix};
+use crate::util::{pool, prng::Rng};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    /// Deep1B-like: CNN embeddings — L2-normalized anisotropic Gaussian
+    /// mixture with shared low-rank structure.
+    Deep,
+    /// BigANN-like: SIFT descriptors — non-negative, clipped, integer-ish
+    /// histogram bins with cluster structure.
+    BigAnn,
+    /// FB-ssnpp-like: SSCD copy-detection embeddings — heavy-tailed,
+    /// weak cluster structure (the paper's hardest dataset).
+    Ssnpp,
+    /// Contriever-like: text embeddings — strong low-rank component and
+    /// larger variance spread across directions.
+    Contriever,
+}
+
+impl Flavor {
+    pub fn parse(s: &str) -> Option<Flavor> {
+        match s.to_ascii_lowercase().as_str() {
+            "deep" | "deep1m" | "deep1b" => Some(Flavor::Deep),
+            "bigann" | "bigann1m" | "sift" => Some(Flavor::BigAnn),
+            "ssnpp" | "fb-ssnpp" | "fbssnpp" => Some(Flavor::Ssnpp),
+            "contriever" => Some(Flavor::Contriever),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flavor::Deep => "deep",
+            Flavor::BigAnn => "bigann",
+            Flavor::Ssnpp => "ssnpp",
+            Flavor::Contriever => "contriever",
+        }
+    }
+
+    pub fn all() -> [Flavor; 4] {
+        [Flavor::BigAnn, Flavor::Deep, Flavor::Contriever, Flavor::Ssnpp]
+    }
+}
+
+/// A train/database/query split with brute-force ground truth.
+pub struct Dataset {
+    pub flavor: Flavor,
+    pub train: Matrix,
+    pub database: Matrix,
+    pub queries: Matrix,
+    /// index into `database` of each query's exact nearest neighbor
+    pub ground_truth: Vec<u32>,
+    /// normalization applied to all splits (train statistics)
+    pub norm_means: Vec<f32>,
+    pub norm_std: f32,
+    seed: u64,
+}
+
+impl Dataset {
+    /// Draw extra vectors from the same distribution, normalized with the
+    /// dataset's train statistics (e.g. large decoder-fitting splits).
+    pub fn extra_split(&self, n: usize, tag: u64) -> Matrix {
+        let mut xs = generate(self.flavor, n, self.train.cols,
+                              self.seed.wrapping_add(100 + tag));
+        normalize_with(&mut xs, &self.norm_means, self.norm_std);
+        xs
+    }
+}
+
+/// Mixture model shared by all flavors; flavor-specific post-processing
+/// shapes the marginals.
+struct Mixture {
+    centers: Matrix,
+    /// per-component, per-dimension scales (anisotropy)
+    scales: Matrix,
+    weights: Vec<f32>,
+    /// shared low-rank basis mixed into every sample
+    basis: Matrix,
+    rank: usize,
+}
+
+fn build_mixture(flavor: Flavor, d: usize, rng: &mut Rng) -> Mixture {
+    let n_comp = match flavor {
+        Flavor::Ssnpp => 8, // weak structure
+        _ => 64,
+    };
+    let rank = match flavor {
+        Flavor::Contriever => d / 4,
+        Flavor::Deep => d / 2,
+        _ => d,
+    }
+    .max(1);
+    let mut centers = Matrix::zeros(n_comp, d);
+    let spread = match flavor {
+        Flavor::Ssnpp => 0.3,
+        _ => 1.0,
+    };
+    rng.fill_normal(&mut centers.data, 0.0, spread);
+    let mut scales = Matrix::zeros(n_comp, d);
+    for v in scales.data.iter_mut() {
+        // log-normal anisotropy
+        *v = (0.5 * rng.normal_f32()).exp()
+            * match flavor {
+                Flavor::Contriever => (2.0 * rng.f32()).exp() * 0.3,
+                _ => 0.45,
+            };
+    }
+    let mut weights: Vec<f32> = (0..n_comp).map(|_| rng.f32() + 0.05).collect();
+    let total: f32 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= total;
+    }
+    let mut basis = Matrix::zeros(rank, d);
+    rng.fill_normal(&mut basis.data, 0.0, 1.0 / (rank as f32).sqrt());
+    Mixture { centers, scales, weights, basis, rank }
+}
+
+fn sample_into(mix: &Mixture, flavor: Flavor, out: &mut [f32], d: usize, rng: &mut Rng) {
+    // pick component
+    let mut t = rng.f32();
+    let mut comp = mix.weights.len() - 1;
+    for (i, &w) in mix.weights.iter().enumerate() {
+        t -= w;
+        if t <= 0.0 {
+            comp = i;
+            break;
+        }
+    }
+    let c = mix.centers.row(comp);
+    let s = mix.scales.row(comp);
+    // low-rank latent
+    let mut latent = vec![0.0f32; mix.rank];
+    rng.fill_normal(&mut latent, 0.0, 1.0);
+    for j in 0..d {
+        let mut lowrank = 0.0f32;
+        for (r, &lv) in latent.iter().enumerate() {
+            lowrank += lv * mix.basis.data[r * d + j];
+        }
+        out[j] = c[j] + s[j] * rng.normal_f32() + lowrank;
+    }
+    match flavor {
+        Flavor::BigAnn => {
+            // SIFT-like: shift positive, clip, quantize to integer grid
+            for v in out.iter_mut() {
+                *v = (v.abs() * 40.0).min(218.0).floor() / 128.0;
+            }
+        }
+        Flavor::Deep => {
+            // L2-normalize like CNN embeddings
+            let n = tensor::sqnorm(out).sqrt().max(1e-9);
+            for v in out.iter_mut() {
+                *v /= n;
+            }
+        }
+        Flavor::Ssnpp => {
+            // heavy tails: cube a fraction of the mass
+            for v in out.iter_mut() {
+                *v += 0.15 * *v * *v * *v;
+            }
+        }
+        Flavor::Contriever => {}
+    }
+}
+
+/// Generate `n` vectors of dimension `d` from the flavor's mixture.
+pub fn generate(flavor: Flavor, n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    let mix = build_mixture(flavor, d, &mut rng);
+    let out = Matrix::zeros(n, d);
+    // per-row RNG forked deterministically so generation order is stable
+    let seeds: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let nthreads = pool::default_threads();
+    pool::scope_chunks(n, nthreads, |lo, hi| {
+        // SAFETY-free parallel write: each chunk writes disjoint rows via
+        // raw pointer arithmetic is avoided — instead recompute slice.
+        // We use interior chunking through an unsafe-free trick: cast to
+        // atomic is overkill; chunk rows are disjoint so we use a local
+        // buffer then copy through a raw pointer.
+        let base = out.data.as_ptr() as usize;
+        for i in lo..hi {
+            let mut r = Rng::new(seeds[i]);
+            let mut buf = vec![0.0f32; d];
+            sample_into(&mix, flavor, &mut buf, d, &mut r);
+            unsafe {
+                let dst = (base as *mut f32).add(i * d);
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, d);
+            }
+        }
+    });
+    out
+}
+
+/// Normalize columns to zero mean / unit global std, in place — the
+/// QINCo2 training normalization (App. A.2). Returns (means, std).
+pub fn normalize(xs: &mut Matrix) -> (Vec<f32>, f32) {
+    let means = xs.col_means();
+    let mut var = 0.0f64;
+    for i in 0..xs.rows {
+        let row = xs.row_mut(i);
+        for (v, &m) in row.iter_mut().zip(&means) {
+            *v -= m;
+            var += (*v as f64) * (*v as f64);
+        }
+    }
+    let std = ((var / (xs.rows * xs.cols).max(1) as f64).sqrt() as f32).max(1e-9);
+    for v in xs.data.iter_mut() {
+        *v /= std;
+    }
+    (means, std)
+}
+
+/// Apply a previously computed normalization to another split.
+pub fn normalize_with(xs: &mut Matrix, means: &[f32], std: f32) {
+    for i in 0..xs.rows {
+        for (v, &m) in xs.row_mut(i).iter_mut().zip(means) {
+            *v = (*v - m) / std;
+        }
+    }
+}
+
+/// Exact nearest neighbor (squared L2) of each query, multi-threaded.
+pub fn brute_force_gt(database: &Matrix, queries: &Matrix) -> Vec<u32> {
+    let mut out = vec![0u32; queries.rows];
+    pool::par_map_into(&mut out, pool::default_threads(), |qi, slot| {
+        *slot = tensor::argmin_l2(queries.row(qi), database).0 as u32;
+    });
+    out
+}
+
+/// Exact top-k nearest neighbors of each query (for recall@k baselines).
+pub fn brute_force_gt_k(database: &Matrix, queries: &Matrix, k: usize) -> Vec<Vec<u32>> {
+    let mut out = vec![Vec::new(); queries.rows];
+    pool::par_map_into(&mut out, pool::default_threads(), |qi, slot| {
+        *slot = tensor::topk_l2(queries.row(qi), database, k)
+            .into_iter()
+            .map(|(i, _)| i as u32)
+            .collect();
+    });
+    out
+}
+
+/// Build a full train/db/query dataset with ground truth, normalized by
+/// train statistics (the paper's protocol).
+pub fn load(flavor: Flavor, n_train: usize, n_db: usize, n_query: usize, d: usize,
+            seed: u64) -> Dataset {
+    let mut train = generate(flavor, n_train, d, seed);
+    let mut database = generate(flavor, n_db, d, seed.wrapping_add(1));
+    let mut queries = generate(flavor, n_query, d, seed.wrapping_add(2));
+    let (means, std) = normalize(&mut train);
+    normalize_with(&mut database, &means, std);
+    normalize_with(&mut queries, &means, std);
+    let ground_truth = brute_force_gt(&database, &queries);
+    Dataset {
+        flavor,
+        train,
+        database,
+        queries,
+        ground_truth,
+        norm_means: means,
+        norm_std: std,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_determinism() {
+        for f in Flavor::all() {
+            let a = generate(f, 50, 16, 7);
+            let b = generate(f, 50, 16, 7);
+            assert_eq!(a.rows, 50);
+            assert_eq!(a.cols, 16);
+            assert_eq!(a.data, b.data, "{f:?} not deterministic");
+            assert!(a.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(Flavor::Deep, 10, 8, 1);
+        let b = generate(Flavor::Deep, 10, 8, 2);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn flavors_have_expected_marginals() {
+        let big = generate(Flavor::BigAnn, 500, 16, 3);
+        assert!(big.data.iter().all(|&v| v >= 0.0), "bigann must be non-negative");
+        let deep = generate(Flavor::Deep, 200, 16, 3);
+        for i in 0..deep.rows {
+            let n = tensor::sqnorm(deep.row(i)).sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "deep rows must be unit norm, got {n}");
+        }
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut xs = generate(Flavor::Contriever, 400, 8, 4);
+        let (_, _) = normalize(&mut xs);
+        let means = xs.col_means();
+        assert!(means.iter().all(|m| m.abs() < 1e-3), "{means:?}");
+        let var: f64 = xs.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / xs.data.len() as f64;
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn ground_truth_is_exact() {
+        let db = generate(Flavor::Deep, 200, 8, 5);
+        let q = generate(Flavor::Deep, 20, 8, 6);
+        let gt = brute_force_gt(&db, &q);
+        for (qi, &g) in gt.iter().enumerate() {
+            let dg = tensor::l2_sq(q.row(qi), db.row(g as usize));
+            for i in 0..db.rows {
+                assert!(dg <= tensor::l2_sq(q.row(qi), db.row(i)) + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gt_k_first_equals_gt1() {
+        let db = generate(Flavor::BigAnn, 100, 8, 8);
+        let q = generate(Flavor::BigAnn, 10, 8, 9);
+        let g1 = brute_force_gt(&db, &q);
+        let gk = brute_force_gt_k(&db, &q, 5);
+        for (a, b) in g1.iter().zip(&gk) {
+            assert_eq!(*a, b[0]);
+            assert_eq!(b.len(), 5);
+        }
+    }
+
+    #[test]
+    fn load_builds_consistent_dataset() {
+        let ds = load(Flavor::Deep, 100, 80, 10, 8, 42);
+        assert_eq!(ds.train.rows, 100);
+        assert_eq!(ds.database.rows, 80);
+        assert_eq!(ds.queries.rows, 10);
+        assert_eq!(ds.ground_truth.len(), 10);
+        assert!(ds.ground_truth.iter().all(|&g| (g as usize) < 80));
+    }
+}

@@ -1,0 +1,239 @@
+//! Shared experiment harness: dataset sizing, model training with
+//! checkpoint caching, and evaluation helpers used by the CLI, the
+//! examples and every bench target (one per paper table/figure).
+
+use crate::data::{self, Dataset, Flavor};
+use crate::metrics;
+use crate::qinco::{Codec, ParamStore, TrainCfg, Trainer};
+use crate::quantizers::Codes;
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Experiment scale. Defaults reproduce every table/figure in minutes on
+/// CPU; set `QINCO2_SCALE=large` for a closer-to-paper run.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub n_train: usize,
+    pub n_db: usize,
+    pub n_query: usize,
+    pub epochs: usize,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("QINCO2_SCALE").as_deref() {
+            Ok("large") => Scale { n_train: 100_000, n_db: 200_000, n_query: 2_000, epochs: 40 },
+            Ok("small") => Scale { n_train: 4_000, n_db: 8_000, n_query: 400, epochs: 6 },
+            _ => Scale { n_train: 20_000, n_db: 50_000, n_query: 1_000, epochs: 15 },
+        }
+    }
+
+    /// Bench defaults: every table/figure regenerates in minutes while
+    /// preserving the paper's orderings. `QINCO2_SCALE` overrides.
+    pub fn bench() -> Scale {
+        if std::env::var("QINCO2_SCALE").is_ok() {
+            return Scale::from_env();
+        }
+        Scale { n_train: 4_000, n_db: 4_000, n_query: 500, epochs: 5 }
+    }
+}
+
+/// A training job for [`parallel_train`].
+pub struct TrainJob {
+    pub model: String,
+    pub tag: String,
+    pub train: Matrix,
+    pub cfg: TrainCfg,
+}
+
+/// Train several models concurrently, one PJRT Engine per thread (the
+/// CPU client executes mostly single-threaded, so model-level parallelism
+/// is the effective axis — EXPERIMENTS.md §Perf L3). Results come back in
+/// job order; failures surface as Err per job.
+pub fn parallel_train(jobs: Vec<TrainJob>) -> Vec<Result<ParamStore>> {
+    let max_par = crate::util::pool::default_threads().min(jobs.len()).max(1);
+    let mut results: Vec<Option<Result<ParamStore>>> = jobs.iter().map(|_| None).collect();
+    let jobs: Vec<_> = jobs.into_iter().enumerate().collect();
+    for wave in jobs.chunks(max_par) {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (i, job) in wave {
+                handles.push((*i, s.spawn(move || -> Result<ParamStore> {
+                    let mut engine = Engine::open(artifacts_dir())?;
+                    trained_model(&mut engine, &job.model, &job.tag, &job.train, &job.cfg)
+                })));
+            }
+            for (i, h) in handles {
+                let r = h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("train thread panicked")));
+                results[i] = Some(r);
+            }
+        });
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Root of the artifact tree (HLO + manifest + model checkpoints).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("QINCO2_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn bench_out_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Load the standard dataset for a flavor at the model's dimension.
+pub fn dataset(flavor: Flavor, d: usize, scale: &Scale) -> Dataset {
+    data::load(flavor, scale.n_train, scale.n_db, scale.n_query, d, 0xDA7A + flavor as u64)
+}
+
+/// Train (or load from the checkpoint cache) a QINCo2 model on `train`.
+/// Cache key: model name + flavor + data fingerprint + train config.
+pub fn trained_model(
+    engine: &mut Engine,
+    model: &str,
+    tag: &str,
+    train: &Matrix,
+    cfg: &TrainCfg,
+) -> Result<ParamStore> {
+    let spec = engine.manifest.model(model)?.clone();
+    let dir = artifacts_dir().join("models");
+    std::fs::create_dir_all(&dir).ok();
+    let key = format!(
+        "{model}_{tag}_n{}_e{}_a{}b{}_{}",
+        train.rows, cfg.epochs, cfg.a, cfg.b, cfg.optimizer
+    );
+    let path = dir.join(format!("{key}.qnpz"));
+    if path.exists() {
+        if let Ok(ps) = ParamStore::load(&path, &spec, model) {
+            return Ok(ps);
+        }
+    }
+    let mut params = ParamStore::init(&spec, model, train, 0x5EED ^ cfg.seed);
+    let trainer = Trainer::new(engine, model, cfg.clone())
+        .with_context(|| format!("trainer for {model}"))?;
+    let stats = trainer.train(engine, &mut params, train)?;
+    eprintln!(
+        "[trained {key}: {} steps, {:.1}s, loss {:.5} -> {:.5}]",
+        stats.steps,
+        stats.secs,
+        stats.epoch_losses.first().unwrap_or(&f64::NAN),
+        stats.epoch_losses.last().unwrap_or(&f64::NAN)
+    );
+    params.save(&path)?;
+    Ok(params)
+}
+
+/// Compression metrics of a codec on a database + query set:
+/// (mse, r@1, r@10, r@100). Neighbor search is brute force over the
+/// decoded database (the paper's 1M-scale protocol).
+pub struct CompressionEval {
+    pub mse: f64,
+    pub r1: f64,
+    pub r10: f64,
+    pub r100: f64,
+}
+
+pub fn eval_compression(
+    engine: &mut Engine,
+    codec: &Codec,
+    params: &ParamStore,
+    db: &Matrix,
+    queries: &Matrix,
+    gt: &[u32],
+) -> Result<CompressionEval> {
+    let (codes, _, _) = codec.encode(engine, params, db)?;
+    let decoded = codec.decode(engine, params, &codes)?;
+    Ok(eval_decoded(&decoded, db, queries, gt))
+}
+
+/// Same metrics given an already-decoded database.
+pub fn eval_decoded(decoded: &Matrix, db: &Matrix, queries: &Matrix, gt: &[u32]) -> CompressionEval {
+    let mse = crate::tensor::mse(db, decoded);
+    let results = data::brute_force_gt_k(decoded, queries, 100);
+    let (r1, r10, r100) = metrics::recall_triple(&results, gt);
+    CompressionEval { mse, r1, r10, r100 }
+}
+
+/// Multi-rate evaluation: MSE after each prefix of steps (Figs. S1/S3).
+pub fn eval_multirate(
+    engine: &mut Engine,
+    codec: &Codec,
+    params: &ParamStore,
+    db: &Matrix,
+) -> Result<Vec<f64>> {
+    let (codes, _, _) = codec.encode(engine, params, db)?;
+    let partials = codec.decode_partial(engine, params, &codes)?;
+    Ok(partials.iter().map(|p| crate::tensor::mse(db, p)).collect())
+}
+
+/// Per-vector encode/decode wall-clock of a codec (µs), measured on a
+/// fixed batch (Table S2, Figs. 4/5 time axes).
+pub struct CodecTiming {
+    pub encode_us: f64,
+    pub decode_us: f64,
+}
+
+pub fn time_codec(
+    engine: &mut Engine,
+    codec: &Codec,
+    params: &ParamStore,
+    xs: &Matrix,
+) -> Result<CodecTiming> {
+    // warmup (compiles artifacts)
+    let (codes, _, _) = codec.encode(engine, params, xs)?;
+    codec.decode(engine, params, &codes)?;
+    let t0 = std::time::Instant::now();
+    let (codes, _, _) = codec.encode(engine, params, xs)?;
+    let enc = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    codec.decode(engine, params, &codes)?;
+    let dec = t1.elapsed().as_secs_f64();
+    Ok(CodecTiming {
+        encode_us: enc * 1e6 / xs.rows as f64,
+        decode_us: dec * 1e6 / xs.rows as f64,
+    })
+}
+
+/// Write a CSV file into bench_out/ (one per table/figure).
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<PathBuf> {
+    let path = bench_out_dir().join(name);
+    let mut body = String::from(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    std::fs::write(&path, body)?;
+    Ok(path)
+}
+
+/// Codes→Codes helper reused by decoder experiments.
+pub fn codes_subset(codes: &Codes, idx: &[usize]) -> Codes {
+    crate::index::pipeline::gather_codes(codes, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_env_parsing() {
+        let s = Scale::from_env();
+        assert!(s.n_train > 0 && s.n_db > 0 && s.n_query > 0);
+    }
+
+    #[test]
+    fn csv_writer_creates_file() {
+        let p = write_csv("test_tmp.csv", "a,b", &["1,2".into()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("a,b\n1,2\n"));
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,277 @@
+//! Hierarchical Navigable Small World graphs (Malkov & Yashunin, 2018).
+//!
+//! Used exactly as in the paper's pipeline: an HNSW index over the
+//! K_IVF coarse centroids finds the `nprobe` closest inverted lists for a
+//! query (the `efSearch` knob swept in Fig. 6). Sized for up to ~10^5
+//! nodes; plenty for coarse quantizers.
+
+use crate::tensor::{self, Matrix};
+use crate::util::prng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// (distance, id) max-heap entry (BinaryHeap is a max-heap).
+#[derive(PartialEq)]
+struct Far(f32, u32);
+
+impl Eq for Far {}
+impl PartialOrd for Far {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Far {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap entry via reversed ordering.
+#[derive(PartialEq)]
+struct Near(f32, u32);
+
+impl Eq for Near {}
+impl PartialOrd for Near {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Near {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+    }
+}
+
+pub struct Hnsw {
+    /// per-level adjacency: `links[level][node]` = neighbor ids
+    links: Vec<Vec<Vec<u32>>>,
+    /// highest level of each node
+    levels: Vec<u8>,
+    entry: u32,
+    #[allow(dead_code)]
+    max_level: usize,
+    pub m: usize,
+    pub ef_construction: usize,
+    /// the indexed points (owned copy — centroids are small)
+    pub points: Matrix,
+}
+
+impl Hnsw {
+    /// Build over the rows of `points` with `m` links per node.
+    pub fn build(points: &Matrix, m: usize, ef_construction: usize, seed: u64) -> Hnsw {
+        let n = points.rows;
+        assert!(n > 0);
+        let mut rng = Rng::new(seed ^ 0x4A53);
+        let ml = 1.0 / (m as f64).ln().max(0.1);
+        let mut levels = Vec::with_capacity(n);
+        let mut max_level = 0usize;
+        for _ in 0..n {
+            let lvl = ((-rng.f64().max(1e-12).ln()) * ml) as usize;
+            let lvl = lvl.min(12);
+            max_level = max_level.max(lvl);
+            levels.push(lvl as u8);
+        }
+        let mut hnsw = Hnsw {
+            links: (0..=max_level).map(|_| vec![Vec::new(); n]).collect(),
+            levels,
+            entry: 0,
+            max_level,
+            m,
+            ef_construction,
+            points: points.clone(),
+        };
+        // insert nodes one by one
+        let mut entry_set = false;
+        for node in 0..n as u32 {
+            if !entry_set {
+                hnsw.entry = node;
+                entry_set = true;
+                continue;
+            }
+            hnsw.insert(node);
+            if hnsw.levels[node as usize] as usize
+                > hnsw.levels[hnsw.entry as usize] as usize
+            {
+                hnsw.entry = node;
+            }
+        }
+        hnsw
+    }
+
+    fn dist(&self, q: &[f32], node: u32) -> f32 {
+        tensor::l2_sq(q, self.points.row(node as usize))
+    }
+
+    /// Greedy descent from `start` at `level` towards `q`.
+    fn greedy(&self, q: &[f32], start: u32, level: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_d = self.dist(q, cur);
+        loop {
+            let mut improved = false;
+            for &nb in &self.links[level][cur as usize] {
+                let d = self.dist(q, nb);
+                if d < cur_d {
+                    cur = nb;
+                    cur_d = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Beam search at one level; returns up to `ef` (dist, id) ascending.
+    fn search_level(&self, q: &[f32], entry: u32, ef: usize, level: usize) -> Vec<(f32, u32)> {
+        let mut visited = vec![false; self.points.rows];
+        let mut candidates = BinaryHeap::new(); // min-heap by Near
+        let mut results: BinaryHeap<Far> = BinaryHeap::new(); // max-heap
+        let d0 = self.dist(q, entry);
+        visited[entry as usize] = true;
+        candidates.push(Near(d0, entry));
+        results.push(Far(d0, entry));
+        while let Some(Near(d, node)) = candidates.pop() {
+            let worst = results.peek().map(|f| f.0).unwrap_or(f32::INFINITY);
+            if d > worst && results.len() >= ef {
+                break;
+            }
+            for &nb in &self.links[level][node as usize] {
+                if visited[nb as usize] {
+                    continue;
+                }
+                visited[nb as usize] = true;
+                let dn = self.dist(q, nb);
+                let worst = results.peek().map(|f| f.0).unwrap_or(f32::INFINITY);
+                if results.len() < ef || dn < worst {
+                    candidates.push(Near(dn, nb));
+                    results.push(Far(dn, nb));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(f32, u32)> = results.into_iter().map(|f| (f.0, f.1)).collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    fn insert(&mut self, node: u32) {
+        let q = self.points.row(node as usize).to_vec();
+        let node_level = self.levels[node as usize] as usize;
+        let mut cur = self.entry;
+        let top = self.levels[self.entry as usize] as usize;
+        // descend levels above the node's level greedily
+        for level in (node_level + 1..=top).rev() {
+            cur = self.greedy(&q, cur, level);
+        }
+        // connect at each level from min(node_level, top) down to 0
+        for level in (0..=node_level.min(top)).rev() {
+            let found = self.search_level(&q, cur, self.ef_construction, level);
+            cur = found[0].1;
+            let mmax = if level == 0 { 2 * self.m } else { self.m };
+            let selected: Vec<u32> =
+                found.iter().take(self.m).map(|&(_, id)| id).collect();
+            for &nb in &selected {
+                self.links[level][node as usize].push(nb);
+                self.links[level][nb as usize].push(node);
+                // prune neighbors over capacity: keep closest
+                if self.links[level][nb as usize].len() > mmax {
+                    let base = self.points.row(nb as usize).to_vec();
+                    let mut with_d: Vec<(f32, u32)> = self.links[level][nb as usize]
+                        .iter()
+                        .map(|&x| (tensor::l2_sq(&base, self.points.row(x as usize)), x))
+                        .collect();
+                    with_d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    with_d.truncate(mmax);
+                    self.links[level][nb as usize] = with_d.into_iter().map(|(_, x)| x).collect();
+                }
+            }
+        }
+    }
+
+    /// Approximate k nearest nodes to `q` with beam width `ef_search`.
+    pub fn search(&self, q: &[f32], k: usize, ef_search: usize) -> Vec<(f32, u32)> {
+        let mut cur = self.entry;
+        let top = self.levels[self.entry as usize] as usize;
+        for level in (1..=top).rev() {
+            cur = self.greedy(q, cur, level);
+        }
+        let mut out = self.search_level(q, cur, ef_search.max(k), 0);
+        out.truncate(k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+
+    #[test]
+    fn exact_on_small_sets_with_large_ef() {
+        let pts = generate(Flavor::Deep, 200, 8, 1);
+        let hnsw = Hnsw::build(&pts, 8, 64, 2);
+        let queries = generate(Flavor::Deep, 20, 8, 3);
+        let mut hits = 0;
+        for i in 0..queries.rows {
+            let q = queries.row(i);
+            let res = hnsw.search(q, 1, 200);
+            let (want, _) = tensor::argmin_l2(q, &pts);
+            if res[0].1 == want as u32 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 19, "recall {hits}/20 too low for exhaustive ef");
+    }
+
+    #[test]
+    fn higher_ef_no_worse_recall() {
+        let pts = generate(Flavor::BigAnn, 500, 12, 4);
+        let hnsw = Hnsw::build(&pts, 6, 32, 5);
+        let queries = generate(Flavor::BigAnn, 50, 12, 6);
+        let recall = |ef: usize| -> usize {
+            (0..queries.rows)
+                .filter(|&i| {
+                    let q = queries.row(i);
+                    let res = hnsw.search(q, 1, ef);
+                    let (want, _) = tensor::argmin_l2(q, &pts);
+                    !res.is_empty() && res[0].1 == want as u32
+                })
+                .count()
+        };
+        let r_small = recall(4);
+        let r_big = recall(128);
+        assert!(r_big >= r_small, "{r_big} < {r_small}");
+        assert!(r_big >= 45, "recall@ef=128 {r_big}/50");
+    }
+
+    #[test]
+    fn results_sorted_and_unique() {
+        let pts = generate(Flavor::Ssnpp, 300, 8, 7);
+        let hnsw = Hnsw::build(&pts, 8, 48, 8);
+        let q = pts.row(5);
+        let res = hnsw.search(q, 10, 64);
+        assert_eq!(res.len(), 10);
+        for w in res.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        let mut ids: Vec<u32> = res.iter().map(|r| r.1).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10);
+        // the query point itself must be found
+        assert_eq!(res[0].1, 5);
+        assert!(res[0].0 < 1e-9);
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let pts = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let hnsw = Hnsw::build(&pts, 4, 8, 9);
+        let res = hnsw.search(&[1.0, 2.0, 3.0, 4.0], 5, 16);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].1, 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Inverted file index (Jégou et al., 2010): k-means coarse quantizer +
+//! HNSW over the centroids (the paper's `IVF…_HNSW32` structure) +
+//! inverted lists of database ids.
+
+use super::hnsw::Hnsw;
+use crate::clustering::{kmeans, KMeansCfg};
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+
+pub struct Ivf {
+    pub centroids: Matrix,
+    pub hnsw: Hnsw,
+    /// inverted lists: database row ids per bucket
+    pub lists: Vec<Vec<u32>>,
+    /// bucket of each database row
+    pub assign: Vec<u32>,
+}
+
+impl Ivf {
+    /// Train the coarse quantizer on (a sample of) `train`, then assign
+    /// every `database` row to its bucket.
+    pub fn build(train: &Matrix, database: &Matrix, k_ivf: usize, seed: u64) -> Ivf {
+        let mut rng = Rng::new(seed ^ 0x1F1F);
+        // k-means wants several points per centroid; sample if huge
+        let sample = if train.rows > 50 * k_ivf {
+            train.gather_rows(&rng.sample_indices(train.rows, 50 * k_ivf))
+        } else {
+            train.clone()
+        };
+        let km = kmeans(&sample, &KMeansCfg::new(k_ivf).iters(10).seed(seed));
+        let centroids = km.centroids;
+        let hnsw = Hnsw::build(&centroids, 16, 64, seed ^ 0xBEEF);
+        let assign = crate::tensor::assign_all(database, &centroids, crate::util::pool::default_threads());
+        let mut lists = vec![Vec::new(); centroids.rows];
+        for (i, &a) in assign.iter().enumerate() {
+            lists[a as usize].push(i as u32);
+        }
+        Ivf { centroids, hnsw, lists, assign }
+    }
+
+    pub fn k_ivf(&self) -> usize {
+        self.centroids.rows
+    }
+
+    /// The `nprobe` buckets closest to `q` (HNSW with `ef_search`).
+    pub fn probe(&self, q: &[f32], nprobe: usize, ef_search: usize) -> Vec<(f32, u32)> {
+        self.hnsw.search(q, nprobe, ef_search)
+    }
+
+    /// Residuals of the database rows w.r.t. their centroid (the vectors
+    /// the fine quantizer actually encodes).
+    pub fn residuals(&self, database: &Matrix) -> Matrix {
+        let mut out = database.clone();
+        for i in 0..out.rows {
+            let c = self.assign[i] as usize;
+            let crow = self.centroids.row(c).to_vec();
+            crate::tensor::sub_assign(out.row_mut(i), &crow);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+
+    #[test]
+    fn lists_partition_database() {
+        let train = generate(Flavor::Deep, 400, 8, 1);
+        let db = generate(Flavor::Deep, 300, 8, 2);
+        let ivf = Ivf::build(&train, &db, 16, 3);
+        let total: usize = ivf.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 300);
+        let mut seen = vec![false; 300];
+        for l in &ivf.lists {
+            for &id in l {
+                assert!(!seen[id as usize], "duplicate id {id}");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let train = generate(Flavor::BigAnn, 300, 8, 4);
+        let db = generate(Flavor::BigAnn, 100, 8, 5);
+        let ivf = Ivf::build(&train, &db, 8, 6);
+        for i in 0..db.rows {
+            let (want, _) = crate::tensor::argmin_l2(db.row(i), &ivf.centroids);
+            assert_eq!(ivf.assign[i], want as u32);
+        }
+    }
+
+    #[test]
+    fn probe_finds_own_bucket() {
+        let train = generate(Flavor::Deep, 500, 8, 7);
+        let db = generate(Flavor::Deep, 200, 8, 8);
+        let ivf = Ivf::build(&train, &db, 16, 9);
+        let mut hits = 0;
+        for i in 0..50 {
+            let probes = ivf.probe(db.row(i), 3, 64);
+            if probes.iter().any(|&(_, b)| b == ivf.assign[i]) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 48, "probe recall {hits}/50");
+    }
+
+    #[test]
+    fn residuals_subtract_centroids() {
+        let train = generate(Flavor::Deep, 200, 6, 10);
+        let db = generate(Flavor::Deep, 50, 6, 11);
+        let ivf = Ivf::build(&train, &db, 4, 12);
+        let res = ivf.residuals(&db);
+        for i in 0..db.rows {
+            let c = ivf.centroids.row(ivf.assign[i] as usize);
+            for j in 0..6 {
+                assert!((res.row(i)[j] - (db.row(i)[j] - c[j])).abs() < 1e-6);
+            }
+        }
+    }
+}

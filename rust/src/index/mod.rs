@@ -1,0 +1,10 @@
+//! The large-scale search stack (paper Sec. 3.3, Fig. 3): IVF coarse
+//! quantization with an HNSW centroid index, QINCo2 fine codes over IVF
+//! residuals, an additive-LUT first-stage scan, pairwise-decoder
+//! re-ranking, and a final neural decode of the surviving shortlist.
+
+pub mod hnsw;
+pub mod ivf;
+pub mod pipeline;
+
+pub use pipeline::{BuildCfg, SearchIndex, SearchParams};

@@ -1,0 +1,276 @@
+//! The Fig. 3 search pipeline.
+//!
+//! Database encoding (build time):
+//!   x → IVF bucket I⁰ → QINCo2 codes (I¹..I^M) of the residual
+//!   x - C⁰(I⁰); plus: a unitary additive decoder re-fit on the codes
+//!   (stage-1 LUT scans), the IVF centroids RQ-quantized into M̃ extra
+//!   positions, and a pairwise decoder trained on the extended codes
+//!   (stage-2 re-ranking).
+//!
+//! Retrieval:
+//!   HNSW → nprobe buckets → AQ LUT scan (S_IVF → S_AQ) → pairwise
+//!   re-scoring (S_AQ → S_pairs) → neural decode + exact distance on the
+//!   survivors. Stage distances:
+//!     stage 1: ||q - cent_b - x̂_r||² = ||q - cent_b||²
+//!              + (||x̂_r||² + 2⟨cent_b, x̂_r⟩) − 2⟨q, x̂_r⟩
+//!              = probe_dist + term_i − 2·LUT-sum   (term_i cached)
+//!     stage 2: ||x̂_pw||² − 2⟨q, x̂_pw⟩ (pairwise decoder targets raw x,
+//!              so scores are comparable across buckets)
+//!     stage 3: exact ||q - (cent + decode(I¹..I^M))||², Rust reference
+//!              decoder (same math as the HLO artifact, pad-free).
+
+use super::ivf::Ivf;
+use crate::qinco::{reference, Codec, ParamStore};
+use crate::quantizers::pairwise::{append_positions, PairwiseDecoder};
+use crate::quantizers::rq::Rq;
+use crate::quantizers::{aq_lut::AdditiveDecoder, Codes, VectorQuantizer};
+use crate::runtime::Engine;
+use crate::tensor::{self, Matrix};
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Search-time knobs (the Fig. 6 sweep axes).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchParams {
+    pub nprobe: usize,
+    pub ef_search: usize,
+    /// stage-1 shortlist size |S_AQ|
+    pub n_aq: usize,
+    /// stage-2 shortlist size |S_pairs| (0 disables pairwise re-ranking)
+    pub n_pairs: usize,
+    /// final results returned after neural re-rank (0 disables neural
+    /// re-rank: stage-2 order is returned)
+    pub n_final: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 }
+    }
+}
+
+/// Build-time configuration.
+#[derive(Clone, Debug)]
+pub struct BuildCfg {
+    pub k_ivf: usize,
+    /// RQ steps used to quantize the IVF centroids for the pairwise pool
+    pub m_tilde: usize,
+    /// number of optimized pairs (paper default: 2M)
+    pub n_pairs_train: usize,
+    /// training subsample for the decoders
+    pub fit_sample: usize,
+    pub seed: u64,
+}
+
+impl Default for BuildCfg {
+    fn default() -> Self {
+        BuildCfg { k_ivf: 64, m_tilde: 2, n_pairs_train: 0, fit_sample: 20_000, seed: 0x5EA2C4 }
+    }
+}
+
+pub struct SearchIndex {
+    pub ivf: Ivf,
+    /// QINCo2 codes of the database residuals [N, M]
+    pub codes: Codes,
+    pub params: ParamStore,
+    /// stage-1 unitary decoder + cached per-vector term
+    pub aq: AdditiveDecoder,
+    aq_terms: Vec<f32>,
+    /// stage-2 pairwise decoder over extended positions + cached norms
+    pub pairwise: PairwiseDecoder,
+    pw_codes: Codes,
+    pw_norms: Vec<f32>,
+    /// per-step MSE trace of the pairwise fit (Table S3)
+    pub pairwise_trace: Vec<(usize, usize, f64)>,
+    pub db_len: usize,
+}
+
+impl SearchIndex {
+    /// Encode the database and fit all the lookup decoders.
+    /// `params` must be a model trained on IVF residuals of this flavor.
+    pub fn build(
+        engine: &mut Engine,
+        codec: &Codec,
+        params: ParamStore,
+        train: &Matrix,
+        database: &Matrix,
+        cfg: &BuildCfg,
+    ) -> Result<SearchIndex> {
+        let mut rng = Rng::new(cfg.seed);
+        let ivf = Ivf::build(train, database, cfg.k_ivf, cfg.seed);
+        let residuals = ivf.residuals(database);
+        let (codes, _, _) = codec.encode(engine, &params, &residuals)?;
+        let m = codes.m;
+        let k = params.cfg.k;
+
+        // ---- fit split: the lookup decoders are estimated on *training*
+        // vectors + their codes (paper Sec. 3.3), never on the database,
+        // so their accuracy generalizes like the paper's ----
+        let fit_idx = if train.rows > cfg.fit_sample {
+            rng.sample_indices(train.rows, cfg.fit_sample)
+        } else {
+            (0..train.rows).collect()
+        };
+        let fit_x = train.gather_rows(&fit_idx);
+        let fit_assign = tensor::assign_all(&fit_x, &ivf.centroids, crate::util::pool::default_threads());
+        let mut fit_res = fit_x.clone();
+        for i in 0..fit_res.rows {
+            let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
+            tensor::sub_assign(fit_res.row_mut(i), &crow);
+        }
+        let (fit_codes, _, _) = codec.encode(engine, &params, &fit_res)?;
+
+        // ---- stage-1 decoder: unitary RQ re-fit on (residual, code) ----
+        let aq = AdditiveDecoder::fit_rq(&fit_res, &fit_codes, k);
+        // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ using the AQ decode
+        let aq_dec = aq.decode(&codes);
+        let mut aq_terms = Vec::with_capacity(database.rows);
+        for i in 0..database.rows {
+            let cent = ivf.centroids.row(ivf.assign[i] as usize);
+            aq_terms
+                .push(tensor::sqnorm(aq_dec.row(i)) + 2.0 * tensor::dot(cent, aq_dec.row(i)));
+        }
+
+        // ---- stage-2: pairwise decoder over extended positions ----
+        // RQ-quantize the IVF centroids into M̃ codes (bucket-level only:
+        // storage independent of the database size)
+        let ivf_rq = Rq::train(&ivf.centroids, cfg.m_tilde, k, 4, cfg.seed ^ 0x77);
+        let bucket_codes = ivf_rq.encode(&ivf.centroids);
+        let mut extra = Codes::zeros(database.rows, cfg.m_tilde);
+        for i in 0..database.rows {
+            extra
+                .row_mut(i)
+                .copy_from_slice(bucket_codes.row(ivf.assign[i] as usize));
+        }
+        let pw_codes = append_positions(&codes, &extra);
+        let n_pairs = if cfg.n_pairs_train == 0 { 2 * m } else { cfg.n_pairs_train };
+        let mut fit_extra = Codes::zeros(fit_x.rows, cfg.m_tilde);
+        for i in 0..fit_x.rows {
+            fit_extra
+                .row_mut(i)
+                .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
+        }
+        let fit_pw_codes = append_positions(&fit_codes, &fit_extra);
+        let pairwise = PairwiseDecoder::train(&fit_x, &fit_pw_codes, k, n_pairs);
+        let pw_norms = pairwise.norms(&pw_codes);
+        let pairwise_trace = pairwise.trace();
+
+        Ok(SearchIndex {
+            ivf,
+            codes,
+            params,
+            aq,
+            aq_terms,
+            pairwise,
+            pw_codes,
+            pw_norms,
+            pairwise_trace,
+            db_len: database.rows,
+        })
+    }
+
+    /// Full pipeline search for one query. Returns ranked (dist, id).
+    pub fn search(&self, q: &[f32], sp: &SearchParams) -> Vec<(f32, u32)> {
+        // ---- stage 0: coarse probe ----
+        let probes = self.ivf.probe(q, sp.nprobe, sp.ef_search);
+        // ---- stage 1: AQ LUT scan over the probed lists ----
+        let lut = self.aq.lut(q);
+        let mut heap: Vec<(f32, u32)> = Vec::with_capacity(sp.n_aq + 1);
+        let mut worst = f32::INFINITY;
+        for &(probe_d, bucket) in &probes {
+            for &id in &self.ivf.lists[bucket as usize] {
+                let i = id as usize;
+                let s = probe_d
+                    + self.aq.score(&lut, self.codes.row(i), self.aq_terms[i]);
+                if heap.len() < sp.n_aq || s < worst {
+                    let pos = heap.partition_point(|&(hd, _)| hd <= s);
+                    heap.insert(pos, (s, id));
+                    if heap.len() > sp.n_aq {
+                        heap.pop();
+                    }
+                    worst = heap.last().unwrap().0;
+                }
+            }
+        }
+        // ---- stage 2: pairwise re-scoring ----
+        let stage2: Vec<(f32, u32)> = if sp.n_pairs > 0 {
+            let mut rescored: Vec<(f32, u32)> = heap
+                .iter()
+                .map(|&(_, id)| {
+                    let i = id as usize;
+                    let code = self.pw_codes.row(i);
+                    let mut ip = 0.0f32;
+                    for s in &self.pairwise.steps {
+                        let joint =
+                            code[s.i] as usize * self.pairwise.k + code[s.j] as usize;
+                        ip += tensor::dot(q, s.codebook.row(joint));
+                    }
+                    (self.pw_norms[i] - 2.0 * ip, id)
+                })
+                .collect();
+            rescored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            rescored.truncate(sp.n_pairs);
+            rescored
+        } else {
+            heap
+        };
+        // ---- stage 3: neural decode re-rank ----
+        if sp.n_final == 0 || stage2.is_empty() {
+            return stage2;
+        }
+        let ids: Vec<usize> = stage2.iter().map(|&(_, id)| id as usize).collect();
+        let short_codes = gather_codes(&self.codes, &ids);
+        let dec = reference::decode(&self.params, &short_codes);
+        let mut exact: Vec<(f32, u32)> = ids
+            .iter()
+            .enumerate()
+            .map(|(row, &i)| {
+                let cent = self.ivf.centroids.row(self.ivf.assign[i] as usize);
+                let mut d = 0.0f32;
+                for j in 0..q.len() {
+                    let rec = cent[j] + dec.row(row)[j];
+                    let diff = q[j] - rec;
+                    d += diff * diff;
+                }
+                (d, i as u32)
+            })
+            .collect();
+        exact.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        exact.truncate(sp.n_final);
+        exact
+    }
+
+    /// Search many queries; returns ranked id lists (for recall metrics).
+    pub fn search_batch(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); queries.rows];
+        crate::util::pool::par_map_into(
+            &mut out,
+            crate::util::pool::default_threads(),
+            |i, slot| {
+                *slot = self
+                    .search(queries.row(i), sp)
+                    .into_iter()
+                    .map(|(_, id)| id)
+                    .collect();
+            },
+        );
+        out
+    }
+
+    /// Bytes per database vector (codes + the per-vector f32 term caches),
+    /// for the bitrate accounting in EXPERIMENTS.md.
+    pub fn bytes_per_vector(&self) -> f64 {
+        let bits_per_code = usize::BITS - (self.params.cfg.k - 1).leading_zeros();
+        let code_bits = self.codes.m * bits_per_code as usize;
+        code_bits as f64 / 8.0 + 8.0 // + two f32 caches (aq term, pw norm)
+    }
+}
+
+/// Gather code rows by index.
+pub fn gather_codes(codes: &Codes, idx: &[usize]) -> Codes {
+    let mut out = Codes::zeros(idx.len(), codes.m);
+    for (o, &i) in idx.iter().enumerate() {
+        out.row_mut(o).copy_from_slice(codes.row(i));
+    }
+    out
+}

@@ -1,0 +1,39 @@
+//! QINCo2: vector compression and large-scale nearest-neighbor search with
+//! improved implicit neural codebooks.
+//!
+//! Rust + JAX + Pallas reproduction of *"Qinco2: Vector Compression and
+//! Search with Improved Implicit Neural Codebooks"* (Vallaeys, Muckley,
+//! Verbeek, Douze — ICLR 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L3 (this crate)**: the search/serving coordinator — IVF + HNSW +
+//!   LUT distance scans + pairwise-decoder re-ranking + batched neural
+//!   decode, plus the full training driver. Pure Rust, no Python at
+//!   runtime.
+//! - **L2 (`python/compile/model.py`)**: the QINCo2 model (beam-search
+//!   encoder, decoder, AdamW train step) AOT-lowered to HLO text.
+//! - **L1 (`python/compile/kernels/`)**: Pallas kernels for the
+//!   f_theta candidate evaluator and pre-selection scoring.
+//!
+//! The [`runtime`] module loads the HLO artifacts through the PJRT C API
+//! (`xla` crate) and exposes them as plain Rust functions; [`qinco`]
+//! wraps them into a trainer and codec; [`index`] and [`server`] build
+//! the billion-scale-search pipeline of the paper's Figure 3;
+//! [`quantizers`] holds the classical baselines (PQ, OPQ, RQ, LSQ) and
+//! the paper's pairwise additive decoder.
+
+pub mod cli;
+pub mod clustering;
+pub mod data;
+pub mod experiments;
+pub mod index;
+pub mod linalg;
+pub mod metrics;
+pub mod qinco;
+pub mod quantizers;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Matrix;

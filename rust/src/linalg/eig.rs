@@ -1,0 +1,195 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and square-matrix SVD,
+//! used for the OPQ rotation (orthogonal Procrustes). Dimensions here are
+//! data-dimension sized (d <= a few hundred), where Jacobi is plenty.
+
+use crate::tensor::Matrix;
+
+/// Jacobi eigendecomposition of a symmetric matrix. Returns
+/// (eigenvalues descending, eigenvectors as columns of the returned
+/// matrix: `v.data[i*n + j]` = component i of eigenvector j).
+pub fn eig_sym(a: &Matrix) -> (Vec<f32>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for i in 0..n {
+                    let aip = m[i * n + p];
+                    let aiq = m[i * n + q];
+                    m[i * n + p] = c * aip - s * aiq;
+                    m[i * n + q] = s * aip + c * aiq;
+                }
+                for i in 0..n {
+                    let api = m[p * n + i];
+                    let aqi = m[q * n + i];
+                    m[p * n + i] = c * api - s * aqi;
+                    m[q * n + i] = s * api + c * aqi;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    // sort by descending eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[j * n + j].partial_cmp(&m[i * n + i]).unwrap());
+    let vals: Vec<f32> = order.iter().map(|&i| m[i * n + i] as f32).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            vecs.data[i * n + new_j] = v[i * n + old_j] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// Thin SVD of a square matrix: A = U diag(s) V^T.
+/// Built from eig_sym(A^T A) -> V, then U = A V / s (with a Gram-Schmidt
+/// fallback for near-zero singular values).
+pub fn svd_square(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let ata = a.transpose().matmul(a);
+    let (vals, v) = eig_sym(&ata);
+    let s: Vec<f32> = vals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    let av = a.matmul(&v);
+    let mut u = Matrix::zeros(n, n);
+    for j in 0..n {
+        if s[j] > 1e-6 {
+            for i in 0..n {
+                u.data[i * n + j] = av.data[i * n + j] / s[j];
+            }
+        } else {
+            // degenerate direction: orthogonalize a unit vector against
+            // the existing columns
+            let mut col = vec![0.0f32; n];
+            col[j % n] = 1.0;
+            for jj in 0..j {
+                let mut dot = 0.0f32;
+                for i in 0..n {
+                    dot += col[i] * u.data[i * n + jj];
+                }
+                for i in 0..n {
+                    col[i] -= dot * u.data[i * n + jj];
+                }
+            }
+            let norm = col.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            for i in 0..n {
+                u.data[i * n + j] = col[i] / norm;
+            }
+        }
+    }
+    (u, s, v)
+}
+
+/// Orthogonal Procrustes: the rotation R minimizing ||A R - B||_F,
+/// R = U V^T where U S V^T = svd(A^T B).
+pub fn procrustes(a: &Matrix, b: &Matrix) -> Matrix {
+    let m = a.transpose().matmul(b);
+    let (u, _s, v) = svd_square(&m);
+    u.matmul(&v.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_mat(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, n);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let b = rand_mat(6, 1);
+        let a = b.matmul(&b.transpose()); // symmetric PSD
+        let (vals, v) = eig_sym(&a);
+        // A v_j = lambda_j v_j
+        for j in 0..6 {
+            let vj: Vec<f32> = (0..6).map(|i| v.data[i * 6 + j]).collect();
+            for i in 0..6 {
+                let av: f32 = (0..6).map(|k| a.data[i * 6 + k] * vj[k]).sum();
+                assert!((av - vals[j] * vj[i]).abs() < 1e-3, "row {i} vec {j}");
+            }
+        }
+        // descending order
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let a = rand_mat(5, 2);
+        let (u, s, v) = svd_square(&a);
+        // A ~= U diag(s) V^T
+        let mut us = u.clone();
+        for i in 0..5 {
+            for j in 0..5 {
+                us.data[i * 5 + j] *= s[j];
+            }
+        }
+        let rec = us.matmul(&v.transpose());
+        for (x, y) in a.data.iter().zip(&rec.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn procrustes_recovers_rotation() {
+        // B = A R_true => procrustes(A, B) ~= R_true
+        let a = rand_mat(4, 3);
+        // build an orthogonal matrix from QR-ish: use svd of random
+        let (q, _, _) = svd_square(&rand_mat(4, 4));
+        let b = a.matmul(&q);
+        let r = procrustes(&a, &b);
+        let diff: f32 = r.data.iter().zip(&q.data).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff < 1e-2, "diff {diff}");
+    }
+
+    #[test]
+    fn procrustes_output_is_orthogonal() {
+        let a = rand_mat(5, 6);
+        let b = rand_mat(5, 7);
+        let r = procrustes(&a, &b);
+        let rtr = r.transpose().matmul(&r);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((rtr.data[i * 5 + j] - want).abs() < 1e-3);
+            }
+        }
+    }
+}

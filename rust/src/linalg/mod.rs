@@ -1,0 +1,213 @@
+//! Small dense linear algebra: Cholesky factorization and least-squares
+//! via normal equations. Used to fit the AQ/pairwise decoder codebooks
+//! (paper Sec. 3.3: "estimated by solving a least-squares system").
+
+pub mod eig;
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// In-place Cholesky factorization A = L L^T for symmetric positive
+/// definite A (row-major, n x n). Returns the lower-triangular factor.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.data[i * n + j] as f64;
+            for k in 0..j {
+                sum -= (l.data[i * n + k] * l.data[j * n + k]) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l.data[i * n + i] = (sum.sqrt()) as f32;
+            } else {
+                l.data[i * n + j] = (sum / l.data[j * n + j] as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= (l.data[i * n + k] * y[k]) as f64;
+        }
+        y[i] = (sum / l.data[i * n + i] as f64) as f32;
+    }
+    y
+}
+
+/// Solve L^T x = y (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i] as f64;
+        for k in i + 1..n {
+            sum -= (l.data[k * n + i] * x[k]) as f64;
+        }
+        x[i] = (sum / l.data[i * n + i] as f64) as f32;
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>> {
+    let l = cholesky(a)?;
+    Ok(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Least squares: minimize ||D w - y||^2 over w, for a sparse "few-hot"
+/// design matrix given as per-row active column indices (every active
+/// entry is 1.0). This is exactly the AQ codebook estimation problem:
+/// each data row activates one column per codebook (its code), and the
+/// target y is the data vector; solving per output dimension shares the
+/// same Gram matrix.
+///
+/// Returns the [n_cols, dim] solution matrix. `ridge` adds Tikhonov
+/// damping to keep the (often rank-deficient) Gram matrix SPD.
+pub fn lstsq_onehot(
+    active: &[Vec<u32>],
+    targets: &Matrix,
+    n_cols: usize,
+    ridge: f32,
+) -> Result<Matrix> {
+    assert_eq!(active.len(), targets.rows);
+    let dim = targets.cols;
+    // Gram matrix G = D^T D (n_cols x n_cols) and RHS = D^T Y (n_cols x dim)
+    let mut gram = Matrix::zeros(n_cols, n_cols);
+    let mut rhs = Matrix::zeros(n_cols, dim);
+    for (row, cols) in active.iter().enumerate() {
+        for &ci in cols {
+            let ci = ci as usize;
+            for &cj in cols {
+                gram.data[ci * n_cols + cj as usize] += 1.0;
+            }
+            crate::tensor::add_assign(rhs.row_mut(ci), targets.row(row));
+        }
+    }
+    for i in 0..n_cols {
+        gram.data[i * n_cols + i] += ridge.max(1e-6);
+    }
+    let l = cholesky(&gram)?;
+    let mut out = Matrix::zeros(n_cols, dim);
+    // solve per output dimension
+    let mut b = vec![0.0f32; n_cols];
+    for j in 0..dim {
+        for i in 0..n_cols {
+            b[i] = rhs.data[i * dim + j];
+        }
+        let x = solve_lower_t(&l, &solve_lower(&l, &b));
+        for i in 0..n_cols {
+            out.data[i * dim + j] = x[i];
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Matrix {
+        // A = B B^T + n*I
+        let mut b = Matrix::zeros(n, n);
+        rng.fill_normal(&mut b.data, 0.0, 1.0);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a.data[i * n + i] += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(7);
+        for n in [1, 2, 5, 12] {
+            let a = spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let llt = l.matmul(&l.transpose());
+            for (x, y) in a.data.iter().zip(&llt.data) {
+                assert!((x - y).abs() < 1e-2 * (1.0 + x.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        let mut rng = Rng::new(8);
+        let a = spd(6, &mut rng);
+        let mut x_true = vec![0.0f32; 6];
+        rng.fill_normal(&mut x_true, 0.0, 1.0);
+        let b: Vec<f32> = (0..6)
+            .map(|i| crate::tensor::dot(a.row(i), &x_true))
+            .collect();
+        let x = solve_spd(&a, &b).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-3, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn lstsq_onehot_recovers_means() {
+        // single codebook: LS solution is the per-bucket mean
+        let active = vec![vec![0u32], vec![0], vec![1]];
+        let targets = Matrix::from_vec(3, 2, vec![1., 1., 3., 3., 10., 0.]);
+        let w = lstsq_onehot(&active, &targets, 2, 1e-4).unwrap();
+        assert!((w.data[0] - 2.0).abs() < 1e-2);
+        assert!((w.data[1] - 2.0).abs() < 1e-2);
+        assert!((w.data[2] - 10.0).abs() < 1e-1);
+        assert!(w.data[3].abs() < 1e-1);
+    }
+
+    #[test]
+    fn lstsq_onehot_two_codebooks_additive() {
+        // y = c1[a] + c2[b] exactly; LS must fit with ~zero residual
+        let mut rng = Rng::new(11);
+        let k = 4;
+        let mut c1 = Matrix::zeros(k, 3);
+        let mut c2 = Matrix::zeros(k, 3);
+        rng.fill_normal(&mut c1.data, 0.0, 1.0);
+        rng.fill_normal(&mut c2.data, 0.0, 1.0);
+        let mut active = Vec::new();
+        let mut targets = Matrix::zeros(200, 3);
+        for i in 0..200 {
+            let a = rng.below(k);
+            let b = rng.below(k);
+            active.push(vec![a as u32, (k + b) as u32]);
+            let row = targets.row_mut(i);
+            for j in 0..3 {
+                row[j] = c1.data[a * 3 + j] + c2.data[b * 3 + j];
+            }
+        }
+        let w = lstsq_onehot(&active, &targets, 2 * k, 1e-4).unwrap();
+        // check residuals near zero
+        for (i, cols) in active.iter().enumerate() {
+            let mut pred = [0.0f32; 3];
+            for &c in cols {
+                for j in 0..3 {
+                    pred[j] += w.data[c as usize * 3 + j];
+                }
+            }
+            for j in 0..3 {
+                assert!((pred[j] - targets.data[i * 3 + j]).abs() < 5e-2);
+            }
+        }
+    }
+}

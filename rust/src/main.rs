@@ -1,0 +1,9 @@
+//! `qinco2` CLI — the L3 coordinator entrypoint. See `qinco2 help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = qinco2::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

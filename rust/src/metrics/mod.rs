@@ -1,0 +1,71 @@
+//! Evaluation metrics: reconstruction MSE and recall@rank — the two axes
+//! of every table in the paper.
+
+use crate::tensor::Matrix;
+
+/// Mean squared error between original and reconstructed vectors
+/// (sum over dims, mean over rows — the paper's convention).
+pub fn mse(xs: &Matrix, xhat: &Matrix) -> f64 {
+    crate::tensor::mse(xs, xhat)
+}
+
+/// Recall@rank: fraction of queries whose true nearest neighbor appears
+/// in the first `rank` results. `results[q]` is the ranked candidate list
+/// for query q.
+pub fn recall_at(results: &[Vec<u32>], ground_truth: &[u32], rank: usize) -> f64 {
+    assert_eq!(results.len(), ground_truth.len());
+    if results.is_empty() {
+        return 0.0;
+    }
+    let hits = results
+        .iter()
+        .zip(ground_truth)
+        .filter(|(r, &g)| r.iter().take(rank).any(|&x| x == g))
+        .count();
+    hits as f64 / results.len() as f64
+}
+
+/// R@1 / R@10 / R@100 triple (Table S4).
+pub fn recall_triple(results: &[Vec<u32>], gt: &[u32]) -> (f64, f64, f64) {
+    (
+        recall_at(results, gt, 1),
+        recall_at(results, gt, 10),
+        recall_at(results, gt, 100),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_exact() {
+        let results = vec![vec![5, 1, 2], vec![0, 7, 9], vec![3, 3, 3]];
+        let gt = vec![5, 9, 4];
+        assert!((recall_at(&results, &gt, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((recall_at(&results, &gt, 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_monotone_in_rank() {
+        let results = vec![vec![1, 2, 3, 4], vec![4, 3, 2, 1]];
+        let gt = vec![4, 1];
+        let r1 = recall_at(&results, &gt, 1);
+        let r2 = recall_at(&results, &gt, 2);
+        let r4 = recall_at(&results, &gt, 4);
+        assert!(r1 <= r2 && r2 <= r4);
+        assert_eq!(r4, 1.0);
+    }
+
+    #[test]
+    fn empty_results_zero() {
+        assert_eq!(recall_at(&[], &[], 1), 0.0);
+    }
+
+    #[test]
+    fn shorter_lists_than_rank() {
+        let results = vec![vec![7]];
+        let gt = vec![7];
+        assert_eq!(recall_at(&results, &gt, 100), 1.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Batched encode/decode of QINCo2 codes through the PJRT runtime.
+//!
+//! Artifacts have fixed batch sizes; the codec pads the last batch (by
+//! repeating the first row) and strips the pad from the outputs, so any
+//! dataset size works. One `Codec` wraps one model + one (A, B) encode
+//! setting + the matching decode artifacts.
+
+use super::params::ParamStore;
+use crate::quantizers::Codes;
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use crate::util::qnpz::Tensor;
+use anyhow::{bail, Context, Result};
+
+pub struct Codec {
+    pub model: String,
+    /// encode artifact name (fixes A, B, N_enc)
+    pub enc_name: String,
+    /// decode artifact name (fixes N_dec)
+    pub dec_name: String,
+    pub n_enc: usize,
+    pub n_dec: usize,
+    pub a: usize,
+    pub b: usize,
+}
+
+impl Codec {
+    /// Pick artifacts for `model` with encode setting (a, b) from the
+    /// manifest (largest available batch sizes).
+    pub fn new(engine: &Engine, model: &str, a: usize, b: usize) -> Result<Codec> {
+        let enc = engine
+            .manifest
+            .find_encode(model, a, b)
+            .with_context(|| format!("no encode artifact for {model} A={a} B={b}"))?;
+        let dec = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|s| s.kind == "decode" && s.model == model)
+            .max_by_key(|s| s.n)
+            .with_context(|| format!("no decode artifact for {model}"))?;
+        Ok(Codec {
+            model: model.to_string(),
+            enc_name: enc.name.clone(),
+            dec_name: dec.name.clone(),
+            n_enc: enc.n,
+            n_dec: dec.n,
+            a,
+            b,
+        })
+    }
+
+    /// Encode vectors into codes; also returns reconstructions and
+    /// per-vector squared errors (free outputs of the artifact).
+    pub fn encode(
+        &self,
+        engine: &mut Engine,
+        params: &ParamStore,
+        xs: &Matrix,
+    ) -> Result<(Codes, Matrix, Vec<f32>)> {
+        let cfg = &params.cfg;
+        if xs.cols != cfg.d {
+            bail!("encode: dim {} != model dim {}", xs.cols, cfg.d);
+        }
+        let exe = engine.load(&self.enc_name)?;
+        let n = xs.rows;
+        let nb = self.n_enc;
+        let mut codes = Codes::zeros(n, cfg.m);
+        let mut xhat = Matrix::zeros(n, cfg.d);
+        let mut errs = vec![0.0f32; n];
+        let p_inputs = params.ordered();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + nb).min(n);
+            // pad the batch by repeating the first row
+            let mut batch = Vec::with_capacity(nb * cfg.d);
+            for i in lo..hi {
+                batch.extend_from_slice(xs.row(i));
+            }
+            for _ in hi..lo + nb {
+                batch.extend_from_slice(xs.row(lo));
+            }
+            let x_t = Tensor::f32(vec![nb, cfg.d], batch);
+            let mut inputs = p_inputs.clone();
+            inputs.push(&x_t);
+            let out = exe.run(&inputs)?;
+            let (c_t, xh_t, e_t) = (&out[0], &out[1], &out[2]);
+            let c_i32 = c_t.as_i32();
+            for (bi, i) in (lo..hi).enumerate() {
+                for s in 0..cfg.m {
+                    codes.row_mut(i)[s] = c_i32[bi * cfg.m + s] as u32;
+                }
+                xhat.row_mut(i)
+                    .copy_from_slice(&xh_t.data_f32[bi * cfg.d..(bi + 1) * cfg.d]);
+                errs[i] = e_t.data_f32[bi];
+            }
+            lo = hi;
+        }
+        Ok((codes, xhat, errs))
+    }
+
+    /// Decode codes back to vectors.
+    pub fn decode(&self, engine: &mut Engine, params: &ParamStore, codes: &Codes) -> Result<Matrix> {
+        let cfg = &params.cfg;
+        if codes.m != cfg.m {
+            bail!("decode: {} positions != model M {}", codes.m, cfg.m);
+        }
+        // prefer the smallest decode batch that covers the request to cut
+        // padding waste on shortlist re-ranks
+        let dec = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|s| s.kind == "decode" && s.model == self.model && s.n >= codes.n.min(self.n_dec))
+            .min_by_key(|s| s.n)
+            .map(|s| (s.name.clone(), s.n))
+            .unwrap_or((self.dec_name.clone(), self.n_dec));
+        let (dec_name, nb) = dec;
+        let exe = engine.load(&dec_name)?;
+        let p_inputs = decode_params(params);
+        let n = codes.n;
+        let mut out = Matrix::zeros(n, cfg.d);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + nb).min(n);
+            let mut batch: Vec<i32> = Vec::with_capacity(nb * cfg.m);
+            for i in lo..hi {
+                batch.extend(codes.row(i).iter().map(|&c| c as i32));
+            }
+            for _ in hi..lo + nb {
+                batch.extend(codes.row(lo).iter().map(|&c| c as i32));
+            }
+            let c_t = Tensor::i32(vec![nb, cfg.m], &batch);
+            let mut inputs = p_inputs.clone();
+            inputs.push(&c_t);
+            let res = exe.run(&inputs)?;
+            for (bi, i) in (lo..hi).enumerate() {
+                out.row_mut(i)
+                    .copy_from_slice(&res[0].data_f32[bi * cfg.d..(bi + 1) * cfg.d]);
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Multi-rate decode: reconstructions after every step (Fig. S3).
+    /// Returns a vec of [n, d] matrices, one per step 1..=M.
+    pub fn decode_partial(
+        &self,
+        engine: &mut Engine,
+        params: &ParamStore,
+        codes: &Codes,
+    ) -> Result<Vec<Matrix>> {
+        let cfg = &params.cfg;
+        let spec = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|s| s.kind == "decode_partial" && s.model == self.model)
+            .max_by_key(|s| s.n)
+            .with_context(|| format!("no decode_partial artifact for {}", self.model))?;
+        let (name, nb) = (spec.name.clone(), spec.n);
+        let exe = engine.load(&name)?;
+        let p_inputs = decode_params(params);
+        let n = codes.n;
+        let mut out: Vec<Matrix> = (0..cfg.m).map(|_| Matrix::zeros(n, cfg.d)).collect();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + nb).min(n);
+            let mut batch: Vec<i32> = Vec::with_capacity(nb * cfg.m);
+            for i in lo..hi {
+                batch.extend(codes.row(i).iter().map(|&c| c as i32));
+            }
+            for _ in hi..lo + nb {
+                batch.extend(codes.row(lo).iter().map(|&c| c as i32));
+            }
+            let c_t = Tensor::i32(vec![nb, cfg.m], &batch);
+            let mut inputs = p_inputs.clone();
+            inputs.push(&c_t);
+            let res = exe.run(&inputs)?;
+            // output [M, nb, d]
+            let data = &res[0].data_f32;
+            for step in 0..cfg.m {
+                for (bi, i) in (lo..hi).enumerate() {
+                    let src = step * nb * cfg.d + bi * cfg.d;
+                    out[step].row_mut(i).copy_from_slice(&data[src..src + cfg.d]);
+                }
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+}
+
+/// Decode artifacts take the subset [codebooks, in_w, cond_w, cond_b,
+/// up_w, down_w, out_w] (no pre-selection tensors).
+pub fn decode_params(params: &ParamStore) -> Vec<&Tensor> {
+    ["codebooks", "in_w", "cond_w", "cond_b", "up_w", "down_w", "out_w"]
+        .iter()
+        .map(|n| params.get(n))
+        .collect()
+}

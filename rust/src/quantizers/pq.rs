@@ -1,0 +1,179 @@
+//! Product Quantization (Jégou et al., 2010): slice vectors into M
+//! sub-vectors, k-means each slice independently. The fastest baseline in
+//! Fig. 6 and the coarse substrate of the IVF-PQ pipeline.
+
+use super::{Codes, VectorQuantizer};
+use crate::clustering::{kmeans, KMeansCfg};
+use crate::tensor::{self, Matrix};
+use crate::util::pool;
+
+pub struct Pq {
+    pub d: usize,
+    pub m: usize,
+    pub k: usize,
+    /// per-subspace codebooks, each [k, sub_dim]
+    pub codebooks: Vec<Matrix>,
+    /// subspace boundaries: sub m covers [splits[m], splits[m+1])
+    pub splits: Vec<usize>,
+}
+
+impl Pq {
+    /// Train on `xs`: d is split into `m` near-equal slices, each getting
+    /// a `k`-centroid k-means codebook.
+    pub fn train(xs: &Matrix, m: usize, k: usize, seed: u64) -> Pq {
+        let d = xs.cols;
+        assert!(m <= d, "more subquantizers than dimensions");
+        let splits: Vec<usize> = (0..=m).map(|i| i * d / m).collect();
+        let mut codebooks = Vec::with_capacity(m);
+        for s in 0..m {
+            let (lo, hi) = (splits[s], splits[s + 1]);
+            let mut sub = Matrix::zeros(xs.rows, hi - lo);
+            for i in 0..xs.rows {
+                sub.row_mut(i).copy_from_slice(&xs.row(i)[lo..hi]);
+            }
+            let km = kmeans(&sub, &KMeansCfg::new(k).iters(12).seed(seed ^ s as u64));
+            codebooks.push(km.centroids);
+        }
+        Pq { d, m, k, codebooks, splits }
+    }
+
+    /// Asymmetric distance lookup tables for a query: `tables[s][c]` =
+    /// squared distance between the query's slice s and codeword c.
+    pub fn lut(&self, q: &[f32]) -> Vec<Vec<f32>> {
+        (0..self.m)
+            .map(|s| {
+                let (lo, hi) = (self.splits[s], self.splits[s + 1]);
+                let cb = &self.codebooks[s];
+                (0..cb.rows).map(|c| tensor::l2_sq(&q[lo..hi], cb.row(c))).collect()
+            })
+            .collect()
+    }
+
+    /// Exact asymmetric distance from LUTs.
+    #[inline]
+    pub fn lut_distance(tables: &[Vec<f32>], code: &[u32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (t, &c) in tables.iter().zip(code) {
+            acc += t[c as usize];
+        }
+        acc
+    }
+}
+
+impl VectorQuantizer for Pq {
+    fn code_len(&self) -> usize {
+        self.m
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, xs: &Matrix) -> Codes {
+        assert_eq!(xs.cols, self.d);
+        let mut codes = Codes::zeros(xs.rows, self.m);
+        let m = self.m;
+        let codes_ptr = codes.data.as_mut_ptr() as usize;
+        pool::scope_chunks(xs.rows, pool::default_threads(), |lo_r, hi_r| {
+            for i in lo_r..hi_r {
+                for s in 0..m {
+                    let (lo, hi) = (self.splits[s], self.splits[s + 1]);
+                    let (best, _) = tensor::argmin_l2(&xs.row(i)[lo..hi], &self.codebooks[s]);
+                    unsafe {
+                        *(codes_ptr as *mut u32).add(i * m + s) = best as u32;
+                    }
+                }
+            }
+        });
+        codes
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        assert_eq!(codes.m, self.m);
+        let mut out = Matrix::zeros(codes.n, self.d);
+        for i in 0..codes.n {
+            let row = out.row_mut(i);
+            for (s, &c) in codes.row(i).iter().enumerate() {
+                let (lo, hi) = (self.splits[s], self.splits[s + 1]);
+                row[lo..hi].copy_from_slice(self.codebooks[s].row(c as usize));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+
+    #[test]
+    fn pq_reduces_error_with_more_centroids() {
+        let xs = generate(Flavor::Deep, 600, 16, 1);
+        let pq4 = Pq::train(&xs, 4, 4, 2);
+        let pq16 = Pq::train(&xs, 4, 16, 2);
+        let e4 = pq4.eval_mse(&xs);
+        let e16 = pq16.eval_mse(&xs);
+        assert!(e16 < e4, "{e16} !< {e4}");
+    }
+
+    #[test]
+    fn decode_uses_selected_codewords() {
+        let xs = generate(Flavor::BigAnn, 200, 8, 3);
+        let pq = Pq::train(&xs, 2, 8, 4);
+        let codes = pq.encode(&xs);
+        let dec = pq.decode(&codes);
+        for i in [0usize, 57, 199] {
+            let c = codes.row(i);
+            assert_eq!(&dec.row(i)[0..4], pq.codebooks[0].row(c[0] as usize));
+            assert_eq!(&dec.row(i)[4..8], pq.codebooks[1].row(c[1] as usize));
+        }
+    }
+
+    #[test]
+    fn encoding_is_nearest_per_subspace() {
+        let xs = generate(Flavor::Deep, 100, 8, 5);
+        let pq = Pq::train(&xs, 2, 4, 6);
+        let codes = pq.encode(&xs);
+        for i in 0..xs.rows {
+            for s in 0..2 {
+                let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
+                let (best, _) = tensor::argmin_l2(&xs.row(i)[lo..hi], &pq.codebooks[s]);
+                assert_eq!(codes.row(i)[s], best as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_distance_matches_explicit() {
+        let xs = generate(Flavor::Deep, 150, 12, 7);
+        let pq = Pq::train(&xs, 3, 8, 8);
+        let codes = pq.encode(&xs);
+        let dec = pq.decode(&codes);
+        let q = xs.row(0).to_vec();
+        let tables = pq.lut(&q);
+        for i in 0..20 {
+            let lut_d = Pq::lut_distance(&tables, codes.row(i));
+            let exact = tensor::l2_sq(&q, dec.row(i));
+            assert!((lut_d - exact).abs() < 1e-3, "{lut_d} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn uneven_dimension_split() {
+        let xs = generate(Flavor::Contriever, 100, 10, 9);
+        let pq = Pq::train(&xs, 3, 4, 10); // 10 = 3+3+4 split
+        assert_eq!(pq.splits, vec![0, 3, 6, 10]);
+        let codes = pq.encode(&xs);
+        let dec = pq.decode(&codes);
+        assert_eq!(dec.cols, 10);
+        assert!(crate::tensor::mse(&xs, &dec).is_finite());
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let xs = generate(Flavor::Deep, 64, 8, 11);
+        let pq = Pq::train(&xs, 4, 16, 12);
+        assert_eq!(pq.bits(), 4 * 4);
+    }
+}

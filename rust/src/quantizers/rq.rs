@@ -1,0 +1,193 @@
+//! Residual Quantization (Chen et al., 2010) with beam-search encoding
+//! (Babenko & Lempitsky, 2014) — the structural ancestor of QINCo2 and
+//! the strongest classical baseline in Table 3 / Fig. 6.
+
+use super::{Codes, VectorQuantizer};
+use crate::clustering::{kmeans, KMeansCfg};
+use crate::tensor::{self, Matrix};
+use crate::util::pool;
+
+pub struct Rq {
+    pub d: usize,
+    pub m: usize,
+    pub k: usize,
+    /// beam width used at encode time (1 = greedy)
+    pub beam: usize,
+    /// per-step codebooks, each [k, d]
+    pub codebooks: Vec<Matrix>,
+}
+
+impl Rq {
+    /// Sequential training: k-means on the residual of the previous steps
+    /// (greedy assignments during training, like Faiss' default).
+    pub fn train(xs: &Matrix, m: usize, k: usize, beam: usize, seed: u64) -> Rq {
+        let mut resid = xs.clone();
+        let mut codebooks = Vec::with_capacity(m);
+        for step in 0..m {
+            let km = kmeans(&resid, &KMeansCfg::new(k).iters(12).seed(seed ^ (step as u64) << 8));
+            for i in 0..resid.rows {
+                let c = km.assign[i] as usize;
+                let crow = km.centroids.row(c).to_vec();
+                tensor::sub_assign(resid.row_mut(i), &crow);
+            }
+            codebooks.push(km.centroids);
+        }
+        Rq { d: xs.cols, m, k, beam, codebooks }
+    }
+
+    /// Beam-search encode a single vector; returns (codes, final error).
+    pub fn encode_one(&self, x: &[f32], beam: usize) -> (Vec<u32>, f32) {
+        let b = beam.max(1);
+        // hypotheses: (codes, xhat, err)
+        let mut hyps: Vec<(Vec<u32>, Vec<f32>, f32)> =
+            vec![(Vec::new(), vec![0.0; self.d], tensor::sqnorm(x))];
+        for step in 0..self.m {
+            let cb = &self.codebooks[step];
+            let mut cands: Vec<(usize, u32, f32)> = Vec::with_capacity(hyps.len() * self.k);
+            for (hi, (_codes, xhat, _)) in hyps.iter().enumerate() {
+                // residual = x - xhat; err(c) = ||residual - c||^2
+                let resid: Vec<f32> = x.iter().zip(xhat).map(|(a, b)| a - b).collect();
+                for c in 0..cb.rows {
+                    cands.push((hi, c as u32, tensor::l2_sq(&resid, cb.row(c))));
+                }
+            }
+            cands.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+            // dedupe identical (hypothesis, code) prefixes is unnecessary:
+            // each (hi, c) pair is unique by construction.
+            let keep = cands.len().min(b);
+            let mut next = Vec::with_capacity(keep);
+            for &(hi, c, err) in cands.iter().take(keep) {
+                let (codes, xhat, _) = &hyps[hi];
+                let mut codes2 = codes.clone();
+                codes2.push(c);
+                let mut xhat2 = xhat.clone();
+                tensor::add_assign(&mut xhat2, self.codebooks[step].row(c as usize));
+                next.push((codes2, xhat2, err));
+            }
+            hyps = next;
+        }
+        let best = hyps
+            .into_iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        (best.0, best.2)
+    }
+}
+
+impl VectorQuantizer for Rq {
+    fn code_len(&self) -> usize {
+        self.m
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, xs: &Matrix) -> Codes {
+        let mut codes = Codes::zeros(xs.rows, self.m);
+        let ptr = codes.data.as_mut_ptr() as usize;
+        pool::scope_chunks(xs.rows, pool::default_threads(), |lo, hi| {
+            for i in lo..hi {
+                let (c, _) = self.encode_one(xs.row(i), self.beam);
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        c.as_ptr(),
+                        (ptr as *mut u32).add(i * self.m),
+                        self.m,
+                    );
+                }
+            }
+        });
+        codes
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        assert_eq!(codes.m, self.m);
+        let mut out = Matrix::zeros(codes.n, self.d);
+        for i in 0..codes.n {
+            let row = out.row_mut(i);
+            for (s, &c) in codes.row(i).iter().enumerate() {
+                tensor::add_assign(row, self.codebooks[s].row(c as usize));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+
+    #[test]
+    fn rq_beats_single_step() {
+        let xs = generate(Flavor::Deep, 500, 12, 1);
+        let rq1 = Rq::train(&xs, 1, 16, 1, 2);
+        let rq4 = Rq::train(&xs, 4, 16, 1, 2);
+        assert!(rq4.eval_mse(&xs) < rq1.eval_mse(&xs));
+    }
+
+    #[test]
+    fn beam_no_worse_than_greedy() {
+        let xs = generate(Flavor::BigAnn, 300, 8, 3);
+        let rq = Rq::train(&xs, 4, 8, 1, 4);
+        let mut worse = 0;
+        for i in 0..50 {
+            let (_, e1) = rq.encode_one(xs.row(i), 1);
+            let (_, e8) = rq.encode_one(xs.row(i), 8);
+            assert!(e8 <= e1 + 1e-5, "beam worse on row {i}: {e8} > {e1}");
+            if e8 < e1 - 1e-6 {
+                worse += 1;
+            }
+        }
+        // beam must strictly help on at least some vectors
+        assert!(worse > 0, "beam never improved anything");
+    }
+
+    #[test]
+    fn encode_decode_consistent_with_reported_error() {
+        let xs = generate(Flavor::Deep, 100, 8, 5);
+        let rq = Rq::train(&xs, 3, 8, 2, 6);
+        let codes = rq.encode(&xs);
+        let dec = rq.decode(&codes);
+        for i in 0..20 {
+            let (c, err) = rq.encode_one(xs.row(i), 2);
+            assert_eq!(&c[..], codes.row(i));
+            let exact = tensor::l2_sq(xs.row(i), dec.row(i));
+            assert!((err - exact).abs() < 1e-3, "{err} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn greedy_encoding_is_stepwise_nearest() {
+        let xs = generate(Flavor::Deep, 60, 6, 7);
+        let rq = Rq::train(&xs, 2, 8, 1, 8);
+        let codes = rq.encode(&xs);
+        for i in 0..xs.rows {
+            let x = xs.row(i);
+            let (c0, _) = tensor::argmin_l2(x, &rq.codebooks[0]);
+            assert_eq!(codes.row(i)[0], c0 as u32);
+        }
+    }
+
+    #[test]
+    fn residual_training_shrinks_residual_norm() {
+        let xs = generate(Flavor::Contriever, 400, 8, 9);
+        let rq = Rq::train(&xs, 6, 16, 1, 10);
+        let codes = rq.encode(&xs);
+        // prefix errors must decrease with more steps on average
+        let mut prev = f64::INFINITY;
+        for m in 1..=6 {
+            let partial = Rq {
+                d: rq.d,
+                m,
+                k: rq.k,
+                beam: 1,
+                codebooks: rq.codebooks[..m].to_vec(),
+            };
+            let e = crate::tensor::mse(&xs, &partial.decode(&codes.truncate(m)));
+            assert!(e <= prev + 1e-9, "step {m}: {e} > {prev}");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! The AOT manifest — the ABI between `python/compile/aot.py` and the
+//! Rust runtime. Lists every model (architecture + parameter inventory)
+//! and every artifact (kind, file, positional input/output tensor specs).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Static architecture of a QINCo2 model (mirror of python ModelCfg).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub d: usize,
+    pub m: usize,
+    pub k: usize,
+    pub l: usize,
+    pub de: usize,
+    pub dh: usize,
+    pub ls: usize,
+    pub dhg: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32"
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub cfg: ModelCfg,
+    /// parameter inventory, in ABI order
+    pub params: Vec<TensorSpec>,
+    pub num_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// encode | decode | decode_partial | train_adamw | train_adam | f_step
+    pub kind: String,
+    pub model: String,
+    pub a: usize,
+    pub b: usize,
+    pub n: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .context("spec list not an array")?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                name: s.get("name").and_then(Json::as_str).context("spec name")?.to_string(),
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("spec shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: s
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut manifest = Manifest::default();
+
+        let models = root.get("models").and_then(Json::as_obj).context("manifest.models")?;
+        for (name, m) in models {
+            let c = m.get("cfg").context("model cfg")?;
+            let grab = |k: &str| -> Result<usize> {
+                c.get(k).and_then(Json::as_usize).with_context(|| format!("cfg.{k}"))
+            };
+            let cfg = ModelCfg {
+                d: grab("d")?,
+                m: grab("M")?,
+                k: grab("K")?,
+                l: grab("L")?,
+                de: grab("de")?,
+                dh: grab("dh")?,
+                ls: grab("Ls").unwrap_or(0),
+                dhg: grab("dhg").unwrap_or(128),
+            };
+            manifest.models.insert(
+                name.clone(),
+                ModelSpec {
+                    cfg,
+                    params: parse_specs(m.get("params").context("model params")?)?,
+                    num_params: m.get("num_params").and_then(Json::as_usize).unwrap_or(0),
+                },
+            );
+        }
+
+        let arts = root.get("artifacts").and_then(Json::as_arr).context("manifest.artifacts")?;
+        for a in arts {
+            let name =
+                a.get("name").and_then(Json::as_str).context("artifact name")?.to_string();
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: a.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                kind: a.get("kind").and_then(Json::as_str).context("kind")?.to_string(),
+                model: a.get("model").and_then(Json::as_str).context("model")?.to_string(),
+                a: a.get("A").and_then(Json::as_usize).unwrap_or(0),
+                b: a.get("B").and_then(Json::as_usize).unwrap_or(0),
+                n: a.get("N").and_then(Json::as_usize).unwrap_or(0),
+                inputs: parse_specs(a.get("inputs").context("inputs")?)?,
+                outputs: parse_specs(a.get("outputs").context("outputs")?)?,
+            };
+            if !manifest.models.contains_key(&spec.model) {
+                bail!("artifact {name} references unknown model {}", spec.model);
+            }
+            manifest.artifacts.insert(name, spec);
+        }
+        Ok(manifest)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    /// Find an encode artifact for (model, A, B), any batch size.
+    pub fn find_encode(&self, model: &str, a: usize, b: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|s| s.kind == "encode" && s.model == model && s.a == a && s.b == b)
+            .max_by_key(|s| s.n)
+    }
+
+    /// All encode (A, B) settings available for a model.
+    pub fn encode_settings(&self, model: &str) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<(usize, usize, usize)> = self
+            .artifacts
+            .values()
+            .filter(|s| s.kind == "encode" && s.model == model)
+            .map(|s| (s.a, s.b, s.n))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+        assert!(m.models.contains_key("test"), "test model missing");
+        let spec = m.model("test").unwrap();
+        assert_eq!(spec.cfg.d, 8);
+        assert_eq!(spec.cfg.m, 3);
+        assert_eq!(spec.params[0].name, "codebooks");
+        assert_eq!(spec.params[0].shape, vec![3, 8, 8]);
+        let enc = m.find_encode("test", 4, 4).expect("enc_test_A4_B4 missing");
+        assert_eq!(enc.n, 16);
+        // last encode input is x
+        assert_eq!(enc.inputs.last().unwrap().name, "x");
+        assert_eq!(enc.outputs[0].dtype, "i32");
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let m = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+        assert!(m.artifact("nope").is_none());
+        assert!(m.model("nope").is_err());
+    }
+}

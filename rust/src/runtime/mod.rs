@@ -1,0 +1,143 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and run them as
+//! plain Rust functions.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! jax ≥ 0.5 emits 64-bit instruction ids in serialized protos, which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Thread model: `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`]
+//! is pinned to one thread. The serving coordinator ([`crate::server`])
+//! runs each Engine on a dedicated model thread behind an mpsc channel;
+//! XLA itself parallelizes the compute internally.
+
+pub mod manifest;
+
+use crate::util::qnpz::{Dtype, Tensor};
+use anyhow::{bail, Context, Result};
+use manifest::{ArtifactSpec, Manifest};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Convert a host tensor into an XLA literal (zero-copy is not exposed by
+/// the C API wrapper; one memcpy per transfer).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::I32 => xla::ElementType::S32,
+    };
+    // storage is bit-exact for both dtypes (i32 stored as f32 bit patterns)
+    let bytes: Vec<u8> = t.data_f32.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)?)
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = l.to_vec::<f32>()?;
+            Ok(Tensor::f32(dims, data))
+        }
+        xla::ElementType::S32 => {
+            let data = l.to_vec::<i32>()?;
+            Ok(Tensor::i32(dims, &data))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional inputs (manifest order). Shapes are
+    /// validated against the manifest before the FFI call.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "{}: input {:?} shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+/// Loads, compiles and caches HLO artifacts for one PJRT CPU client.
+pub struct Engine {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Engine {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, dir, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling and caching on first use) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = std::rc::Rc::new(Executable { spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+}

@@ -1,0 +1,231 @@
+//! Serving coordinator: request router + dynamic batcher + worker pool
+//! over a shared [`SearchIndex`] (tokio is unavailable offline; this uses
+//! std threads + mpsc channels, the same architecture as a vLLM-style
+//! router: ingress queue → batch former → worker fan-out → reply
+//! channels).
+//!
+//! The index is immutable after build, so workers share it via `Arc`
+//! with no locking on the hot path. Latency and throughput metrics are
+//! collected per request (the §B latency experiment and Fig. 6 QPS
+//! numbers come from here).
+
+use crate::index::{SearchIndex, SearchParams};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    pub workers: usize,
+    /// max queries grouped into one dispatch unit
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch
+    pub batch_timeout: Duration,
+    /// ingress queue capacity (backpressure: submit blocks when full)
+    pub queue_cap: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg {
+            workers: crate::util::pool::default_threads(),
+            max_batch: 32,
+            batch_timeout: Duration::from_micros(200),
+            queue_cap: 1024,
+        }
+    }
+}
+
+pub struct Request {
+    pub query: Vec<f32>,
+    pub sp: SearchParams,
+    pub reply: SyncSender<Response>,
+    pub t_submit: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub results: Vec<(f32, u32)>,
+    pub latency: Duration,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    served: AtomicU64,
+    /// nanoseconds, summed
+    total_latency: AtomicU64,
+    /// most recent latencies (ring, for percentiles)
+    recent: Mutex<Vec<u64>>,
+}
+
+/// Snapshot of server health.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub served: u64,
+    pub mean_latency: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+pub struct Router {
+    ingress: SyncSender<Request>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<MetricsInner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the batcher and worker threads over a shared index.
+    pub fn start(index: Arc<SearchIndex>, cfg: ServerCfg) -> Router {
+        let (in_tx, in_rx) = sync_channel::<Request>(cfg.queue_cap);
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(MetricsInner::default());
+        let mut handles = Vec::new();
+
+        // --- batcher: groups ingress into dispatch units ---
+        {
+            let stop = stop.clone();
+            let max_batch = cfg.max_batch;
+            let timeout = cfg.batch_timeout;
+            handles.push(std::thread::spawn(move || {
+                batcher_loop(in_rx, batch_tx, max_batch, timeout, stop)
+            }));
+        }
+        // --- workers ---
+        for _w in 0..cfg.workers.max(1) {
+            let rx = batch_rx.clone();
+            let idx = index.clone();
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv_timeout(Duration::from_millis(20))
+                };
+                match batch {
+                    Ok(batch) => {
+                        for req in batch {
+                            let results = idx.search(&req.query, &req.sp);
+                            let latency = req.t_submit.elapsed();
+                            metrics.served.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .total_latency
+                                .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+                            {
+                                let mut recent = metrics.recent.lock().unwrap();
+                                if recent.len() >= 4096 {
+                                    let n = recent.len();
+                                    recent.copy_within(n / 2.., 0);
+                                    recent.truncate(n / 2);
+                                }
+                                recent.push(latency.as_nanos() as u64);
+                            }
+                            let _ = req.reply.send(Response { results, latency });
+                        }
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+        Router { ingress: in_tx, stop, metrics, handles }
+    }
+
+    /// Submit a query; returns the channel the response arrives on.
+    /// Blocks when the ingress queue is full (backpressure).
+    pub fn submit(&self, query: Vec<f32>, sp: SearchParams) -> Receiver<Response> {
+        let (tx, rx) = sync_channel(1);
+        let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
+        self.ingress.send(req).expect("router stopped");
+        rx
+    }
+
+    /// Non-blocking submit: Err when the queue is saturated.
+    pub fn try_submit(
+        &self,
+        query: Vec<f32>,
+        sp: SearchParams,
+    ) -> Result<Receiver<Response>, ()> {
+        let (tx, rx) = sync_channel(1);
+        let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
+        match self.ingress.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => Err(()),
+        }
+    }
+
+    /// Synchronous convenience wrapper.
+    pub fn search_blocking(&self, query: &[f32], sp: SearchParams) -> Response {
+        self.submit(query.to_vec(), sp).recv().expect("worker died")
+    }
+
+    pub fn stats(&self) -> Stats {
+        let served = self.metrics.served.load(Ordering::Relaxed);
+        let total = self.metrics.total_latency.load(Ordering::Relaxed);
+        let mut recent = self.metrics.recent.lock().unwrap().clone();
+        recent.sort_unstable();
+        let pct = |p: f64| -> Duration {
+            if recent.is_empty() {
+                return Duration::ZERO;
+            }
+            let i = ((recent.len() - 1) as f64 * p) as usize;
+            Duration::from_nanos(recent[i])
+        };
+        Stats {
+            served,
+            mean_latency: Duration::from_nanos(if served > 0 { total / served } else { 0 }),
+            p50: pct(0.5),
+            p99: pct(0.99),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.ingress);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    in_rx: Receiver<Request>,
+    batch_tx: SyncSender<Vec<Request>>,
+    max_batch: usize,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        // block for the first request of a batch
+        let first = match in_rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(r) => r,
+            Err(_) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match in_rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        if batch_tx.send(batch).is_err() {
+            return;
+        }
+    }
+}

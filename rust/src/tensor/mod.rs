@@ -1,0 +1,293 @@
+//! Dense row-major f32 matrices and the distance kernels every quantizer
+//! shares. Deliberately minimal: the heavy math runs inside XLA; this is
+//! the substrate for k-means, codebook fitting and LUT scans.
+
+use crate::util::pool;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a subset of rows into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// C = A @ B (naive blocked; fine for the small codebook solves —
+    /// model matmuls happen inside XLA).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * m..(p + 1) * m];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Per-row squared L2 norms.
+    pub fn row_sqnorms(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| sqnorm(self.row(i))).collect()
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut mu = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (m, &v) in mu.iter_mut().zip(self.row(i)) {
+                *m += v as f64;
+            }
+        }
+        mu.iter().map(|&s| (s / self.rows.max(1) as f64) as f32).collect()
+    }
+}
+
+/// ||a - b||^2 for equal-length slices.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+#[inline]
+pub fn sqnorm(a: &[f32]) -> f32 {
+    a.iter().map(|x| x * x).sum()
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// out += a (elementwise).
+#[inline]
+pub fn add_assign(out: &mut [f32], a: &[f32]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o += x;
+    }
+}
+
+/// out -= a (elementwise).
+#[inline]
+pub fn sub_assign(out: &mut [f32], a: &[f32]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o -= x;
+    }
+}
+
+/// Index + distance of the nearest centroid (squared L2), linear scan.
+#[inline]
+pub fn argmin_l2(x: &[f32], centroids: &Matrix) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    for c in 0..centroids.rows {
+        let d = l2_sq(x, centroids.row(c));
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best
+}
+
+/// Top-`k` smallest distances to rows of `centroids` (index, dist),
+/// ascending. Uses a bounded max-heap via sorted insertion (k is small).
+pub fn topk_l2(x: &[f32], centroids: &Matrix, k: usize) -> Vec<(usize, f32)> {
+    let k = k.min(centroids.rows);
+    let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for c in 0..centroids.rows {
+        let d = l2_sq(x, centroids.row(c));
+        if best.len() < k || d < best[best.len() - 1].1 {
+            let pos = best.partition_point(|&(_, bd)| bd <= d);
+            best.insert(pos, (c, d));
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+/// Assign every row of `xs` to its nearest centroid, in parallel.
+pub fn assign_all(xs: &Matrix, centroids: &Matrix, nthreads: usize) -> Vec<u32> {
+    let mut out = vec![0u32; xs.rows];
+    pool::par_map_into(&mut out, nthreads, |i, slot| {
+        *slot = argmin_l2(xs.row(i), centroids).0 as u32;
+    });
+    out
+}
+
+/// Mean squared reconstruction error sum ||x - x_hat||^2 averaged over rows.
+pub fn mse(xs: &Matrix, xhat: &Matrix) -> f64 {
+    assert_eq!(xs.rows, xhat.rows);
+    assert_eq!(xs.cols, xhat.cols);
+    let mut acc = 0.0f64;
+    for i in 0..xs.rows {
+        acc += l2_sq(xs.row(i), xhat.row(i)) as f64;
+    }
+    acc / xs.rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let i3 = Matrix::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn argmin_matches_topk1() {
+        prop::check("argmin-topk", 50, 40, |g| {
+            let d = g.usize_in(1, 8);
+            let k = g.usize_in(1, 16);
+            let cents = Matrix::from_vec(k, d, g.vec_f32(k * d, -1.0, 1.0));
+            let x = g.vec_f32(d, -1.0, 1.0);
+            let (i1, d1) = argmin_l2(&x, &cents);
+            let tk = topk_l2(&x, &cents, 1);
+            if tk[0].0 == i1 && (tk[0].1 - d1).abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("{:?} vs {:?}", (i1, d1), tk[0]))
+            }
+        });
+    }
+
+    #[test]
+    fn topk_sorted_and_distinct() {
+        prop::check("topk-sorted", 50, 40, |g| {
+            let d = g.usize_in(1, 6);
+            let n = g.usize_in(1, 32);
+            let k = g.usize_in(1, n);
+            let cents = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+            let x = g.vec_f32(d, -1.0, 1.0);
+            let tk = topk_l2(&x, &cents, k);
+            if tk.len() != k {
+                return Err(format!("len {} != {}", tk.len(), k));
+            }
+            for w in tk.windows(2) {
+                if w[0].1 > w[1].1 {
+                    return Err("not sorted".into());
+                }
+            }
+            let mut idx: Vec<usize> = tk.iter().map(|t| t.0).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            if idx.len() != k {
+                return Err("duplicate indices".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assign_all_parallel_matches_serial() {
+        let mut g = prop::Gen { rng: crate::util::prng::Rng::new(9), size: 0 };
+        let xs = Matrix::from_vec(100, 4, g.vec_f32(400, -1.0, 1.0));
+        let cents = Matrix::from_vec(7, 4, g.vec_f32(28, -1.0, 1.0));
+        let a1 = assign_all(&xs, &cents, 1);
+        let a8 = assign_all(&xs, &cents, 8);
+        assert_eq!(a1, a8);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(mse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn col_means_correct() {
+        let a = Matrix::from_vec(2, 2, vec![1., 10., 3., 30.]);
+        assert_eq!(a.col_means(), vec![2.0, 20.0]);
+    }
+}

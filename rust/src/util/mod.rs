@@ -1,0 +1,13 @@
+//! Offline-build substrates: JSON, PRNG, tensor checkpoint format, tiny
+//! property-testing harness, timers, thread pool.
+//!
+//! The usual crates (serde, rand, rayon, proptest, criterion) are not
+//! available in this offline environment, so the pieces the system needs
+//! are implemented here from scratch (see DESIGN.md §Substitutions).
+
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod qnpz;
+pub mod timer;

@@ -1,0 +1,115 @@
+//! Scoped thread pool (rayon/tokio are unavailable offline).
+//!
+//! `scope_chunks` is the workhorse: split an index range into contiguous
+//! chunks and run a closure per chunk on `nthreads` OS threads. Used by
+//! k-means assignment, LUT scans, database encoding and the brute-force
+//! ground-truth computation.
+
+/// Number of worker threads to use by default (respects `QINCO2_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("QINCO2_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into roughly equal
+/// contiguous chunks, one per thread. `f` runs on borrowed state thanks to
+/// `std::thread::scope`.
+pub fn scope_chunks<F>(n: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nthreads = nthreads.min(n).max(1);
+    if nthreads == 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(lo, hi));
+        }
+    });
+}
+
+/// Map over `[0, n)` in parallel, collecting one result per index.
+/// Results are written into a pre-allocated buffer through chunked
+/// disjoint mutable slices (no locking on the hot path).
+pub fn par_map_into<T, F>(out: &mut [T], nthreads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    let nthreads = nthreads.min(n).max(1);
+    if nthreads == 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            f(i, slot);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let fr = &f;
+            s.spawn(move || {
+                for (j, slot) in slice.iter_mut().enumerate() {
+                    fr(t * chunk + j, slot);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        scope_chunks(1000, 7, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        let mut touched = false;
+        scope_chunks(0, 4, |lo, hi| assert_eq!((lo, hi), (0, 0)));
+        scope_chunks(5, 1, |lo, hi| {
+            assert_eq!((lo, hi), (0, 5));
+        });
+        touched = true;
+        assert!(touched);
+    }
+
+    #[test]
+    fn par_map_into_fills_all() {
+        let mut out = vec![0usize; 503];
+        par_map_into(&mut out, 8, |i, slot| *slot = i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let mut out = vec![0usize; 3];
+        par_map_into(&mut out, 64, |i, slot| *slot = i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

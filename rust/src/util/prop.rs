@@ -1,0 +1,98 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a predicate over `n` randomly generated cases; on failure
+//! it performs a simple halving shrink over the generator's size
+//! parameter and reports the smallest failing (seed, size) so the case
+//! can be replayed deterministically.
+
+use crate::util::prng::Rng;
+
+/// A generated case: owns a size hint and a fresh RNG stream.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+}
+
+/// Run `prop` over `cases` random cases with sizes up to `max_size`.
+/// Panics with a replayable (seed, size) on the smallest failure found.
+pub fn check<P>(name: &str, cases: usize, max_size: usize, prop: P)
+where
+    P: Fn(&mut Gen) -> Result<(), String>,
+{
+    run_check(name, 0xC0FFEE, cases, max_size, prop)
+}
+
+pub fn run_check<P>(name: &str, seed0: u64, cases: usize, max_size: usize, prop: P)
+where
+    P: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64);
+        let size = 1 + (case * max_size) / cases.max(1);
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve the size while the failure persists
+            let mut best = (seed, size, msg);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g2 = Gen { rng: Rng::new(best.0), size: s };
+                match prop(&mut g2) {
+                    Err(m) => best = (best.0, s, m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{}' failed (seed={}, size={}): {}",
+                name, best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-nonneg", 50, 100, |g| {
+            let v = g.vec_f32(g.size, 0.0, 1.0);
+            if v.iter().sum::<f32>() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative sum".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        check("usize-bounds", 100, 50, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(1, 10);
+            let x = g.usize_in(lo, hi);
+            if x >= lo && x <= hi {
+                Ok(())
+            } else {
+                Err(format!("{x} not in [{lo},{hi}]"))
+            }
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! `.qnpz`: a tiny named-tensor container (numpy's .npz is unavailable —
+//! no serde / zip stack offline). Little-endian, sequential:
+//!
+//! ```text
+//! magic  b"QNPZ1\0"
+//! u32    tensor count
+//! per tensor:
+//!   u16      name length, then name bytes (utf-8)
+//!   u8       dtype: 0 = f32, 1 = i32
+//!   u8       ndim
+//!   u32*ndim dims
+//!   data     row-major, 4 bytes/elem
+//! ```
+//!
+//! Used for model checkpoints, codebooks and dataset caches; written and
+//! read by both the Rust trainer and (structurally) by aot.py.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"QNPZ1\0";
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// raw storage; f32 bit patterns for F32, i32 bit patterns for I32
+    pub data_f32: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { dtype: Dtype::F32, shape, data_f32: data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            dtype: Dtype::I32,
+            shape,
+            data_f32: data.iter().map(|&x| f32::from_bits(x as u32)).collect(),
+        }
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.data_f32.iter().map(|&x| x.to_bits() as i32).collect()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Store {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.push(match t.dtype {
+                Dtype::F32 => 0,
+                Dtype::I32 => 1,
+            });
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data_f32 {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::File::create(&tmp)?.write_all(&buf)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Store> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut buf)?;
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > buf.len() {
+                bail!("truncated qnpz file {path:?}");
+            }
+            let s = &buf[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        if take(&mut i, 6)? != MAGIC {
+            bail!("bad magic in {path:?}");
+        }
+        let count = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap());
+        let mut store = Store::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut i, nlen)?.to_vec())?;
+            let dtype = match take(&mut i, 1)?[0] {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                x => bail!("bad dtype {x}"),
+            };
+            let ndim = take(&mut i, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut i, numel * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect();
+            store.tensors.insert(name, Tensor { dtype, shape, data_f32: data });
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("qnpz_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.qnpz");
+        let mut s = Store::new();
+        s.insert("a", Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., -6.5]));
+        s.insert("codes", Tensor::i32(vec![4], &[0, 7, -1, 2147483647]));
+        s.save(&p).unwrap();
+        let s2 = Store::load(&p).unwrap();
+        assert_eq!(s2.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(s2.get("a").unwrap().data_f32, vec![1., 2., 3., 4., 5., -6.5]);
+        assert_eq!(s2.get("codes").unwrap().as_i32(), vec![0, 7, -1, 2147483647]);
+        assert_eq!(s2.get("codes").unwrap().dtype, Dtype::I32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let s = Store::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let dir = std::env::temp_dir().join(format!("qnpz_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.qnpz");
+        std::fs::write(&p, b"QNPZ1\0\x05\x00\x00\x00").unwrap();
+        assert!(Store::load(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,76 @@
+//! Timing helpers for the bench harnesses (criterion is unavailable
+//! offline). Median-of-runs wall-clock timing with warmup.
+
+use std::time::Instant;
+
+/// Time `f()` with `warmup` discarded runs and `runs` measured runs;
+/// returns (median_secs, min_secs).
+pub fn time_median<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let med = samples[samples.len() / 2];
+    (med, min)
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Pretty time formatting for logs (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_ordered() {
+        let (med, min) = time_median(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= med);
+        assert!(med >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

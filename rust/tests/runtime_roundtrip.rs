@@ -1,0 +1,231 @@
+//! Integration tests over the full Python→HLO→PJRT path using the tiny
+//! `test` model artifacts: the XLA encode/decode/train artifacts must
+//! agree with the pure-Rust reference implementation and satisfy the
+//! paper's algebraic invariants.
+
+use qinco2::data::{generate, Flavor};
+use qinco2::qinco::{codec::decode_params, reference, Codec, ParamStore, TrainCfg, Trainer};
+use qinco2::quantizers::Codes;
+use qinco2::runtime::Engine;
+use qinco2::tensor::{self, Matrix};
+use qinco2::util::qnpz::Tensor;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn setup(seed: u64) -> (Engine, ParamStore, Matrix) {
+    let engine = Engine::open(artifacts_dir()).expect("run `make artifacts` first");
+    let spec = engine.manifest.model("test").unwrap();
+    let train = generate(Flavor::Deep, 300, spec.cfg.d, seed);
+    let params = ParamStore::init(spec, "test", &train, seed);
+    (engine, params, train)
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let engine = Engine::open(artifacts_dir()).unwrap();
+    assert_eq!(engine.platform(), "cpu");
+    assert!(engine.manifest.artifacts.len() >= 10);
+}
+
+#[test]
+fn f_step_artifact_matches_rust_reference() {
+    let (mut engine, params, _) = setup(1);
+    let cfg = params.cfg.clone();
+    let n = 16;
+    let mut rng = qinco2::util::prng::Rng::new(3);
+    let mut c = vec![0.0f32; n * cfg.d];
+    let mut xh = vec![0.0f32; n * cfg.d];
+    rng.fill_normal(&mut c, 0.0, 1.0);
+    rng.fill_normal(&mut xh, 0.0, 1.0);
+    // slice step-0 weights out of the stacked tensors
+    let slice = |name: &str, per: usize| -> Tensor {
+        let t = params.get(name);
+        let mut shape = t.shape.clone();
+        shape.remove(0);
+        Tensor::f32(shape, t.data_f32[..per].to_vec())
+    };
+    let (d, de, dh, l) = (cfg.d, cfg.de, cfg.dh, cfg.l);
+    let c_t = Tensor::f32(vec![n, d], c.clone());
+    let xh_t = Tensor::f32(vec![n, d], xh.clone());
+    let inputs = [
+        &c_t,
+        &xh_t,
+        &slice("in_w", d * de),
+        &slice("cond_w", (de + d) * de),
+        &slice("cond_b", de),
+        &slice("up_w", l * de * dh),
+        &slice("down_w", l * dh * de),
+        &slice("out_w", de * d),
+    ];
+    let out = engine.run("fstep_test_N16", &inputs).unwrap();
+    let want = reference::f_theta(&params, 0, &c, &xh, n);
+    for (a, b) in out[0].data_f32.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn xla_decode_matches_rust_reference() {
+    let (mut engine, params, train) = setup(2);
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (codes, xhat, err) = codec.encode(&mut engine, &params, &xs).unwrap();
+    // decode through XLA
+    let dec_xla = codec.decode(&mut engine, &params, &codes).unwrap();
+    // decode through the Rust reference
+    let dec_ref = reference::decode(&params, &codes);
+    for (a, b) in dec_xla.data.iter().zip(&dec_ref.data) {
+        assert!((a - b).abs() < 1e-3, "xla {a} vs ref {b}");
+    }
+    // the encoder's claimed xhat/err must match its own decode
+    for (a, b) in dec_xla.data.iter().zip(&xhat.data) {
+        assert!((a - b).abs() < 1e-3);
+    }
+    for i in 0..xs.rows {
+        let exact = tensor::l2_sq(xs.row(i), dec_xla.row(i));
+        assert!((err[i] - exact).abs() < 1e-2, "{} vs {}", err[i], exact);
+    }
+}
+
+#[test]
+fn greedy_xla_encode_matches_rust_reference() {
+    let (mut engine, params, train) = setup(3);
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    // A = K = 8, B = 1: exact greedy — must equal the Rust reference
+    let codec = Codec::new(&engine, "test", 8, 1).unwrap();
+    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
+    let codes_ref = reference::encode_greedy(&params, &xs);
+    assert_eq!(codes, codes_ref);
+}
+
+#[test]
+fn beam_search_no_worse_than_greedy_through_xla() {
+    let (mut engine, params, train) = setup(4);
+    let xs = train.gather_rows(&(0..32).collect::<Vec<_>>());
+    let greedy = Codec::new(&engine, "test", 4, 1).unwrap();
+    let beam = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (_, _, e_g) = greedy.encode(&mut engine, &params, &xs).unwrap();
+    let (_, _, e_b) = beam.encode(&mut engine, &params, &xs).unwrap();
+    let mg: f64 = e_g.iter().map(|&e| e as f64).sum::<f64>() / e_g.len() as f64;
+    let mb: f64 = e_b.iter().map(|&e| e as f64).sum::<f64>() / e_b.len() as f64;
+    assert!(mb <= mg + 1e-6, "beam {mb} > greedy {mg}");
+}
+
+#[test]
+fn batch_padding_is_transparent() {
+    // encode 21 rows through an N=16 artifact: two batches with padding
+    let (mut engine, params, train) = setup(5);
+    let xs = train.gather_rows(&(0..21).collect::<Vec<_>>());
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
+    assert_eq!(codes.n, 21);
+    // single rows encode identically regardless of batch position
+    let one = xs.gather_rows(&[20]);
+    let (codes1, _, _) = codec.encode(&mut engine, &params, &one).unwrap();
+    assert_eq!(codes1.row(0), codes.row(20));
+}
+
+#[test]
+fn decode_partial_last_step_equals_full_decode() {
+    let (mut engine, params, train) = setup(6);
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
+    let partials = codec.decode_partial(&mut engine, &params, &codes).unwrap();
+    assert_eq!(partials.len(), params.cfg.m);
+    let full = codec.decode(&mut engine, &params, &codes).unwrap();
+    for (a, b) in partials.last().unwrap().data.iter().zip(&full.data) {
+        assert!((a - b).abs() < 1e-3);
+    }
+    // per-step error must be finite and generally shrink on trained init
+    let e_first = tensor::mse(&xs, &partials[0]);
+    let e_last = tensor::mse(&xs, partials.last().unwrap());
+    assert!(e_last.is_finite() && e_first.is_finite());
+}
+
+#[test]
+fn training_reduces_loss_and_mse() {
+    let (mut engine, mut params, train) = setup(7);
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let mse_before = {
+        let (codes, _, _) = codec.encode(&mut engine, &params, &train).unwrap();
+        let dec = codec.decode(&mut engine, &params, &codes).unwrap();
+        tensor::mse(&train, &dec)
+    };
+    let cfg = TrainCfg { epochs: 4, a: 4, b: 4, lr_max: 2e-3, ..Default::default() };
+    let trainer = Trainer::new(&engine, "test", cfg).unwrap();
+    let stats = trainer.train(&mut engine, &mut params, &train).unwrap();
+    assert!(stats.steps > 0);
+    let mse_after = {
+        let (codes, _, _) = codec.encode(&mut engine, &params, &train).unwrap();
+        let dec = codec.decode(&mut engine, &params, &codes).unwrap();
+        tensor::mse(&train, &dec)
+    };
+    assert!(
+        mse_after < mse_before,
+        "training must reduce MSE: {mse_after} !< {mse_before}"
+    );
+    // loss trace should improve from first to last epoch
+    let first = stats.epoch_losses.first().unwrap();
+    let last = stats.epoch_losses.last().unwrap();
+    assert!(last < first, "loss {last} !< {first}");
+}
+
+#[test]
+fn old_recipe_adam_also_trains() {
+    let (mut engine, mut params, train) = setup(8);
+    let cfg = TrainCfg {
+        epochs: 2,
+        a: 4,
+        b: 4,
+        optimizer: "adam".into(),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&engine, "test", cfg).unwrap();
+    let stats = trainer.train(&mut engine, &mut params, &train).unwrap();
+    assert!(stats.epoch_losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn g_network_model_encodes_through_xla() {
+    let mut engine = Engine::open(artifacts_dir()).unwrap();
+    let spec = engine.manifest.model("test_g").unwrap().clone();
+    let train = generate(Flavor::Deep, 150, spec.cfg.d, 9);
+    let params = ParamStore::init(&spec, "test_g", &train, 10);
+    let codec = Codec::new(&engine, "test_g", 4, 2).unwrap();
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let (codes, _, err) = codec.encode(&mut engine, &params, &xs).unwrap();
+    assert!(codes.data.iter().all(|&c| (c as usize) < spec.cfg.k));
+    assert!(err.iter().all(|e| e.is_finite()));
+}
+
+#[test]
+fn decode_params_subset_is_correct_abi() {
+    let (engine, params, _) = setup(11);
+    let subset = decode_params(&params);
+    let spec = engine.manifest.artifact("dec_test_N16").unwrap();
+    assert_eq!(subset.len() + 1, spec.inputs.len()); // + codes input
+    for (t, s) in subset.iter().zip(&spec.inputs) {
+        assert_eq!(t.shape, s.shape, "{}", s.name);
+    }
+}
+
+#[test]
+fn multirate_truncated_codes_decode_with_prefix_model() {
+    // Fig. S3 machinery: decoding the first m codes via decode_partial
+    // equals what a prefix decode would produce
+    let (mut engine, params, train) = setup(12);
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
+    let partials = codec.decode_partial(&mut engine, &params, &codes).unwrap();
+    // reference prefix decode: replay f steps 0..m in rust
+    let m = params.cfg.m;
+    let _ = Codes::zeros(1, m);
+    let ref_full = reference::decode(&params, &codes);
+    for (a, b) in partials[m - 1].data.iter().zip(&ref_full.data) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,147 @@
+//! End-to-end tests of the Fig. 3 search pipeline over a small trained
+//! QINCo2 model: recall ordering across stages, IVF/pairwise integration,
+//! and the serving coordinator.
+
+use qinco2::data::{self, Flavor};
+use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
+use qinco2::metrics::recall_at;
+use qinco2::qinco::{Codec, ParamStore, TrainCfg, Trainer};
+use qinco2::runtime::Engine;
+use qinco2::server::{Router, ServerCfg};
+use std::sync::Arc;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Build a small trained index shared across assertions.
+fn build_index() -> (SearchIndex, qinco2::tensor::Matrix, Vec<u32>) {
+    let mut engine = Engine::open(artifacts_dir()).unwrap();
+    let spec = engine.manifest.model("test").unwrap().clone();
+    let ds = data::load(Flavor::Deep, 600, 800, 60, spec.cfg.d, 99);
+
+    // train on IVF residuals of the training split
+    let cfg = BuildCfg { k_ivf: 16, m_tilde: 2, ..Default::default() };
+    let pre_ivf = qinco2::index::ivf::Ivf::build(&ds.train, &ds.train, cfg.k_ivf, cfg.seed);
+    let train_res = pre_ivf.residuals(&ds.train);
+    let mut params = ParamStore::init(&spec, "test", &train_res, 3);
+    let trainer = Trainer::new(
+        &engine,
+        "test",
+        TrainCfg { epochs: 10, a: 4, b: 4, ..Default::default() },
+    )
+    .unwrap();
+    trainer.train(&mut engine, &mut params, &train_res).unwrap();
+
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let index =
+        SearchIndex::build(&mut engine, &codec, params, &ds.train, &ds.database, &cfg).unwrap();
+    (index, ds.queries, ds.ground_truth)
+}
+
+#[test]
+fn pipeline_end_to_end() {
+    let (index, queries, gt) = build_index();
+
+    // --- full pipeline beats LUT-only at R@1 ---
+    let full = SearchParams { nprobe: 8, ef_search: 64, n_aq: 128, n_pairs: 32, n_final: 10 };
+    let lut_only = SearchParams { nprobe: 8, ef_search: 64, n_aq: 10, n_pairs: 0, n_final: 0 };
+    let res_full = index.search_batch(&queries, &full);
+    let res_lut = index.search_batch(&queries, &lut_only);
+    let r_full = recall_at(&res_full, &gt, 1);
+    let r_lut = recall_at(&res_lut, &gt, 1);
+    // allow 2 queries of slack out of 60: the tiny 9-bit test model makes
+    // the two stages statistically close; systematic regressions still trip
+    assert!(
+        r_full >= r_lut - 2.0 / gt.len() as f64,
+        "neural re-rank hurts systematically: {r_full} << {r_lut}"
+    );
+    let r10_full = recall_at(&res_full, &gt, 10);
+    let r10_lut = recall_at(&res_lut, &gt, 10);
+    assert!(
+        r10_full >= r10_lut - 2.0 / gt.len() as f64,
+        "pipeline R@10 {r10_full} << lut-only {r10_lut}"
+    );
+    // with generous budgets the pipeline must approach its own ceiling:
+    // exhaustive re-rank of every database vector (the quantizer's
+    // intrinsic R@1 limit — the tiny 9-bit test model caps this low)
+    let exhaustive =
+        SearchParams { nprobe: 16, ef_search: 256, n_aq: 800, n_pairs: 800, n_final: 10 };
+    let generous =
+        SearchParams { nprobe: 16, ef_search: 128, n_aq: 400, n_pairs: 100, n_final: 10 };
+    let r_ceiling = recall_at(&index.search_batch(&queries, &exhaustive), &gt, 1);
+    let res_gen = index.search_batch(&queries, &generous);
+    let r_gen = recall_at(&res_gen, &gt, 1);
+    assert!(
+        r_gen >= r_ceiling - 0.05,
+        "generous budget R@1 {r_gen} far below ceiling {r_ceiling}"
+    );
+    let r10_gen = recall_at(&res_gen, &gt, 10);
+    assert!(r10_gen >= r_gen, "R@10 {r10_gen} < R@1 {r_gen}");
+    assert!(r10_gen >= 0.4, "R@10 {r10_gen} unreasonably low even for 9-bit codes");
+
+    // --- results sorted, unique, within range ---
+    for r in &res_full {
+        let mut ids = r.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), r.len(), "duplicate ids in results");
+        assert!(r.iter().all(|&id| (id as usize) < index.db_len));
+    }
+
+    // --- more probes never hurt (monotone recall in nprobe) ---
+    let mut prev = 0.0;
+    for nprobe in [1usize, 4, 16] {
+        let sp = SearchParams { nprobe, ef_search: 128, n_aq: 256, n_pairs: 64, n_final: 10 };
+        let r = recall_at(&index.search_batch(&queries, &sp), &gt, 1);
+        assert!(
+            r + 0.08 >= prev,
+            "recall dropped sharply with more probes: {r} vs {prev}"
+        );
+        prev = prev.max(r);
+    }
+
+    // --- Table S3 trace: pairwise fit is monotone and uses IVF codes ---
+    let trace = &index.pairwise_trace;
+    assert!(!trace.is_empty());
+    for w in trace.windows(2) {
+        assert!(w[1].2 <= w[0].2 + 1e-9, "pairwise trace not monotone");
+    }
+    let m = index.codes.m;
+    assert!(
+        trace.iter().any(|&(i, j, _)| i >= m || j >= m),
+        "no pair ever used the IVF-derived positions: {trace:?}"
+    );
+
+    // --- bitrate accounting sane ---
+    assert!(index.bytes_per_vector() > 0.0);
+
+    // --- serving coordinator over the same index ---
+    let index = Arc::new(index);
+    let router = Router::start(
+        index.clone(),
+        ServerCfg { workers: 4, ..Default::default() },
+    );
+    let sp = SearchParams::default();
+    // blocking path
+    let resp = router.search_blocking(queries.row(0), sp);
+    assert!(!resp.results.is_empty());
+    for w in resp.results.windows(2) {
+        assert!(w[0].0 <= w[1].0, "responses must be sorted by distance");
+    }
+    // concurrent path: all queries in flight at once
+    let pending: Vec<_> =
+        (0..queries.rows).map(|i| router.submit(queries.row(i).to_vec(), sp)).collect();
+    let mut router_results = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().unwrap();
+        router_results.push(resp.results.iter().map(|&(_, id)| id).collect::<Vec<_>>());
+    }
+    // router answers must match direct search answers
+    let direct = index.search_batch(&queries, &sp);
+    assert_eq!(router_results, direct, "router must be a pure wrapper");
+    let stats = router.stats();
+    assert_eq!(stats.served as usize, queries.rows + 1);
+    assert!(stats.p50 <= stats.p99);
+    router.shutdown();
+}
