@@ -29,11 +29,12 @@ fn main() -> anyhow::Result<()> {
         let sp = SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 };
         let n = 2_000;
         let t0 = std::time::Instant::now();
-        let pending: Vec<_> = (0..n)
-            .map(|i| router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp))
-            .collect();
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            pending.push(router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp)?);
+        }
         for rx in pending {
-            rx.recv().expect("worker died");
+            rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
         }
         let secs = t0.elapsed().as_secs_f64();
         let st = router.stats();

@@ -1,0 +1,139 @@
+//! Batched dispatch vs per-query loop: serving QPS at equal recall.
+//!
+//! Backs the serving claim of the batched execution engine: forming
+//! batches is only worth it if executing them *as* batches (flat LUT
+//! packs, bucket-grouped scans, one union decode) beats looping
+//! `search()` per request. Three dispatch modes over the same index and
+//! knobs — results are asserted identical, so recall is equal by
+//! construction and QPS is the only free variable:
+//!
+//!   per-query loop   one full `search()` per request (the old worker
+//!                    inner loop), threaded across all cores
+//!   batched engine   `search_batch`: same thread count, each thread
+//!                    runs the batch engine over its chunk
+//!   router           end-to-end through the serving coordinator's
+//!                    dynamic batcher + batched workers
+//!
+//! Engine-free: the index is built with the pure-Rust reference encoder
+//! and the in-repo `test` model spec, so this bench runs without HLO
+//! artifacts or an XLA runtime (unlike the fig6 bench, which sweeps real
+//! QINCo2 models).
+
+#[path = "common.rs"]
+mod common;
+
+use qinco2::data::{self, Flavor};
+use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
+use qinco2::metrics::recall_at;
+use qinco2::qinco::ParamStore;
+use qinco2::runtime::manifest::Manifest;
+use qinco2::server::{Router, ServerCfg};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    common::banner(
+        "BATCHED DISPATCH — QPS vs the per-query loop at equal recall",
+        "Fig. 6 serving path; engine-free",
+    );
+    let manifest_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&manifest_path)?.model("test")?.clone();
+    let (n_train, n_db, n_q) = match std::env::var("QINCO2_SCALE").as_deref() {
+        Ok("large") => (4_000, 24_000, 2_000),
+        Ok("small") => (800, 3_000, 400),
+        _ => (1_500, 8_000, 800),
+    };
+    let ds = data::load(Flavor::Deep, n_train, n_db, n_q, spec.cfg.d, 17);
+    let params = ParamStore::init(&spec, "test", &ds.train, 23);
+    let cfg = BuildCfg { k_ivf: 64, m_tilde: 2, fit_sample: 1_000, ..Default::default() };
+    let t_build = Instant::now();
+    let index = SearchIndex::build_reference(params, &ds.train, &ds.database, &cfg);
+    println!(
+        "[build] reference-encoded index: {} vectors, K_IVF={} in {:.1}s",
+        n_db,
+        cfg.k_ivf,
+        t_build.elapsed().as_secs_f64()
+    );
+    let index = Arc::new(index);
+    let nthreads = qinco2::util::pool::default_threads();
+    let mut csv = Vec::new();
+
+    println!(
+        "{:<18} {:>7} {:>6} {:>8} {:>10} {:>8} {:>9}",
+        "dispatch", "nprobe", "naq", "npairs", "QPS", "R@1", "speedup"
+    );
+    common::hr(72);
+    for (nprobe, n_aq, n_pairs) in [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)] {
+        let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10 };
+
+        // --- (a) per-query loop, threaded across all cores ---
+        let mut per_query: Vec<Vec<u32>> = vec![Vec::new(); ds.queries.rows];
+        let t0 = Instant::now();
+        qinco2::util::pool::par_map_into(&mut per_query, nthreads, |i, slot| {
+            *slot = index
+                .search(ds.queries.row(i), &sp)
+                .into_iter()
+                .map(|(_, id)| id)
+                .collect();
+        });
+        let qps_loop = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+        let r1 = recall_at(&per_query, &ds.ground_truth, 1);
+
+        // --- (b) batched engine, same thread count ---
+        let t0 = Instant::now();
+        let batched = index.search_batch(&ds.queries, &sp);
+        let qps_batch = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+        assert_eq!(batched, per_query, "batched engine must be result-identical");
+
+        // --- (c) end-to-end through the serving router ---
+        let router = Router::start(
+            index.clone(),
+            ServerCfg { workers: nthreads, max_batch: 64, ..Default::default() },
+        );
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..ds.queries.rows)
+            .map(|i| {
+                router
+                    .submit(ds.queries.row(i).to_vec(), sp)
+                    .expect("router accepting")
+            })
+            .collect();
+        let routed: Vec<Vec<u32>> = pending
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv().expect("worker died");
+                resp.results.into_iter().map(|(_, id)| id).collect()
+            })
+            .collect();
+        let qps_router = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+        assert_eq!(routed, per_query, "router must be a pure wrapper");
+        let stats = router.stats();
+        router.shutdown();
+
+        for (label, qps) in [
+            ("per-query loop", qps_loop),
+            ("batched engine", qps_batch),
+            ("router (e2e)", qps_router),
+        ] {
+            println!(
+                "{label:<18} {nprobe:>7} {n_aq:>6} {n_pairs:>8} {qps:>10.0} {:>8} {:>8.2}x",
+                common::pct(r1),
+                qps / qps_loop
+            );
+            csv.push(format!("{label},{nprobe},{n_aq},{n_pairs},{qps:.0},{r1:.4}"));
+        }
+        println!(
+            "{:<18} p50 {:.2?}  p99 {:.2?}  mean {:.2?}",
+            "  router latency", stats.p50, stats.p99, stats.mean_latency
+        );
+        common::hr(72);
+    }
+    let path = qinco2::experiments::write_csv(
+        "bench_batch_qps.csv",
+        "dispatch,nprobe,n_aq,n_pairs,qps,r1",
+        &csv,
+    )?;
+    println!("[csv] {}", path.display());
+    Ok(())
+}

@@ -190,6 +190,18 @@ fn main() -> anyhow::Result<()> {
                          common::pct(r1));
                 csv.push(format!("{},{label},{nprobe},{ef},{n_aq},{n_pairs},{qps:.0},{r1:.4}",
                                  flavor.name()));
+                // same knobs through the batched engine (bucket-grouped
+                // scans + union decode) — result-identical, so R@1 is
+                // equal and the rows compare dispatch cost alone
+                let t0 = Instant::now();
+                let results_b = index.search_batch(&ds.queries, &sp);
+                let qps_b = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+                assert_eq!(results_b, results, "batched dispatch diverged from per-query");
+                let label_b = format!("{label}+batch");
+                println!("{label_b:<14} {nprobe:>7} {ef:>6} {n_aq:>6} {n_pairs:>8} {qps_b:>8.0} {:>8}",
+                         common::pct(r1));
+                csv.push(format!("{},{label_b},{nprobe},{ef},{n_aq},{n_pairs},{qps_b:.0},{r1:.4}",
+                                 flavor.name()));
             }
 
             // ---- §B: single-query latency at a matched operating point ----

@@ -88,6 +88,56 @@ fn main() -> anyhow::Result<()> {
                  label, ef, t.encode_us, df, t.decode_us);
         csv.push(format!("{label},{ef},{},{df},{}", t.encode_us, t.decode_us));
     }
+    // ---- stage-2 re-scoring cost: direct dots vs per-query joint LUT ----
+    // complements the decode FLOPs above with the search-side cost the
+    // qinco2::index::stage2_use_lut model trades off per query
+    {
+        use qinco2::index::stage2_use_lut;
+        use qinco2::quantizers::pairwise::PairwiseDecoder;
+        use qinco2::tensor;
+
+        common::hr(78);
+        let xs = ds.train.gather_rows(&(0..1_000.min(ds.train.rows)).collect::<Vec<_>>());
+        let rq = Rq::train(&xs, 8, 16, 1, 9);
+        let codes = rq.encode(&xs);
+        let pw = PairwiseDecoder::train(&xs, &codes, 16, 8);
+        let norms = pw.norms(&codes);
+        let q = ds.queries.row(0);
+        for n_cands in [64usize, 512] {
+            let (direct_s, _) = timer::time_median(3, 5, || {
+                let mut acc = 0.0f32;
+                for i in 0..n_cands {
+                    let code = codes.row(i % codes.n);
+                    let mut ip = 0.0f32;
+                    for s in &pw.steps {
+                        let joint = code[s.i] as usize * pw.k + code[s.j] as usize;
+                        ip += tensor::dot(q, s.codebook.row(joint));
+                    }
+                    acc += norms[i % codes.n] - 2.0 * ip;
+                }
+                std::hint::black_box(acc);
+            });
+            let (lut_s, _) = timer::time_median(3, 5, || {
+                let lut = pw.lut(q);
+                let mut acc = 0.0f32;
+                for i in 0..n_cands {
+                    acc += pw.score(&lut, codes.row(i % codes.n), norms[i % codes.n]);
+                }
+                std::hint::black_box(acc);
+            });
+            println!(
+                "stage-2 rescore |S|={n_cands:>4}: direct {:>8.2} µs, LUT {:>8.2} µs  (cost model → {})",
+                direct_s * 1e6,
+                lut_s * 1e6,
+                if stage2_use_lut(n_cands, pw.steps.len(), pw.k, xs.cols) { "LUT" } else { "direct" }
+            );
+            csv.push(format!(
+                "stage2_rescore_n{n_cands},0,{},0,{}",
+                direct_s * 1e6,
+                lut_s * 1e6
+            ));
+        }
+    }
     let path = exp::write_csv("table_s2.csv", "method,enc_flops,enc_us,dec_flops,dec_us", &csv)?;
     println!("\n[csv] {}", path.display());
     Ok(())

@@ -328,11 +328,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let n = args.usize_or("queries", ds.queries.rows);
     let t0 = std::time::Instant::now();
-    let pending: Vec<_> = (0..n)
-        .map(|i| router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp))
-        .collect();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        pending.push(router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp)?);
+    }
     for rx in pending {
-        rx.recv().expect("worker died");
+        rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
     }
     let secs = t0.elapsed().as_secs_f64();
     let stats = router.stats();

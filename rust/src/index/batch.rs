@@ -1,0 +1,216 @@
+//! Batched search execution engine (the serving hot path).
+//!
+//! Per-query search re-derives everything from scratch: one AQ LUT per
+//! call, every probed inverted list scanned per query, one tiny neural
+//! decode per query. Under batched traffic that wastes the structure the
+//! batch exposes — co-probed buckets, shared decode work — so this module
+//! splits search into an explicit *plan* ([`QueryPlan`]) and a batched
+//! *execute* ([`BatchSearcher`]):
+//!
+//!   1. **Plan**: HNSW coarse probe per query (cheap, independent).
+//!   2. **Stage 1**: all per-query AQ LUTs are packed into one flat
+//!      cache-contiguous buffer; queries are grouped by probed bucket so
+//!      each co-probed inverted list is scanned *once per batch* — per
+//!      database vector, its code row is read once and scored against
+//!      every interested query's LUT slice. Shortlists are bounded
+//!      binary max-heaps with a total (score, id) order, so the scan
+//!      order change does not change results.
+//!   3. **Stage 2**: per-query pairwise re-scoring through
+//!      [`SearchIndex::stage2_rescore`] — a per-query joint LUT or
+//!      direct dots, chosen by the [`stage2_use_lut`] cost model.
+//!   4. **Stage 3**: ONE decode over the union of all surviving
+//!      shortlists (deduplicated across queries), then per-query exact
+//!      distances. The decoder is pluggable: the default is the pure-Rust
+//!      reference decoder; [`BatchSearcher::execute_with_decoder`] lets a
+//!      caller holding an [`Engine`](crate::runtime::Engine) route the
+//!      union through a single [`Codec::decode`](crate::qinco::Codec)
+//!      dispatch instead (one padded XLA call per batch, not per query).
+//!
+//! The engine is deliberately single-threaded per call: the serving
+//! router parallelizes across batches/workers, and
+//! [`SearchIndex::search_batch`] chunks a query matrix across threads.
+//! Every path is result-identical to [`SearchIndex::search`] (pinned by
+//! the `batch_equivalence` property suite).
+
+use super::pipeline::{gather_codes, SearchIndex, SearchParams};
+use crate::qinco::reference;
+use crate::quantizers::Codes;
+use crate::tensor::Matrix;
+use crate::util::topk::Shortlist;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Stage-2 cost model: should a query build a joint pairwise LUT?
+///
+/// LUT: `steps·K²·d` multiplies up front, then ~1 flop per (candidate,
+/// step). Direct: `steps·d` multiplies per candidate. The LUT amortizes
+/// when `n_cands ≳ K²·d/(d−1)`. Both the per-query and batched paths
+/// consult this same function, so their float rounding never diverges.
+pub fn stage2_use_lut(n_cands: usize, n_steps: usize, k: usize, d: usize) -> bool {
+    if n_cands == 0 || n_steps == 0 {
+        return false;
+    }
+    let lut_cost = n_steps
+        .saturating_mul(k)
+        .saturating_mul(k)
+        .saturating_mul(d)
+        .saturating_add(n_cands.saturating_mul(n_steps));
+    let direct_cost = n_cands.saturating_mul(n_steps).saturating_mul(d);
+    lut_cost < direct_cost
+}
+
+/// Per-query plan: the owned query vector plus its coarse-probe result.
+/// Building plans is independent per query; executing them is where the
+/// batch-level sharing happens.
+pub struct QueryPlan {
+    pub query: Vec<f32>,
+    /// (probe distance, bucket) from the HNSW coarse quantizer
+    pub probes: Vec<(f32, u32)>,
+}
+
+/// Batched executor over a shared [`SearchIndex`].
+pub struct BatchSearcher<'a> {
+    pub index: &'a SearchIndex,
+}
+
+impl<'a> BatchSearcher<'a> {
+    pub fn new(index: &'a SearchIndex) -> BatchSearcher<'a> {
+        BatchSearcher { index }
+    }
+
+    /// Stage 0 for one query: coarse-probe and snapshot the query.
+    pub fn plan(&self, q: &[f32], sp: &SearchParams) -> QueryPlan {
+        QueryPlan {
+            query: q.to_vec(),
+            probes: self.index.ivf.probe(q, sp.nprobe, sp.ef_search),
+        }
+    }
+
+    /// Execute a batch of plans with the pure-Rust reference decoder for
+    /// stage 3. Returns ranked (dist, id) lists, one per plan, identical
+    /// to [`SearchIndex::search`] per query.
+    pub fn execute(&self, plans: &[QueryPlan], sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
+        let params = &self.index.params;
+        self.execute_with_decoder(plans, sp, &mut |codes| Ok(reference::decode(params, codes)))
+            .expect("reference decoder is infallible")
+    }
+
+    /// Execute with a caller-supplied stage-3 decoder. The decoder is
+    /// invoked at most once per batch, on the deduplicated union of every
+    /// surviving shortlist — pass
+    /// `|codes| codec.decode(&mut engine, &params, codes)` to spend a
+    /// single XLA dispatch per batch on the runtime path.
+    pub fn execute_with_decoder(
+        &self,
+        plans: &[QueryPlan],
+        sp: &SearchParams,
+        decode: &mut dyn FnMut(&Codes) -> Result<Matrix>,
+    ) -> Result<Vec<Vec<(f32, u32)>>> {
+        let idx = self.index;
+        if plans.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // ---- stage 1: flat LUT pack + bucket-grouped scan ----
+        let stride = idx.aq.lut_len();
+        let mut luts = vec![0.0f32; plans.len() * stride];
+        for (qi, plan) in plans.iter().enumerate() {
+            idx.aq.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
+        }
+        // bucket → [(query, probe distance)]: every co-probed inverted
+        // list is scanned once for the whole batch
+        let mut groups: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+        for (qi, plan) in plans.iter().enumerate() {
+            for &(probe_d, bucket) in &plan.probes {
+                groups.entry(bucket).or_default().push((qi as u32, probe_d));
+            }
+        }
+        let mut shortlists: Vec<Shortlist> =
+            plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect();
+        for (&bucket, members) in &groups {
+            for &id in &idx.ivf.lists[bucket as usize] {
+                let i = id as usize;
+                let code = idx.codes.row(i);
+                let term = idx.aq_terms[i];
+                for &(qi, probe_d) in members {
+                    let qi = qi as usize;
+                    let lut = &luts[qi * stride..(qi + 1) * stride];
+                    shortlists[qi].push(probe_d + idx.aq.score(lut, code, term), id);
+                }
+            }
+        }
+
+        // ---- stage 2: per-query pairwise re-scoring ----
+        let stage2: Vec<Vec<(f32, u32)>> = shortlists
+            .into_iter()
+            .zip(plans)
+            .map(|(sl, plan)| idx.stage2_rescore(&plan.query, sl.into_sorted(), sp))
+            .collect();
+        if sp.n_final == 0 {
+            return Ok(stage2);
+        }
+
+        // ---- stage 3: one decode over the union of all survivors ----
+        let mut union: BTreeMap<u32, usize> = BTreeMap::new();
+        for list in &stage2 {
+            for &(_, id) in list {
+                union.insert(id, 0);
+            }
+        }
+        if union.is_empty() {
+            return Ok(stage2); // every shortlist is empty
+        }
+        for (row, slot) in union.values_mut().enumerate() {
+            *slot = row;
+        }
+        let ids: Vec<usize> = union.keys().map(|&id| id as usize).collect();
+        let dec = decode(&gather_codes(&idx.codes, &ids))?;
+        Ok(stage2
+            .into_iter()
+            .zip(plans)
+            .map(|(list, plan)| {
+                let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
+                idx.exact_rerank(&plan.query, &list, &dec, &rows, sp.n_final)
+            })
+            .collect())
+    }
+
+    /// Plan + execute a whole query matrix in one batch.
+    pub fn search(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
+        let plans: Vec<QueryPlan> =
+            (0..queries.rows).map(|i| self.plan(queries.row(i), sp)).collect();
+        self.execute(&plans, sp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::stage2_use_lut;
+
+    #[test]
+    fn cost_model_boundaries() {
+        // degenerate inputs never pick the LUT
+        assert!(!stage2_use_lut(0, 4, 8, 8));
+        assert!(!stage2_use_lut(100, 0, 8, 8));
+        // tiny shortlists cannot amortize K²·d LUT entries per step
+        assert!(!stage2_use_lut(4, 6, 256, 32));
+        // k=8, d=8, 6 steps: build 3072 flops vs 48/candidate direct —
+        // breakeven near |S| ≈ 73
+        assert!(!stage2_use_lut(64, 6, 8, 8));
+        assert!(stage2_use_lut(128, 6, 8, 8));
+        // larger codebooks push the breakeven far beyond the shortlist
+        assert!(!stage2_use_lut(128, 6, 64, 8));
+    }
+
+    #[test]
+    fn cost_model_monotone_in_candidates() {
+        // once the LUT pays off it keeps paying off as |S| grows
+        let mut prev = false;
+        for n in [1usize, 8, 32, 64, 128, 512, 4096] {
+            let now = stage2_use_lut(n, 6, 8, 8);
+            assert!(now || !prev, "LUT choice flapped at n={n}");
+            prev = now;
+        }
+        assert!(prev, "LUT must win for huge shortlists");
+    }
+}

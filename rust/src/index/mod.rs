@@ -2,9 +2,16 @@
 //! quantization with an HNSW centroid index, QINCo2 fine codes over IVF
 //! residuals, an additive-LUT first-stage scan, pairwise-decoder
 //! re-ranking, and a final neural decode of the surviving shortlist.
+//!
+//! Two execution paths share one set of scoring kernels: the per-query
+//! [`SearchIndex::search`] and the batched [`batch::BatchSearcher`]
+//! engine (per-batch LUT packing, bucket-grouped scans, union stage-3
+//! decode) that the serving router dispatches whole batches through.
 
+pub mod batch;
 pub mod hnsw;
 pub mod ivf;
 pub mod pipeline;
 
+pub use batch::{stage2_use_lut, BatchSearcher, QueryPlan};
 pub use pipeline::{BuildCfg, SearchIndex, SearchParams};

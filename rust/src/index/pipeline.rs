@@ -18,7 +18,27 @@
 //!              so scores are comparable across buckets)
 //!     stage 3: exact ||q - (cent + decode(I¹..I^M))||², Rust reference
 //!              decoder (same math as the HLO artifact, pad-free).
+//!
+//! Execution paths:
+//!   * [`SearchIndex::search`] — one query at a time.
+//!   * [`super::batch::BatchSearcher`] — the batched engine: per-batch
+//!     flat AQ LUTs, bucket-grouped inverted-list scans (each co-probed
+//!     list is read once per batch), and a single union decode for
+//!     stage 3. Result-identical to `search` — both paths share
+//!     [`stage2_rescore`](SearchIndex::stage2_rescore) /
+//!     [`exact_rerank`](SearchIndex::exact_rerank) and the total
+//!     (score, id) shortlist order of [`Shortlist`].
+//!
+//! Stage-2 cost model ([`super::batch::stage2_use_lut`]): re-scoring |S|
+//! candidates over P pair steps costs P·|S|·d flops with direct dots, vs
+//! P·K²·d once + P·|S| lookups with a per-query joint LUT. The LUT
+//! amortizes when |S| ≳ K²·d/(d−1); both paths consult the same model so
+//! the choice — and the float rounding — never diverges between them.
+//! Shortlists are bounded binary max-heaps ([`crate::util::topk`])
+//! instead of sorted-`Vec::insert`: O(log k) per candidate, and their
+//! (score, id) total order makes results independent of scan order.
 
+use super::batch::{stage2_use_lut, BatchSearcher, QueryPlan};
 use super::ivf::Ivf;
 use crate::qinco::{reference, Codec, ParamStore};
 use crate::quantizers::pairwise::{append_positions, PairwiseDecoder};
@@ -27,10 +47,11 @@ use crate::quantizers::{aq_lut::AdditiveDecoder, Codes, VectorQuantizer};
 use crate::runtime::Engine;
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
+use crate::util::topk::Shortlist;
 use anyhow::Result;
 
 /// Search-time knobs (the Fig. 6 sweep axes).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SearchParams {
     pub nprobe: usize,
     pub ef_search: usize,
@@ -75,11 +96,11 @@ pub struct SearchIndex {
     pub params: ParamStore,
     /// stage-1 unitary decoder + cached per-vector term
     pub aq: AdditiveDecoder,
-    aq_terms: Vec<f32>,
+    pub(crate) aq_terms: Vec<f32>,
     /// stage-2 pairwise decoder over extended positions + cached norms
     pub pairwise: PairwiseDecoder,
-    pw_codes: Codes,
-    pw_norms: Vec<f32>,
+    pub(crate) pw_codes: Codes,
+    pub(crate) pw_norms: Vec<f32>,
     /// per-step MSE trace of the pairwise fit (Table S3)
     pub pairwise_trace: Vec<(usize, usize, f64)>,
     pub db_len: usize,
@@ -100,8 +121,6 @@ impl SearchIndex {
         let ivf = Ivf::build(train, database, cfg.k_ivf, cfg.seed);
         let residuals = ivf.residuals(database);
         let (codes, _, _) = codec.encode(engine, &params, &residuals)?;
-        let m = codes.m;
-        let k = params.cfg.k;
 
         // ---- fit split: the lookup decoders are estimated on *training*
         // vectors + their codes (paper Sec. 3.3), never on the database,
@@ -112,7 +131,8 @@ impl SearchIndex {
             (0..train.rows).collect()
         };
         let fit_x = train.gather_rows(&fit_idx);
-        let fit_assign = tensor::assign_all(&fit_x, &ivf.centroids, crate::util::pool::default_threads());
+        let fit_assign =
+            tensor::assign_all(&fit_x, &ivf.centroids, crate::util::pool::default_threads());
         let mut fit_res = fit_x.clone();
         for i in 0..fit_res.rows {
             let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
@@ -120,12 +140,79 @@ impl SearchIndex {
         }
         let (fit_codes, _, _) = codec.encode(engine, &params, &fit_res)?;
 
+        Ok(Self::assemble(params, ivf, codes, &fit_x, &fit_assign, &fit_codes, cfg))
+    }
+
+    /// Build an index with the pure-Rust reference encoder (greedy A=K,
+    /// B=1) — no PJRT runtime or HLO artifacts required. Slower to build
+    /// and slightly less accurate than the beam-search XLA encoder, but
+    /// runs anywhere; the artifact-free tests (`batch_equivalence`,
+    /// `coordinator_props`) and the `bench_batch_qps` bench use it.
+    pub fn build_reference(
+        params: ParamStore,
+        train: &Matrix,
+        database: &Matrix,
+        cfg: &BuildCfg,
+    ) -> SearchIndex {
+        let mut rng = Rng::new(cfg.seed);
+        let ivf = Ivf::build(train, database, cfg.k_ivf, cfg.seed);
+        let residuals = ivf.residuals(database);
+        let codes = reference::encode_greedy(&params, &residuals);
+        let fit_idx = if train.rows > cfg.fit_sample {
+            rng.sample_indices(train.rows, cfg.fit_sample)
+        } else {
+            (0..train.rows).collect()
+        };
+        let fit_x = train.gather_rows(&fit_idx);
+        let fit_assign =
+            tensor::assign_all(&fit_x, &ivf.centroids, crate::util::pool::default_threads());
+        let mut fit_res = fit_x.clone();
+        for i in 0..fit_res.rows {
+            let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
+            tensor::sub_assign(fit_res.row_mut(i), &crow);
+        }
+        let fit_codes = reference::encode_greedy(&params, &fit_res);
+        Self::assemble(params, ivf, codes, &fit_x, &fit_assign, &fit_codes, cfg)
+    }
+
+    /// Assemble an index from pre-computed codes: fit the stage-1/stage-2
+    /// lookup decoders and their per-vector caches. Engine-free — the
+    /// codes may come from [`Codec::encode`] (the XLA path, see
+    /// [`Self::build`]) or from the pure-Rust reference encoder, which is
+    /// how the property tests and artifact-free benches construct real
+    /// indexes without a PJRT runtime.
+    ///
+    /// `codes` are the database residual codes (row i ↔ `ivf.assign[i]`);
+    /// `fit_x` / `fit_assign` / `fit_codes` are the decoder-fit split:
+    /// raw training vectors, their IVF buckets, and the codes of their
+    /// residuals.
+    pub fn assemble(
+        params: ParamStore,
+        ivf: Ivf,
+        codes: Codes,
+        fit_x: &Matrix,
+        fit_assign: &[u32],
+        fit_codes: &Codes,
+        cfg: &BuildCfg,
+    ) -> SearchIndex {
+        assert_eq!(ivf.assign.len(), codes.n, "codes must cover the database");
+        assert_eq!(fit_x.rows, fit_codes.n, "fit split size mismatch");
+        assert_eq!(fit_x.rows, fit_assign.len(), "fit split size mismatch");
+        let m = codes.m;
+        let k = params.cfg.k;
+        let db_rows = codes.n;
+
         // ---- stage-1 decoder: unitary RQ re-fit on (residual, code) ----
-        let aq = AdditiveDecoder::fit_rq(&fit_res, &fit_codes, k);
+        let mut fit_res = fit_x.clone();
+        for i in 0..fit_res.rows {
+            let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
+            tensor::sub_assign(fit_res.row_mut(i), &crow);
+        }
+        let aq = AdditiveDecoder::fit_rq(&fit_res, fit_codes, k);
         // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ using the AQ decode
         let aq_dec = aq.decode(&codes);
-        let mut aq_terms = Vec::with_capacity(database.rows);
-        for i in 0..database.rows {
+        let mut aq_terms = Vec::with_capacity(db_rows);
+        for i in 0..db_rows {
             let cent = ivf.centroids.row(ivf.assign[i] as usize);
             aq_terms
                 .push(tensor::sqnorm(aq_dec.row(i)) + 2.0 * tensor::dot(cent, aq_dec.row(i)));
@@ -136,8 +223,8 @@ impl SearchIndex {
         // storage independent of the database size)
         let ivf_rq = Rq::train(&ivf.centroids, cfg.m_tilde, k, 4, cfg.seed ^ 0x77);
         let bucket_codes = ivf_rq.encode(&ivf.centroids);
-        let mut extra = Codes::zeros(database.rows, cfg.m_tilde);
-        for i in 0..database.rows {
+        let mut extra = Codes::zeros(db_rows, cfg.m_tilde);
+        for i in 0..db_rows {
             extra
                 .row_mut(i)
                 .copy_from_slice(bucket_codes.row(ivf.assign[i] as usize));
@@ -150,12 +237,12 @@ impl SearchIndex {
                 .row_mut(i)
                 .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
         }
-        let fit_pw_codes = append_positions(&fit_codes, &fit_extra);
-        let pairwise = PairwiseDecoder::train(&fit_x, &fit_pw_codes, k, n_pairs);
+        let fit_pw_codes = append_positions(fit_codes, &fit_extra);
+        let pairwise = PairwiseDecoder::train(fit_x, &fit_pw_codes, k, n_pairs);
         let pw_norms = pairwise.norms(&pw_codes);
         let pairwise_trace = pairwise.trace();
 
-        Ok(SearchIndex {
+        SearchIndex {
             ivf,
             codes,
             params,
@@ -165,8 +252,8 @@ impl SearchIndex {
             pw_codes,
             pw_norms,
             pairwise_trace,
-            db_len: database.rows,
-        })
+            db_len: db_rows,
+        }
     }
 
     /// Full pipeline search for one query. Returns ranked (dist, id).
@@ -175,86 +262,123 @@ impl SearchIndex {
         let probes = self.ivf.probe(q, sp.nprobe, sp.ef_search);
         // ---- stage 1: AQ LUT scan over the probed lists ----
         let lut = self.aq.lut(q);
-        let mut heap: Vec<(f32, u32)> = Vec::with_capacity(sp.n_aq + 1);
-        let mut worst = f32::INFINITY;
+        let mut shortlist = Shortlist::new(sp.n_aq);
         for &(probe_d, bucket) in &probes {
             for &id in &self.ivf.lists[bucket as usize] {
                 let i = id as usize;
                 let s = probe_d
                     + self.aq.score(&lut, self.codes.row(i), self.aq_terms[i]);
-                if heap.len() < sp.n_aq || s < worst {
-                    let pos = heap.partition_point(|&(hd, _)| hd <= s);
-                    heap.insert(pos, (s, id));
-                    if heap.len() > sp.n_aq {
-                        heap.pop();
-                    }
-                    worst = heap.last().unwrap().0;
-                }
+                shortlist.push(s, id);
             }
         }
         // ---- stage 2: pairwise re-scoring ----
-        let stage2: Vec<(f32, u32)> = if sp.n_pairs > 0 {
-            let mut rescored: Vec<(f32, u32)> = heap
-                .iter()
-                .map(|&(_, id)| {
-                    let i = id as usize;
-                    let code = self.pw_codes.row(i);
-                    let mut ip = 0.0f32;
-                    for s in &self.pairwise.steps {
-                        let joint =
-                            code[s.i] as usize * self.pairwise.k + code[s.j] as usize;
-                        ip += tensor::dot(q, s.codebook.row(joint));
-                    }
-                    (self.pw_norms[i] - 2.0 * ip, id)
-                })
-                .collect();
-            rescored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            rescored.truncate(sp.n_pairs);
-            rescored
-        } else {
-            heap
-        };
+        let stage2 = self.stage2_rescore(q, shortlist.into_sorted(), sp);
         // ---- stage 3: neural decode re-rank ----
         if sp.n_final == 0 || stage2.is_empty() {
             return stage2;
         }
         let ids: Vec<usize> = stage2.iter().map(|&(_, id)| id as usize).collect();
-        let short_codes = gather_codes(&self.codes, &ids);
-        let dec = reference::decode(&self.params, &short_codes);
-        let mut exact: Vec<(f32, u32)> = ids
-            .iter()
-            .enumerate()
-            .map(|(row, &i)| {
-                let cent = self.ivf.centroids.row(self.ivf.assign[i] as usize);
-                let mut d = 0.0f32;
-                for j in 0..q.len() {
-                    let rec = cent[j] + dec.row(row)[j];
-                    let diff = q[j] - rec;
-                    d += diff * diff;
+        let dec = reference::decode(&self.params, &gather_codes(&self.codes, &ids));
+        let rows: Vec<usize> = (0..ids.len()).collect();
+        self.exact_rerank(q, &stage2, &dec, &rows, sp.n_final)
+    }
+
+    /// Stage 2: re-score a stage-1 shortlist with the pairwise decoder
+    /// and keep the best `sp.n_pairs`. Chooses between a per-query joint
+    /// LUT and direct dots via the [`stage2_use_lut`] cost model. Shared
+    /// by the per-query and batched paths (identical float rounding).
+    pub(crate) fn stage2_rescore(
+        &self,
+        q: &[f32],
+        stage1: Vec<(f32, u32)>,
+        sp: &SearchParams,
+    ) -> Vec<(f32, u32)> {
+        if sp.n_pairs == 0 || stage1.is_empty() {
+            return stage1;
+        }
+        let k = self.pairwise.k;
+        let mut keep = Shortlist::new(sp.n_pairs);
+        if stage2_use_lut(stage1.len(), self.pairwise.steps.len(), k, q.len()) {
+            let lut = self.pairwise.lut(q);
+            for &(_, id) in &stage1 {
+                let i = id as usize;
+                let s = self.pairwise.score(&lut, self.pw_codes.row(i), self.pw_norms[i]);
+                keep.push(s, id);
+            }
+        } else {
+            for &(_, id) in &stage1 {
+                let i = id as usize;
+                let code = self.pw_codes.row(i);
+                let mut ip = 0.0f32;
+                for s in &self.pairwise.steps {
+                    let joint = code[s.i] as usize * k + code[s.j] as usize;
+                    ip += tensor::dot(q, s.codebook.row(joint));
                 }
-                (d, i as u32)
-            })
+                keep.push(self.pw_norms[i] - 2.0 * ip, id);
+            }
+        }
+        keep.into_sorted()
+    }
+
+    /// Stage 3: exact distances for survivors whose decodes sit in `dec`
+    /// (survivor j ↔ `dec.row(rows[j])`), ranked and truncated. Shared by
+    /// the per-query and batched paths.
+    pub(crate) fn exact_rerank(
+        &self,
+        q: &[f32],
+        survivors: &[(f32, u32)],
+        dec: &Matrix,
+        rows: &[usize],
+        n_final: usize,
+    ) -> Vec<(f32, u32)> {
+        debug_assert_eq!(survivors.len(), rows.len());
+        let mut exact: Vec<(f32, u32)> = survivors
+            .iter()
+            .zip(rows)
+            .map(|(&(_, id), &row)| (self.exact_distance(q, id as usize, dec.row(row)), id))
             .collect();
-        exact.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        exact.truncate(sp.n_final);
+        exact.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        exact.truncate(n_final);
         exact
     }
 
+    /// Exact ||q − (cent_i + decode_i)||² given the decoded residual row.
+    pub(crate) fn exact_distance(&self, q: &[f32], i: usize, dec_row: &[f32]) -> f32 {
+        let cent = self.ivf.centroids.row(self.ivf.assign[i] as usize);
+        let mut d = 0.0f32;
+        for j in 0..q.len() {
+            let rec = cent[j] + dec_row[j];
+            let diff = q[j] - rec;
+            d += diff * diff;
+        }
+        d
+    }
+
     /// Search many queries; returns ranked id lists (for recall metrics).
+    /// Runs the batched engine over per-thread chunks of the query set —
+    /// result-identical to calling [`Self::search`] per row.
     pub fn search_batch(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<u32>> {
-        let mut out = vec![Vec::new(); queries.rows];
-        crate::util::pool::par_map_into(
-            &mut out,
-            crate::util::pool::default_threads(),
-            |i, slot| {
-                *slot = self
-                    .search(queries.row(i), sp)
-                    .into_iter()
-                    .map(|(_, id)| id)
-                    .collect();
-            },
-        );
-        out
+        let n = queries.rows;
+        if n == 0 {
+            return Vec::new();
+        }
+        let nthreads = crate::util::pool::default_threads().max(1);
+        let chunk = n.div_ceil(nthreads);
+        let nchunks = n.div_ceil(chunk);
+        let mut per_chunk: Vec<Vec<Vec<u32>>> = vec![Vec::new(); nchunks];
+        crate::util::pool::par_map_into(&mut per_chunk, nchunks, |ci, slot| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(n);
+            let searcher = BatchSearcher::new(self);
+            let plans: Vec<QueryPlan> =
+                (lo..hi).map(|i| searcher.plan(queries.row(i), sp)).collect();
+            *slot = searcher
+                .execute(&plans, sp)
+                .into_iter()
+                .map(|r| r.into_iter().map(|(_, id)| id).collect())
+                .collect();
+        });
+        per_chunk.into_iter().flatten().collect()
     }
 
     /// Bytes per database vector (codes + the per-vector f32 term caches),

@@ -16,11 +16,22 @@
 //!   f_theta candidate evaluator and pre-selection scoring.
 //!
 //! The [`runtime`] module loads the HLO artifacts through the PJRT C API
-//! (`xla` crate) and exposes them as plain Rust functions; [`qinco`]
-//! wraps them into a trainer and codec; [`index`] and [`server`] build
-//! the billion-scale-search pipeline of the paper's Figure 3;
-//! [`quantizers`] holds the classical baselines (PQ, OPQ, RQ, LSQ) and
-//! the paper's pairwise additive decoder.
+//! (`xla` crate — vendored as a stub when the real bindings are absent;
+//! see `rust/vendor/xla`) and exposes them as plain Rust functions;
+//! [`qinco`] wraps them into a trainer and codec; [`index`] and
+//! [`server`] build the billion-scale-search pipeline of the paper's
+//! Figure 3; [`quantizers`] holds the classical baselines (PQ, OPQ, RQ,
+//! LSQ) and the paper's pairwise additive decoder.
+//!
+//! Search executes through one of two result-identical paths:
+//! - per-query [`index::SearchIndex::search`] (Fig. 3, one request at a
+//!   time), and
+//! - the batched engine [`index::batch`] — per-batch flat AQ-LUT packs,
+//!   bucket-grouped inverted-list scans (each co-probed list is read
+//!   once per batch), per-query stage-2 joint LUTs chosen by the
+//!   [`index::stage2_use_lut`] cost model, and a single union decode for
+//!   stage 3. The [`server`] router forms dynamic batches and dispatches
+//!   them whole through this engine.
 
 pub mod cli;
 pub mod clustering;

@@ -110,13 +110,25 @@ impl AdditiveDecoder {
     /// Inner-product lookup tables for a query: `lut[p*k + c] = <q, C_p[c]>`
     /// (flat for cache-friendly scanning).
     pub fn lut(&self, q: &[f32]) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.codebooks.len() * self.k);
-        for cb in &self.codebooks {
+        let mut out = vec![0.0f32; self.codebooks.len() * self.k];
+        self.lut_into(q, &mut out);
+        out
+    }
+
+    /// Size of one flat LUT (`m * k`), for batch buffer sizing.
+    pub fn lut_len(&self) -> usize {
+        self.codebooks.len() * self.k
+    }
+
+    /// Fill a pre-allocated `m * k` slice with the flat LUT — the batch
+    /// engine packs one slice per query into a contiguous buffer.
+    pub fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.lut_len());
+        for (p, cb) in self.codebooks.iter().enumerate() {
             for c in 0..self.k {
-                out.push(tensor::dot(q, cb.row(c)));
+                out[p * self.k + c] = tensor::dot(q, cb.row(c));
             }
         }
-        out
     }
 
     /// Approximate distance score from LUTs: `norm - 2 sum_p lut[p][code_p]`

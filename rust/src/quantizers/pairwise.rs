@@ -197,14 +197,25 @@ impl PairwiseDecoder {
 
     /// Flat inner-product LUT: `lut[s * k^2 + joint]` = <q, C'_s[joint]>.
     pub fn lut(&self, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.lut_len()];
+        self.lut_into(q, &mut out);
+        out
+    }
+
+    /// Size of one flat joint LUT (`steps * k^2`), for batch buffers.
+    pub fn lut_len(&self) -> usize {
+        self.steps.len() * self.k * self.k
+    }
+
+    /// Fill a pre-allocated `steps * k^2` slice with the flat joint LUT.
+    pub fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.lut_len());
         let kk = self.k * self.k;
-        let mut out = Vec::with_capacity(self.steps.len() * kk);
-        for s in &self.steps {
+        for (si, s) in self.steps.iter().enumerate() {
             for b in 0..kk {
-                out.push(tensor::dot(q, s.codebook.row(b)));
+                out[si * kk + b] = tensor::dot(q, s.codebook.row(b));
             }
         }
-        out
     }
 
     /// LUT distance score (constant ||q||^2 dropped).

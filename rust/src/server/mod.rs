@@ -4,14 +4,27 @@
 //! router: ingress queue → batch former → worker fan-out → reply
 //! channels).
 //!
+//! Workers dispatch whole batches through the batched execution engine
+//! ([`BatchSearcher`]): requests in a batch are grouped by identical
+//! [`SearchParams`] and each group is planned + executed together, so
+//! co-probed inverted lists are scanned once per group and stage 3 runs
+//! one union decode — not one `search` call per request.
+//!
 //! The index is immutable after build, so workers share it via `Arc`
 //! with no locking on the hot path. Latency and throughput metrics are
 //! collected per request (the §B latency experiment and Fig. 6 QPS
 //! numbers come from here).
+//!
+//! Lifecycle: [`Router::shutdown`] closes the ingress; the batcher
+//! flushes whatever it buffered and exits when the ingress disconnects,
+//! and workers exit only when the batch channel is *both* disconnected
+//! and drained — every accepted request gets its reply before the
+//! threads are joined. Submission after shutdown fails with
+//! [`RouterError::Stopped`] instead of panicking.
 
-use crate::index::{SearchIndex, SearchParams};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use crate::index::{BatchSearcher, QueryPlan, SearchIndex, SearchParams};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -36,6 +49,29 @@ impl Default for ServerCfg {
         }
     }
 }
+
+/// Why a router operation could not complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterError {
+    /// The router has been shut down; no new requests are accepted.
+    Stopped,
+    /// The ingress queue is full (backpressure) — retry or shed load.
+    Saturated,
+    /// The serving thread handling this request died before replying.
+    WorkerDied,
+}
+
+impl std::fmt::Display for RouterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouterError::Stopped => write!(f, "router stopped"),
+            RouterError::Saturated => write!(f, "ingress queue saturated"),
+            RouterError::WorkerDied => write!(f, "worker died before replying"),
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
 
 pub struct Request {
     pub query: Vec<f32>,
@@ -68,9 +104,20 @@ pub struct Stats {
     pub p99: Duration,
 }
 
+/// Nearest-rank percentile of an ascending-sorted latency vector: the
+/// smallest element with at least `p·len` samples at or below it. Unlike
+/// the floored `((len-1)·p)` index, this is never biased low — with
+/// fewer than 100 samples p99 is the maximum, as it should be.
+fn percentile(sorted: &[u64], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (sorted.len() as f64 * p).ceil() as usize;
+    Duration::from_nanos(sorted[rank.clamp(1, sorted.len()) - 1])
+}
+
 pub struct Router {
     ingress: SyncSender<Request>,
-    stop: Arc<AtomicBool>,
     metrics: Arc<MetricsInner>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -81,88 +128,75 @@ impl Router {
         let (in_tx, in_rx) = sync_channel::<Request>(cfg.queue_cap);
         let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(MetricsInner::default());
         let mut handles = Vec::new();
 
         // --- batcher: groups ingress into dispatch units ---
         {
-            let stop = stop.clone();
             let max_batch = cfg.max_batch;
             let timeout = cfg.batch_timeout;
             handles.push(std::thread::spawn(move || {
-                batcher_loop(in_rx, batch_tx, max_batch, timeout, stop)
+                batcher_loop(in_rx, batch_tx, max_batch, timeout)
             }));
         }
-        // --- workers ---
+        // --- workers: each dispatches whole batches through the engine ---
         for _w in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
             let idx = index.clone();
-            let stop = stop.clone();
             let metrics = metrics.clone();
             handles.push(std::thread::spawn(move || loop {
                 let batch = {
                     let guard = rx.lock().unwrap();
-                    guard.recv_timeout(Duration::from_millis(20))
+                    guard.recv()
                 };
                 match batch {
-                    Ok(batch) => {
-                        for req in batch {
-                            let results = idx.search(&req.query, &req.sp);
-                            let latency = req.t_submit.elapsed();
-                            metrics.served.fetch_add(1, Ordering::Relaxed);
-                            metrics
-                                .total_latency
-                                .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-                            {
-                                let mut recent = metrics.recent.lock().unwrap();
-                                if recent.len() >= 4096 {
-                                    let n = recent.len();
-                                    recent.copy_within(n / 2.., 0);
-                                    recent.truncate(n / 2);
-                                }
-                                recent.push(latency.as_nanos() as u64);
-                            }
-                            let _ = req.reply.send(Response { results, latency });
-                        }
-                    }
-                    Err(_) => {
-                        if stop.load(Ordering::Relaxed) {
-                            return;
-                        }
-                    }
+                    Ok(batch) => serve_batch(&idx, &metrics, batch),
+                    // the batcher exited and every queued batch has been
+                    // drained — nothing in flight can be lost
+                    Err(_) => return,
                 }
             }));
         }
-        Router { ingress: in_tx, stop, metrics, handles }
+        Router { ingress: in_tx, metrics, handles }
     }
 
     /// Submit a query; returns the channel the response arrives on.
     /// Blocks when the ingress queue is full (backpressure).
-    pub fn submit(&self, query: Vec<f32>, sp: SearchParams) -> Receiver<Response> {
+    pub fn submit(
+        &self,
+        query: Vec<f32>,
+        sp: SearchParams,
+    ) -> Result<Receiver<Response>, RouterError> {
         let (tx, rx) = sync_channel(1);
         let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
-        self.ingress.send(req).expect("router stopped");
-        rx
+        self.ingress.send(req).map_err(|_| RouterError::Stopped)?;
+        Ok(rx)
     }
 
-    /// Non-blocking submit: Err when the queue is saturated.
+    /// Non-blocking submit: fails fast when the queue is saturated.
     pub fn try_submit(
         &self,
         query: Vec<f32>,
         sp: SearchParams,
-    ) -> Result<Receiver<Response>, ()> {
+    ) -> Result<Receiver<Response>, RouterError> {
         let (tx, rx) = sync_channel(1);
         let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
         match self.ingress.try_send(req) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => Err(()),
+            Err(TrySendError::Full(_)) => Err(RouterError::Saturated),
+            Err(TrySendError::Disconnected(_)) => Err(RouterError::Stopped),
         }
     }
 
     /// Synchronous convenience wrapper.
-    pub fn search_blocking(&self, query: &[f32], sp: SearchParams) -> Response {
-        self.submit(query.to_vec(), sp).recv().expect("worker died")
+    pub fn search_blocking(
+        &self,
+        query: &[f32],
+        sp: SearchParams,
+    ) -> Result<Response, RouterError> {
+        self.submit(query.to_vec(), sp)?
+            .recv()
+            .map_err(|_| RouterError::WorkerDied)
     }
 
     pub fn stats(&self) -> Stats {
@@ -170,26 +204,62 @@ impl Router {
         let total = self.metrics.total_latency.load(Ordering::Relaxed);
         let mut recent = self.metrics.recent.lock().unwrap().clone();
         recent.sort_unstable();
-        let pct = |p: f64| -> Duration {
-            if recent.is_empty() {
-                return Duration::ZERO;
-            }
-            let i = ((recent.len() - 1) as f64 * p) as usize;
-            Duration::from_nanos(recent[i])
-        };
         Stats {
             served,
             mean_latency: Duration::from_nanos(if served > 0 { total / served } else { 0 }),
-            p50: pct(0.5),
-            p99: pct(0.99),
+            p50: percentile(&recent, 0.5),
+            p99: percentile(&recent, 0.99),
         }
     }
 
+    /// Graceful shutdown: close the ingress, let the batcher flush its
+    /// buffer, let workers drain and answer every queued batch, then
+    /// join all threads. No accepted request is dropped.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
         drop(self.ingress);
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// Serve one dispatch unit: group requests by identical [`SearchParams`]
+/// and run each group through the batched engine in a single execute —
+/// one bucket-grouped scan and one union decode per group.
+fn serve_batch(idx: &SearchIndex, metrics: &MetricsInner, batch: Vec<Request>) {
+    let searcher = BatchSearcher::new(idx);
+    let mut done = vec![false; batch.len()];
+    for s in 0..batch.len() {
+        if done[s] {
+            continue;
+        }
+        let sp = batch[s].sp;
+        let members: Vec<usize> =
+            (s..batch.len()).filter(|&j| !done[j] && batch[j].sp == sp).collect();
+        for &j in &members {
+            done[j] = true;
+        }
+        let plans: Vec<QueryPlan> =
+            members.iter().map(|&j| searcher.plan(&batch[j].query, &sp)).collect();
+        let results = searcher.execute(&plans, &sp);
+        for (&j, results_j) in members.iter().zip(results) {
+            let req = &batch[j];
+            let latency = req.t_submit.elapsed();
+            metrics.served.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .total_latency
+                .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
+            {
+                let mut recent = metrics.recent.lock().unwrap();
+                if recent.len() >= 4096 {
+                    let n = recent.len();
+                    recent.copy_within(n / 2.., 0);
+                    recent.truncate(n / 2);
+                }
+                recent.push(latency.as_nanos() as u64);
+            }
+            // a dropped receiver (caller gave up) is not an error
+            let _ = req.reply.send(Response { results: results_j, latency });
         }
     }
 }
@@ -199,18 +269,13 @@ fn batcher_loop(
     batch_tx: SyncSender<Vec<Request>>,
     max_batch: usize,
     timeout: Duration,
-    stop: Arc<AtomicBool>,
 ) {
     loop {
-        // block for the first request of a batch
-        let first = match in_rx.recv_timeout(Duration::from_millis(20)) {
+        // block for the first request of a batch; a disconnect here means
+        // shutdown with nothing buffered
+        let first = match in_rx.recv() {
             Ok(r) => r,
-            Err(_) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            }
+            Err(_) => return,
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + timeout;
@@ -221,11 +286,61 @@ fn batcher_loop(
             }
             match in_rx.recv_timeout(deadline - now) {
                 Ok(r) => batch.push(r),
-                Err(_) => break,
+                Err(RecvTimeoutError::Timeout) => break,
+                // ingress closed mid-batch: flush what we have, then the
+                // next blocking recv observes the disconnect and exits
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         if batch_tx.send(batch).is_err() {
             return;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        // 1..=100 ns: p50 is the 50th smallest, p99 the 99th
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), Duration::from_nanos(50));
+        assert_eq!(percentile(&v, 0.99), Duration::from_nanos(99));
+        assert_eq!(percentile(&v, 1.00), Duration::from_nanos(100));
+    }
+
+    #[test]
+    fn percentile_small_samples_reach_the_max() {
+        // the old floored index could never return the max with < 100
+        // samples; nearest-rank p99 of a small vector IS the max
+        let v = vec![10, 20, 30, 40];
+        assert_eq!(percentile(&v, 0.99), Duration::from_nanos(40));
+        assert_eq!(percentile(&v, 0.50), Duration::from_nanos(20));
+        assert_eq!(percentile(&v, 0.25), Duration::from_nanos(10));
+        // degenerate inputs
+        assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+        assert_eq!(percentile(&[7], 0.5), Duration::from_nanos(7));
+        assert_eq!(percentile(&[7], 0.0), Duration::from_nanos(7));
+    }
+
+    #[test]
+    fn percentile_monotone_in_p() {
+        let v = vec![1, 1, 2, 3, 5, 8, 13, 21, 34];
+        let mut last = Duration::ZERO;
+        for i in 0..=20 {
+            let p = i as f64 / 20.0;
+            let cur = percentile(&v, p);
+            assert!(cur >= last, "p={p}: {cur:?} < {last:?}");
+            last = cur;
+        }
+    }
+
+    #[test]
+    fn router_error_formats() {
+        assert_eq!(RouterError::Stopped.to_string(), "router stopped");
+        assert!(RouterError::Saturated.to_string().contains("saturated"));
+        assert!(RouterError::WorkerDied.to_string().contains("died"));
     }
 }

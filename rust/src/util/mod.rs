@@ -11,3 +11,4 @@ pub mod prng;
 pub mod prop;
 pub mod qnpz;
 pub mod timer;
+pub mod topk;

@@ -88,13 +88,13 @@ mod tests {
 
     #[test]
     fn single_thread_and_empty() {
-        let mut touched = false;
         scope_chunks(0, 4, |lo, hi| assert_eq!((lo, hi), (0, 0)));
+        let calls = AtomicUsize::new(0);
         scope_chunks(5, 1, |lo, hi| {
             assert_eq!((lo, hi), (0, 5));
+            calls.fetch_add(1, Ordering::Relaxed);
         });
-        touched = true;
-        assert!(touched);
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Bounded top-k shortlist: a binary max-heap over `(score, id)` pairs.
+//!
+//! Replaces the sorted-`Vec::insert` shortlist of the stage-1 scan, whose
+//! O(k) memmove per accepted candidate dominated large-`n_aq` settings;
+//! the heap does O(log k) swaps instead. Ordering is the *total* order
+//! (score, then id): ties at the capacity boundary resolve by id, so the
+//! kept set — and therefore the whole search pipeline — is independent of
+//! candidate visit order. That invariant is what lets the bucket-grouped
+//! batch engine ([`crate::index::batch`]) visit candidates in a different
+//! order than the per-query path yet return identical results (the
+//! `batch_equivalence` and `coordinator_props` suites pin this).
+
+/// Strict "a ranks before b" under the (score, id) total order.
+/// `total_cmp` keeps the comparison total even for non-finite scores.
+#[inline]
+fn before(a: (f32, u32), b: (f32, u32)) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    }
+}
+
+/// A fixed-capacity "keep the k smallest" collector.
+#[derive(Clone, Debug)]
+pub struct Shortlist {
+    cap: usize,
+    /// max-heap: `heap[0]` is the worst-ranked kept entry
+    heap: Vec<(f32, u32)>,
+}
+
+impl Shortlist {
+    pub fn new(cap: usize) -> Shortlist {
+        Shortlist { cap, heap: Vec::with_capacity(cap.min(4096)) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The worst (highest-ranked) kept entry, if any.
+    #[inline]
+    pub fn worst(&self) -> Option<(f32, u32)> {
+        self.heap.first().copied()
+    }
+
+    /// Offer a candidate; keeps it iff it ranks among the `cap` best seen.
+    #[inline]
+    pub fn push(&mut self, score: f32, id: u32) {
+        if self.heap.len() < self.cap {
+            self.heap.push((score, id));
+            self.sift_up(self.heap.len() - 1);
+        } else if self.cap > 0 && before((score, id), self.heap[0]) {
+            self.heap[0] = (score, id);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if before(self.heap[parent], self.heap[i]) {
+                self.heap.swap(parent, i);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut top = i;
+            if l < n && before(self.heap[top], self.heap[l]) {
+                top = l;
+            }
+            if r < n && before(self.heap[top], self.heap[r]) {
+                top = r;
+            }
+            if top == i {
+                return;
+            }
+            self.heap.swap(i, top);
+            i = top;
+        }
+    }
+
+    /// Consume into an ascending (score, id) ranking.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn keeps_exactly_the_k_smallest() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200);
+            let k = 1 + rng.below(30);
+            let scores: Vec<f32> = (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let mut sl = Shortlist::new(k);
+            for (id, &s) in scores.iter().enumerate() {
+                sl.push(s, id as u32);
+            }
+            let got = sl.into_sorted();
+            let mut want: Vec<(f32, u32)> =
+                scores.iter().enumerate().map(|(i, &s)| (s, i as u32)).collect();
+            want.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            want.truncate(k);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn insertion_order_independent_under_ties() {
+        // many equal scores: the kept set must be the same for any order
+        let items: Vec<(f32, u32)> =
+            vec![(1.0, 9), (1.0, 2), (0.5, 7), (1.0, 4), (0.5, 1), (2.0, 0)];
+        let mut fwd = Shortlist::new(3);
+        let mut rev = Shortlist::new(3);
+        for &(s, id) in &items {
+            fwd.push(s, id);
+        }
+        for &(s, id) in items.iter().rev() {
+            rev.push(s, id);
+        }
+        let (a, b) = (fwd.into_sorted(), rev.into_sorted());
+        assert_eq!(a, b);
+        assert_eq!(a, vec![(0.5, 1), (0.5, 7), (1.0, 2)]);
+    }
+
+    #[test]
+    fn zero_capacity_accepts_nothing() {
+        let mut sl = Shortlist::new(0);
+        sl.push(0.0, 1);
+        assert!(sl.is_empty());
+        assert!(sl.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn worst_tracks_the_boundary_entry() {
+        let mut sl = Shortlist::new(2);
+        assert_eq!(sl.worst(), None);
+        sl.push(3.0, 0);
+        sl.push(1.0, 1);
+        assert_eq!(sl.worst(), Some((3.0, 0)));
+        sl.push(2.0, 2); // evicts (3.0, 0)
+        assert_eq!(sl.worst(), Some((2.0, 2)));
+        assert_eq!(sl.into_sorted(), vec![(1.0, 1), (2.0, 2)]);
+    }
+}

@@ -1,0 +1,104 @@
+//! The batched execution engine must be *result-identical* to per-query
+//! [`SearchIndex::search`] — same ids, same distances, same order — for
+//! any batch composition: random batch sizes, duplicated queries, and
+//! the degenerate knobs (`n_pairs = 0` skips stage 2, `n_final = 0`
+//! skips stage 3, `n_aq = 0` empties everything).
+//!
+//! The index is built engine-free: parameters come from the in-repo
+//! `artifacts/manifest.json` test model and codes from the pure-Rust
+//! reference encoder, so this suite runs without any PJRT runtime.
+
+use qinco2::data::{generate, Flavor};
+use qinco2::index::{BatchSearcher, BuildCfg, SearchIndex, SearchParams};
+use qinco2::qinco::ParamStore;
+use qinco2::runtime::manifest::Manifest;
+use qinco2::util::prop::check;
+
+fn build_index(seed: u64, n_train: usize, n_db: usize) -> SearchIndex {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
+    let train = generate(Flavor::Deep, n_train, spec.cfg.d, seed);
+    let db = generate(Flavor::Deep, n_db, spec.cfg.d, seed ^ 1);
+    let params = ParamStore::init(&spec, "test", &train, seed ^ 2);
+    let cfg = BuildCfg { k_ivf: 12, m_tilde: 1, fit_sample: 200, ..Default::default() };
+    SearchIndex::build_reference(params, &train, &db, &cfg)
+}
+
+#[test]
+fn prop_batched_engine_equals_per_query_search() {
+    let index = build_index(41, 260, 220);
+    let queries = generate(Flavor::Deep, 48, 8, 77);
+    check("batch-equivalence", 25, 60, |g| {
+        let b = g.usize_in(1, 16);
+        // random batch composition, duplicates allowed
+        let rows: Vec<usize> = (0..b).map(|_| g.rng.below(queries.rows)).collect();
+        let n_pairs = if g.usize_in(0, 1) == 0 { 0 } else { g.usize_in(1, 32) };
+        let n_final = if g.usize_in(0, 1) == 0 { 0 } else { g.usize_in(1, 10) };
+        let sp = SearchParams {
+            nprobe: g.usize_in(1, 8),
+            ef_search: 16 + g.usize_in(0, 48),
+            n_aq: g.usize_in(1, 64),
+            n_pairs,
+            n_final,
+        };
+        let searcher = BatchSearcher::new(&index);
+        let plans: Vec<_> =
+            rows.iter().map(|&r| searcher.plan(queries.row(r), &sp)).collect();
+        let batched = searcher.execute(&plans, &sp);
+        if batched.len() != rows.len() {
+            return Err(format!("{} results for {} plans", batched.len(), rows.len()));
+        }
+        for (slot, &r) in rows.iter().enumerate() {
+            let single = index.search(queries.row(r), &sp);
+            if batched[slot] != single {
+                return Err(format!(
+                    "query {r} (slot {slot}, sp {sp:?}): batched {:?} != single {:?}",
+                    batched[slot], single
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_knobs_and_search_batch_chunking() {
+    let index = build_index(51, 240, 200);
+    let queries = generate(Flavor::Deep, 12, 8, 78);
+    for sp in [
+        // stage-2 and stage-3 disabled in every combination
+        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0 },
+        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 5 },
+        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 6, n_final: 0 },
+        // empty stage-1 shortlist
+        SearchParams { nprobe: 4, ef_search: 32, n_aq: 0, n_pairs: 6, n_final: 5 },
+        // budgets larger than the database
+        SearchParams { nprobe: 12, ef_search: 64, n_aq: 512, n_pairs: 512, n_final: 512 },
+    ] {
+        let via_batch = index.search_batch(&queries, &sp);
+        assert_eq!(via_batch.len(), queries.rows);
+        for i in 0..queries.rows {
+            let ids: Vec<u32> =
+                index.search(queries.row(i), &sp).into_iter().map(|(_, id)| id).collect();
+            assert_eq!(via_batch[i], ids, "sp {sp:?} row {i}");
+        }
+    }
+}
+
+#[test]
+fn batched_results_are_sorted_unique_and_in_range() {
+    let index = build_index(61, 240, 200);
+    let queries = generate(Flavor::Deep, 20, 8, 79);
+    let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 8 };
+    let searcher = BatchSearcher::new(&index);
+    for ranked in searcher.search(&queries, &sp) {
+        for w in ranked.windows(2) {
+            assert!(w[0].0 <= w[1].0, "results must be sorted by distance");
+        }
+        let mut ids: Vec<u32> = ranked.iter().map(|&(_, id)| id).collect();
+        assert!(ids.iter().all(|&id| (id as usize) < index.db_len));
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ranked.len(), "duplicate ids in one result list");
+    }
+}
