@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     {
         let sp = SearchParams { nprobe, ef_search: ef, n_aq, n_pairs, n_final: 10 };
         let t0 = std::time::Instant::now();
-        let results = index.search_batch(&ds.queries, &sp);
+        let results = qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp));
         let qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
         let r1 = recall_at(&results, &ds.ground_truth, 1);
         let r10 = recall_at(&results, &ds.ground_truth, 10);

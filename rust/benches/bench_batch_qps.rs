@@ -23,8 +23,10 @@
 mod common;
 
 use qinco2::data::{self, Flavor};
-use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
-use qinco2::metrics::recall_at;
+use qinco2::index::{
+    BuildCfg, PipelineConfig, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+};
+use qinco2::metrics::{ids_only, recall_at};
 use qinco2::qinco::ParamStore;
 use qinco2::runtime::manifest::Manifest;
 use qinco2::server::{Router, ServerCfg};
@@ -82,7 +84,7 @@ fn main() -> anyhow::Result<()> {
 
         // --- (b) batched engine, same thread count ---
         let t0 = Instant::now();
-        let batched = index.search_batch(&ds.queries, &sp);
+        let batched = ids_only(&index.search_batch(&ds.queries, &sp));
         let qps_batch = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
         assert_eq!(batched, per_query, "batched engine must be result-identical");
 
@@ -129,6 +131,74 @@ fn main() -> anyhow::Result<()> {
         );
         common::hr(72);
     }
+    // ---- pipeline matrix: cost of each stage swap (trait API) ----
+    // Three configurations over the same data, swept across knob rows so
+    // QPS can be compared at matched recall: the row where a cheaper
+    // pipeline reaches the reference pipeline's R@1 shows what the
+    // skipped/swapped stage actually costs.
+    println!();
+    common::banner(
+        "PIPELINE MATRIX — stage swaps through the trait API",
+        "AQ→pair→reference vs AQ→pair-only vs PQ-stage1",
+    );
+    println!(
+        "{:<20} {:>7} {:>6} {:>8} {:>10} {:>8}",
+        "pipeline", "nprobe", "naq", "npairs", "QPS", "R@1"
+    );
+    common::hr(64);
+    let pipelines: Vec<(&str, PipelineConfig)> = vec![
+        ("aq+pair+reference", PipelineConfig::default()),
+        (
+            "aq+pair-only",
+            PipelineConfig {
+                stage1: Stage1Kind::Aq,
+                stage2: true,
+                stage3: Stage3Kind::Disabled,
+            },
+        ),
+        (
+            "pq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Pq { m: 4 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+    ];
+    for (label, pcfg) in pipelines {
+        let bcfg = BuildCfg {
+            k_ivf: 64,
+            m_tilde: 2,
+            fit_sample: 1_000,
+            pipeline: pcfg,
+            ..Default::default()
+        };
+        let spec2 = Manifest::load(&manifest_path)?.model("test")?.clone();
+        let params2 = ParamStore::init(&spec2, "test", &ds.train, 23);
+        let pidx = SearchIndex::build_reference(params2, &ds.train, &ds.database, &bcfg);
+        for (nprobe, n_aq, n_pairs) in [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)]
+        {
+            let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10 };
+            let t0 = Instant::now();
+            let res = ids_only(&pidx.search_batch(&ds.queries, &sp));
+            let qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+            // the trait pipeline must stay batch/per-query identical
+            let spot = pidx
+                .search(ds.queries.row(0), &sp)
+                .into_iter()
+                .map(|(_, id)| id)
+                .collect::<Vec<_>>();
+            assert_eq!(res[0], spot, "{label}: batched diverged from per-query");
+            let r1 = recall_at(&res, &ds.ground_truth, 1);
+            println!(
+                "{label:<20} {nprobe:>7} {n_aq:>6} {n_pairs:>8} {qps:>10.0} {:>8}",
+                common::pct(r1)
+            );
+            csv.push(format!("pipeline:{label},{nprobe},{n_aq},{n_pairs},{qps:.0},{r1:.4}"));
+        }
+        common::hr(64);
+    }
+
     let path = qinco2::experiments::write_csv(
         "bench_batch_qps.csv",
         "dispatch,nprobe,n_aq,n_pairs,qps,r1",

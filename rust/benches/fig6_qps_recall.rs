@@ -19,13 +19,15 @@ use qinco2::tensor::Matrix;
 use qinco2::util::prng::Rng;
 use std::time::Instant;
 
-/// Simple IVF-PQ/RQ baseline searcher: probe + LUT scan + top-k.
+/// Simple IVF-PQ/RQ baseline searcher: probe + flat-LUT scan + top-k.
 struct IvfLut {
     ivf: qinco2::index::ivf::Ivf,
     codes: qinco2::quantizers::Codes,
     terms: Vec<f32>,
-    lut_of: Box<dyn Fn(&[f32]) -> Vec<Vec<f32>> + Sync>,
+    /// flat position-major LUT builder: `lut[p * k + c]`
+    lut_of: Box<dyn Fn(&[f32]) -> Vec<f32> + Sync>,
     m: usize,
+    k: usize,
 }
 
 impl IvfLut {
@@ -39,7 +41,7 @@ impl IvfLut {
                 let i = id as usize;
                 let mut s = probe_d + self.terms[i];
                 for (p, &c) in self.codes.row(i).iter().enumerate() {
-                    s += tables[p][c as usize];
+                    s += tables[p * self.k + c as usize];
                 }
                 if best.len() < topk || s < worst {
                     let pos = best.partition_point(|&(d, _)| d <= s);
@@ -73,25 +75,27 @@ fn build_lut_baseline(
         let codes = pq.encode(&residuals);
         let dec = pq.decode(&codes);
         let terms = term_cache(&ivf, &dec);
+        let k = pq.k;
         IvfLut {
             ivf,
             codes,
             terms,
             m,
+            k,
             // LUT over ⟨q,·⟩ is folded into PQ's subspace distance form:
             // score = probe + Σ_s (||c_s||² - 2⟨q_s, c_s⟩) (+ const ||q||²)
             lut_of: Box::new(move |q: &[f32]| {
-                pq.lut(q)
-                    .into_iter()
-                    .enumerate()
-                    .map(|(s, tbl)| {
-                        // convert slice distance to (-2⟨q_s,c⟩ + ||c||²):
-                        // ||q_s - c||² - ||q_s||²
-                        let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
-                        let qn = qinco2::tensor::sqnorm(&q[lo..hi]);
-                        tbl.into_iter().map(|d| d - qn).collect()
-                    })
-                    .collect()
+                // convert each flat slice distance to (-2⟨q_s,c⟩ + ||c||²):
+                // ||q_s - c||² - ||q_s||²
+                let mut lut = pq.lut(q);
+                for s in 0..pq.m {
+                    let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
+                    let qn = qinco2::tensor::sqnorm(&q[lo..hi]);
+                    for v in &mut lut[s * pq.k..(s + 1) * pq.k] {
+                        *v -= qn;
+                    }
+                }
+                lut
             }),
         }
     } else {
@@ -100,15 +104,21 @@ fn build_lut_baseline(
         let dec = rq.decode(&codes);
         let terms = term_cache(&ivf, &dec);
         let cbs: Vec<Matrix> = rq.codebooks.clone();
+        let k = cbs[0].rows;
         IvfLut {
             ivf,
             codes,
             terms,
             m,
+            k,
             lut_of: Box::new(move |q: &[f32]| {
-                cbs.iter()
-                    .map(|cb| (0..cb.rows).map(|c| -2.0 * qinco2::tensor::dot(q, cb.row(c))).collect())
-                    .collect()
+                let mut lut = vec![0.0f32; cbs.len() * k];
+                for (p, cb) in cbs.iter().enumerate() {
+                    for c in 0..cb.rows {
+                        lut[p * k + c] = -2.0 * qinco2::tensor::dot(q, cb.row(c));
+                    }
+                }
+                lut
             }),
         }
     }
@@ -194,7 +204,8 @@ fn main() -> anyhow::Result<()> {
                 // scans + union decode) — result-identical, so R@1 is
                 // equal and the rows compare dispatch cost alone
                 let t0 = Instant::now();
-                let results_b = index.search_batch(&ds.queries, &sp);
+                let results_b =
+                    qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp));
                 let qps_b = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
                 assert_eq!(results_b, results, "batched dispatch diverged from per-query");
                 let label_b = format!("{label}+batch");

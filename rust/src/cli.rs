@@ -12,8 +12,8 @@
 
 use crate::data::Flavor;
 use crate::experiments as exp;
-use crate::index::{BuildCfg, SearchIndex, SearchParams};
-use crate::qinco::{Codec, ParamStore, TrainCfg, Trainer};
+use crate::index::{BuildCfg, PipelineConfig, SearchIndex, SearchParams};
+use crate::qinco::{Codec, ParamStore, RuntimeDecoderFactory, TrainCfg, Trainer};
 use crate::runtime::Engine;
 use crate::server::{Router, ServerCfg};
 use crate::util::qnpz::{Store, Tensor};
@@ -151,6 +151,14 @@ COMMON FLAGS
 
 SEARCH FLAGS
   --k-ivf 64  --nprobe 8  --ef 64  --n-aq 256  --n-pairs 32  --topk 10
+PIPELINE FLAGS (search + serve)
+  --stage1 aq|pq|opq     stage-1 scorer (default aq; pq/opq use --stage1-m subspaces)
+  --stage1-m 4           sub-quantizers for a pq/opq stage 1
+  --no-stage2            skip the pairwise re-ranker
+  --stage3 reference|none|runtime
+                         exact re-rank decoder; "none" returns the stage-2
+                         order; "runtime" (serve only) gives each worker a
+                         thread-local PJRT engine via DecoderFactory
 SERVE FLAGS
   --workers N  --queries N
 "#;
@@ -260,6 +268,17 @@ fn cmd_encode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Pipeline selection shared by `search` and `serve`: `--stage1`,
+/// `--stage1-m`, `--no-stage2`, `--stage3`.
+fn pipeline_of(args: &Args) -> Result<PipelineConfig> {
+    PipelineConfig::from_flags(
+        &args.str_or("stage1", "aq"),
+        args.usize_or("stage1-m", 4),
+        !args.flag("no-stage2"),
+        &args.str_or("stage3", "reference"),
+    )
+}
+
 fn build_index(
     args: &Args,
     engine: &mut Engine,
@@ -272,6 +291,7 @@ fn build_index(
     let bcfg = BuildCfg {
         k_ivf: args.usize_or("k-ivf", 64),
         m_tilde: args.usize_or("m-tilde", 2),
+        pipeline: pipeline_of(args)?,
         ..Default::default()
     };
     // the fine quantizer is trained on IVF residuals (Fig. 3 pipeline)
@@ -298,7 +318,8 @@ fn cmd_search(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let results = index.search_batch(&ds.queries, &sp);
     let secs = t0.elapsed().as_secs_f64();
-    let (r1, r10, r100) = crate::metrics::recall_triple(&results, &ds.ground_truth);
+    let (r1, r10, r100) =
+        crate::metrics::recall_triple(&crate::metrics::ids_only(&results), &ds.ground_truth);
     println!(
         "IVF-{model} on {}: R@1 {:.1}%  R@10 {:.1}%  R@100 {:.1}%  ({:.0} QPS, {} queries)",
         flavor.name(),
@@ -315,9 +336,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (mut engine, model, flavor, scale) = common_setup(args)?;
     let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
     let workers = args.usize_or("workers", crate::util::pool::default_threads());
+    // --stage3 runtime: hand every worker thread its own PJRT engine +
+    // codec through the factory (engine-per-worker; see server docs).
+    // Workers fall back to the reference decoder if the runtime is
+    // unavailable (e.g. the vendored stub xla crate).
+    let decoder_factory: Option<Arc<dyn crate::quantizers::DecoderFactory>> =
+        if args.str_or("stage3", "reference") == "runtime" {
+            let cfg = train_cfg(args, &scale);
+            Some(Arc::new(RuntimeDecoderFactory {
+                artifacts_dir: exp::artifacts_dir(),
+                model: model.clone(),
+                a: args.usize_or("a", cfg.a),
+                b: args.usize_or("b", cfg.b),
+                params: index.params.clone(),
+            }))
+        } else {
+            None
+        };
     let router = Router::start(
         Arc::new(index),
-        ServerCfg { workers, ..Default::default() },
+        ServerCfg { workers, decoder_factory, ..Default::default() },
     );
     let sp = SearchParams {
         nprobe: args.usize_or("nprobe", 8),

@@ -1,63 +1,52 @@
 //! Batched search execution engine (the serving hot path).
 //!
-//! Per-query search re-derives everything from scratch: one AQ LUT per
-//! call, every probed inverted list scanned per query, one tiny neural
+//! Per-query search re-derives everything from scratch: one stage-1 LUT
+//! per call, every probed inverted list scanned per query, one tiny
 //! decode per query. Under batched traffic that wastes the structure the
 //! batch exposes — co-probed buckets, shared decode work — so this module
 //! splits search into an explicit *plan* ([`QueryPlan`]) and a batched
 //! *execute* ([`BatchSearcher`]):
 //!
 //!   1. **Plan**: HNSW coarse probe per query (cheap, independent).
-//!   2. **Stage 1**: all per-query AQ LUTs are packed into one flat
-//!      cache-contiguous buffer; queries are grouped by probed bucket so
-//!      each co-probed inverted list is scanned *once per batch* — per
-//!      database vector, its code row is read once and scored against
-//!      every interested query's LUT slice. Shortlists are bounded
-//!      binary max-heaps with a total (score, id) order, so the scan
-//!      order change does not change results.
-//!   3. **Stage 2**: per-query pairwise re-scoring through
-//!      [`SearchIndex::stage2_rescore`] — a per-query joint LUT or
-//!      direct dots, chosen by the [`stage2_use_lut`] cost model.
+//!   2. **Stage 1**: all per-query LUTs (whatever
+//!      [`ApproxScorer`](crate::quantizers::ApproxScorer) the
+//!      pipeline's stage 1 is) are packed into one flat cache-contiguous
+//!      buffer; queries are grouped by probed bucket so each co-probed
+//!      inverted list is scanned *once per batch* — per database vector,
+//!      its code row is read once and scored against every interested
+//!      query's LUT slice. Shortlists are bounded binary max-heaps with a
+//!      total (score, id) order, so the scan order change does not change
+//!      results.
+//!   3. **Stage 2**: per-query re-scoring through the shared
+//!      (crate-private) `SearchIndex::stage2_rescore` — a per-query joint
+//!      LUT or direct dots, chosen by the scorer's
+//!      [`use_lut`](crate::quantizers::ApproxScorer::use_lut) cost model.
 //!   4. **Stage 3**: ONE decode over the union of all surviving
 //!      shortlists (deduplicated across queries), then per-query exact
-//!      distances. The decoder is pluggable: the default is the pure-Rust
-//!      reference decoder; [`BatchSearcher::execute_with_decoder`] lets a
-//!      caller holding an [`Engine`](crate::runtime::Engine) route the
-//!      union through a single [`Codec::decode`](crate::qinco::Codec)
-//!      dispatch instead (one padded XLA call per batch, not per query).
+//!      distances. The decoder is pluggable: [`BatchSearcher::execute`]
+//!      uses the index's own [`StageDecoder`] (the infallible reference
+//!      decoder), while [`BatchSearcher::execute_with_decoder`] accepts
+//!      any `&dyn StageDecoder` — this is how server workers route the
+//!      union through their thread-local
+//!      [`RuntimeDecoder`](crate::qinco::RuntimeDecoder) (one padded XLA
+//!      dispatch per batch, engine-per-worker).
 //!
 //! The engine is deliberately single-threaded per call: the serving
 //! router parallelizes across batches/workers, and
 //! [`SearchIndex::search_batch`] chunks a query matrix across threads.
-//! Every path is result-identical to [`SearchIndex::search`] (pinned by
-//! the `batch_equivalence` property suite).
+//! Every path is result-identical to [`SearchIndex::search`] for every
+//! pipeline configuration (pinned by the `batch_equivalence` property
+//! suite).
 
 use super::pipeline::{gather_codes, SearchIndex, SearchParams};
-use crate::qinco::reference;
-use crate::quantizers::Codes;
-use crate::tensor::Matrix;
+use crate::quantizers::StageDecoder;
 use crate::util::topk::Shortlist;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
-/// Stage-2 cost model: should a query build a joint pairwise LUT?
-///
-/// LUT: `steps·K²·d` multiplies up front, then ~1 flop per (candidate,
-/// step). Direct: `steps·d` multiplies per candidate. The LUT amortizes
-/// when `n_cands ≳ K²·d/(d−1)`. Both the per-query and batched paths
-/// consult this same function, so their float rounding never diverges.
-pub fn stage2_use_lut(n_cands: usize, n_steps: usize, k: usize, d: usize) -> bool {
-    if n_cands == 0 || n_steps == 0 {
-        return false;
-    }
-    let lut_cost = n_steps
-        .saturating_mul(k)
-        .saturating_mul(k)
-        .saturating_mul(d)
-        .saturating_add(n_cands.saturating_mul(n_steps));
-    let direct_cost = n_cands.saturating_mul(n_steps).saturating_mul(d);
-    lut_cost < direct_cost
-}
+// the cost model moved next to the ApproxScorer trait it now serves;
+// re-exported here (and from `crate::index`) for existing callers
+pub use crate::quantizers::stage2_use_lut;
 
 /// Per-query plan: the owned query vector plus its coarse-probe result.
 /// Building plans is independent per query; executing them is where the
@@ -86,25 +75,30 @@ impl<'a> BatchSearcher<'a> {
         }
     }
 
-    /// Execute a batch of plans with the pure-Rust reference decoder for
-    /// stage 3. Returns ranked (dist, id) lists, one per plan, identical
-    /// to [`SearchIndex::search`] per query.
+    /// Execute a batch of plans with the index's own stage-3 decoder.
+    /// Returns ranked (score, id) lists, one per plan, identical to
+    /// [`SearchIndex::search`] per query.
+    ///
+    /// Panics if the index-held decoder fails; the built-in decoders are
+    /// infallible (fallible per-thread runtime decoders go through
+    /// [`Self::execute_with_decoder`], whose errors the caller handles).
     pub fn execute(&self, plans: &[QueryPlan], sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
-        let params = &self.index.params;
-        self.execute_with_decoder(plans, sp, &mut |codes| Ok(reference::decode(params, codes)))
-            .expect("reference decoder is infallible")
+        self.execute_with_decoder(plans, sp, self.index.pipeline.stage3.as_ref())
+            .expect("index-held stage-3 decoder failed")
     }
 
     /// Execute with a caller-supplied stage-3 decoder. The decoder is
     /// invoked at most once per batch, on the deduplicated union of every
-    /// surviving shortlist — pass
-    /// `|codes| codec.decode(&mut engine, &params, codes)` to spend a
-    /// single XLA dispatch per batch on the runtime path.
+    /// surviving shortlist — server workers pass their thread-local
+    /// engine-backed decoder here to spend a single XLA dispatch per
+    /// batch. When the index was built with stage 3 disabled, the decoder
+    /// is never invoked and the stage-2 ranking is returned (truncated to
+    /// `n_final`), exactly like the per-query path.
     pub fn execute_with_decoder(
         &self,
         plans: &[QueryPlan],
         sp: &SearchParams,
-        decode: &mut dyn FnMut(&Codes) -> Result<Matrix>,
+        decoder: &dyn StageDecoder,
     ) -> Result<Vec<Vec<(f32, u32)>>> {
         let idx = self.index;
         if plans.is_empty() {
@@ -112,10 +106,11 @@ impl<'a> BatchSearcher<'a> {
         }
 
         // ---- stage 1: flat LUT pack + bucket-grouped scan ----
-        let stride = idx.aq.lut_len();
+        let scorer = idx.pipeline.stage1.as_ref();
+        let stride = scorer.lut_len();
         let mut luts = vec![0.0f32; plans.len() * stride];
         for (qi, plan) in plans.iter().enumerate() {
-            idx.aq.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
+            scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
         }
         // bucket → [(query, probe distance)]: every co-probed inverted
         // list is scanned once for the whole batch
@@ -127,20 +122,21 @@ impl<'a> BatchSearcher<'a> {
         }
         let mut shortlists: Vec<Shortlist> =
             plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect();
+        let s1_codes = idx.stage1_codes();
         for (&bucket, members) in &groups {
             for &id in &idx.ivf.lists[bucket as usize] {
                 let i = id as usize;
-                let code = idx.codes.row(i);
-                let term = idx.aq_terms[i];
+                let code = s1_codes.row(i);
+                let term = idx.stage1_terms[i];
                 for &(qi, probe_d) in members {
                     let qi = qi as usize;
                     let lut = &luts[qi * stride..(qi + 1) * stride];
-                    shortlists[qi].push(probe_d + idx.aq.score(lut, code, term), id);
+                    shortlists[qi].push(probe_d + scorer.score(lut, code, term), id);
                 }
             }
         }
 
-        // ---- stage 2: per-query pairwise re-scoring ----
+        // ---- stage 2: per-query re-scoring ----
         let stage2: Vec<Vec<(f32, u32)>> = shortlists
             .into_iter()
             .zip(plans)
@@ -148,6 +144,16 @@ impl<'a> BatchSearcher<'a> {
             .collect();
         if sp.n_final == 0 {
             return Ok(stage2);
+        }
+        if !idx.stage3_enabled {
+            // stage-2-final mode: the approximate ranking is the answer
+            return Ok(stage2
+                .into_iter()
+                .map(|mut list| {
+                    list.truncate(sp.n_final);
+                    list
+                })
+                .collect());
         }
 
         // ---- stage 3: one decode over the union of all survivors ----
@@ -164,7 +170,7 @@ impl<'a> BatchSearcher<'a> {
             *slot = row;
         }
         let ids: Vec<usize> = union.keys().map(|&id| id as usize).collect();
-        let dec = decode(&gather_codes(&idx.codes, &ids))?;
+        let dec = decoder.decode(&gather_codes(&idx.codes, &ids))?;
         Ok(stage2
             .into_iter()
             .zip(plans)
@@ -176,41 +182,13 @@ impl<'a> BatchSearcher<'a> {
     }
 
     /// Plan + execute a whole query matrix in one batch.
-    pub fn search(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
+    pub fn search(
+        &self,
+        queries: &crate::tensor::Matrix,
+        sp: &SearchParams,
+    ) -> Vec<Vec<(f32, u32)>> {
         let plans: Vec<QueryPlan> =
             (0..queries.rows).map(|i| self.plan(queries.row(i), sp)).collect();
         self.execute(&plans, sp)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::stage2_use_lut;
-
-    #[test]
-    fn cost_model_boundaries() {
-        // degenerate inputs never pick the LUT
-        assert!(!stage2_use_lut(0, 4, 8, 8));
-        assert!(!stage2_use_lut(100, 0, 8, 8));
-        // tiny shortlists cannot amortize K²·d LUT entries per step
-        assert!(!stage2_use_lut(4, 6, 256, 32));
-        // k=8, d=8, 6 steps: build 3072 flops vs 48/candidate direct —
-        // breakeven near |S| ≈ 73
-        assert!(!stage2_use_lut(64, 6, 8, 8));
-        assert!(stage2_use_lut(128, 6, 8, 8));
-        // larger codebooks push the breakeven far beyond the shortlist
-        assert!(!stage2_use_lut(128, 6, 64, 8));
-    }
-
-    #[test]
-    fn cost_model_monotone_in_candidates() {
-        // once the LUT pays off it keeps paying off as |S| grows
-        let mut prev = false;
-        for n in [1usize, 8, 32, 64, 128, 512, 4096] {
-            let now = stage2_use_lut(n, 6, 8, 8);
-            assert!(now || !prev, "LUT choice flapped at n={n}");
-            prev = now;
-        }
-        assert!(prev, "LUT must win for huge shortlists");
     }
 }

@@ -1,7 +1,10 @@
 //! The large-scale search stack (paper Sec. 3.3, Fig. 3): IVF coarse
 //! quantization with an HNSW centroid index, QINCo2 fine codes over IVF
-//! residuals, an additive-LUT first-stage scan, pairwise-decoder
-//! re-ranking, and a final neural decode of the surviving shortlist.
+//! residuals, and a three-stage retrieval pipeline — approximate LUT
+//! scan, re-ranking scan, exact decode — assembled from the pluggable
+//! [`ApproxScorer`](crate::quantizers::ApproxScorer) /
+//! [`StageDecoder`](crate::quantizers::StageDecoder) traits into a
+//! [`PipelineSpec`] (see [`pipeline`] for the trait-level architecture).
 //!
 //! Two execution paths share one set of scoring kernels: the per-query
 //! [`SearchIndex::search`] and the batched [`batch::BatchSearcher`]
@@ -14,4 +17,6 @@ pub mod ivf;
 pub mod pipeline;
 
 pub use batch::{stage2_use_lut, BatchSearcher, QueryPlan};
-pub use pipeline::{BuildCfg, SearchIndex, SearchParams};
+pub use pipeline::{
+    BuildCfg, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+};

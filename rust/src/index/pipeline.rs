@@ -1,54 +1,79 @@
-//! The Fig. 3 search pipeline.
+//! The Fig. 3 search pipeline, generic over pluggable stage traits.
 //!
-//! Database encoding (build time):
-//!   x → IVF bucket I⁰ → QINCo2 codes (I¹..I^M) of the residual
-//!   x - C⁰(I⁰); plus: a unitary additive decoder re-fit on the codes
-//!   (stage-1 LUT scans), the IVF centroids RQ-quantized into M̃ extra
-//!   positions, and a pairwise decoder trained on the extended codes
-//!   (stage-2 re-ranking).
+//! # Three stages, two traits
 //!
-//! Retrieval:
-//!   HNSW → nprobe buckets → AQ LUT scan (S_IVF → S_AQ) → pairwise
-//!   re-scoring (S_AQ → S_pairs) → neural decode + exact distance on the
-//!   survivors. Stage distances:
-//!     stage 1: ||q - cent_b - x̂_r||² = ||q - cent_b||²
-//!              + (||x̂_r||² + 2⟨cent_b, x̂_r⟩) − 2⟨q, x̂_r⟩
-//!              = probe_dist + term_i − 2·LUT-sum   (term_i cached)
-//!     stage 2: ||x̂_pw||² − 2⟨q, x̂_pw⟩ (pairwise decoder targets raw x,
-//!              so scores are comparable across buckets)
-//!     stage 3: exact ||q - (cent + decode(I¹..I^M))||², Rust reference
-//!              decoder (same math as the HLO artifact, pad-free).
+//! Retrieval is staged exactly as the paper draws it: HNSW coarse probe →
+//! approximate LUT scan → re-scoring → exact decode of the survivors.
+//! Each stage is a trait object, assembled into a [`PipelineSpec`]:
 //!
-//! Execution paths:
-//!   * [`SearchIndex::search`] — one query at a time.
-//!   * [`super::batch::BatchSearcher`] — the batched engine: per-batch
-//!     flat AQ LUTs, bucket-grouped inverted-list scans (each co-probed
-//!     list is read once per batch), and a single union decode for
-//!     stage 3. Result-identical to `search` — both paths share
-//!     [`stage2_rescore`](SearchIndex::stage2_rescore) /
-//!     [`exact_rerank`](SearchIndex::exact_rerank) and the total
-//!     (score, id) shortlist order of [`Shortlist`].
+//! * **stage 1** — `Box<dyn ApproxScorer>` scanning [`SearchIndex::stage1_codes`]
+//!   with the cached additive terms [`SearchIndex::stage1_terms`]. The
+//!   default is the unitary [`AdditiveDecoder`] re-fit on the QINCo2
+//!   codes; [`PqScorer`]/[`OpqScorer`] swap in a product quantizer with
+//!   its *own* code table over the same IVF residuals.
+//! * **stage 2** — `Option<Box<dyn ApproxScorer>>` re-scoring the stage-1
+//!   shortlist over the extended code table ([`SearchIndex::stage2_codes`]).
+//!   The default is the paper's [`PairwiseDecoder`] (Sec. 3.3, Eqs. 8-9);
+//!   `None` forwards the stage-1 shortlist unchanged.
+//! * **stage 3** — `Box<dyn StageDecoder>`: one batch decode of the
+//!   surviving codes, then exact distances. The default is the pure-Rust
+//!   [`ReferenceDecoder`]; [`crate::qinco::RuntimeDecoder`] routes the
+//!   same call through one padded XLA dispatch per batch. With
+//!   [`Stage3Kind::Disabled`] ("pairwise-only fast mode") the stage-2
+//!   ranking is returned directly, truncated to `n_final`.
 //!
-//! Stage-2 cost model ([`super::batch::stage2_use_lut`]): re-scoring |S|
-//! candidates over P pair steps costs P·|S|·d flops with direct dots, vs
-//! P·K²·d once + P·|S| lookups with a per-query joint LUT. The LUT
-//! amortizes when |S| ≳ K²·d/(d−1); both paths consult the same model so
-//! the choice — and the float rounding — never diverges between them.
-//! Shortlists are bounded binary max-heaps ([`crate::util::topk`])
-//! instead of sorted-`Vec::insert`: O(log k) per candidate, and their
-//! (score, id) total order makes results independent of scan order.
+//! # Distance algebra (per stage)
+//!
+//! ```text
+//! stage 1: ||q - cent_b - x̂_r||² = probe_dist + term_i − 2⟨q, x̂_r⟩
+//!          with term_i = ||x̂_r||² + 2⟨cent_b, x̂_r⟩ cached per vector —
+//!          the trait score contract's additive-offset linearity is what
+//!          lets the coarse term fold in for free.
+//! stage 2: ||x̂_pw||² − 2⟨q, x̂_pw⟩ (the pairwise decoder targets raw x,
+//!          so scores are comparable across buckets)
+//! stage 3: exact ||q - (cent + decode(I¹..I^M))||²
+//! ```
+//!
+//! # Plugging in a custom scorer or decoder
+//!
+//! Implement [`ApproxScorer`] (score contract: `score(lut, code, t) =
+//! t − 2⟨q, decode(code)⟩`, ranked under the total `(score, id)` order of
+//! [`Shortlist`]) and build the index through [`SearchIndex::assemble`]
+//! with a [`PipelineConfig`], or construct a [`PipelineSpec`] directly.
+//! Custom stage-3 decoders implement [`StageDecoder`]; decoders that own
+//! a per-thread engine (PJRT clients are `Rc`-based, not `Send`) are
+//! handed to server workers through a
+//! [`DecoderFactory`](crate::quantizers::DecoderFactory) — each worker
+//! calls `make()` once at startup (engine-per-worker) and passes the
+//! resulting decoder to [`super::batch::BatchSearcher::execute_with_decoder`].
+//!
+//! # Execution paths
+//!
+//! * [`SearchIndex::search`] — one query at a time.
+//! * [`super::batch::BatchSearcher`] — the batched engine: per-batch
+//!   flat LUT packs, bucket-grouped inverted-list scans (each co-probed
+//!   list is read once per batch), and a single union decode for
+//!   stage 3. Result-identical to `search` for *every* pipeline
+//!   configuration — both paths share the crate-private
+//!   `stage2_rescore` / `exact_rerank` helpers, the
+//!   [`ApproxScorer::use_lut`] cost model, and the total (score, id)
+//!   shortlist order of [`Shortlist`] (pinned by `batch_equivalence.rs`
+//!   across all configurations).
 
-use super::batch::{stage2_use_lut, BatchSearcher, QueryPlan};
 use super::ivf::Ivf;
-use crate::qinco::{reference, Codec, ParamStore};
+use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder};
+use crate::quantizers::aq_lut::AdditiveDecoder;
+use crate::quantizers::opq::{Opq, OpqScorer};
 use crate::quantizers::pairwise::{append_positions, PairwiseDecoder};
+use crate::quantizers::pq::{Pq, PqScorer};
 use crate::quantizers::rq::Rq;
-use crate::quantizers::{aq_lut::AdditiveDecoder, Codes, VectorQuantizer};
+use crate::quantizers::{ApproxScorer, Codes, StageDecoder, VectorQuantizer};
 use crate::runtime::Engine;
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use crate::util::topk::Shortlist;
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Search-time knobs (the Fig. 6 sweep axes).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,8 +84,10 @@ pub struct SearchParams {
     pub n_aq: usize,
     /// stage-2 shortlist size |S_pairs| (0 disables pairwise re-ranking)
     pub n_pairs: usize,
-    /// final results returned after neural re-rank (0 disables neural
-    /// re-rank: stage-2 order is returned)
+    /// final results returned after the stage-3 re-rank (0 disables the
+    /// re-rank: stage-2 order is returned in full; when the index was
+    /// built with stage 3 disabled, the stage-2 order is truncated to
+    /// `n_final` instead)
     pub n_final: usize,
 }
 
@@ -68,6 +95,93 @@ impl Default for SearchParams {
     fn default() -> Self {
         SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 }
     }
+}
+
+/// Which [`ApproxScorer`] runs the stage-1 scan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Stage1Kind {
+    /// Unitary additive decoder re-fit on the QINCo2 codes (the paper's
+    /// default; scans the QINCo2 code table itself).
+    Aq,
+    /// Product quantizer trained on the IVF residuals, scanning its own
+    /// `m`-position code table (`k` follows the model's codebook size).
+    Pq { m: usize },
+    /// OPQ: learned rotation + PQ.
+    Opq { m: usize, iters: usize },
+}
+
+/// Which [`StageDecoder`] the index holds for stage 3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage3Kind {
+    /// Pure-Rust reference QINCo2 decoder (infallible, thread-shared).
+    Reference,
+    /// No exact re-rank: the stage-2 ranking is final ("pairwise-only
+    /// fast mode"). `n_final > 0` truncates it.
+    Disabled,
+}
+
+/// Build-time pipeline selection — the configuration mirror of
+/// [`PipelineSpec`]. Server workers may additionally override stage 3
+/// per thread via a [`DecoderFactory`](crate::quantizers::DecoderFactory)
+/// (e.g. the PJRT [`RuntimeDecoderFactory`](crate::qinco::RuntimeDecoderFactory)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub stage1: Stage1Kind,
+    /// fit + use the pairwise re-ranker (stage 2)
+    pub stage2: bool,
+    pub stage3: Stage3Kind,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { stage1: Stage1Kind::Aq, stage2: true, stage3: Stage3Kind::Reference }
+    }
+}
+
+impl PipelineConfig {
+    /// Parse CLI-level flags: `stage1 ∈ {aq, pq, opq}` (`stage1_m`
+    /// sub-quantizers for pq/opq), `stage3 ∈ {reference, runtime, none}`.
+    /// `"runtime"` builds a reference-decoding index — the runtime path
+    /// is selected per worker thread at serve time through a
+    /// `DecoderFactory`, never baked into the (thread-shared) index.
+    pub fn from_flags(
+        stage1: &str,
+        stage1_m: usize,
+        stage2: bool,
+        stage3: &str,
+    ) -> Result<PipelineConfig> {
+        let s1 = match stage1 {
+            "aq" => Stage1Kind::Aq,
+            "pq" | "opq" => {
+                if stage1_m == 0 {
+                    bail!("--stage1-m must be >= 1 for a {stage1} stage 1");
+                }
+                if stage1 == "pq" {
+                    Stage1Kind::Pq { m: stage1_m }
+                } else {
+                    Stage1Kind::Opq { m: stage1_m, iters: 4 }
+                }
+            }
+            other => bail!("unknown stage-1 scorer {other:?} (expected aq|pq|opq)"),
+        };
+        let s3 = match stage3 {
+            "reference" | "runtime" => Stage3Kind::Reference,
+            "none" | "disabled" => Stage3Kind::Disabled,
+            other => bail!("unknown stage-3 decoder {other:?} (expected reference|runtime|none)"),
+        };
+        Ok(PipelineConfig { stage1: s1, stage2, stage3: s3 })
+    }
+}
+
+/// The assembled three-stage pipeline: one trait object per stage. The
+/// index shares these read-only across every serving thread, so stage 1/2
+/// scorers are `Send + Sync` by trait bound and the stage-3 box carries
+/// the marker bounds explicitly (thread-local runtime decoders live
+/// *outside* the spec, handed to workers by a `DecoderFactory`).
+pub struct PipelineSpec {
+    pub stage1: Box<dyn ApproxScorer>,
+    pub stage2: Option<Box<dyn ApproxScorer>>,
+    pub stage3: Box<dyn StageDecoder + Send + Sync>,
 }
 
 /// Build-time configuration.
@@ -81,27 +195,47 @@ pub struct BuildCfg {
     /// training subsample for the decoders
     pub fit_sample: usize,
     pub seed: u64,
+    /// which scorer/decoder runs each stage
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for BuildCfg {
     fn default() -> Self {
-        BuildCfg { k_ivf: 64, m_tilde: 2, n_pairs_train: 0, fit_sample: 20_000, seed: 0x5EA2C4 }
+        BuildCfg {
+            k_ivf: 64,
+            m_tilde: 2,
+            n_pairs_train: 0,
+            fit_sample: 20_000,
+            seed: 0x5EA2C4,
+            pipeline: PipelineConfig::default(),
+        }
     }
 }
 
 pub struct SearchIndex {
     pub ivf: Ivf,
-    /// QINCo2 codes of the database residuals [N, M]
+    /// QINCo2 codes of the database residuals [N, M] — the stage-3
+    /// decode source
     pub codes: Codes,
-    pub params: ParamStore,
-    /// stage-1 unitary decoder + cached per-vector term
-    pub aq: AdditiveDecoder,
-    pub(crate) aq_terms: Vec<f32>,
-    /// stage-2 pairwise decoder over extended positions + cached norms
-    pub pairwise: PairwiseDecoder,
-    pub(crate) pw_codes: Codes,
-    pub(crate) pw_norms: Vec<f32>,
-    /// per-step MSE trace of the pairwise fit (Table S3)
+    pub params: Arc<ParamStore>,
+    /// the pluggable stage implementations
+    pub pipeline: PipelineSpec,
+    /// side code table scanned by the stage-1 scorer when it differs
+    /// from the QINCo2 codes (PQ/OPQ stage 1); `None` means stage 1
+    /// scans [`Self::codes`] directly — no duplicated table for the
+    /// default AQ pipeline. Resolve with [`Self::stage1_codes`].
+    pub stage1_side_codes: Option<Codes>,
+    /// cached stage-1 terms: ||x̂_r||² + 2⟨cent, x̂_r⟩ per db vector
+    pub stage1_terms: Vec<f32>,
+    /// extended code table scored by stage 2 (empty when stage 2 is off)
+    pub stage2_codes: Codes,
+    /// cached ||x̂_pw||² per db vector (empty when stage 2 is off)
+    pub stage2_norms: Vec<f32>,
+    /// whether the exact stage-3 re-rank runs at all
+    /// ([`Stage3Kind::Disabled`] turns searches into stage-2-final mode)
+    pub stage3_enabled: bool,
+    /// per-step MSE trace of the pairwise fit (Table S3; empty when
+    /// stage 2 is off)
     pub pairwise_trace: Vec<(usize, usize, f64)>,
     pub db_len: usize,
 }
@@ -140,14 +274,15 @@ impl SearchIndex {
         }
         let (fit_codes, _, _) = codec.encode(engine, &params, &fit_res)?;
 
-        Ok(Self::assemble(params, ivf, codes, &fit_x, &fit_assign, &fit_codes, cfg))
+        Ok(Self::assemble(params, ivf, codes, &residuals, &fit_x, &fit_assign, &fit_codes, cfg))
     }
 
     /// Build an index with the pure-Rust reference encoder (greedy A=K,
     /// B=1) — no PJRT runtime or HLO artifacts required. Slower to build
     /// and slightly less accurate than the beam-search XLA encoder, but
     /// runs anywhere; the artifact-free tests (`batch_equivalence`,
-    /// `coordinator_props`) and the `bench_batch_qps` bench use it.
+    /// `scorer_conformance`, `coordinator_props`) and the
+    /// `bench_batch_qps` bench use it.
     pub fn build_reference(
         params: ParamStore,
         train: &Matrix,
@@ -172,149 +307,208 @@ impl SearchIndex {
             tensor::sub_assign(fit_res.row_mut(i), &crow);
         }
         let fit_codes = reference::encode_greedy(&params, &fit_res);
-        Self::assemble(params, ivf, codes, &fit_x, &fit_assign, &fit_codes, cfg)
+        Self::assemble(params, ivf, codes, &residuals, &fit_x, &fit_assign, &fit_codes, cfg)
     }
 
-    /// Assemble an index from pre-computed codes: fit the stage-1/stage-2
-    /// lookup decoders and their per-vector caches. Engine-free — the
-    /// codes may come from [`Codec::encode`] (the XLA path, see
-    /// [`Self::build`]) or from the pure-Rust reference encoder, which is
-    /// how the property tests and artifact-free benches construct real
-    /// indexes without a PJRT runtime.
+    /// Assemble an index from pre-computed codes: instantiate the
+    /// pipeline stages selected by `cfg.pipeline`, fit their lookup
+    /// structures and per-vector caches. Engine-free — the codes may come
+    /// from [`Codec::encode`] (the XLA path, see [`Self::build`]) or from
+    /// the pure-Rust reference encoder, which is how the property tests
+    /// and artifact-free benches construct real indexes without a PJRT
+    /// runtime.
     ///
-    /// `codes` are the database residual codes (row i ↔ `ivf.assign[i]`);
-    /// `fit_x` / `fit_assign` / `fit_codes` are the decoder-fit split:
-    /// raw training vectors, their IVF buckets, and the codes of their
-    /// residuals.
+    /// `codes` are the database residual codes (row i ↔ `ivf.assign[i]`),
+    /// `residuals` the residual vectors themselves (needed when stage 1
+    /// trains its own quantizer); `fit_x` / `fit_assign` / `fit_codes`
+    /// are the decoder-fit split: raw training vectors, their IVF
+    /// buckets, and the codes of their residuals.
+    #[allow(clippy::too_many_arguments)]
     pub fn assemble(
         params: ParamStore,
         ivf: Ivf,
         codes: Codes,
+        residuals: &Matrix,
         fit_x: &Matrix,
         fit_assign: &[u32],
         fit_codes: &Codes,
         cfg: &BuildCfg,
     ) -> SearchIndex {
         assert_eq!(ivf.assign.len(), codes.n, "codes must cover the database");
+        assert_eq!(residuals.rows, codes.n, "residuals must cover the database");
         assert_eq!(fit_x.rows, fit_codes.n, "fit split size mismatch");
         assert_eq!(fit_x.rows, fit_assign.len(), "fit split size mismatch");
         let m = codes.m;
         let k = params.cfg.k;
         let db_rows = codes.n;
 
-        // ---- stage-1 decoder: unitary RQ re-fit on (residual, code) ----
+        // ---- stage 1: fit the configured scorer on the fit split and
+        // produce the code table it scans ----
         let mut fit_res = fit_x.clone();
         for i in 0..fit_res.rows {
             let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
             tensor::sub_assign(fit_res.row_mut(i), &crow);
         }
-        let aq = AdditiveDecoder::fit_rq(&fit_res, fit_codes, k);
-        // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ using the AQ decode
-        let aq_dec = aq.decode(&codes);
-        let mut aq_terms = Vec::with_capacity(db_rows);
+        let (stage1, stage1_side_codes): (Box<dyn ApproxScorer>, Option<Codes>) =
+            match &cfg.pipeline.stage1 {
+                Stage1Kind::Aq => {
+                    // unitary RQ re-fit on (residual, code) pairs; scans
+                    // the QINCo2 code table directly (no side table)
+                    let aq = AdditiveDecoder::fit_rq(&fit_res, fit_codes, k);
+                    (Box::new(aq), None)
+                }
+                Stage1Kind::Pq { m: m_pq } => {
+                    let pq = Pq::train(&fit_res, *m_pq, k, cfg.seed ^ 0x9106);
+                    let s1_codes = pq.encode(residuals);
+                    (Box::new(PqScorer(pq)), Some(s1_codes))
+                }
+                Stage1Kind::Opq { m: m_pq, iters } => {
+                    let opq = Opq::train(&fit_res, *m_pq, k, *iters, cfg.seed ^ 0x0619);
+                    let s1_codes = opq.encode(residuals);
+                    (Box::new(OpqScorer::new(opq)), Some(s1_codes))
+                }
+            };
+        // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ from the stage-1 decode
+        let s1_dec = stage1.decode(stage1_side_codes.as_ref().unwrap_or(&codes));
+        let mut stage1_terms = Vec::with_capacity(db_rows);
         for i in 0..db_rows {
             let cent = ivf.centroids.row(ivf.assign[i] as usize);
-            aq_terms
-                .push(tensor::sqnorm(aq_dec.row(i)) + 2.0 * tensor::dot(cent, aq_dec.row(i)));
+            stage1_terms
+                .push(tensor::sqnorm(s1_dec.row(i)) + 2.0 * tensor::dot(cent, s1_dec.row(i)));
         }
 
-        // ---- stage-2: pairwise decoder over extended positions ----
-        // RQ-quantize the IVF centroids into M̃ codes (bucket-level only:
-        // storage independent of the database size)
-        let ivf_rq = Rq::train(&ivf.centroids, cfg.m_tilde, k, 4, cfg.seed ^ 0x77);
-        let bucket_codes = ivf_rq.encode(&ivf.centroids);
-        let mut extra = Codes::zeros(db_rows, cfg.m_tilde);
-        for i in 0..db_rows {
-            extra
-                .row_mut(i)
-                .copy_from_slice(bucket_codes.row(ivf.assign[i] as usize));
-        }
-        let pw_codes = append_positions(&codes, &extra);
-        let n_pairs = if cfg.n_pairs_train == 0 { 2 * m } else { cfg.n_pairs_train };
-        let mut fit_extra = Codes::zeros(fit_x.rows, cfg.m_tilde);
-        for i in 0..fit_x.rows {
-            fit_extra
-                .row_mut(i)
-                .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
-        }
-        let fit_pw_codes = append_positions(fit_codes, &fit_extra);
-        let pairwise = PairwiseDecoder::train(fit_x, &fit_pw_codes, k, n_pairs);
-        let pw_norms = pairwise.norms(&pw_codes);
-        let pairwise_trace = pairwise.trace();
+        // ---- stage 2: pairwise decoder over extended positions ----
+        let (stage2, stage2_codes, stage2_norms, pairwise_trace): (
+            Option<Box<dyn ApproxScorer>>,
+            Codes,
+            Vec<f32>,
+            Vec<(usize, usize, f64)>,
+        ) = if cfg.pipeline.stage2 {
+            // RQ-quantize the IVF centroids into M̃ codes (bucket-level
+            // only: storage independent of the database size)
+            let ivf_rq = Rq::train(&ivf.centroids, cfg.m_tilde, k, 4, cfg.seed ^ 0x77);
+            let bucket_codes = ivf_rq.encode(&ivf.centroids);
+            let mut extra = Codes::zeros(db_rows, cfg.m_tilde);
+            for i in 0..db_rows {
+                extra
+                    .row_mut(i)
+                    .copy_from_slice(bucket_codes.row(ivf.assign[i] as usize));
+            }
+            let pw_codes = append_positions(&codes, &extra);
+            let n_pairs = if cfg.n_pairs_train == 0 { 2 * m } else { cfg.n_pairs_train };
+            let mut fit_extra = Codes::zeros(fit_x.rows, cfg.m_tilde);
+            for i in 0..fit_x.rows {
+                fit_extra
+                    .row_mut(i)
+                    .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
+            }
+            let fit_pw_codes = append_positions(fit_codes, &fit_extra);
+            let pairwise = PairwiseDecoder::train(fit_x, &fit_pw_codes, k, n_pairs);
+            let pw_norms = pairwise.norms(&pw_codes);
+            let trace = pairwise.trace();
+            (Some(Box::new(pairwise)), pw_codes, pw_norms, trace)
+        } else {
+            (None, Codes::zeros(0, 0), Vec::new(), Vec::new())
+        };
+
+        // ---- stage 3: the index-held decoder is always the infallible,
+        // thread-shared reference decoder; Disabled keeps it around (the
+        // batched engine still compiles against it) but never invokes it.
+        // Runtime decoders are per-worker-thread, via DecoderFactory.
+        let params = Arc::new(params);
+        let stage3: Box<dyn StageDecoder + Send + Sync> =
+            Box::new(ReferenceDecoder { params: params.clone() });
+        let stage3_enabled = cfg.pipeline.stage3 != Stage3Kind::Disabled;
 
         SearchIndex {
             ivf,
             codes,
             params,
-            aq,
-            aq_terms,
-            pairwise,
-            pw_codes,
-            pw_norms,
+            pipeline: PipelineSpec { stage1, stage2, stage3 },
+            stage1_side_codes,
+            stage1_terms,
+            stage2_codes,
+            stage2_norms,
+            stage3_enabled,
             pairwise_trace,
             db_len: db_rows,
         }
     }
 
-    /// Full pipeline search for one query. Returns ranked (dist, id).
+    /// Full pipeline search for one query. Returns ranked (score, id) —
+    /// exact squared distances when stage 3 ran, approximate scores
+    /// (missing the constant ||q||²) otherwise.
+    ///
+    /// Panics if the index-held stage-3 decoder fails; the built-in
+    /// decoders are infallible (fallible runtime decoders belong to
+    /// server workers, which handle errors by falling back).
     pub fn search(&self, q: &[f32], sp: &SearchParams) -> Vec<(f32, u32)> {
         // ---- stage 0: coarse probe ----
         let probes = self.ivf.probe(q, sp.nprobe, sp.ef_search);
-        // ---- stage 1: AQ LUT scan over the probed lists ----
-        let lut = self.aq.lut(q);
+        // ---- stage 1: LUT scan over the probed lists ----
+        let scorer = self.pipeline.stage1.as_ref();
+        let s1_codes = self.stage1_codes();
+        let lut = scorer.lut(q);
         let mut shortlist = Shortlist::new(sp.n_aq);
         for &(probe_d, bucket) in &probes {
             for &id in &self.ivf.lists[bucket as usize] {
                 let i = id as usize;
-                let s = probe_d
-                    + self.aq.score(&lut, self.codes.row(i), self.aq_terms[i]);
+                let s =
+                    probe_d + scorer.score(&lut, s1_codes.row(i), self.stage1_terms[i]);
                 shortlist.push(s, id);
             }
         }
-        // ---- stage 2: pairwise re-scoring ----
+        // ---- stage 2: approximate re-scoring ----
         let stage2 = self.stage2_rescore(q, shortlist.into_sorted(), sp);
-        // ---- stage 3: neural decode re-rank ----
+        // ---- stage 3: exact decode re-rank ----
         if sp.n_final == 0 || stage2.is_empty() {
             return stage2;
         }
+        if !self.stage3_enabled {
+            let mut out = stage2;
+            out.truncate(sp.n_final);
+            return out;
+        }
         let ids: Vec<usize> = stage2.iter().map(|&(_, id)| id as usize).collect();
-        let dec = reference::decode(&self.params, &gather_codes(&self.codes, &ids));
+        let dec = self
+            .pipeline
+            .stage3
+            .decode(&gather_codes(&self.codes, &ids))
+            .expect("index-held stage-3 decoder failed");
         let rows: Vec<usize> = (0..ids.len()).collect();
         self.exact_rerank(q, &stage2, &dec, &rows, sp.n_final)
     }
 
-    /// Stage 2: re-score a stage-1 shortlist with the pairwise decoder
+    /// Stage 2: re-score a stage-1 shortlist with the configured scorer
     /// and keep the best `sp.n_pairs`. Chooses between a per-query joint
-    /// LUT and direct dots via the [`stage2_use_lut`] cost model. Shared
-    /// by the per-query and batched paths (identical float rounding).
+    /// LUT and direct dots via the scorer's [`ApproxScorer::use_lut`]
+    /// cost model. Shared by the per-query and batched paths (identical
+    /// float rounding). A `None` stage 2 forwards the shortlist as-is.
     pub(crate) fn stage2_rescore(
         &self,
         q: &[f32],
         stage1: Vec<(f32, u32)>,
         sp: &SearchParams,
     ) -> Vec<(f32, u32)> {
+        let Some(scorer) = self.pipeline.stage2.as_deref() else {
+            return stage1;
+        };
         if sp.n_pairs == 0 || stage1.is_empty() {
             return stage1;
         }
-        let k = self.pairwise.k;
         let mut keep = Shortlist::new(sp.n_pairs);
-        if stage2_use_lut(stage1.len(), self.pairwise.steps.len(), k, q.len()) {
-            let lut = self.pairwise.lut(q);
+        if scorer.use_lut(stage1.len(), q.len()) {
+            let lut = scorer.lut(q);
             for &(_, id) in &stage1 {
                 let i = id as usize;
-                let s = self.pairwise.score(&lut, self.pw_codes.row(i), self.pw_norms[i]);
+                let s = scorer.score(&lut, self.stage2_codes.row(i), self.stage2_norms[i]);
                 keep.push(s, id);
             }
         } else {
             for &(_, id) in &stage1 {
                 let i = id as usize;
-                let code = self.pw_codes.row(i);
-                let mut ip = 0.0f32;
-                for s in &self.pairwise.steps {
-                    let joint = code[s.i] as usize * k + code[s.j] as usize;
-                    ip += tensor::dot(q, s.codebook.row(joint));
-                }
-                keep.push(self.pw_norms[i] - 2.0 * ip, id);
+                let s = scorer.score_direct(q, self.stage2_codes.row(i), self.stage2_norms[i]);
+                keep.push(s, id);
             }
         }
         keep.into_sorted()
@@ -354,10 +548,12 @@ impl SearchIndex {
         d
     }
 
-    /// Search many queries; returns ranked id lists (for recall metrics).
-    /// Runs the batched engine over per-thread chunks of the query set —
-    /// result-identical to calling [`Self::search`] per row.
-    pub fn search_batch(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<u32>> {
+    /// Search many queries; returns ranked (score, id) lists — the same
+    /// shape per query as [`Self::search`], so batched and per-query
+    /// callers handle one result type. Runs the batched engine over
+    /// per-thread chunks of the query set — result-identical to calling
+    /// [`Self::search`] per row.
+    pub fn search_batch(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
         let n = queries.rows;
         if n == 0 {
             return Vec::new();
@@ -365,28 +561,40 @@ impl SearchIndex {
         let nthreads = crate::util::pool::default_threads().max(1);
         let chunk = n.div_ceil(nthreads);
         let nchunks = n.div_ceil(chunk);
-        let mut per_chunk: Vec<Vec<Vec<u32>>> = vec![Vec::new(); nchunks];
+        let mut per_chunk: Vec<Vec<Vec<(f32, u32)>>> = vec![Vec::new(); nchunks];
         crate::util::pool::par_map_into(&mut per_chunk, nchunks, |ci, slot| {
             let lo = ci * chunk;
             let hi = ((ci + 1) * chunk).min(n);
-            let searcher = BatchSearcher::new(self);
-            let plans: Vec<QueryPlan> =
+            let searcher = super::batch::BatchSearcher::new(self);
+            let plans: Vec<super::batch::QueryPlan> =
                 (lo..hi).map(|i| searcher.plan(queries.row(i), sp)).collect();
-            *slot = searcher
-                .execute(&plans, sp)
-                .into_iter()
-                .map(|r| r.into_iter().map(|(_, id)| id).collect())
-                .collect();
+            *slot = searcher.execute(&plans, sp);
         });
         per_chunk.into_iter().flatten().collect()
     }
 
-    /// Bytes per database vector (codes + the per-vector f32 term caches),
+    /// The code table stage 1 scans: the side table when the scorer owns
+    /// one (PQ/OPQ), the QINCo2 codes otherwise.
+    #[inline]
+    pub fn stage1_codes(&self) -> &Codes {
+        self.stage1_side_codes.as_ref().unwrap_or(&self.codes)
+    }
+
+    /// Bytes per database vector (codes + the per-vector f32 caches),
     /// for the bitrate accounting in EXPERIMENTS.md.
     pub fn bytes_per_vector(&self) -> f64 {
         let bits_per_code = usize::BITS - (self.params.cfg.k - 1).leading_zeros();
-        let code_bits = self.codes.m * bits_per_code as usize;
-        code_bits as f64 / 8.0 + 8.0 // + two f32 caches (aq term, pw norm)
+        // QINCo2 codes + the stage-1 term cache (f32)
+        let mut bytes = (self.codes.m * bits_per_code as usize) as f64 / 8.0 + 4.0;
+        // a PQ/OPQ stage 1 scans its own side table
+        if let Some(side) = &self.stage1_side_codes {
+            bytes += (side.m * bits_per_code as usize) as f64 / 8.0;
+        }
+        // stage-2 norm cache (f32)
+        if self.pipeline.stage2.is_some() {
+            bytes += 4.0;
+        }
+        bytes
     }
 }
 

@@ -23,15 +23,34 @@
 //! Figure 3; [`quantizers`] holds the classical baselines (PQ, OPQ, RQ,
 //! LSQ) and the paper's pairwise additive decoder.
 //!
+//! # The pluggable three-stage pipeline
+//!
+//! Retrieval is assembled from two object-safe traits
+//! ([`quantizers::ApproxScorer`] for the approximate scan stages,
+//! [`quantizers::StageDecoder`] for the exact decode stage) into an
+//! [`index::PipelineSpec`] — stage 1 defaults to the unitary additive
+//! decoder, stage 2 to the paper's pairwise decoder, stage 3 to the
+//! pure-Rust reference QINCo2 decoder, and each slot accepts any
+//! conforming implementation (PQ/OPQ flat-LUT adapters for stage 1,
+//! stage-2-final "pairwise-only" mode, a PJRT-backed runtime decoder
+//! for stage 3). [`index::PipelineConfig`] selects stages by
+//! configuration from the CLI, the benches, and the tests; the
+//! [`quantizers::DecoderFactory`] trait hands every server worker its
+//! own thread-local stage-3 decoder (engine-per-worker — PJRT clients
+//! are `Rc`-based and cannot cross threads). See [`index::pipeline`]
+//! for the trait contracts and extension points.
+//!
 //! Search executes through one of two result-identical paths:
 //! - per-query [`index::SearchIndex::search`] (Fig. 3, one request at a
 //!   time), and
-//! - the batched engine [`index::batch`] — per-batch flat AQ-LUT packs,
+//! - the batched engine [`index::batch`] — per-batch flat LUT packs,
 //!   bucket-grouped inverted-list scans (each co-probed list is read
 //!   once per batch), per-query stage-2 joint LUTs chosen by the
 //!   [`index::stage2_use_lut`] cost model, and a single union decode for
 //!   stage 3. The [`server`] router forms dynamic batches and dispatches
-//!   them whole through this engine.
+//!   them whole through this engine; [`index::SearchIndex::search_batch`]
+//!   and `search` return the same `Vec<(score, id)>` shape per query,
+//!   ranked under the total (score, id) order of [`util::topk`].
 
 pub mod cli;
 pub mod clustering;

@@ -34,6 +34,17 @@ pub fn recall_triple(results: &[Vec<u32>], gt: &[u32]) -> (f64, f64, f64) {
     )
 }
 
+/// Strip scores from ranked `(score, id)` result lists — the recall
+/// helpers take plain id lists, while the search paths
+/// ([`crate::index::SearchIndex::search_batch`] and the per-query
+/// search) both return scored results.
+pub fn ids_only(results: &[Vec<(f32, u32)>]) -> Vec<Vec<u32>> {
+    results
+        .iter()
+        .map(|r| r.iter().map(|&(_, id)| id).collect())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -6,11 +6,14 @@
 //! setting + the matching decode artifacts.
 
 use super::params::ParamStore;
-use crate::quantizers::Codes;
+use crate::quantizers::{Codes, DecoderFactory, StageDecoder};
 use crate::runtime::Engine;
 use crate::tensor::Matrix;
 use crate::util::qnpz::Tensor;
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 pub struct Codec {
     pub model: String,
@@ -189,6 +192,74 @@ impl Codec {
             lo = hi;
         }
         Ok(out)
+    }
+}
+
+/// [`StageDecoder`] over the PJRT runtime: one XLA dispatch per batch
+/// through [`Codec::decode`]. The engine inside is `Rc`-based (not
+/// `Send`), so a `RuntimeDecoder` is pinned to the thread that built it —
+/// construct one per serving worker via [`RuntimeDecoderFactory`], never
+/// share one across threads. The `RefCell` is sound for the same reason:
+/// the decoder is thread-local by construction and `decode` is the only
+/// borrower.
+pub struct RuntimeDecoder {
+    engine: RefCell<Engine>,
+    codec: Codec,
+    params: Arc<ParamStore>,
+}
+
+impl RuntimeDecoder {
+    /// Open the artifact directory, pick decode artifacts for `model`
+    /// with encode setting `(a, b)`, and bind the parameter store.
+    pub fn open(
+        artifacts_dir: impl Into<PathBuf>,
+        model: &str,
+        a: usize,
+        b: usize,
+        params: Arc<ParamStore>,
+    ) -> Result<RuntimeDecoder> {
+        let engine = Engine::open(artifacts_dir)?;
+        let codec = Codec::new(&engine, model, a, b)?;
+        Ok(RuntimeDecoder { engine: RefCell::new(engine), codec, params })
+    }
+}
+
+impl StageDecoder for RuntimeDecoder {
+    fn decode(&self, codes: &Codes) -> Result<Matrix> {
+        self.codec.decode(&mut self.engine.borrow_mut(), &self.params, codes)
+    }
+
+    fn name(&self) -> &'static str {
+        "runtime"
+    }
+}
+
+/// Engine-per-worker factory: each server worker thread calls [`make`]
+/// once at startup and gets a [`RuntimeDecoder`] with its *own* PJRT
+/// client + compiled-artifact cache (clients are `Rc`-based and cannot
+/// cross threads). Construction fails cleanly when no runtime is
+/// available — e.g. under the vendored stub `xla` crate — and the server
+/// then falls back to the reference decoder for that worker.
+///
+/// [`make`]: DecoderFactory::make
+pub struct RuntimeDecoderFactory {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub a: usize,
+    pub b: usize,
+    pub params: Arc<ParamStore>,
+}
+
+impl DecoderFactory for RuntimeDecoderFactory {
+    fn make(&self) -> Result<Box<dyn StageDecoder>> {
+        let dec = RuntimeDecoder::open(
+            self.artifacts_dir.clone(),
+            &self.model,
+            self.a,
+            self.b,
+            self.params.clone(),
+        )?;
+        Ok(Box::new(dec))
     }
 }
 

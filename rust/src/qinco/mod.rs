@@ -10,6 +10,7 @@ pub mod params;
 pub mod reference;
 pub mod trainer;
 
-pub use codec::Codec;
+pub use codec::{Codec, RuntimeDecoder, RuntimeDecoderFactory};
 pub use params::ParamStore;
+pub use reference::{ReferenceDecoder, ReferenceDecoderFactory};
 pub use trainer::{TrainCfg, TrainStats, Trainer};

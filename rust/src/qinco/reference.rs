@@ -6,8 +6,10 @@
 //! on the search hot path where a fixed-batch artifact would waste work.
 
 use super::params::ParamStore;
-use crate::quantizers::Codes;
+use crate::quantizers::{Codes, DecoderFactory, StageDecoder};
 use crate::tensor::Matrix;
+use anyhow::Result;
+use std::sync::Arc;
 
 /// y[rows, cols_out] = x[rows, cols_in] @ w[cols_in, cols_out], with w
 /// given as a flat slice.
@@ -103,6 +105,38 @@ pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
         }
     }
     Matrix::from_vec(n, d, xhat)
+}
+
+/// [`StageDecoder`] over the pure-Rust reference implementation of the
+/// QINCo2 decoder — the default (and infallible) stage-3 of every
+/// [`crate::index::SearchIndex`]. Thread-safe: it holds only parameter
+/// tensors, so one instance is shared across all serving workers.
+pub struct ReferenceDecoder {
+    pub params: Arc<ParamStore>,
+}
+
+impl StageDecoder for ReferenceDecoder {
+    fn decode(&self, codes: &Codes) -> Result<Matrix> {
+        Ok(decode(&self.params, codes))
+    }
+
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+}
+
+/// The default [`DecoderFactory`]: hands every worker a (cheap, shared
+/// parameter store) [`ReferenceDecoder`]. Infallible — this is the
+/// factory the server falls back to when no runtime factory is
+/// configured.
+pub struct ReferenceDecoderFactory {
+    pub params: Arc<ParamStore>,
+}
+
+impl DecoderFactory for ReferenceDecoderFactory {
+    fn make(&self) -> Result<Box<dyn StageDecoder>> {
+        Ok(Box::new(ReferenceDecoder { params: self.params.clone() }))
+    }
 }
 
 /// Greedy encode (A=K, B=1) in pure Rust — slow, for tests only.

@@ -15,7 +15,7 @@
 //! reconstruction norm is cached per database vector (Faiss' `Nqint8`
 //! trick, kept in f32 here).
 
-use super::Codes;
+use super::{ApproxScorer, Codes};
 use crate::linalg::lstsq_onehot;
 use crate::tensor::{self, Matrix};
 use anyhow::Result;
@@ -135,11 +135,50 @@ impl AdditiveDecoder {
     /// (the constant ||q||^2 is dropped — ranking is unaffected).
     #[inline]
     pub fn score(&self, lut: &[f32], code: &[u32], norm: f32) -> f32 {
+        debug_assert_eq!(lut.len(), self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
         let mut ip = 0.0f32;
         for (p, &c) in code.iter().enumerate() {
             ip += unsafe { *lut.get_unchecked(p * self.k + c as usize) };
         }
         norm - 2.0 * ip
+    }
+}
+
+/// Stage-1/stage-2 scorer interface: delegates to the inherent methods
+/// (which remain the concrete-type API). See the [`ApproxScorer`] score
+/// contract — `score(lut, code, t) = t − 2⟨q, decode(code)⟩`.
+impl ApproxScorer for AdditiveDecoder {
+    fn lut_len(&self) -> usize {
+        AdditiveDecoder::lut_len(self)
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        AdditiveDecoder::lut_into(self, q, out)
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        AdditiveDecoder::score(self, lut, code, t)
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        let mut ip = 0.0f32;
+        for (p, &c) in code.iter().enumerate() {
+            ip += tensor::dot(q, self.codebooks[p].row(c as usize));
+        }
+        t - 2.0 * ip
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        AdditiveDecoder::decode(self, codes)
+    }
+
+    fn norms(&self, codes: &Codes) -> Vec<f32> {
+        AdditiveDecoder::norms(self, codes)
+    }
+
+    fn use_lut(&self, n_cands: usize, d: usize) -> bool {
+        super::stage2_use_lut(n_cands, self.codebooks.len(), self.k, d)
     }
 }
 

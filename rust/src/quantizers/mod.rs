@@ -2,6 +2,31 @@
 //! plus the additive LUT machinery and the pairwise additive decoder
 //! (the paper's Sec. 3.3 contribution). The QINCo2 neural quantizer
 //! itself lives in [`crate::qinco`]; everything here is pure Rust.
+//!
+//! # The stage traits
+//!
+//! The paper's search pipeline (Sec. 3.3, Fig. 3) is explicitly staged:
+//! an approximate LUT scan, a pairwise re-ranking pass, and an exact
+//! neural decode of the survivors. Two object-safe traits make each
+//! stage pluggable instead of hard-wired to one concrete type:
+//!
+//! * [`ApproxScorer`] — anything that can score `||q − decode(code)||²`
+//!   approximately from a per-query lookup table. Implemented by the
+//!   unitary [`aq_lut::AdditiveDecoder`], the joint
+//!   [`pairwise::PairwiseDecoder`], and the flat-LUT adapters
+//!   [`pq::PqScorer`] / [`opq::OpqScorer`]. Stage 1 and stage 2 of
+//!   [`crate::index::SearchIndex`] each hold one `Box<dyn ApproxScorer>`.
+//! * [`StageDecoder`] — a batch decoder `Codes → Matrix` for the exact
+//!   re-ranking stage. Implemented by the pure-Rust reference QINCo2
+//!   decoder ([`crate::qinco::ReferenceDecoder`]), by
+//!   [`pairwise::PairwiseDecoder`], and by the PJRT-backed
+//!   [`crate::qinco::RuntimeDecoder`].
+//!
+//! PJRT clients are `Rc`-based (not `Send`), so a runtime decoder cannot
+//! be shared across serving threads. [`DecoderFactory`] closes that gap:
+//! the factory itself is `Send + Sync` and each server worker calls
+//! [`DecoderFactory::make`] **once at thread startup**, giving every
+//! worker its own engine-backed decoder (engine-per-worker).
 
 pub mod aq_lut;
 pub mod lsq;
@@ -11,6 +36,7 @@ pub mod pq;
 pub mod rq;
 
 use crate::tensor::Matrix;
+use anyhow::Result;
 
 /// Code array: n vectors x m code positions, values in [0, K).
 #[derive(Clone, Debug, PartialEq)]
@@ -72,9 +98,177 @@ pub trait VectorQuantizer {
     }
 }
 
+/// Stage-2 cost model: should a query build a joint LUT, or score
+/// candidates with direct dot products?
+///
+/// LUT: `steps·K²·d` multiplies up front, then ~1 flop per (candidate,
+/// step). Direct: `steps·d` multiplies per candidate. The LUT amortizes
+/// when `n_cands ≳ K²·d/(d−1)`. Every [`ApproxScorer`] consults this same
+/// function from [`ApproxScorer::use_lut`], so the per-query and batched
+/// execution paths make the same choice — and see the same float
+/// rounding — for any shortlist size.
+pub fn stage2_use_lut(n_cands: usize, n_steps: usize, k: usize, d: usize) -> bool {
+    if n_cands == 0 || n_steps == 0 {
+        return false;
+    }
+    let lut_cost = n_steps
+        .saturating_mul(k)
+        .saturating_mul(k)
+        .saturating_mul(d)
+        .saturating_add(n_cands.saturating_mul(n_steps));
+    let direct_cost = n_cands.saturating_mul(n_steps).saturating_mul(d);
+    lut_cost < direct_cost
+}
+
+/// An approximate distance scorer over a fixed code table — the
+/// pluggable interface of pipeline stages 1 and 2.
+///
+/// # Score contract
+///
+/// Implementations approximate squared L2 distance to their own
+/// reconstruction. With `lut` built from query `q` by
+/// [`lut_into`](Self::lut_into) and `t` any additive offset:
+///
+/// ```text
+/// score(lut, code, t) = t − 2⟨q, decode(code)⟩
+/// ```
+///
+/// so passing `t = ||decode(code)||²` (the cached [`norms`](Self::norms)
+/// entry) gives `score + ||q||² = ||q − decode(code)||²` — the constant
+/// `||q||²` is dropped because it never changes a per-query ranking.
+/// Linearity in `t` is part of the contract: the IVF pipeline passes
+/// `t = ||x̂||² + 2⟨centroid, x̂⟩` to fold the coarse term in for free.
+/// [`score_direct`](Self::score_direct) must equal
+/// `score(lut(q), code, t)` up to float tolerance (it may associate the
+/// dot products differently). The `tests/scorer_conformance.rs` property
+/// suite pins this contract for every in-tree implementation.
+///
+/// # Ordering contract
+///
+/// Scores are ranked under the **total `(score, id)` order** of
+/// [`crate::util::topk::Shortlist`] (`f32::total_cmp`, ties by id).
+/// Because that order is total, any scorer that satisfies the score
+/// contract is automatically *visit-order independent*: the batched
+/// engine may scan candidates bucket-grouped while the per-query path
+/// scans probe-ordered, and both keep the identical shortlist. This is
+/// what keeps `search` and `search_batch` result-identical for every
+/// `ApproxScorer` implementation — do not rank trait scores with a
+/// partial comparison.
+///
+/// Scorers are shared read-only across serving threads, hence the
+/// `Send + Sync` supertrait.
+pub trait ApproxScorer: Send + Sync {
+    /// Size of one flat per-query LUT, for batch buffer sizing.
+    fn lut_len(&self) -> usize;
+
+    /// Fill a pre-allocated `lut_len()` slice with the flat LUT for `q` —
+    /// the batch engine packs one slice per query into one contiguous
+    /// buffer.
+    fn lut_into(&self, q: &[f32], out: &mut [f32]);
+
+    /// Allocate and fill a fresh LUT for `q`.
+    fn lut(&self, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.lut_len()];
+        self.lut_into(q, &mut out);
+        out
+    }
+
+    /// Approximate distance score from a LUT (see the score contract).
+    ///
+    /// Preconditions (the pipeline upholds both, and implementations may
+    /// elide bounds checks on the strength of them — checked via
+    /// `debug_assert` in the in-tree scorers): `lut` was produced by
+    /// *this* scorer's [`lut_into`](Self::lut_into) (so `lut.len() ==
+    /// lut_len()`), and every value in `code` is a valid codeword index
+    /// for its position.
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32;
+
+    /// LUT-free scoring: `t − 2⟨q, decode(code)⟩` via direct dot
+    /// products. Used when [`use_lut`](Self::use_lut) says a per-query
+    /// LUT would not amortize over the candidate count.
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32;
+
+    /// The reconstruction whose distance the scores approximate.
+    fn decode(&self, codes: &Codes) -> Matrix;
+
+    /// Cached squared reconstruction norms for a code table — the
+    /// canonical third argument to [`score`](Self::score).
+    fn norms(&self, codes: &Codes) -> Vec<f32> {
+        let dec = ApproxScorer::decode(self, codes);
+        (0..codes.n).map(|i| crate::tensor::sqnorm(dec.row(i))).collect()
+    }
+
+    /// Should scoring `n_cands` candidates of dimension `d` build a LUT
+    /// ([`score`](Self::score)) or go direct
+    /// ([`score_direct`](Self::score_direct))? Both the per-query and the
+    /// batched path consult this, so the choice never diverges.
+    fn use_lut(&self, n_cands: usize, d: usize) -> bool {
+        let _ = (n_cands, d);
+        true
+    }
+}
+
+/// A batch decoder for the exact re-ranking stage (stage 3): reconstruct
+/// every row of a code table in one call. The batched engine invokes this
+/// at most once per batch, on the deduplicated union of all surviving
+/// shortlists. Decoding may fail (a PJRT-backed decoder can hit missing
+/// artifacts or a stubbed runtime); the serving workers fall back to the
+/// index's own infallible decoder in that case.
+pub trait StageDecoder {
+    /// Reconstruct all `codes.n` rows; returns an `[n, d]` matrix.
+    fn decode(&self, codes: &Codes) -> Result<Matrix>;
+
+    /// Short human-readable name for logs and bench tables.
+    fn name(&self) -> &'static str {
+        "decoder"
+    }
+}
+
+/// Builds one [`StageDecoder`] per serving thread.
+///
+/// PJRT clients are `Rc`-based and not `Send`, so an engine-backed
+/// decoder cannot be constructed once and shared. The factory is the
+/// `Send + Sync` half: the server clones it into every worker and each
+/// worker calls [`make`](Self::make) exactly once at thread startup,
+/// giving each worker a thread-local engine + codec (engine-per-worker).
+/// If `make` fails on a worker (e.g. the vendored stub `xla` crate
+/// cannot open a PJRT client), that worker serves with the index's own
+/// stage-3 decoder instead.
+pub trait DecoderFactory: Send + Sync {
+    /// Construct a fresh decoder owned by the calling thread.
+    fn make(&self) -> Result<Box<dyn StageDecoder>>;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cost_model_boundaries() {
+        // degenerate inputs never pick the LUT
+        assert!(!stage2_use_lut(0, 4, 8, 8));
+        assert!(!stage2_use_lut(100, 0, 8, 8));
+        // tiny shortlists cannot amortize K²·d LUT entries per step
+        assert!(!stage2_use_lut(4, 6, 256, 32));
+        // k=8, d=8, 6 steps: build 3072 flops vs 48/candidate direct —
+        // breakeven near |S| ≈ 73
+        assert!(!stage2_use_lut(64, 6, 8, 8));
+        assert!(stage2_use_lut(128, 6, 8, 8));
+        // larger codebooks push the breakeven far beyond the shortlist
+        assert!(!stage2_use_lut(128, 6, 64, 8));
+    }
+
+    #[test]
+    fn cost_model_monotone_in_candidates() {
+        // once the LUT pays off it keeps paying off as |S| grows
+        let mut prev = false;
+        for n in [1usize, 8, 32, 64, 128, 512, 4096] {
+            let now = stage2_use_lut(n, 6, 8, 8);
+            assert!(now || !prev, "LUT choice flapped at n={n}");
+            prev = now;
+        }
+        assert!(prev, "LUT must win for huge shortlists");
+    }
 
     #[test]
     fn codes_roundtrip_and_truncate() {

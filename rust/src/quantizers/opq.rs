@@ -2,7 +2,8 @@
 //! rotation R jointly with a PQ codebook by alternating (1) PQ training
 //! on rotated data and (2) orthogonal Procrustes for R.
 
-use super::{pq::Pq, Codes, VectorQuantizer};
+use super::pq::{Pq, PqScorer};
+use super::{ApproxScorer, Codes, VectorQuantizer};
 use crate::linalg::eig::procrustes;
 use crate::tensor::Matrix;
 
@@ -31,11 +32,56 @@ impl Opq {
         xs.matmul(&self.rotation)
     }
 
-    /// LUT for asymmetric search: rotate the query once, then PQ LUTs.
-    pub fn lut(&self, q: &[f32]) -> Vec<Vec<f32>> {
+    /// Flat LUT for asymmetric search (`lut[s * k + c]`, squared slice
+    /// distances): rotate the query once, then the PQ LUT.
+    pub fn lut(&self, q: &[f32]) -> Vec<f32> {
         let qm = Matrix::from_vec(1, q.len(), q.to_vec());
         let qr = self.rotate(&qm);
         self.pq.lut(qr.row(0))
+    }
+}
+
+/// Flat-LUT [`ApproxScorer`] adapter for [`Opq`]: rotate the query once
+/// per LUT build, then score exactly like [`PqScorer`] in rotated space.
+/// The contract holds in the *original* space because the rotation is
+/// orthogonal: `⟨qR, x̂_rot⟩ = ⟨q, x̂_rot Rᵀ⟩ = ⟨q, decode(code)⟩` and
+/// reconstruction norms are rotation-invariant.
+pub struct OpqScorer {
+    pub rotation: Matrix,
+    pub pq_scorer: PqScorer,
+}
+
+impl OpqScorer {
+    pub fn new(opq: Opq) -> OpqScorer {
+        OpqScorer { rotation: opq.rotation, pq_scorer: PqScorer(opq.pq) }
+    }
+
+    fn rotate_q(&self, q: &[f32]) -> Vec<f32> {
+        let qm = Matrix::from_vec(1, q.len(), q.to_vec());
+        qm.matmul(&self.rotation).data
+    }
+}
+
+impl ApproxScorer for OpqScorer {
+    fn lut_len(&self) -> usize {
+        self.pq_scorer.lut_len()
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        self.pq_scorer.lut_into(&self.rotate_q(q), out)
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        self.pq_scorer.score(lut, code, t)
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        self.pq_scorer.score_direct(&self.rotate_q(q), code, t)
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        // decode in rotated space, rotate back with Rᵀ (R orthogonal)
+        self.pq_scorer.0.decode(codes).matmul(&self.rotation.transpose())
     }
 }
 

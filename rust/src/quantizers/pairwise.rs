@@ -12,9 +12,10 @@
 //! at all. IVF integration RQ-quantizes the coarse centroid into extra
 //! virtual code positions that join the pair pool (Table S3's `~i`).
 
-use super::Codes;
+use super::{ApproxScorer, Codes, StageDecoder};
 use crate::tensor::{self, Matrix};
 use crate::util::pool;
+use anyhow::Result;
 
 /// One selected pair and its joint codebook.
 pub struct PairStep {
@@ -221,6 +222,8 @@ impl PairwiseDecoder {
     /// LUT distance score (constant ||q||^2 dropped).
     #[inline]
     pub fn score(&self, lut: &[f32], code: &[u32], norm: f32) -> f32 {
+        debug_assert_eq!(lut.len(), self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
         let kk = self.k * self.k;
         let mut ip = 0.0f32;
         for (s_idx, s) in self.steps.iter().enumerate() {
@@ -233,6 +236,57 @@ impl PairwiseDecoder {
     /// Per-step (pair, mse) trace — regenerates Table S3.
     pub fn trace(&self) -> Vec<(usize, usize, f64)> {
         self.steps.iter().map(|s| (s.i, s.j, s.mse)).collect()
+    }
+}
+
+/// Stage-2 scorer interface (the paper's default re-ranker). The direct
+/// path accumulates one dot product per pair step — float-identical to
+/// the historical in-line stage-2 loop of the search pipeline.
+impl ApproxScorer for PairwiseDecoder {
+    fn lut_len(&self) -> usize {
+        PairwiseDecoder::lut_len(self)
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        PairwiseDecoder::lut_into(self, q, out)
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        PairwiseDecoder::score(self, lut, code, t)
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        let mut ip = 0.0f32;
+        for s in &self.steps {
+            let joint = code[s.i] as usize * self.k + code[s.j] as usize;
+            ip += tensor::dot(q, s.codebook.row(joint));
+        }
+        t - 2.0 * ip
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        PairwiseDecoder::decode(self, codes)
+    }
+
+    fn norms(&self, codes: &Codes) -> Vec<f32> {
+        PairwiseDecoder::norms(self, codes)
+    }
+
+    fn use_lut(&self, n_cands: usize, d: usize) -> bool {
+        super::stage2_use_lut(n_cands, self.steps.len(), self.k, d)
+    }
+}
+
+/// Stage-3 interface: a pairwise decoder can also serve as the exact
+/// re-rank decoder over its own (extended) code table — the "fast mode"
+/// middle ground between LUT-only and a full neural decode.
+impl StageDecoder for PairwiseDecoder {
+    fn decode(&self, codes: &Codes) -> Result<Matrix> {
+        Ok(PairwiseDecoder::decode(self, codes))
+    }
+
+    fn name(&self) -> &'static str {
+        "pairwise"
     }
 }
 

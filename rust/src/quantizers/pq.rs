@@ -2,7 +2,7 @@
 //! sub-vectors, k-means each slice independently. The fastest baseline in
 //! Fig. 6 and the coarse substrate of the IVF-PQ pipeline.
 
-use super::{Codes, VectorQuantizer};
+use super::{ApproxScorer, Codes, VectorQuantizer};
 use crate::clustering::{kmeans, KMeansCfg};
 use crate::tensor::{self, Matrix};
 use crate::util::pool;
@@ -37,27 +37,95 @@ impl Pq {
         Pq { d, m, k, codebooks, splits }
     }
 
-    /// Asymmetric distance lookup tables for a query: `tables[s][c]` =
-    /// squared distance between the query's slice s and codeword c.
-    pub fn lut(&self, q: &[f32]) -> Vec<Vec<f32>> {
-        (0..self.m)
-            .map(|s| {
-                let (lo, hi) = (self.splits[s], self.splits[s + 1]);
-                let cb = &self.codebooks[s];
-                (0..cb.rows).map(|c| tensor::l2_sq(&q[lo..hi], cb.row(c))).collect()
-            })
-            .collect()
+    /// Asymmetric distance lookup table for a query, flat and
+    /// subspace-major: `lut[s * k + c]` = squared distance between the
+    /// query's slice `s` and codeword `c`. One contiguous allocation
+    /// (every subspace has exactly `k` codewords), so the inner scan loop
+    /// walks one cache-friendly buffer instead of `m` separate `Vec`s.
+    pub fn lut(&self, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m * self.k];
+        for s in 0..self.m {
+            let (lo, hi) = (self.splits[s], self.splits[s + 1]);
+            let cb = &self.codebooks[s];
+            for c in 0..self.k {
+                out[s * self.k + c] = tensor::l2_sq(&q[lo..hi], cb.row(c));
+            }
+        }
+        out
     }
 
-    /// Exact asymmetric distance from LUTs.
+    /// Exact asymmetric distance from a flat LUT (stride `k`). Indexing
+    /// stays checked here: unlike the scorer hot paths, `lut`, `code`
+    /// *and* the stride are all caller-supplied, so a mismatched `k`
+    /// must panic rather than read out of bounds.
     #[inline]
-    pub fn lut_distance(tables: &[Vec<f32>], code: &[u32]) -> f32 {
+    pub fn lut_distance(lut: &[f32], code: &[u32], k: usize) -> f32 {
         let mut acc = 0.0f32;
-        for (t, &c) in tables.iter().zip(code) {
-            acc += t[c as usize];
+        for (s, &c) in code.iter().enumerate() {
+            acc += lut[s * k + c as usize];
         }
         acc
     }
+}
+
+/// Flat-LUT [`ApproxScorer`] adapter for [`Pq`], so a product quantizer
+/// can slot into pipeline stage 1 (or 2) next to the additive decoders.
+///
+/// The trait's score contract is inner-product shaped
+/// (`t − 2⟨q, decode(code)⟩`), while `Pq::lut` stores squared slice
+/// distances — so the adapter builds its own LUT of per-subspace inner
+/// products `⟨q_s, c⟩`; summing over subspaces gives `⟨q, decode(code)⟩`
+/// exactly (subspaces are disjoint), which makes the PQ "approximate"
+/// score exact for its own reconstruction.
+pub struct PqScorer(pub Pq);
+
+impl ApproxScorer for PqScorer {
+    fn lut_len(&self) -> usize {
+        self.0.m * self.0.k
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.lut_len());
+        let pq = &self.0;
+        for s in 0..pq.m {
+            let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
+            let cb = &pq.codebooks[s];
+            for c in 0..pq.k {
+                out[s * pq.k + c] = tensor::dot(&q[lo..hi], cb.row(c));
+            }
+        }
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        // hot path: unchecked lookups under the trait's score
+        // preconditions (lut from self.lut_into, codes in [0, k))
+        debug_assert_eq!(lut.len(), self.lut_len());
+        debug_assert!(code.len() <= self.0.m && code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        let mut ip = 0.0f32;
+        for (s, &c) in code.iter().enumerate() {
+            ip += unsafe { *lut.get_unchecked(s * k + c as usize) };
+        }
+        t - 2.0 * ip
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        let pq = &self.0;
+        let mut ip = 0.0f32;
+        for (s, &c) in code.iter().enumerate() {
+            let (lo, hi) = (pq.splits[s], pq.splits[s + 1]);
+            ip += tensor::dot(&q[lo..hi], pq.codebooks[s].row(c as usize));
+        }
+        t - 2.0 * ip
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        self.0.decode(codes)
+    }
+
+    // default `use_lut` (always true): a PQ LUT costs only k·d flops to
+    // build — the subspaces partition the d dimensions — so it amortizes
+    // even for tiny shortlists.
 }
 
 impl VectorQuantizer for Pq {
@@ -151,11 +219,33 @@ mod tests {
         let codes = pq.encode(&xs);
         let dec = pq.decode(&codes);
         let q = xs.row(0).to_vec();
-        let tables = pq.lut(&q);
+        let lut = pq.lut(&q);
+        assert_eq!(lut.len(), pq.m * pq.k, "flat subspace-major layout");
         for i in 0..20 {
-            let lut_d = Pq::lut_distance(&tables, codes.row(i));
+            let lut_d = Pq::lut_distance(&lut, codes.row(i), pq.k);
             let exact = tensor::l2_sq(&q, dec.row(i));
             assert!((lut_d - exact).abs() < 1e-3, "{lut_d} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn scorer_adapter_matches_lut_distance_up_to_query_norm() {
+        // PqScorer follows the ApproxScorer contract (t − 2⟨q, x̂⟩): adding
+        // ||q||² must recover the exact flat-LUT distance
+        let xs = generate(Flavor::Deep, 120, 12, 13);
+        let pq = Pq::train(&xs, 3, 8, 14);
+        let codes = pq.encode(&xs);
+        let q = xs.row(1).to_vec();
+        let dist_lut = pq.lut(&q);
+        let k = pq.k;
+        let scorer = PqScorer(pq);
+        let norms = ApproxScorer::norms(&scorer, &codes);
+        let ip_lut = scorer.lut(&q);
+        let qn = tensor::sqnorm(&q);
+        for i in 0..30 {
+            let s = scorer.score(&ip_lut, codes.row(i), norms[i]) + qn;
+            let d = Pq::lut_distance(&dist_lut, codes.row(i), k);
+            assert!((s - d).abs() < 1e-3, "{s} vs {d}");
         }
     }
 

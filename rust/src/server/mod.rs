@@ -10,6 +10,21 @@
 //! co-probed inverted lists are scanned once per group and stage 3 runs
 //! one union decode — not one `search` call per request.
 //!
+//! # Engine-per-worker stage-3 decoding
+//!
+//! Every worker thread constructs its own stage-3 [`StageDecoder`] by
+//! calling [`DecoderFactory::make`] **once at thread startup**. The
+//! factory defaults to the reference decoder
+//! ([`ReferenceDecoderFactory`]); configuring
+//! [`ServerCfg::decoder_factory`] with a
+//! [`RuntimeDecoderFactory`](crate::qinco::RuntimeDecoderFactory) gives
+//! each worker a thread-local PJRT engine + codec — PJRT clients are
+//! `Rc`-based (not `Send`), so this per-thread construction is the only
+//! sound way to decode through XLA under concurrent load. If a worker's
+//! factory or decoder fails (e.g. the vendored stub `xla` crate), that
+//! worker degrades to the index's own infallible decoder; no request is
+//! ever dropped.
+//!
 //! The index is immutable after build, so workers share it via `Arc`
 //! with no locking on the hot path. Latency and throughput metrics are
 //! collected per request (the §B latency experiment and Fig. 6 QPS
@@ -23,12 +38,14 @@
 //! [`RouterError::Stopped`] instead of panicking.
 
 use crate::index::{BatchSearcher, QueryPlan, SearchIndex, SearchParams};
+use crate::qinco::ReferenceDecoderFactory;
+use crate::quantizers::{DecoderFactory, StageDecoder};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ServerCfg {
     pub workers: usize,
     /// max queries grouped into one dispatch unit
@@ -37,6 +54,22 @@ pub struct ServerCfg {
     pub batch_timeout: Duration,
     /// ingress queue capacity (backpressure: submit blocks when full)
     pub queue_cap: usize,
+    /// per-worker stage-3 decoder factory; `None` defaults to the
+    /// reference decoder. Each worker thread calls `make()` once at
+    /// startup (engine-per-worker — see the module docs).
+    pub decoder_factory: Option<Arc<dyn DecoderFactory>>,
+}
+
+impl std::fmt::Debug for ServerCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerCfg")
+            .field("workers", &self.workers)
+            .field("max_batch", &self.max_batch)
+            .field("batch_timeout", &self.batch_timeout)
+            .field("queue_cap", &self.queue_cap)
+            .field("decoder_factory", &self.decoder_factory.as_ref().map(|_| "custom"))
+            .finish()
+    }
 }
 
 impl Default for ServerCfg {
@@ -46,6 +79,7 @@ impl Default for ServerCfg {
             max_batch: 32,
             batch_timeout: Duration::from_micros(200),
             queue_cap: 1024,
+            decoder_factory: None,
         }
     }
 }
@@ -139,21 +173,42 @@ impl Router {
                 batcher_loop(in_rx, batch_tx, max_batch, timeout)
             }));
         }
-        // --- workers: each dispatches whole batches through the engine ---
-        for _w in 0..cfg.workers.max(1) {
+        // --- workers: each dispatches whole batches through the engine,
+        // with a stage-3 decoder built once per thread by the factory ---
+        let factory: Arc<dyn DecoderFactory> = cfg.decoder_factory.clone().unwrap_or_else(|| {
+            Arc::new(ReferenceDecoderFactory { params: index.params.clone() })
+        });
+        for w in 0..cfg.workers.max(1) {
             let rx = batch_rx.clone();
             let idx = index.clone();
             let metrics = metrics.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let batch = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
+            let factory = factory.clone();
+            handles.push(std::thread::spawn(move || {
+                // engine-per-worker: PJRT clients are Rc-based and not
+                // Send, so each thread constructs its own decoder. A
+                // failed factory (stub runtime, missing artifacts)
+                // degrades this worker to the index's shared decoder.
+                let mut local: Option<Box<dyn StageDecoder>> = match factory.make() {
+                    Ok(d) => Some(d),
+                    Err(e) => {
+                        eprintln!(
+                            "[server] worker {w}: decoder factory failed ({e}); \
+                             falling back to the index's stage-3 decoder"
+                        );
+                        None
+                    }
                 };
-                match batch {
-                    Ok(batch) => serve_batch(&idx, &metrics, batch),
-                    // the batcher exited and every queued batch has been
-                    // drained — nothing in flight can be lost
-                    Err(_) => return,
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match batch {
+                        Ok(batch) => serve_batch(&idx, &metrics, batch, &mut local),
+                        // the batcher exited and every queued batch has
+                        // been drained — nothing in flight can be lost
+                        Err(_) => return,
+                    }
                 }
             }));
         }
@@ -225,8 +280,20 @@ impl Router {
 
 /// Serve one dispatch unit: group requests by identical [`SearchParams`]
 /// and run each group through the batched engine in a single execute —
-/// one bucket-grouped scan and one union decode per group.
-fn serve_batch(idx: &SearchIndex, metrics: &MetricsInner, batch: Vec<Request>) {
+/// one bucket-grouped scan and one union decode per group. `decoder` is
+/// this worker's thread-local stage-3 decoder (engine-per-worker); when
+/// it is absent the index's own infallible decoder runs. A decode
+/// failure re-executes the group with the index decoder (every request
+/// still gets a reply) and then *drops* the local decoder — decoder
+/// failures are configuration errors (missing artifact, stubbed
+/// runtime), not transient, so the worker must not pay a doubled
+/// execute on every subsequent batch.
+fn serve_batch(
+    idx: &SearchIndex,
+    metrics: &MetricsInner,
+    batch: Vec<Request>,
+    decoder: &mut Option<Box<dyn StageDecoder>>,
+) {
     let searcher = BatchSearcher::new(idx);
     let mut done = vec![false; batch.len()];
     for s in 0..batch.len() {
@@ -241,7 +308,25 @@ fn serve_batch(idx: &SearchIndex, metrics: &MetricsInner, batch: Vec<Request>) {
         }
         let plans: Vec<QueryPlan> =
             members.iter().map(|&j| searcher.plan(&batch[j].query, &sp)).collect();
-        let results = searcher.execute(&plans, &sp);
+        let mut results = None;
+        let mut decoder_failed = false;
+        if let Some(d) = decoder.as_deref() {
+            match searcher.execute_with_decoder(&plans, &sp, d) {
+                Ok(r) => results = Some(r),
+                Err(e) => {
+                    decoder_failed = true;
+                    eprintln!(
+                        "[server] stage-3 decoder '{}' failed ({e}); this worker \
+                         serves with the index decoder from now on",
+                        d.name()
+                    );
+                }
+            }
+        }
+        if decoder_failed {
+            *decoder = None;
+        }
+        let results = results.unwrap_or_else(|| searcher.execute(&plans, &sp));
         for (&j, results_j) in members.iter().zip(results) {
             let req = &batch[j];
             let latency = req.t_submit.elapsed();

@@ -1,32 +1,72 @@
 //! The batched execution engine must be *result-identical* to per-query
-//! [`SearchIndex::search`] — same ids, same distances, same order — for
-//! any batch composition: random batch sizes, duplicated queries, and
-//! the degenerate knobs (`n_pairs = 0` skips stage 2, `n_final = 0`
-//! skips stage 3, `n_aq = 0` empties everything).
+//! [`SearchIndex::search`] — same ids, same scores, same order — for
+//! any batch composition (random batch sizes, duplicated queries, the
+//! degenerate knobs `n_pairs = 0` / `n_final = 0` / `n_aq = 0`) and for
+//! **every pipeline configuration**: the default AQ→pairwise→reference
+//! pipeline, pairwise-only fast mode (stage 3 disabled), a PQ stage-1
+//! scorer, and a stage-2-less pipeline.
 //!
 //! The index is built engine-free: parameters come from the in-repo
 //! `artifacts/manifest.json` test model and codes from the pure-Rust
 //! reference encoder, so this suite runs without any PJRT runtime.
 
 use qinco2::data::{generate, Flavor};
-use qinco2::index::{BatchSearcher, BuildCfg, SearchIndex, SearchParams};
+use qinco2::index::{
+    BatchSearcher, BuildCfg, PipelineConfig, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+};
 use qinco2::qinco::ParamStore;
 use qinco2::runtime::manifest::Manifest;
 use qinco2::util::prop::check;
 
-fn build_index(seed: u64, n_train: usize, n_db: usize) -> SearchIndex {
+/// The pipeline configurations under test, with short labels for
+/// failure messages.
+fn configs() -> Vec<(&'static str, PipelineConfig)> {
+    vec![
+        ("aq+pw+reference", PipelineConfig::default()),
+        (
+            "pairwise-only",
+            PipelineConfig {
+                stage1: Stage1Kind::Aq,
+                stage2: true,
+                stage3: Stage3Kind::Disabled,
+            },
+        ),
+        (
+            "pq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Pq { m: 4 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+        (
+            "no-stage2",
+            PipelineConfig {
+                stage1: Stage1Kind::Aq,
+                stage2: false,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+    ]
+}
+
+fn build_index(seed: u64, n_train: usize, n_db: usize, pipeline: PipelineConfig) -> SearchIndex {
     let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
     let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
     let train = generate(Flavor::Deep, n_train, spec.cfg.d, seed);
     let db = generate(Flavor::Deep, n_db, spec.cfg.d, seed ^ 1);
     let params = ParamStore::init(&spec, "test", &train, seed ^ 2);
-    let cfg = BuildCfg { k_ivf: 12, m_tilde: 1, fit_sample: 200, ..Default::default() };
+    let cfg =
+        BuildCfg { k_ivf: 12, m_tilde: 1, fit_sample: 200, pipeline, ..Default::default() };
     SearchIndex::build_reference(params, &train, &db, &cfg)
 }
 
 #[test]
-fn prop_batched_engine_equals_per_query_search() {
-    let index = build_index(41, 260, 220);
+fn prop_batched_engine_equals_per_query_search_for_every_pipeline() {
+    let indexes: Vec<(&str, SearchIndex)> = configs()
+        .into_iter()
+        .map(|(label, cfg)| (label, build_index(41, 260, 220, cfg)))
+        .collect();
     let queries = generate(Flavor::Deep, 48, 8, 77);
     check("batch-equivalence", 25, 60, |g| {
         let b = g.usize_in(1, 16);
@@ -41,20 +81,27 @@ fn prop_batched_engine_equals_per_query_search() {
             n_pairs,
             n_final,
         };
-        let searcher = BatchSearcher::new(&index);
-        let plans: Vec<_> =
-            rows.iter().map(|&r| searcher.plan(queries.row(r), &sp)).collect();
-        let batched = searcher.execute(&plans, &sp);
-        if batched.len() != rows.len() {
-            return Err(format!("{} results for {} plans", batched.len(), rows.len()));
-        }
-        for (slot, &r) in rows.iter().enumerate() {
-            let single = index.search(queries.row(r), &sp);
-            if batched[slot] != single {
+        for (label, index) in &indexes {
+            let searcher = BatchSearcher::new(index);
+            let plans: Vec<_> =
+                rows.iter().map(|&r| searcher.plan(queries.row(r), &sp)).collect();
+            let batched = searcher.execute(&plans, &sp);
+            if batched.len() != rows.len() {
                 return Err(format!(
-                    "query {r} (slot {slot}, sp {sp:?}): batched {:?} != single {:?}",
-                    batched[slot], single
+                    "[{label}] {} results for {} plans",
+                    batched.len(),
+                    rows.len()
                 ));
+            }
+            for (slot, &r) in rows.iter().enumerate() {
+                let single = index.search(queries.row(r), &sp);
+                if batched[slot] != single {
+                    return Err(format!(
+                        "[{label}] query {r} (slot {slot}, sp {sp:?}): batched {:?} != \
+                         single {:?}",
+                        batched[slot], single
+                    ));
+                }
             }
         }
         Ok(())
@@ -63,42 +110,87 @@ fn prop_batched_engine_equals_per_query_search() {
 
 #[test]
 fn degenerate_knobs_and_search_batch_chunking() {
-    let index = build_index(51, 240, 200);
-    let queries = generate(Flavor::Deep, 12, 8, 78);
-    for sp in [
-        // stage-2 and stage-3 disabled in every combination
-        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0 },
-        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 5 },
-        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 6, n_final: 0 },
-        // empty stage-1 shortlist
-        SearchParams { nprobe: 4, ef_search: 32, n_aq: 0, n_pairs: 6, n_final: 5 },
-        // budgets larger than the database
-        SearchParams { nprobe: 12, ef_search: 64, n_aq: 512, n_pairs: 512, n_final: 512 },
-    ] {
-        let via_batch = index.search_batch(&queries, &sp);
-        assert_eq!(via_batch.len(), queries.rows);
-        for i in 0..queries.rows {
-            let ids: Vec<u32> =
-                index.search(queries.row(i), &sp).into_iter().map(|(_, id)| id).collect();
-            assert_eq!(via_batch[i], ids, "sp {sp:?} row {i}");
+    for (label, cfg) in configs() {
+        let index = build_index(51, 240, 200, cfg);
+        let queries = generate(Flavor::Deep, 12, 8, 78);
+        for sp in [
+            // stage-2 and stage-3 disabled in every combination
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0 },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 5 },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 6, n_final: 0 },
+            // empty stage-1 shortlist
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 0, n_pairs: 6, n_final: 5 },
+            // budgets larger than the database
+            SearchParams { nprobe: 12, ef_search: 64, n_aq: 512, n_pairs: 512, n_final: 512 },
+        ] {
+            let via_batch = index.search_batch(&queries, &sp);
+            assert_eq!(via_batch.len(), queries.rows, "[{label}]");
+            for i in 0..queries.rows {
+                let single = index.search(queries.row(i), &sp);
+                assert_eq!(via_batch[i], single, "[{label}] sp {sp:?} row {i}");
+            }
         }
     }
 }
 
 #[test]
 fn batched_results_are_sorted_unique_and_in_range() {
-    let index = build_index(61, 240, 200);
-    let queries = generate(Flavor::Deep, 20, 8, 79);
-    let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 8 };
-    let searcher = BatchSearcher::new(&index);
-    for ranked in searcher.search(&queries, &sp) {
-        for w in ranked.windows(2) {
-            assert!(w[0].0 <= w[1].0, "results must be sorted by distance");
+    for (label, cfg) in configs() {
+        let index = build_index(61, 240, 200, cfg);
+        let queries = generate(Flavor::Deep, 20, 8, 79);
+        let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 8 };
+        let searcher = BatchSearcher::new(&index);
+        for ranked in searcher.search(&queries, &sp) {
+            for w in ranked.windows(2) {
+                assert!(w[0].0 <= w[1].0, "[{label}] results must be sorted by score");
+            }
+            let mut ids: Vec<u32> = ranked.iter().map(|&(_, id)| id).collect();
+            assert!(ids.iter().all(|&id| (id as usize) < index.db_len), "[{label}]");
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), ranked.len(), "[{label}] duplicate ids in one result list");
         }
-        let mut ids: Vec<u32> = ranked.iter().map(|&(_, id)| id).collect();
-        assert!(ids.iter().all(|&id| (id as usize) < index.db_len));
-        ids.sort_unstable();
-        ids.dedup();
-        assert_eq!(ids.len(), ranked.len(), "duplicate ids in one result list");
     }
+}
+
+#[test]
+fn pipeline_configs_are_actually_distinct() {
+    // the three headline configurations must not silently collapse into
+    // the same pipeline: spot-check their structural signatures
+    let reference = build_index(71, 240, 200, PipelineConfig::default());
+    assert!(reference.stage3_enabled);
+    assert!(reference.pipeline.stage2.is_some());
+    assert!(!reference.pairwise_trace.is_empty());
+    // the AQ default scans the QINCo2 codes directly — no duplicate table
+    assert!(reference.stage1_side_codes.is_none());
+    assert_eq!(reference.stage1_codes().m, reference.codes.m);
+
+    let pw_only = build_index(
+        71,
+        240,
+        200,
+        PipelineConfig { stage1: Stage1Kind::Aq, stage2: true, stage3: Stage3Kind::Disabled },
+    );
+    assert!(!pw_only.stage3_enabled);
+    let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 5 };
+    let q = generate(Flavor::Deep, 1, 8, 80);
+    // stage-2-final mode truncates the stage-2 ranking
+    let res = pw_only.search(q.row(0), &sp);
+    assert!(res.len() <= 5);
+
+    let pq1 = build_index(
+        71,
+        240,
+        200,
+        PipelineConfig {
+            stage1: Stage1Kind::Pq { m: 4 },
+            stage2: true,
+            stage3: Stage3Kind::Reference,
+        },
+    );
+    // PQ stage 1 scans its own 4-position table, not the QINCo2 codes
+    assert!(pq1.stage1_side_codes.is_some());
+    assert_eq!(pq1.stage1_codes().m, 4);
+    assert_ne!(pq1.stage1_codes().m, pq1.codes.m);
+    assert_eq!(pq1.pipeline.stage1.lut_len(), 4 * pq1.params.cfg.k);
 }

@@ -1,0 +1,180 @@
+//! Trait-conformance property suite for every in-tree [`ApproxScorer`]
+//! implementation: the unitary additive decoder (both fits), the
+//! pairwise decoder, and the PQ/OPQ flat-LUT adapters.
+//!
+//! The contract under test (see the trait docs in `quantizers/mod.rs`):
+//!
+//! * `score(lut(q), code, norms[i]) + ||q||² == ||q − decode(code_i)||²`
+//!   within float tolerance — the brute-force expansion of the
+//!   asymmetric distance;
+//! * `score` is *linear* in its additive-offset argument (the IVF
+//!   pipeline relies on this to fold the coarse term into the cache);
+//! * `score_direct` agrees with the LUT path within tolerance;
+//! * `lut` / `lut_into` / `lut_len` are consistent;
+//! * rankings are visit-order independent under the total (score, id)
+//!   order of `util::topk::Shortlist` — the invariant that keeps the
+//!   per-query and bucket-grouped batched paths result-identical for
+//!   any conforming scorer.
+
+use qinco2::quantizers::aq_lut::AdditiveDecoder;
+use qinco2::quantizers::opq::{Opq, OpqScorer};
+use qinco2::quantizers::pairwise::PairwiseDecoder;
+use qinco2::quantizers::pq::{Pq, PqScorer};
+use qinco2::quantizers::{ApproxScorer, Codes};
+use qinco2::tensor::{self, Matrix};
+use qinco2::util::prop::{check, Gen};
+use qinco2::util::topk::Shortlist;
+
+fn random_codes(g: &mut Gen, n: usize, m: usize, k: usize) -> Codes {
+    let data: Vec<u32> = (0..n * m).map(|_| g.rng.below(k) as u32).collect();
+    Codes::from_vec(n, m, data)
+}
+
+/// Run the full contract check for one scorer over one code table.
+fn check_contract(
+    name: &str,
+    scorer: &dyn ApproxScorer,
+    codes: &Codes,
+    q: &[f32],
+) -> Result<(), String> {
+    let decoded = scorer.decode(codes);
+    let norms = scorer.norms(codes);
+    if norms.len() != codes.n {
+        return Err(format!("{name}: norms() returned {} of {}", norms.len(), codes.n));
+    }
+    // lut / lut_into / lut_len consistency
+    let lut = scorer.lut(q);
+    if lut.len() != scorer.lut_len() {
+        return Err(format!("{name}: lut().len() {} != lut_len() {}", lut.len(), scorer.lut_len()));
+    }
+    let mut lut2 = vec![0.0f32; scorer.lut_len()];
+    scorer.lut_into(q, &mut lut2);
+    if lut != lut2 {
+        return Err(format!("{name}: lut() differs from lut_into()"));
+    }
+    let qn = tensor::sqnorm(q);
+    for i in 0..codes.n {
+        let code = codes.row(i);
+        // norms are the squared reconstruction norms
+        let want_norm = tensor::sqnorm(decoded.row(i));
+        if (norms[i] - want_norm).abs() > 1e-2 * (1.0 + want_norm.abs()) {
+            return Err(format!("{name}: norm[{i}] {} vs decode {}", norms[i], want_norm));
+        }
+        // score + ||q||² is the brute-force ||q − decode(code)||²
+        let s = scorer.score(&lut, code, norms[i]);
+        let exact = tensor::l2_sq(q, decoded.row(i));
+        if (s + qn - exact).abs() > 1e-2 * (1.0 + exact.abs()) {
+            return Err(format!("{name}: row {i} score {} vs exact {exact}", s + qn));
+        }
+        // linearity in the offset: score(.., t) − t is a constant of the
+        // (query, code) pair
+        let shifted = scorer.score(&lut, code, norms[i] + 3.25);
+        if ((shifted - s) - 3.25).abs() > 1e-3 {
+            return Err(format!("{name}: row {i} score not linear in the offset"));
+        }
+        // the direct path agrees with the LUT path
+        let sd = scorer.score_direct(q, code, norms[i]);
+        if (sd - s).abs() > 1e-2 * (1.0 + s.abs()) {
+            return Err(format!("{name}: row {i} direct {sd} vs lut {s}"));
+        }
+    }
+    // visit-order independence: the kept set under the total (score, id)
+    // order must not depend on scan order, even with ties
+    let scored: Vec<(f32, u32)> = (0..codes.n)
+        .map(|i| (scorer.score(&lut, codes.row(i), norms[i]), i as u32))
+        .collect();
+    let cap = 1 + codes.n / 3;
+    let mut fwd = Shortlist::new(cap);
+    let mut rev = Shortlist::new(cap);
+    for &(s, id) in &scored {
+        fwd.push(s, id);
+    }
+    for &(s, id) in scored.iter().rev() {
+        rev.push(s, id);
+    }
+    if fwd.into_sorted() != rev.into_sorted() {
+        return Err(format!("{name}: shortlist depends on candidate visit order"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_additive_decoder_conforms() {
+    check("conformance-additive", 20, 50, |g| {
+        let d = g.usize_in(2, 10);
+        let k = g.usize_in(2, 8);
+        let m = g.usize_in(1, 5);
+        let n = g.usize_in(5, 50);
+        let xs = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+        let codes = random_codes(g, n, m, k);
+        let q = g.vec_f32(d, -1.0, 1.0);
+        let rq_fit = AdditiveDecoder::fit_rq(&xs, &codes, k);
+        check_contract("additive(fit_rq)", &rq_fit, &codes, &q)?;
+        let aq_fit = AdditiveDecoder::fit_aq(&xs, &codes, k)
+            .map_err(|e| format!("fit_aq failed: {e}"))?;
+        check_contract("additive(fit_aq)", &aq_fit, &codes, &q)
+    });
+}
+
+#[test]
+fn prop_pairwise_decoder_conforms() {
+    check("conformance-pairwise", 15, 40, |g| {
+        let d = g.usize_in(2, 8);
+        let k = g.usize_in(2, 6);
+        let m = g.usize_in(2, 5);
+        let n = g.usize_in(10, 40);
+        let xs = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+        let codes = random_codes(g, n, m, k);
+        let q = g.vec_f32(d, -1.0, 1.0);
+        let pw = PairwiseDecoder::train(&xs, &codes, k, g.usize_in(1, 2 * m));
+        check_contract("pairwise", &pw, &codes, &q)
+    });
+}
+
+#[test]
+fn prop_pq_and_opq_adapters_conform() {
+    check("conformance-pq-opq", 15, 40, |g| {
+        // PQ wants d divisible into m sensible slices; keep d ≥ m
+        let m = g.usize_in(1, 4);
+        let d = m * g.usize_in(1, 3) + g.usize_in(0, 2).min(m.saturating_sub(1));
+        let d = d.max(m);
+        let k = g.usize_in(2, 8);
+        let n = g.usize_in(20, 60);
+        let xs = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+        let q = g.vec_f32(d, -1.0, 1.0);
+        let pq = Pq::train(&xs, m, k, g.rng.below(1000) as u64);
+        let codes = random_codes(g, n, m, k);
+        check_contract("pq-adapter", &PqScorer(pq), &codes, &q)?;
+        let opq = Opq::train(&xs, m, k, 2, g.rng.below(1000) as u64);
+        check_contract("opq-adapter", &OpqScorer::new(opq), &codes, &q)
+    });
+}
+
+#[test]
+fn cost_model_choice_never_changes_the_candidate_ranking() {
+    // whichever path use_lut() picks, LUT and direct scores must rank
+    // candidates identically (up to float-tolerance ties) — this is what
+    // makes the cost model a pure performance knob
+    check("conformance-use-lut", 10, 30, |g| {
+        let d = g.usize_in(2, 8);
+        let k = g.usize_in(2, 5);
+        let m = g.usize_in(2, 4);
+        let n = g.usize_in(10, 30);
+        let xs = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+        let codes = random_codes(g, n, m, k);
+        let q = g.vec_f32(d, -1.0, 1.0);
+        let pw = PairwiseDecoder::train(&xs, &codes, k, m);
+        let norms = pw.norms(&codes);
+        let lut = ApproxScorer::lut(&pw, &q);
+        // the model must answer deterministically for a fixed shape
+        assert_eq!(pw.use_lut(n, d), pw.use_lut(n, d));
+        for i in 0..n {
+            let a = ApproxScorer::score(&pw, &lut, codes.row(i), norms[i]);
+            let b = pw.score_direct(&q, codes.row(i), norms[i]);
+            if (a - b).abs() > 1e-2 * (1.0 + a.abs()) {
+                return Err(format!("row {i}: lut {a} vs direct {b}"));
+            }
+        }
+        Ok(())
+    });
+}
