@@ -24,7 +24,8 @@ mod common;
 
 use qinco2::data::{self, Flavor};
 use qinco2::index::{
-    BuildCfg, PipelineConfig, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+    BatchSearcher, BuildCfg, PipelineConfig, QueryPlan, SearchIndex, SearchParams, Stage1Kind,
+    Stage3Kind,
 };
 use qinco2::metrics::{ids_only, recall_at};
 use qinco2::qinco::ParamStore;
@@ -67,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     );
     common::hr(72);
     for (nprobe, n_aq, n_pairs) in [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)] {
-        let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10 };
+        let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10, ..Default::default() };
 
         // --- (a) per-query loop, threaded across all cores ---
         let mut per_query: Vec<Vec<u32>> = vec![Vec::new(); ds.queries.rows];
@@ -84,7 +85,7 @@ fn main() -> anyhow::Result<()> {
 
         // --- (b) batched engine, same thread count ---
         let t0 = Instant::now();
-        let batched = ids_only(&index.search_batch(&ds.queries, &sp));
+        let batched = ids_only(&index.search_batch(&ds.queries, &sp)?);
         let qps_batch = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
         assert_eq!(batched, per_query, "batched engine must be result-identical");
 
@@ -131,6 +132,67 @@ fn main() -> anyhow::Result<()> {
         );
         common::hr(72);
     }
+    // ---- stage-1 scan kernels: scalar vs block vs block+parallel ----
+    // The scan is the engine's dominant cost at scale: every probed
+    // inverted-list row is scored against every interested query. Three
+    // kernels over identical plans — shortlists are asserted equal, so
+    // recall is equal by construction and scan QPS is the only free
+    // variable:
+    //   scalar scan      one ApproxScorer::score call per (row, member)
+    //   block scan       score_block: one call per row per ≤8-member
+    //                    block; the code row is read once and the LUT
+    //                    gathers vectorize across accumulator lanes
+    //   block+parallel   block scan with the bucket groups split across
+    //                    all cores (--batch-threads)
+    println!();
+    common::banner(
+        "STAGE-1 SCAN KERNEL — multi-query block scoring + group-parallel scan",
+        "bit-identical shortlists; scan-stage QPS",
+    );
+    println!(
+        "{:<18} {:>7} {:>6} {:>10} {:>9}",
+        "kernel", "nprobe", "naq", "scanQPS", "speedup"
+    );
+    common::hr(56);
+    let searcher = BatchSearcher::new(&index);
+    for (nprobe, n_aq) in [(4usize, 64usize), (8, 128), (16, 256)] {
+        let sp = SearchParams { nprobe, ef_search: 64, n_aq, ..Default::default() };
+        let plans: Vec<QueryPlan> =
+            (0..ds.queries.rows).map(|i| searcher.plan(ds.queries.row(i), &sp)).collect();
+        let reference = searcher.scan_stage1(&plans, &sp, 1, false);
+        let scan_qps = |threads: usize, block: bool| {
+            // warm-up + equality pin, then best-of-3 timing
+            assert_eq!(
+                searcher.scan_stage1(&plans, &sp, threads, block),
+                reference,
+                "kernels must stay bit-identical"
+            );
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let lists = searcher.scan_stage1(&plans, &sp, threads, block);
+                best = best.min(t0.elapsed().as_secs_f64());
+                std::hint::black_box(lists);
+            }
+            ds.queries.rows as f64 / best
+        };
+        let qps_scalar = scan_qps(1, false);
+        let qps_block = scan_qps(1, true);
+        let qps_par = scan_qps(nthreads, true);
+        for (label, qps) in [
+            ("scalar scan", qps_scalar),
+            ("block scan", qps_block),
+            ("block+parallel", qps_par),
+        ] {
+            println!(
+                "{label:<18} {nprobe:>7} {n_aq:>6} {qps:>10.0} {:>8.2}x",
+                qps / qps_scalar
+            );
+            csv.push(format!("kernel:{label},{nprobe},{n_aq},,{qps:.0},"));
+        }
+        common::hr(56);
+    }
+
     // ---- pipeline matrix: cost of each stage swap (trait API) ----
     // Three configurations over the same data, swept across knob rows so
     // QPS can be compared at matched recall: the row where a cheaper
@@ -178,9 +240,9 @@ fn main() -> anyhow::Result<()> {
         let pidx = SearchIndex::build_reference(params2, &ds.train, &ds.database, &bcfg);
         for (nprobe, n_aq, n_pairs) in [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)]
         {
-            let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10 };
+            let sp = SearchParams { nprobe, ef_search: 64, n_aq, n_pairs, n_final: 10, ..Default::default() };
             let t0 = Instant::now();
-            let res = ids_only(&pidx.search_batch(&ds.queries, &sp));
+            let res = ids_only(&pidx.search_batch(&ds.queries, &sp)?);
             let qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
             // the trait pipeline must stay batch/per-query identical
             let spot = pidx

@@ -190,7 +190,7 @@ fn main() -> anyhow::Result<()> {
                 (16, 64, 256, 64),
                 (64, 128, 1024, 128),
             ] {
-                let sp = SearchParams { nprobe, ef_search: ef, n_aq, n_pairs, n_final: 10 };
+                let sp = SearchParams { nprobe, ef_search: ef, n_aq, n_pairs, n_final: 10, ..Default::default() };
                 let (qps, results) = qps_of(ds.queries.rows, |i| {
                     index.search(ds.queries.row(i), &sp).into_iter().map(|(_, id)| id).collect()
                 });
@@ -205,7 +205,7 @@ fn main() -> anyhow::Result<()> {
                 // equal and the rows compare dispatch cost alone
                 let t0 = Instant::now();
                 let results_b =
-                    qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp));
+                    qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp)?);
                 let qps_b = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
                 assert_eq!(results_b, results, "batched dispatch diverged from per-query");
                 let label_b = format!("{label}+batch");
@@ -217,7 +217,7 @@ fn main() -> anyhow::Result<()> {
 
             // ---- §B: single-query latency at a matched operating point ----
             if model == "qinco2_xs" {
-                let sp = SearchParams { nprobe: 16, ef_search: 64, n_aq: 256, n_pairs: 64, n_final: 10 };
+                let sp = SearchParams { nprobe: 16, ef_search: 64, n_aq: 256, n_pairs: 64, n_final: 10, ..Default::default() };
                 let mut rng = Rng::new(1);
                 let mut lat_q = Vec::new();
                 for _ in 0..50 {

@@ -126,7 +126,7 @@ fn main() -> anyhow::Result<()> {
             println!();
             // sanity: the index still searches
             let sp = SearchParams::default();
-            let res = qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp));
+            let res = qinco2::metrics::ids_only(&index.search_batch(&ds.queries, &sp)?);
             println!("  pipeline R@10 with defaults: {}",
                      common::pct(recall_at(&res, &ds.ground_truth, 10)));
         }

@@ -58,12 +58,28 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--name` as an unsigned integer, or `default` when absent.
+    /// A present-but-malformed value is a **hard error** naming the flag
+    /// (silently falling back would e.g. run `--stage1-m abc` with m=4
+    /// and skew results).
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an unsigned integer, got {v:?}")),
+        }
     }
 
-    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Parse `--name` as a float, or `default` when absent. Like
+    /// [`Self::usize_or`], a malformed value is a hard error.
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().with_context(|| format!("--{name} expects a number, got {v:?}"))
+            }
+        }
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -86,24 +102,42 @@ fn common_setup(args: &Args) -> Result<(Engine, String, Flavor, exp::Scale)> {
         );
     }
     let flavor = flavor_of(args)?;
-    let mut scale = exp::Scale::from_env();
-    scale.n_train = args.usize_or("n-train", scale.n_train);
-    scale.n_db = args.usize_or("n-db", scale.n_db);
-    scale.n_query = args.usize_or("n-query", scale.n_query);
-    scale.epochs = args.usize_or("epochs", scale.epochs);
+    let scale = scale_of(args)?;
     Ok((engine, model, flavor, scale))
 }
 
-fn train_cfg(args: &Args, scale: &exp::Scale) -> TrainCfg {
-    TrainCfg {
+fn scale_of(args: &Args) -> Result<exp::Scale> {
+    let mut scale = exp::Scale::from_env();
+    scale.n_train = args.usize_or("n-train", scale.n_train)?;
+    scale.n_db = args.usize_or("n-db", scale.n_db)?;
+    scale.n_query = args.usize_or("n-query", scale.n_query)?;
+    scale.epochs = args.usize_or("epochs", scale.epochs)?;
+    Ok(scale)
+}
+
+fn train_cfg(args: &Args, scale: &exp::Scale) -> Result<TrainCfg> {
+    Ok(TrainCfg {
         epochs: scale.epochs,
-        lr_max: args.f32_or("lr", 8e-4),
+        lr_max: args.f32_or("lr", 8e-4)?,
         optimizer: args.str_or("optimizer", "adamw"),
-        a: args.usize_or("a", 8),
-        b: args.usize_or("b", 8),
-        seed: args.usize_or("seed", 0xA11CE) as u64,
+        a: args.usize_or("a", 8)?,
+        b: args.usize_or("b", 8)?,
+        seed: args.usize_or("seed", 0xA11CE)? as u64,
         log_every: 1,
-    }
+    })
+}
+
+/// Search-time knobs shared by `search` and `serve` (the Fig. 6 axes
+/// plus the engine's intra-batch `--batch-threads` parallelism).
+fn search_params(args: &Args) -> Result<SearchParams> {
+    Ok(SearchParams {
+        nprobe: args.usize_or("nprobe", 8)?,
+        ef_search: args.usize_or("ef", 64)?,
+        n_aq: args.usize_or("n-aq", 256)?,
+        n_pairs: args.usize_or("n-pairs", 32)?,
+        n_final: args.usize_or("topk", 10)?,
+        batch_threads: args.usize_or("batch-threads", 1)?,
+    })
 }
 
 pub fn run(argv: Vec<String>) -> Result<()> {
@@ -151,14 +185,24 @@ COMMON FLAGS
 
 SEARCH FLAGS
   --k-ivf 64  --nprobe 8  --ef 64  --n-aq 256  --n-pairs 32  --topk 10
+  --encoder runtime|reference
+                         database encoder: "reference" builds the index with
+                         the pure-Rust greedy encoder and untrained params —
+                         no PJRT runtime needed (CI smoke path)
 PIPELINE FLAGS (search + serve)
-  --stage1 aq|pq|opq     stage-1 scorer (default aq; pq/opq use --stage1-m subspaces)
-  --stage1-m 4           sub-quantizers for a pq/opq stage 1
+  --stage1 aq|pq|opq|lsq|rq
+                         stage-1 scorer (default aq; the others scan their
+                         own table with --stage1-m subspaces/steps)
+  --stage1-m 4           sub-quantizers/steps for a pq/opq/lsq/rq stage 1
   --no-stage2            skip the pairwise re-ranker
   --stage3 reference|none|runtime
                          exact re-rank decoder; "none" returns the stage-2
                          order; "runtime" (serve only) gives each worker a
                          thread-local PJRT engine via DecoderFactory
+  --batch-threads 1      intra-batch parallelism of one batched execute:
+                         the stage-1 bucket-group scan (and per-query
+                         stage-2/3 loops) split across N threads, results
+                         bit-identical for every N
 SERVE FLAGS
   --workers N  --queries N
 "#;
@@ -184,7 +228,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (mut engine, model, flavor, scale) = common_setup(args)?;
     let spec = engine.manifest.model(&model)?.clone();
     let ds = exp::dataset(flavor, spec.cfg.d, &scale);
-    let cfg = train_cfg(args, &scale);
+    let cfg = train_cfg(args, &scale)?;
     let mut params = ParamStore::init(&spec, &model, &ds.train, cfg.seed);
     let trainer = Trainer::new(&engine, &model, cfg)?;
     let stats = trainer.train(&mut engine, &mut params, &ds.train)?;
@@ -216,7 +260,7 @@ fn load_or_train(
         let spec = engine.manifest.model(model)?.clone();
         return ParamStore::load(std::path::Path::new(ckpt), &spec, model);
     }
-    let cfg = train_cfg(args, scale);
+    let cfg = train_cfg(args, scale)?;
     exp::trained_model(engine, model, flavor.name(), train, &cfg)
 }
 
@@ -225,7 +269,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let spec = engine.manifest.model(&model)?.clone();
     let ds = exp::dataset(flavor, spec.cfg.d, &scale);
     let params = load_or_train(&mut engine, args, &model, flavor, &scale, &ds.train)?;
-    let (a, b) = (args.usize_or("a", 16), args.usize_or("b", 16));
+    let (a, b) = (args.usize_or("a", 16)?, args.usize_or("b", 16)?);
     let codec = Codec::new(&engine, &model, a, b)?;
     let ev = exp::eval_compression(&mut engine, &codec, &params, &ds.database, &ds.queries, &ds.ground_truth)?;
     println!(
@@ -244,7 +288,7 @@ fn cmd_encode(args: &Args) -> Result<()> {
     let spec = engine.manifest.model(&model)?.clone();
     let ds = exp::dataset(flavor, spec.cfg.d, &scale);
     let params = load_or_train(&mut engine, args, &model, flavor, &scale, &ds.train)?;
-    let (a, b) = (args.usize_or("a", 16), args.usize_or("b", 16));
+    let (a, b) = (args.usize_or("a", 16)?, args.usize_or("b", 16)?);
     let codec = Codec::new(&engine, &model, a, b)?;
     let t0 = std::time::Instant::now();
     let (codes, _, errs) = codec.encode(&mut engine, &params, &ds.database)?;
@@ -273,7 +317,7 @@ fn cmd_encode(args: &Args) -> Result<()> {
 fn pipeline_of(args: &Args) -> Result<PipelineConfig> {
     PipelineConfig::from_flags(
         &args.str_or("stage1", "aq"),
-        args.usize_or("stage1-m", 4),
+        args.usize_or("stage1-m", 4)?,
         !args.flag("no-stage2"),
         &args.str_or("stage3", "reference"),
     )
@@ -289,34 +333,68 @@ fn build_index(
     let spec = engine.manifest.model(model)?.clone();
     let ds = exp::dataset(flavor, spec.cfg.d, scale);
     let bcfg = BuildCfg {
-        k_ivf: args.usize_or("k-ivf", 64),
-        m_tilde: args.usize_or("m-tilde", 2),
+        k_ivf: args.usize_or("k-ivf", 64)?,
+        m_tilde: args.usize_or("m-tilde", 2)?,
         pipeline: pipeline_of(args)?,
         ..Default::default()
     };
     // the fine quantizer is trained on IVF residuals (Fig. 3 pipeline)
     let ivf = crate::index::ivf::Ivf::build(&ds.train, &ds.train, bcfg.k_ivf, bcfg.seed);
     let residuals = ivf.residuals(&ds.train);
-    let mut cfg = train_cfg(args, scale);
+    let mut cfg = train_cfg(args, scale)?;
     cfg.seed ^= 0x1F; // distinct cache key from the raw-data model
     let params = exp::trained_model(engine, model, &format!("{}_ivfres", flavor.name()), &residuals, &cfg)?;
-    let codec = Codec::new(engine, model, args.usize_or("a", cfg.a), args.usize_or("b", cfg.b))?;
+    let codec = Codec::new(engine, model, args.usize_or("a", cfg.a)?, args.usize_or("b", cfg.b)?)?;
     let index = SearchIndex::build(engine, &codec, params, &ds.train, &ds.database, &bcfg)?;
     Ok((index, ds))
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
-    let (mut engine, model, flavor, scale) = common_setup(args)?;
-    let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
-    let sp = SearchParams {
-        nprobe: args.usize_or("nprobe", 8),
-        ef_search: args.usize_or("ef", 64),
-        n_aq: args.usize_or("n-aq", 256),
-        n_pairs: args.usize_or("n-pairs", 32),
-        n_final: args.usize_or("topk", 10),
+/// Engine-free index build for `--encoder reference`: model spec from
+/// the manifest, freshly initialized parameters, database codes from the
+/// pure-Rust greedy reference encoder. No training, no PJRT runtime —
+/// recall is that of an untrained model, but every pipeline/engine knob
+/// is exercised end-to-end (this is the CI smoke path).
+fn build_index_reference(
+    args: &Args,
+    model: &str,
+    flavor: Flavor,
+) -> Result<(SearchIndex, crate::data::Dataset)> {
+    let manifest =
+        crate::runtime::manifest::Manifest::load(&exp::artifacts_dir().join("manifest.json"))?;
+    let spec = manifest.model(model)?.clone();
+    let scale = scale_of(args)?;
+    let ds = exp::dataset(flavor, spec.cfg.d, &scale);
+    let params = ParamStore::init(&spec, model, &ds.train, args.usize_or("seed", 0xA11CE)? as u64);
+    let bcfg = BuildCfg {
+        k_ivf: args.usize_or("k-ivf", 64)?,
+        m_tilde: args.usize_or("m-tilde", 2)?,
+        pipeline: pipeline_of(args)?,
+        ..Default::default()
     };
+    Ok((SearchIndex::build_reference(params, &ds.train, &ds.database, &bcfg), ds))
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    // --encoder reference: engine-free path (manifest spec + pure-Rust
+    // greedy encoder) — runs without any PJRT runtime or HLO artifacts
+    // (the CI smoke test exercises the whole pipeline through it)
+    let (index, ds, model, flavor) = match args.str_or("encoder", "runtime").as_str() {
+        "reference" => {
+            let model = args.str_or("model", "qinco2_xs");
+            let flavor = flavor_of(args)?;
+            let (index, ds) = build_index_reference(args, &model, flavor)?;
+            (index, ds, model, flavor)
+        }
+        "runtime" => {
+            let (mut engine, model, flavor, scale) = common_setup(args)?;
+            let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
+            (index, ds, model, flavor)
+        }
+        other => bail!("unknown encoder {other:?} (expected runtime|reference)"),
+    };
+    let sp = search_params(args)?;
     let t0 = std::time::Instant::now();
-    let results = index.search_batch(&ds.queries, &sp);
+    let results = index.search_batch(&ds.queries, &sp)?;
     let secs = t0.elapsed().as_secs_f64();
     let (r1, r10, r100) =
         crate::metrics::recall_triple(&crate::metrics::ids_only(&results), &ds.ground_truth);
@@ -335,19 +413,19 @@ fn cmd_search(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let (mut engine, model, flavor, scale) = common_setup(args)?;
     let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
-    let workers = args.usize_or("workers", crate::util::pool::default_threads());
+    let workers = args.usize_or("workers", crate::util::pool::default_threads())?;
     // --stage3 runtime: hand every worker thread its own PJRT engine +
     // codec through the factory (engine-per-worker; see server docs).
     // Workers fall back to the reference decoder if the runtime is
     // unavailable (e.g. the vendored stub xla crate).
     let decoder_factory: Option<Arc<dyn crate::quantizers::DecoderFactory>> =
         if args.str_or("stage3", "reference") == "runtime" {
-            let cfg = train_cfg(args, &scale);
+            let cfg = train_cfg(args, &scale)?;
             Some(Arc::new(RuntimeDecoderFactory {
                 artifacts_dir: exp::artifacts_dir(),
                 model: model.clone(),
-                a: args.usize_or("a", cfg.a),
-                b: args.usize_or("b", cfg.b),
+                a: args.usize_or("a", cfg.a)?,
+                b: args.usize_or("b", cfg.b)?,
                 params: index.params.clone(),
             }))
         } else {
@@ -357,14 +435,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Arc::new(index),
         ServerCfg { workers, decoder_factory, ..Default::default() },
     );
-    let sp = SearchParams {
-        nprobe: args.usize_or("nprobe", 8),
-        ef_search: args.usize_or("ef", 64),
-        n_aq: args.usize_or("n-aq", 256),
-        n_pairs: args.usize_or("n-pairs", 32),
-        n_final: args.usize_or("topk", 10),
-    };
-    let n = args.usize_or("queries", ds.queries.rows);
+    // --batch-threads > 1 rides along in each request's SearchParams:
+    // workers split a big dispatched group's bucket scan across threads
+    let sp = search_params(args)?;
+    let n = args.usize_or("queries", ds.queries.rows)?;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n);
     for i in 0..n {
@@ -396,10 +470,30 @@ mod tests {
             ["pos1", "--a", "5", "--flag", "--b", "x", "pos2"].iter().map(|s| s.to_string()).collect();
         let a = Args::parse(&argv);
         assert_eq!(a.positional, vec!["pos1", "pos2"]);
-        assert_eq!(a.usize_or("a", 0), 5);
+        assert_eq!(a.usize_or("a", 0).unwrap(), 5);
         assert!(a.flag("flag"));
         assert_eq!(a.str_or("b", ""), "x");
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn malformed_numeric_flags_are_hard_errors_naming_the_flag() {
+        // regression: `--stage1-m abc` used to silently run with m=4
+        let argv: Vec<String> = ["--stage1-m", "abc", "--lr", "fast", "--nprobe", "8"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        let err = a.usize_or("stage1-m", 4).unwrap_err().to_string();
+        assert!(err.contains("stage1-m") && err.contains("abc"), "{err}");
+        let err = a.f32_or("lr", 8e-4).unwrap_err().to_string();
+        assert!(err.contains("lr") && err.contains("fast"), "{err}");
+        // well-formed and absent flags still parse
+        assert_eq!(a.usize_or("nprobe", 1).unwrap(), 8);
+        assert_eq!(a.usize_or("absent", 3).unwrap(), 3);
+        // a valueless `--flag` treated as numeric is malformed, not 0
+        let b = Args::parse(&["--batch-threads".to_string()]);
+        assert!(b.usize_or("batch-threads", 1).is_err());
     }
 
     #[test]

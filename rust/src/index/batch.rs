@@ -12,11 +12,16 @@
 //!      [`ApproxScorer`](crate::quantizers::ApproxScorer) the
 //!      pipeline's stage 1 is) are packed into one flat cache-contiguous
 //!      buffer; queries are grouped by probed bucket so each co-probed
-//!      inverted list is scanned *once per batch* — per database vector,
-//!      its code row is read once and scored against every interested
-//!      query's LUT slice. Shortlists are bounded binary max-heaps with a
-//!      total (score, id) order, so the scan order change does not change
-//!      results.
+//!      inverted list is scanned *once per batch*. Within a group the
+//!      members are split into blocks of up to
+//!      [`SCORE_BLOCK`](crate::quantizers::SCORE_BLOCK) queries and each
+//!      code row is scored against the whole block in one
+//!      [`score_block`](crate::quantizers::ApproxScorer::score_block)
+//!      call — the code row is read once and the LUT gathers vectorize
+//!      across the block's accumulator lanes instead of serializing per
+//!      query. Shortlists are bounded binary max-heaps with a total
+//!      (score, id) order, so neither the scan-order change nor the
+//!      block kernel changes results.
 //!   3. **Stage 2**: per-query re-scoring through the shared
 //!      (crate-private) `SearchIndex::stage2_rescore` — a per-query joint
 //!      LUT or direct dots, chosen by the scorer's
@@ -24,22 +29,39 @@
 //!   4. **Stage 3**: ONE decode over the union of all surviving
 //!      shortlists (deduplicated across queries), then per-query exact
 //!      distances. The decoder is pluggable: [`BatchSearcher::execute`]
-//!      uses the index's own [`StageDecoder`] (the infallible reference
-//!      decoder), while [`BatchSearcher::execute_with_decoder`] accepts
-//!      any `&dyn StageDecoder` — this is how server workers route the
+//!      uses the index's own [`StageDecoder`], while
+//!      [`BatchSearcher::execute_with_decoder`] accepts any
+//!      `&dyn StageDecoder` — this is how server workers route the
 //!      union through their thread-local
 //!      [`RuntimeDecoder`](crate::qinco::RuntimeDecoder) (one padded XLA
-//!      dispatch per batch, engine-per-worker).
+//!      dispatch per batch, engine-per-worker). Either way a decode
+//!      failure surfaces as an `Err`, never a panic inside the engine.
 //!
-//! The engine is deliberately single-threaded per call: the serving
-//! router parallelizes across batches/workers, and
-//! [`SearchIndex::search_batch`] chunks a query matrix across threads.
+//! # Intra-batch parallelism
+//!
+//! One execute call is no longer pinned to a single thread:
+//! [`SearchParams::batch_threads`] splits the bucket groups of the
+//! stage-1 scan across the scoped thread pool
+//! ([`par_map_into`](crate::util::pool::par_map_into) over per-thread
+//! partials; each thread scans a contiguous chunk of groups into its own
+//! per-query shortlists, which are then merged under the total
+//! (score, id) order), and runs the per-query stage-2/stage-3 loops
+//! across the same thread count. Because
+//! every (query, candidate) pair is scored exactly once with identical
+//! floats and the shortlist order is total, results are bit-identical
+//! for **every** thread count — the default `batch_threads = 1` keeps
+//! the historical behavior where the serving router parallelizes across
+//! batches/workers and [`SearchIndex::search_batch`] chunks a query
+//! matrix across threads; raise it when one large batch would otherwise
+//! execute on a single worker thread.
+//!
 //! Every path is result-identical to [`SearchIndex::search`] for every
-//! pipeline configuration (pinned by the `batch_equivalence` property
-//! suite).
+//! pipeline configuration and thread count (pinned by the
+//! `batch_equivalence` property suite).
 
 use super::pipeline::{gather_codes, SearchIndex, SearchParams};
-use crate::quantizers::StageDecoder;
+use crate::quantizers::{StageDecoder, SCORE_BLOCK};
+use crate::util::pool;
 use crate::util::topk::Shortlist;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -77,14 +99,16 @@ impl<'a> BatchSearcher<'a> {
 
     /// Execute a batch of plans with the index's own stage-3 decoder.
     /// Returns ranked (score, id) lists, one per plan, identical to
-    /// [`SearchIndex::search`] per query.
-    ///
-    /// Panics if the index-held decoder fails; the built-in decoders are
-    /// infallible (fallible per-thread runtime decoders go through
-    /// [`Self::execute_with_decoder`], whose errors the caller handles).
-    pub fn execute(&self, plans: &[QueryPlan], sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
+    /// [`SearchIndex::search`] per query. The built-in index decoders
+    /// are infallible in practice, but a failure still surfaces as an
+    /// `Err` for the caller to handle (the per-request serving path
+    /// additionally has its own fallback).
+    pub fn execute(
+        &self,
+        plans: &[QueryPlan],
+        sp: &SearchParams,
+    ) -> Result<Vec<Vec<(f32, u32)>>> {
         self.execute_with_decoder(plans, sp, self.index.pipeline.stage3.as_ref())
-            .expect("index-held stage-3 decoder failed")
     }
 
     /// Execute with a caller-supplied stage-3 decoder. The decoder is
@@ -104,44 +128,29 @@ impl<'a> BatchSearcher<'a> {
         if plans.is_empty() {
             return Ok(Vec::new());
         }
+        let threads = idx.batch_threads(sp);
 
-        // ---- stage 1: flat LUT pack + bucket-grouped scan ----
-        let scorer = idx.pipeline.stage1.as_ref();
-        let stride = scorer.lut_len();
-        let mut luts = vec![0.0f32; plans.len() * stride];
-        for (qi, plan) in plans.iter().enumerate() {
-            scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
-        }
-        // bucket → [(query, probe distance)]: every co-probed inverted
-        // list is scanned once for the whole batch
-        let mut groups: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
-        for (qi, plan) in plans.iter().enumerate() {
-            for &(probe_d, bucket) in &plan.probes {
-                groups.entry(bucket).or_default().push((qi as u32, probe_d));
-            }
-        }
-        let mut shortlists: Vec<Shortlist> =
-            plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect();
-        let s1_codes = idx.stage1_codes();
-        for (&bucket, members) in &groups {
-            for &id in &idx.ivf.lists[bucket as usize] {
-                let i = id as usize;
-                let code = s1_codes.row(i);
-                let term = idx.stage1_terms[i];
-                for &(qi, probe_d) in members {
-                    let qi = qi as usize;
-                    let lut = &luts[qi * stride..(qi + 1) * stride];
-                    shortlists[qi].push(probe_d + scorer.score(lut, code, term), id);
-                }
-            }
-        }
+        // ---- stage 1: flat LUT pack + blocked bucket-grouped scan ----
+        let shortlists = self.scan_shortlists(plans, sp, threads, true);
 
         // ---- stage 2: per-query re-scoring ----
-        let stage2: Vec<Vec<(f32, u32)>> = shortlists
-            .into_iter()
-            .zip(plans)
-            .map(|(sl, plan)| idx.stage2_rescore(&plan.query, sl.into_sorted(), sp))
-            .collect();
+        let sorted: Vec<Vec<(f32, u32)>> =
+            shortlists.into_iter().map(|sl| sl.into_sorted()).collect();
+        let stage2: Vec<Vec<(f32, u32)>> = if threads > 1 && plans.len() > 1 {
+            let mut slots: Vec<(Vec<(f32, u32)>, Vec<(f32, u32)>)> =
+                sorted.into_iter().map(|s| (s, Vec::new())).collect();
+            pool::par_map_into(&mut slots, threads, |qi, slot| {
+                let stage1 = std::mem::take(&mut slot.0);
+                slot.1 = idx.stage2_rescore(&plans[qi].query, stage1, sp);
+            });
+            slots.into_iter().map(|(_, rescored)| rescored).collect()
+        } else {
+            sorted
+                .into_iter()
+                .zip(plans)
+                .map(|(sl, plan)| idx.stage2_rescore(&plan.query, sl, sp))
+                .collect()
+        };
         if sp.n_final == 0 {
             return Ok(stage2);
         }
@@ -171,14 +180,148 @@ impl<'a> BatchSearcher<'a> {
         }
         let ids: Vec<usize> = union.keys().map(|&id| id as usize).collect();
         let dec = decoder.decode(&gather_codes(&idx.codes, &ids))?;
-        Ok(stage2
+        let rerank_one = |qi: usize, list: &[(f32, u32)]| {
+            let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
+            idx.exact_rerank(&plans[qi].query, list, &dec, &rows, sp.n_final)
+        };
+        if threads > 1 && plans.len() > 1 {
+            let mut out: Vec<Vec<(f32, u32)>> = vec![Vec::new(); plans.len()];
+            pool::par_map_into(&mut out, threads, |qi, slot| {
+                *slot = rerank_one(qi, &stage2[qi]);
+            });
+            Ok(out)
+        } else {
+            Ok(stage2
+                .iter()
+                .enumerate()
+                .map(|(qi, list)| rerank_one(qi, list))
+                .collect())
+        }
+    }
+
+    /// Stage-1 only: pack the per-query LUTs and run the bucket-grouped
+    /// scan, returning each plan's stage-1 shortlist in ascending
+    /// (score, id) order. `block` selects the multi-query
+    /// [`score_block`](crate::quantizers::ApproxScorer::score_block)
+    /// kernel vs the scalar per-member `score` loop and `threads` the
+    /// bucket-group parallelism — every combination returns bit-identical
+    /// lists; the knobs exist so `bench_batch_qps` can measure the
+    /// kernels against each other.
+    pub fn scan_stage1(
+        &self,
+        plans: &[QueryPlan],
+        sp: &SearchParams,
+        threads: usize,
+        block: bool,
+    ) -> Vec<Vec<(f32, u32)>> {
+        self.scan_shortlists(plans, sp, threads, block)
             .into_iter()
-            .zip(plans)
-            .map(|(list, plan)| {
-                let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
-                idx.exact_rerank(&plan.query, &list, &dec, &rows, sp.n_final)
-            })
-            .collect())
+            .map(|sl| sl.into_sorted())
+            .collect()
+    }
+
+    /// The stage-1 scan over bucket groups: one bounded shortlist per
+    /// plan. See [`Self::scan_stage1`] for the `threads`/`block` knobs.
+    fn scan_shortlists(
+        &self,
+        plans: &[QueryPlan],
+        sp: &SearchParams,
+        threads: usize,
+        block: bool,
+    ) -> Vec<Shortlist> {
+        let idx = self.index;
+        let scorer = idx.pipeline.stage1.as_ref();
+        let stride = scorer.lut_len();
+        let mut luts = vec![0.0f32; plans.len() * stride];
+        for (qi, plan) in plans.iter().enumerate() {
+            scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
+        }
+        // bucket → [(query, probe distance)]: every co-probed inverted
+        // list is scanned once for the whole batch
+        let mut grouped: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+        for (qi, plan) in plans.iter().enumerate() {
+            for &(probe_d, bucket) in &plan.probes {
+                grouped.entry(bucket).or_default().push((qi as u32, probe_d));
+            }
+        }
+        let groups: Vec<(u32, Vec<(u32, f32)>)> = grouped.into_iter().collect();
+        let s1_codes = idx.stage1_codes();
+
+        // scan groups[lo..hi] into `shortlists` (one slot per plan)
+        let scan_range = |lo: usize, hi: usize, shortlists: &mut [Shortlist]| {
+            for (bucket, members) in &groups[lo..hi] {
+                let list = &idx.ivf.lists[*bucket as usize];
+                if block {
+                    // block fast path: one score_block call scores a code
+                    // row for up to SCORE_BLOCK co-probed queries
+                    let mut mq = [0u32; SCORE_BLOCK];
+                    let mut scores = [0.0f32; SCORE_BLOCK];
+                    for chunk in members.chunks(SCORE_BLOCK) {
+                        for (l, &(qi, _)) in chunk.iter().enumerate() {
+                            mq[l] = qi;
+                        }
+                        for &id in list {
+                            let i = id as usize;
+                            scorer.score_block(
+                                &luts,
+                                stride,
+                                &mq[..chunk.len()],
+                                s1_codes.row(i),
+                                idx.stage1_terms[i],
+                                &mut scores[..chunk.len()],
+                            );
+                            for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
+                                shortlists[qi as usize].push(probe_d + scores[l], id);
+                            }
+                        }
+                    }
+                } else {
+                    // scalar reference path (bench comparisons only)
+                    for &id in list {
+                        let i = id as usize;
+                        let code = s1_codes.row(i);
+                        let term = idx.stage1_terms[i];
+                        for &(qi, probe_d) in members {
+                            let lut = &luts[qi as usize * stride..][..stride];
+                            shortlists[qi as usize]
+                                .push(probe_d + scorer.score(lut, code, term), id);
+                        }
+                    }
+                }
+            }
+        };
+
+        let ngroups = groups.len();
+        let mut shortlists: Vec<Shortlist> =
+            plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect();
+        let threads = threads.min(ngroups).max(1);
+        if threads <= 1 {
+            scan_range(0, ngroups, &mut shortlists);
+            return shortlists;
+        }
+        // group-parallel scan: per-thread partial shortlists over
+        // contiguous chunks of bucket groups, merged afterwards. Every
+        // (query, candidate) pair still scores exactly once, and the
+        // merge pushes under the same total (score, id) order, so the
+        // result is bit-identical to the serial scan.
+        let chunk = ngroups.div_ceil(threads);
+        let nchunks = ngroups.div_ceil(chunk);
+        let mut partials: Vec<Vec<Shortlist>> = (0..nchunks)
+            .map(|_| plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect())
+            .collect();
+        // one scoped thread per group chunk, each owning one partial
+        // slot (disjoint &mut via par_map_into — no aliasing possible)
+        pool::par_map_into(&mut partials, nchunks, |t, part| {
+            scan_range(t * chunk, ((t + 1) * chunk).min(ngroups), part);
+        });
+        for part in partials {
+            for (sl, partial) in shortlists.iter_mut().zip(part) {
+                for (s, id) in partial.into_sorted() {
+                    sl.push(s, id);
+                }
+            }
+        }
+        shortlists
     }
 
     /// Plan + execute a whole query matrix in one batch.
@@ -186,7 +329,7 @@ impl<'a> BatchSearcher<'a> {
         &self,
         queries: &crate::tensor::Matrix,
         sp: &SearchParams,
-    ) -> Vec<Vec<(f32, u32)>> {
+    ) -> Result<Vec<Vec<(f32, u32)>>> {
         let plans: Vec<QueryPlan> =
             (0..queries.rows).map(|i| self.plan(queries.row(i), sp)).collect();
         self.execute(&plans, sp)

@@ -52,21 +52,24 @@
 //! * [`SearchIndex::search`] — one query at a time.
 //! * [`super::batch::BatchSearcher`] — the batched engine: per-batch
 //!   flat LUT packs, bucket-grouped inverted-list scans (each co-probed
-//!   list is read once per batch), and a single union decode for
-//!   stage 3. Result-identical to `search` for *every* pipeline
-//!   configuration — both paths share the crate-private
-//!   `stage2_rescore` / `exact_rerank` helpers, the
-//!   [`ApproxScorer::use_lut`] cost model, and the total (score, id)
-//!   shortlist order of [`Shortlist`] (pinned by `batch_equivalence.rs`
-//!   across all configurations).
+//!   list is read once per batch, each code row scored against a block
+//!   of co-probed queries via [`ApproxScorer::score_block`], bucket
+//!   groups optionally split across [`SearchParams::batch_threads`]
+//!   threads), and a single union decode for stage 3. Result-identical
+//!   to `search` for *every* pipeline configuration and thread count —
+//!   both paths share the crate-private `stage2_rescore` /
+//!   `exact_rerank` helpers, the [`ApproxScorer::use_lut`] cost model,
+//!   and the total (score, id) shortlist order of [`Shortlist`] (pinned
+//!   by `batch_equivalence.rs` across all configurations).
 
 use super::ivf::Ivf;
 use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder};
 use crate::quantizers::aq_lut::AdditiveDecoder;
+use crate::quantizers::lsq::{Lsq, LsqScorer};
 use crate::quantizers::opq::{Opq, OpqScorer};
 use crate::quantizers::pairwise::{append_positions, PairwiseDecoder};
 use crate::quantizers::pq::{Pq, PqScorer};
-use crate::quantizers::rq::Rq;
+use crate::quantizers::rq::{Rq, RqScorer};
 use crate::quantizers::{ApproxScorer, Codes, StageDecoder, VectorQuantizer};
 use crate::runtime::Engine;
 use crate::tensor::{self, Matrix};
@@ -89,11 +92,27 @@ pub struct SearchParams {
     /// built with stage 3 disabled, the stage-2 order is truncated to
     /// `n_final` instead)
     pub n_final: usize,
+    /// intra-batch parallelism of one batched execute: the stage-1
+    /// bucket-group scan (and the per-query stage-2/3 loops) split
+    /// across this many threads, with per-thread shortlists merged
+    /// under the total (score, id) order — results stay bit-identical
+    /// for every thread count (pinned by `batch_equivalence`).
+    /// `1` = single-threaded per call (default: the serving router
+    /// parallelizes across workers instead); `0` = inherit the index's
+    /// [`BuildCfg::batch_threads`] default. CLI: `--batch-threads`.
+    pub batch_threads: usize,
 }
 
 impl Default for SearchParams {
     fn default() -> Self {
-        SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 }
+        SearchParams {
+            nprobe: 8,
+            ef_search: 64,
+            n_aq: 256,
+            n_pairs: 32,
+            n_final: 10,
+            batch_threads: 1,
+        }
     }
 }
 
@@ -108,6 +127,12 @@ pub enum Stage1Kind {
     Pq { m: usize },
     /// OPQ: learned rotation + PQ.
     Opq { m: usize, iters: usize },
+    /// LSQ additive quantizer trained on the IVF residuals, scanning its
+    /// own ICM-encoded `m`-position table (`k` follows the model).
+    Lsq { m: usize },
+    /// Plain residual quantizer (greedy encode), scanning its own
+    /// `m`-position table — the cheapest additive baseline.
+    Rq { m: usize },
 }
 
 /// Which [`StageDecoder`] the index holds for stage 3.
@@ -139,11 +164,12 @@ impl Default for PipelineConfig {
 }
 
 impl PipelineConfig {
-    /// Parse CLI-level flags: `stage1 ∈ {aq, pq, opq}` (`stage1_m`
-    /// sub-quantizers for pq/opq), `stage3 ∈ {reference, runtime, none}`.
-    /// `"runtime"` builds a reference-decoding index — the runtime path
-    /// is selected per worker thread at serve time through a
-    /// `DecoderFactory`, never baked into the (thread-shared) index.
+    /// Parse CLI-level flags: `stage1 ∈ {aq, pq, opq, lsq, rq}`
+    /// (`stage1_m` sub-quantizers/steps for everything but aq),
+    /// `stage3 ∈ {reference, runtime, none}`. `"runtime"` builds a
+    /// reference-decoding index — the runtime path is selected per
+    /// worker thread at serve time through a `DecoderFactory`, never
+    /// baked into the (thread-shared) index.
     pub fn from_flags(
         stage1: &str,
         stage1_m: usize,
@@ -152,17 +178,18 @@ impl PipelineConfig {
     ) -> Result<PipelineConfig> {
         let s1 = match stage1 {
             "aq" => Stage1Kind::Aq,
-            "pq" | "opq" => {
+            "pq" | "opq" | "lsq" | "rq" => {
                 if stage1_m == 0 {
                     bail!("--stage1-m must be >= 1 for a {stage1} stage 1");
                 }
-                if stage1 == "pq" {
-                    Stage1Kind::Pq { m: stage1_m }
-                } else {
-                    Stage1Kind::Opq { m: stage1_m, iters: 4 }
+                match stage1 {
+                    "pq" => Stage1Kind::Pq { m: stage1_m },
+                    "opq" => Stage1Kind::Opq { m: stage1_m, iters: 4 },
+                    "lsq" => Stage1Kind::Lsq { m: stage1_m },
+                    _ => Stage1Kind::Rq { m: stage1_m },
                 }
             }
-            other => bail!("unknown stage-1 scorer {other:?} (expected aq|pq|opq)"),
+            other => bail!("unknown stage-1 scorer {other:?} (expected aq|pq|opq|lsq|rq)"),
         };
         let s3 = match stage3 {
             "reference" | "runtime" => Stage3Kind::Reference,
@@ -197,6 +224,11 @@ pub struct BuildCfg {
     pub seed: u64,
     /// which scorer/decoder runs each stage
     pub pipeline: PipelineConfig,
+    /// default intra-batch thread count for searches against this index,
+    /// used when [`SearchParams::batch_threads`] is `0` (inherit).
+    /// `0` here means "all cores" (`pool::default_threads`); the
+    /// out-of-the-box default is `1` (single-threaded per execute).
+    pub batch_threads: usize,
 }
 
 impl Default for BuildCfg {
@@ -208,6 +240,7 @@ impl Default for BuildCfg {
             fit_sample: 20_000,
             seed: 0x5EA2C4,
             pipeline: PipelineConfig::default(),
+            batch_threads: 1,
         }
     }
 }
@@ -237,6 +270,9 @@ pub struct SearchIndex {
     /// per-step MSE trace of the pairwise fit (Table S3; empty when
     /// stage 2 is off)
     pub pairwise_trace: Vec<(usize, usize, f64)>,
+    /// resolved [`BuildCfg::batch_threads`] — the intra-batch thread
+    /// count a search with `SearchParams::batch_threads == 0` inherits
+    pub default_batch_threads: usize,
     pub db_len: usize,
 }
 
@@ -367,6 +403,16 @@ impl SearchIndex {
                     let s1_codes = opq.encode(residuals);
                     (Box::new(OpqScorer::new(opq)), Some(s1_codes))
                 }
+                Stage1Kind::Lsq { m: m_s1 } => {
+                    let lsq = Lsq::train(&fit_res, *m_s1, k, 2, cfg.seed ^ 0x15D1);
+                    let s1_codes = lsq.encode(residuals);
+                    (Box::new(LsqScorer(lsq)), Some(s1_codes))
+                }
+                Stage1Kind::Rq { m: m_s1 } => {
+                    let rq = Rq::train(&fit_res, *m_s1, k, 1, cfg.seed ^ 0x4217);
+                    let s1_codes = rq.encode(residuals);
+                    (Box::new(RqScorer(rq)), Some(s1_codes))
+                }
             };
         // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ from the stage-1 decode
         let s1_dec = stage1.decode(stage1_side_codes.as_ref().unwrap_or(&codes));
@@ -431,8 +477,20 @@ impl SearchIndex {
             stage2_norms,
             stage3_enabled,
             pairwise_trace,
+            default_batch_threads: if cfg.batch_threads == 0 {
+                crate::util::pool::default_threads()
+            } else {
+                cfg.batch_threads
+            },
             db_len: db_rows,
         }
+    }
+
+    /// Resolve the effective intra-batch thread count for one batched
+    /// execute: `sp.batch_threads`, or the index default when `0`.
+    pub fn batch_threads(&self, sp: &SearchParams) -> usize {
+        let t = if sp.batch_threads == 0 { self.default_batch_threads } else { sp.batch_threads };
+        t.max(1)
     }
 
     /// Full pipeline search for one query. Returns ranked (score, id) —
@@ -552,16 +610,26 @@ impl SearchIndex {
     /// shape per query as [`Self::search`], so batched and per-query
     /// callers handle one result type. Runs the batched engine over
     /// per-thread chunks of the query set — result-identical to calling
-    /// [`Self::search`] per row.
-    pub fn search_batch(&self, queries: &Matrix, sp: &SearchParams) -> Vec<Vec<(f32, u32)>> {
+    /// [`Self::search`] per row. With `sp.batch_threads > 1` each chunk
+    /// additionally splits its bucket-group scan across that many
+    /// threads (the outer chunk count shrinks so total thread use stays
+    /// near the core count). A failing stage-3 decoder surfaces as an
+    /// `Err` instead of panicking inside the engine.
+    pub fn search_batch(
+        &self,
+        queries: &Matrix,
+        sp: &SearchParams,
+    ) -> Result<Vec<Vec<(f32, u32)>>> {
         let n = queries.rows;
         if n == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
-        let nthreads = crate::util::pool::default_threads().max(1);
+        let inner = self.batch_threads(sp);
+        let nthreads = (crate::util::pool::default_threads() / inner).max(1);
         let chunk = n.div_ceil(nthreads);
         let nchunks = n.div_ceil(chunk);
-        let mut per_chunk: Vec<Vec<Vec<(f32, u32)>>> = vec![Vec::new(); nchunks];
+        let mut per_chunk: Vec<Result<Vec<Vec<(f32, u32)>>>> =
+            (0..nchunks).map(|_| Ok(Vec::new())).collect();
         crate::util::pool::par_map_into(&mut per_chunk, nchunks, |ci, slot| {
             let lo = ci * chunk;
             let hi = ((ci + 1) * chunk).min(n);
@@ -570,7 +638,11 @@ impl SearchIndex {
                 (lo..hi).map(|i| searcher.plan(queries.row(i), sp)).collect();
             *slot = searcher.execute(&plans, sp);
         });
-        per_chunk.into_iter().flatten().collect()
+        let mut out = Vec::with_capacity(n);
+        for chunk_res in per_chunk {
+            out.extend(chunk_res?);
+        }
+        Ok(out)
     }
 
     /// The code table stage 1 scans: the side table when the scorer owns

@@ -45,9 +45,14 @@
 //!   time), and
 //! - the batched engine [`index::batch`] — per-batch flat LUT packs,
 //!   bucket-grouped inverted-list scans (each co-probed list is read
-//!   once per batch), per-query stage-2 joint LUTs chosen by the
-//!   [`index::stage2_use_lut`] cost model, and a single union decode for
-//!   stage 3. The [`server`] router forms dynamic batches and dispatches
+//!   once per batch, each code row scored against up to 8 co-probed
+//!   queries in one multi-query
+//!   [`quantizers::ApproxScorer::score_block`] kernel call, with the
+//!   bucket groups optionally split across threads —
+//!   `SearchParams::batch_threads`), per-query stage-2 joint LUTs chosen
+//!   by the [`index::stage2_use_lut`] cost model, and a single union
+//!   decode for stage 3. The [`server`] router forms dynamic batches and
+//!   dispatches
 //!   them whole through this engine; [`index::SearchIndex::search_batch`]
 //!   and `search` return the same `Vec<(score, id)>` shape per query,
 //!   ranked under the total (score, id) order of [`util::topk`].

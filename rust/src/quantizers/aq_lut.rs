@@ -161,6 +161,28 @@ impl ApproxScorer for AdditiveDecoder {
         AdditiveDecoder::score(self, lut, code, t)
     }
 
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(stride, AdditiveDecoder::lut_len(self));
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
+        let k = self.k;
+        super::score_block_lanes(
+            luts,
+            stride,
+            members,
+            || code.iter().enumerate().map(move |(p, &c)| p * k + c as usize),
+            term,
+            out,
+        );
+    }
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let mut ip = 0.0f32;
         for (p, &c) in code.iter().enumerate() {

@@ -3,7 +3,7 @@
 //! re-estimation and (2) ICM encoding sweeps with annealed random
 //! restarts. The strongest classical baseline in Table 3.
 
-use super::{aq_lut::AdditiveDecoder, rq::Rq, Codes, VectorQuantizer};
+use super::{aq_lut::AdditiveDecoder, rq::Rq, ApproxScorer, Codes, VectorQuantizer};
 use crate::tensor::{self, Matrix};
 use crate::util::{pool, prng::Rng};
 
@@ -112,6 +112,68 @@ fn rq_like_encode(lsq: &Lsq, xs: &Matrix) -> Codes {
         }
     }
     codes
+}
+
+/// Flat-LUT [`ApproxScorer`] adapter for [`Lsq`], completing the baseline
+/// scorer matrix (ROADMAP): LSQ codebooks are additive like RQ's, so the
+/// unitary position-major LUT is exact for the LSQ reconstruction. Shares
+/// the additive-family layout and kernels; scans the LSQ's own (ICM-
+/// encoded) code table as a pipeline stage 1
+/// ([`crate::index::Stage1Kind::Lsq`]).
+pub struct LsqScorer(pub Lsq);
+
+impl ApproxScorer for LsqScorer {
+    fn lut_len(&self) -> usize {
+        self.0.m * self.0.k
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        super::additive_lut_into(&self.0.codebooks, self.0.k, q, out)
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        debug_assert_eq!(lut.len(), self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.0.k));
+        super::additive_flat_score(self.0.k, lut, code, t)
+    }
+
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(stride, self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        super::score_block_lanes(
+            luts,
+            stride,
+            members,
+            || code.iter().enumerate().map(move |(p, &c)| p * k + c as usize),
+            term,
+            out,
+        );
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        let mut ip = 0.0f32;
+        for (p, &c) in code.iter().enumerate() {
+            ip += tensor::dot(q, self.0.codebooks[p].row(c as usize));
+        }
+        t - 2.0 * ip
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        VectorQuantizer::decode(&self.0, codes)
+    }
+
+    fn use_lut(&self, n_cands: usize, d: usize) -> bool {
+        super::stage2_use_lut(n_cands, self.0.m, self.0.k, d)
+    }
 }
 
 impl VectorQuantizer for Lsq {

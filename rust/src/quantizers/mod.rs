@@ -120,6 +120,91 @@ pub fn stage2_use_lut(n_cands: usize, n_steps: usize, k: usize, d: usize) -> boo
     lut_cost < direct_cost
 }
 
+/// Queries scored per [`ApproxScorer::score_block`] lane pass — the
+/// accumulator width of the multi-query kernels. The batch engine
+/// splits a bucket group's co-probed queries into blocks of this size.
+pub const SCORE_BLOCK: usize = 8;
+
+/// Shared lane-parallel kernel behind the [`ApproxScorer::score_block`]
+/// overrides: score one code row against up to [`SCORE_BLOCK`] member
+/// queries per pass. `offsets` yields the LUT entry offsets the code row
+/// selects (the same sequence the scalar `score` walks — position-major
+/// `p·k + c` for the additive family, `s·k² + joint` for the pairwise
+/// family); the member base offsets act as a virtual transpose of the
+/// flat LUT pack: for each offset the kernel reads that entry from every
+/// member's LUT slice into independent accumulator lanes, so the adds
+/// vectorize across members instead of serializing per query. Each lane
+/// accumulates in exactly the scalar order and finishes with the same
+/// `t − 2·ip` expression, keeping block scores bit-identical to
+/// [`ApproxScorer::score`].
+#[inline]
+pub(crate) fn score_block_lanes<I: Iterator<Item = usize>>(
+    luts: &[f32],
+    stride: usize,
+    members: &[u32],
+    offsets: impl Fn() -> I,
+    term: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(members.len(), out.len());
+    debug_assert!(members
+        .iter()
+        .all(|&qi| (qi as usize + 1) * stride <= luts.len()));
+    for (mchunk, ochunk) in members.chunks(SCORE_BLOCK).zip(out.chunks_mut(SCORE_BLOCK)) {
+        let mut base = [0usize; SCORE_BLOCK];
+        for (l, &qi) in mchunk.iter().enumerate() {
+            base[l] = qi as usize * stride;
+        }
+        let mut acc = [0.0f32; SCORE_BLOCK];
+        if mchunk.len() == SCORE_BLOCK {
+            // full block: fixed-width lanes, unrolled + vectorized
+            for off in offsets() {
+                for l in 0..SCORE_BLOCK {
+                    acc[l] += unsafe { *luts.get_unchecked(base[l] + off) };
+                }
+            }
+        } else {
+            for off in offsets() {
+                for l in 0..mchunk.len() {
+                    acc[l] += unsafe { *luts.get_unchecked(base[l] + off) };
+                }
+            }
+        }
+        for (o, &a) in ochunk.iter_mut().zip(&acc) {
+            *o = term - 2.0 * a;
+        }
+    }
+}
+
+/// Flat position-major LUT fill shared by the additive scorer family
+/// (`AdditiveDecoder` and the LSQ/RQ adapters): `out[p·k + c] = ⟨q,
+/// codebooks[p][c]⟩` with stride `k` per position.
+pub(crate) fn additive_lut_into(
+    codebooks: &[crate::tensor::Matrix],
+    k: usize,
+    q: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), codebooks.len() * k);
+    for (p, cb) in codebooks.iter().enumerate() {
+        for c in 0..k {
+            out[p * k + c] = crate::tensor::dot(q, cb.row(c));
+        }
+    }
+}
+
+/// Flat position-major LUT score shared by the additive scorer family:
+/// `t − 2·Σ_p lut[p·k + code_p]`. Unchecked lookups under the trait's
+/// score preconditions (callers `debug_assert` them).
+#[inline]
+pub(crate) fn additive_flat_score(k: usize, lut: &[f32], code: &[u32], t: f32) -> f32 {
+    let mut ip = 0.0f32;
+    for (p, &c) in code.iter().enumerate() {
+        ip += unsafe { *lut.get_unchecked(p * k + c as usize) };
+    }
+    t - 2.0 * ip
+}
+
 /// An approximate distance scorer over a fixed code table — the
 /// pluggable interface of pipeline stages 1 and 2.
 ///
@@ -182,6 +267,39 @@ pub trait ApproxScorer: Send + Sync {
     /// lut_len()`), and every value in `code` is a valid codeword index
     /// for its position.
     fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32;
+
+    /// Multi-query fast path: score **one code row** against a block of
+    /// co-probed queries' LUT slices in one pass.
+    ///
+    /// `luts` is the batch engine's flat LUT pack — one
+    /// [`lut_into`](Self::lut_into) slice of length `stride ==
+    /// lut_len()` per query — and `members[b]` selects the b-th block
+    /// query's slice. Writes `out[b] = score(lut_of(members[b]), code,
+    /// term)` for every member, **bit-identically** to the scalar
+    /// [`score`](Self::score) path (pinned by `tests/scorer_conformance.rs`):
+    /// implementations must accumulate each lane in the scalar walk
+    /// order. The default loops `score`; the in-tree scorers override it
+    /// with unrolled [`SCORE_BLOCK`]-lane kernels (the crate-private
+    /// `score_block_lanes` helper) that read the code row once and
+    /// vectorize the LUT gathers across members.
+    ///
+    /// Same preconditions as `score`, plus `members.len() == out.len()`
+    /// and every member index addressing a full slice inside `luts`.
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(members.len(), out.len());
+        for (o, &qi) in out.iter_mut().zip(members) {
+            let lo = qi as usize * stride;
+            *o = self.score(&luts[lo..lo + stride], code, term);
+        }
+    }
 
     /// LUT-free scoring: `t − 2⟨q, decode(code)⟩` via direct dot
     /// products. Used when [`use_lut`](Self::use_lut) says a per-query

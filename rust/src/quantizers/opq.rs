@@ -75,6 +75,20 @@ impl ApproxScorer for OpqScorer {
         self.pq_scorer.score(lut, code, t)
     }
 
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        // the rotation only affects LUT construction; block scoring is
+        // the inner PQ kernel over the already-rotated pack
+        self.pq_scorer.score_block(luts, stride, members, code, term, out)
+    }
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         self.pq_scorer.score_direct(&self.rotate_q(q), code, t)
     }

@@ -255,6 +255,32 @@ impl ApproxScorer for PairwiseDecoder {
         PairwiseDecoder::score(self, lut, code, t)
     }
 
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(stride, PairwiseDecoder::lut_len(self));
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
+        let (k, kk) = (self.k, self.k * self.k);
+        super::score_block_lanes(
+            luts,
+            stride,
+            members,
+            || {
+                self.steps.iter().enumerate().map(move |(s_idx, s)| {
+                    s_idx * kk + code[s.i] as usize * k + code[s.j] as usize
+                })
+            },
+            term,
+            out,
+        );
+    }
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let mut ip = 0.0f32;
         for s in &self.steps {

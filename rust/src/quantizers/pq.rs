@@ -109,6 +109,28 @@ impl ApproxScorer for PqScorer {
         t - 2.0 * ip
     }
 
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(stride, self.lut_len());
+        debug_assert!(code.len() <= self.0.m && code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        super::score_block_lanes(
+            luts,
+            stride,
+            members,
+            || code.iter().enumerate().map(move |(s, &c)| s * k + c as usize),
+            term,
+            out,
+        );
+    }
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let pq = &self.0;
         let mut ip = 0.0f32;

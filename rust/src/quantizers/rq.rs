@@ -2,7 +2,7 @@
 //! (Babenko & Lempitsky, 2014) — the structural ancestor of QINCo2 and
 //! the strongest classical baseline in Table 3 / Fig. 6.
 
-use super::{Codes, VectorQuantizer};
+use super::{ApproxScorer, Codes, VectorQuantizer};
 use crate::clustering::{kmeans, KMeansCfg};
 use crate::tensor::{self, Matrix};
 use crate::util::pool;
@@ -71,6 +71,68 @@ impl Rq {
             .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
             .unwrap();
         (best.0, best.2)
+    }
+}
+
+/// Flat-LUT [`ApproxScorer`] adapter for [`Rq`], completing the baseline
+/// scorer matrix (ROADMAP): residual-quantizer codebooks are additive, so
+/// the unitary position-major LUT (`lut[p·k + c] = ⟨q, C_p[c]⟩`) makes
+/// the "approximate" score exact for the RQ reconstruction — the same
+/// layout and kernels as [`super::aq_lut::AdditiveDecoder`], scanning the
+/// RQ's *own* code table as a pipeline stage 1 ([`crate::index::Stage1Kind::Rq`]).
+pub struct RqScorer(pub Rq);
+
+impl ApproxScorer for RqScorer {
+    fn lut_len(&self) -> usize {
+        self.0.m * self.0.k
+    }
+
+    fn lut_into(&self, q: &[f32], out: &mut [f32]) {
+        super::additive_lut_into(&self.0.codebooks, self.0.k, q, out)
+    }
+
+    fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32 {
+        debug_assert_eq!(lut.len(), self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.0.k));
+        super::additive_flat_score(self.0.k, lut, code, t)
+    }
+
+    fn score_block(
+        &self,
+        luts: &[f32],
+        stride: usize,
+        members: &[u32],
+        code: &[u32],
+        term: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(stride, self.lut_len());
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        super::score_block_lanes(
+            luts,
+            stride,
+            members,
+            || code.iter().enumerate().map(move |(p, &c)| p * k + c as usize),
+            term,
+            out,
+        );
+    }
+
+    fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
+        let mut ip = 0.0f32;
+        for (p, &c) in code.iter().enumerate() {
+            ip += tensor::dot(q, self.0.codebooks[p].row(c as usize));
+        }
+        t - 2.0 * ip
+    }
+
+    fn decode(&self, codes: &Codes) -> Matrix {
+        VectorQuantizer::decode(&self.0, codes)
+    }
+
+    fn use_lut(&self, n_cands: usize, d: usize) -> bool {
+        super::stage2_use_lut(n_cands, self.0.m, self.0.k, d)
     }
 }
 

@@ -282,12 +282,13 @@ impl Router {
 /// and run each group through the batched engine in a single execute —
 /// one bucket-grouped scan and one union decode per group. `decoder` is
 /// this worker's thread-local stage-3 decoder (engine-per-worker); when
-/// it is absent the index's own infallible decoder runs. A decode
-/// failure re-executes the group with the index decoder (every request
-/// still gets a reply) and then *drops* the local decoder — decoder
-/// failures are configuration errors (missing artifact, stubbed
-/// runtime), not transient, so the worker must not pay a doubled
-/// execute on every subsequent batch.
+/// it is absent the index's own decoder runs. A decode failure
+/// re-executes the group with the index decoder (every request still
+/// gets a reply unless that decoder *also* fails — then the replies
+/// drop and callers see `WorkerDied`) and then *drops* the local
+/// decoder — decoder failures are configuration errors (missing
+/// artifact, stubbed runtime), not transient, so the worker must not
+/// pay a doubled execute on every subsequent batch.
 fn serve_batch(
     idx: &SearchIndex,
     metrics: &MetricsInner,
@@ -326,7 +327,24 @@ fn serve_batch(
         if decoder_failed {
             *decoder = None;
         }
-        let results = results.unwrap_or_else(|| searcher.execute(&plans, &sp));
+        let results = match results {
+            Some(r) => r,
+            // the index-held decoders are infallible in practice; if one
+            // ever fails the affected requests' reply channels drop so
+            // callers observe WorkerDied instead of hanging — the engine
+            // no longer panics the worker thread from inside
+            None => match searcher.execute(&plans, &sp) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!(
+                        "[server] index stage-3 decoder failed ({e}); \
+                         dropping {} replies",
+                        members.len()
+                    );
+                    continue;
+                }
+            },
+        };
         for (&j, results_j) in members.iter().zip(results) {
             let req = &batch[j];
             let latency = req.t_submit.elapsed();

@@ -7,12 +7,22 @@
 
 /// Number of worker threads to use by default (respects `QINCO2_THREADS`).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("QINCO2_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    match std::env::var("QINCO2_THREADS") {
+        Ok(v) => parse_threads(&v),
+        Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a `QINCO2_THREADS` override. A malformed value is a hard error:
+/// silently falling back to all cores would run e.g. a
+/// `QINCO2_THREADS=4x` benchmark at the wrong thread count and skew its
+/// numbers — the same bug class as malformed CLI flags (`cli::Args`).
+/// `0` means "let the runtime decide", clamped to 1.
+fn parse_threads(v: &str) -> usize {
+    match v.trim().parse::<usize>() {
+        Ok(n) => n.max(1),
+        Err(_) => panic!("QINCO2_THREADS must be an unsigned integer, got {v:?}"),
+    }
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into roughly equal
@@ -104,6 +114,20 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * 2);
         }
+    }
+
+    #[test]
+    fn thread_env_parses_or_panics() {
+        assert_eq!(parse_threads("4"), 4);
+        assert_eq!(parse_threads(" 2 "), 2);
+        // 0 is "auto", clamped to at least one thread
+        assert_eq!(parse_threads("0"), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "QINCO2_THREADS")]
+    fn malformed_thread_env_is_a_hard_error() {
+        parse_threads("4x");
     }
 
     #[test]

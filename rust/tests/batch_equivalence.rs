@@ -1,10 +1,13 @@
 //! The batched execution engine must be *result-identical* to per-query
 //! [`SearchIndex::search`] — same ids, same scores, same order — for
 //! any batch composition (random batch sizes, duplicated queries, the
-//! degenerate knobs `n_pairs = 0` / `n_final = 0` / `n_aq = 0`) and for
-//! **every pipeline configuration**: the default AQ→pairwise→reference
-//! pipeline, pairwise-only fast mode (stage 3 disabled), a PQ stage-1
-//! scorer, and a stage-2-less pipeline.
+//! degenerate knobs `n_pairs = 0` / `n_final = 0` / `n_aq = 0`), for
+//! **every pipeline configuration** (the default AQ→pairwise→reference
+//! pipeline, pairwise-only fast mode, PQ/LSQ/RQ stage-1 scorers, a
+//! stage-2-less pipeline), and for **every intra-batch thread count**:
+//! the multi-query `score_block` scan kernel and the
+//! `batch_threads ∈ {1, 2, 4}` group-parallel scan are pinned
+//! bit-identical to the scalar per-query path.
 //!
 //! The index is built engine-free: parameters come from the in-repo
 //! `artifacts/manifest.json` test model and codes from the pure-Rust
@@ -47,6 +50,22 @@ fn configs() -> Vec<(&'static str, PipelineConfig)> {
                 stage3: Stage3Kind::Reference,
             },
         ),
+        (
+            "lsq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Lsq { m: 3 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+        (
+            "rq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Rq { m: 3 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
     ]
 }
 
@@ -80,12 +99,14 @@ fn prop_batched_engine_equals_per_query_search_for_every_pipeline() {
             n_aq: g.usize_in(1, 64),
             n_pairs,
             n_final,
+            // exercise the intra-batch group-parallel scan too
+            batch_threads: [1, 2, 4][g.usize_in(0, 2)],
         };
         for (label, index) in &indexes {
             let searcher = BatchSearcher::new(index);
             let plans: Vec<_> =
                 rows.iter().map(|&r| searcher.plan(queries.row(r), &sp)).collect();
-            let batched = searcher.execute(&plans, &sp);
+            let batched = searcher.execute(&plans, &sp).map_err(|e| format!("[{label}] {e}"))?;
             if batched.len() != rows.len() {
                 return Err(format!(
                     "[{label}] {} results for {} plans",
@@ -113,17 +134,19 @@ fn degenerate_knobs_and_search_batch_chunking() {
     for (label, cfg) in configs() {
         let index = build_index(51, 240, 200, cfg);
         let queries = generate(Flavor::Deep, 12, 8, 78);
-        for sp in [
+        for base in [
             // stage-2 and stage-3 disabled in every combination
-            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0 },
-            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 5 },
-            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 6, n_final: 0 },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0, ..Default::default() },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 5, ..Default::default() },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 6, n_final: 0, ..Default::default() },
             // empty stage-1 shortlist
-            SearchParams { nprobe: 4, ef_search: 32, n_aq: 0, n_pairs: 6, n_final: 5 },
+            SearchParams { nprobe: 4, ef_search: 32, n_aq: 0, n_pairs: 6, n_final: 5, ..Default::default() },
             // budgets larger than the database
-            SearchParams { nprobe: 12, ef_search: 64, n_aq: 512, n_pairs: 512, n_final: 512 },
+            SearchParams { nprobe: 12, ef_search: 64, n_aq: 512, n_pairs: 512, n_final: 512, ..Default::default() },
         ] {
-            let via_batch = index.search_batch(&queries, &sp);
+            // more threads than bucket groups (and than queries) is fine
+            let sp = SearchParams { batch_threads: 4, ..base };
+            let via_batch = index.search_batch(&queries, &sp).unwrap();
             assert_eq!(via_batch.len(), queries.rows, "[{label}]");
             for i in 0..queries.rows {
                 let single = index.search(queries.row(i), &sp);
@@ -138,9 +161,16 @@ fn batched_results_are_sorted_unique_and_in_range() {
     for (label, cfg) in configs() {
         let index = build_index(61, 240, 200, cfg);
         let queries = generate(Flavor::Deep, 20, 8, 79);
-        let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 8 };
+        let sp = SearchParams {
+            nprobe: 6,
+            ef_search: 48,
+            n_aq: 64,
+            n_pairs: 16,
+            n_final: 8,
+            ..Default::default()
+        };
         let searcher = BatchSearcher::new(&index);
-        for ranked in searcher.search(&queries, &sp) {
+        for ranked in searcher.search(&queries, &sp).unwrap() {
             for w in ranked.windows(2) {
                 assert!(w[0].0 <= w[1].0, "[{label}] results must be sorted by score");
             }
@@ -149,6 +179,50 @@ fn batched_results_are_sorted_unique_and_in_range() {
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), ranked.len(), "[{label}] duplicate ids in one result list");
+        }
+    }
+}
+
+#[test]
+fn block_kernel_and_batch_threads_pinned_bit_identical() {
+    // the acceptance pin for the multi-query kernel + intra-batch
+    // parallelism: for every pipeline configuration, (a) the scalar
+    // member-loop scan and the score_block scan produce bit-identical
+    // stage-1 shortlists, and (b) full batched searches with
+    // batch_threads ∈ {1, 2, 4} equal per-query SearchIndex::search
+    // exactly — scores included, not just ids
+    for (label, cfg) in configs() {
+        let index = build_index(91, 240, 200, cfg);
+        let queries = generate(Flavor::Deep, 12, 8, 90);
+        let searcher = BatchSearcher::new(&index);
+        let base_sp = SearchParams {
+            nprobe: 6,
+            ef_search: 48,
+            n_aq: 48,
+            n_pairs: 12,
+            n_final: 6,
+            batch_threads: 1,
+        };
+        let plans: Vec<_> =
+            (0..queries.rows).map(|i| searcher.plan(queries.row(i), &base_sp)).collect();
+        let scalar = searcher.scan_stage1(&plans, &base_sp, 1, false);
+        let block = searcher.scan_stage1(&plans, &base_sp, 1, true);
+        assert_eq!(scalar, block, "[{label}] block kernel diverged from scalar scan");
+        for t in [1usize, 2, 4] {
+            assert_eq!(
+                searcher.scan_stage1(&plans, &base_sp, t, true),
+                scalar,
+                "[{label}] group-parallel scan diverged at {t} threads"
+            );
+            let sp = SearchParams { batch_threads: t, ..base_sp };
+            let batched = index.search_batch(&queries, &sp).unwrap();
+            for i in 0..queries.rows {
+                assert_eq!(
+                    batched[i],
+                    index.search(queries.row(i), &sp),
+                    "[{label}] batch_threads={t} row {i}"
+                );
+            }
         }
     }
 }
@@ -172,7 +246,14 @@ fn pipeline_configs_are_actually_distinct() {
         PipelineConfig { stage1: Stage1Kind::Aq, stage2: true, stage3: Stage3Kind::Disabled },
     );
     assert!(!pw_only.stage3_enabled);
-    let sp = SearchParams { nprobe: 6, ef_search: 48, n_aq: 64, n_pairs: 16, n_final: 5 };
+    let sp = SearchParams {
+        nprobe: 6,
+        ef_search: 48,
+        n_aq: 64,
+        n_pairs: 16,
+        n_final: 5,
+        ..Default::default()
+    };
     let q = generate(Flavor::Deep, 1, 8, 80);
     // stage-2-final mode truncates the stage-2 ranking
     let res = pw_only.search(q.row(0), &sp);

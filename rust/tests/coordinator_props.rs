@@ -211,8 +211,8 @@ fn router_batched_dispatch_matches_direct_search() {
         index.clone(),
         ServerCfg { workers: 3, max_batch: 8, ..Default::default() },
     );
-    let sp_a = SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5 };
-    let sp_b = SearchParams { nprobe: 2, ef_search: 16, n_aq: 16, n_pairs: 0, n_final: 0 };
+    let sp_a = SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() };
+    let sp_b = SearchParams { nprobe: 2, ef_search: 16, n_aq: 16, n_pairs: 0, n_final: 0, ..Default::default() };
     let mut pending = Vec::new();
     for i in 0..queries.rows {
         let q = queries.row(i % 30); // some duplicates
@@ -231,6 +231,27 @@ fn router_batched_dispatch_matches_direct_search() {
 }
 
 #[test]
+fn stats_on_a_fresh_router_are_all_zero() {
+    // regression: Router::stats() before any request completes hands
+    // percentile() an empty latency ring — it must report zeros, not
+    // panic or index out of bounds
+    use qinco2::server::{Router, ServerCfg};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let router = Router::start(
+        Arc::new(tiny_index()),
+        ServerCfg { workers: 2, ..Default::default() },
+    );
+    let stats = router.stats();
+    assert_eq!(stats.served, 0);
+    assert_eq!(stats.mean_latency, Duration::ZERO);
+    assert_eq!(stats.p50, Duration::ZERO);
+    assert_eq!(stats.p99, Duration::ZERO);
+    router.shutdown();
+}
+
+#[test]
 fn router_shutdown_drains_inflight_requests() {
     // regression for the shutdown bug: requests still buffered in the
     // batch queue when shutdown() is called must be answered, not leave
@@ -242,7 +263,7 @@ fn router_shutdown_drains_inflight_requests() {
 
     let index = Arc::new(tiny_index());
     let queries = generate(Flavor::Deep, 48, 8, 31);
-    let sp = SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5 };
+    let sp = SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() };
     let router = Router::start(
         index.clone(),
         ServerCfg { workers: 2, max_batch: 4, ..Default::default() },

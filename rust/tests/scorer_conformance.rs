@@ -1,6 +1,6 @@
 //! Trait-conformance property suite for every in-tree [`ApproxScorer`]
 //! implementation: the unitary additive decoder (both fits), the
-//! pairwise decoder, and the PQ/OPQ flat-LUT adapters.
+//! pairwise decoder, and the PQ/OPQ/LSQ/RQ flat-LUT adapters.
 //!
 //! The contract under test (see the trait docs in `quantizers/mod.rs`):
 //!
@@ -10,6 +10,9 @@
 //! * `score` is *linear* in its additive-offset argument (the IVF
 //!   pipeline relies on this to fold the coarse term into the cache);
 //! * `score_direct` agrees with the LUT path within tolerance;
+//! * `score_block` over a multi-query LUT pack is **bit-identical** to
+//!   scalar `score` per member — the batched engine's block kernel must
+//!   not perturb a single ULP, or batched results drift from per-query;
 //! * `lut` / `lut_into` / `lut_len` are consistent;
 //! * rankings are visit-order independent under the total (score, id)
 //!   order of `util::topk::Shortlist` — the invariant that keeps the
@@ -17,9 +20,11 @@
 //!   any conforming scorer.
 
 use qinco2::quantizers::aq_lut::AdditiveDecoder;
+use qinco2::quantizers::lsq::{Lsq, LsqScorer};
 use qinco2::quantizers::opq::{Opq, OpqScorer};
 use qinco2::quantizers::pairwise::PairwiseDecoder;
 use qinco2::quantizers::pq::{Pq, PqScorer};
+use qinco2::quantizers::rq::{Rq, RqScorer};
 use qinco2::quantizers::{ApproxScorer, Codes};
 use qinco2::tensor::{self, Matrix};
 use qinco2::util::prop::{check, Gen};
@@ -95,6 +100,55 @@ fn check_contract(
     if fwd.into_sorted() != rev.into_sorted() {
         return Err(format!("{name}: shortlist depends on candidate visit order"));
     }
+    // score_block over a multi-query pack is bit-identical to scalar
+    // score per member — derive a few extra query vectors from q so the
+    // pack holds genuinely different LUT slices
+    let qs: Vec<Vec<f32>> = vec![
+        q.to_vec(),
+        q.iter().map(|&v| 0.5 * v - 0.25).collect(),
+        q.iter().rev().copied().collect(),
+    ];
+    check_score_block(name, scorer, codes, &qs)?;
+    Ok(())
+}
+
+/// The multi-query kernel property: for every code row, `score_block`
+/// over a flat pack of `qs` must write exactly the bits scalar `score`
+/// produces for each member — including duplicated members and blocks
+/// longer than the kernels' 8 accumulator lanes (chunking path).
+fn check_score_block(
+    name: &str,
+    scorer: &dyn ApproxScorer,
+    codes: &Codes,
+    qs: &[Vec<f32>],
+) -> Result<(), String> {
+    let stride = scorer.lut_len();
+    let mut luts = vec![0.0f32; qs.len() * stride];
+    for (qi, q) in qs.iter().enumerate() {
+        scorer.lut_into(q, &mut luts[qi * stride..(qi + 1) * stride]);
+    }
+    let norms = scorer.norms(codes);
+    let nq = qs.len() as u32;
+    // 2·nq + 3 members: duplicates are legal (co-probed queries repeat)
+    // and the length exceeds one 8-lane block
+    let members: Vec<u32> =
+        (0..nq).chain(0..nq).chain([0, nq - 1, 0]).collect();
+    let mut out = vec![0.0f32; members.len()];
+    for i in 0..codes.n {
+        let code = codes.row(i);
+        scorer.score_block(&luts, stride, &members, code, norms[i], &mut out);
+        for (b, &qi) in members.iter().enumerate() {
+            let lut = &luts[qi as usize * stride..][..stride];
+            let want = scorer.score(lut, code, norms[i]);
+            if out[b].to_bits() != want.to_bits() {
+                return Err(format!(
+                    "{name}: score_block lane {b} (query {qi}, row {i}) = {} but scalar \
+                     score = {want} — block kernel must be bit-identical",
+                    out[b]
+                ));
+            }
+        }
+    }
     Ok(())
 }
 
@@ -147,6 +201,26 @@ fn prop_pq_and_opq_adapters_conform() {
         check_contract("pq-adapter", &PqScorer(pq), &codes, &q)?;
         let opq = Opq::train(&xs, m, k, 2, g.rng.below(1000) as u64);
         check_contract("opq-adapter", &OpqScorer::new(opq), &codes, &q)
+    });
+}
+
+#[test]
+fn prop_lsq_and_rq_adapters_conform() {
+    // the last two cells of the baseline scorer matrix (ROADMAP): both
+    // are additive families, so the full contract — including the
+    // bit-identical score_block kernel — must hold over arbitrary codes
+    check("conformance-lsq-rq", 10, 40, |g| {
+        let d = g.usize_in(2, 8);
+        let k = g.usize_in(2, 6);
+        let m = g.usize_in(1, 4);
+        let n = g.usize_in(10, 40);
+        let xs = Matrix::from_vec(n, d, g.vec_f32(n * d, -1.0, 1.0));
+        let codes = random_codes(g, n, m, k);
+        let q = g.vec_f32(d, -1.0, 1.0);
+        let rq = Rq::train(&xs, m, k, 1, g.rng.below(1000) as u64);
+        check_contract("rq-adapter", &RqScorer(rq), &codes, &q)?;
+        let lsq = Lsq::train(&xs, m, k, 1, g.rng.below(1000) as u64);
+        check_contract("lsq-adapter", &LsqScorer(lsq), &codes, &q)
     });
 }
 

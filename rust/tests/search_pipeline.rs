@@ -48,10 +48,10 @@ fn pipeline_end_to_end() {
     let (index, queries, gt) = build_index();
 
     // --- full pipeline beats LUT-only at R@1 ---
-    let full = SearchParams { nprobe: 8, ef_search: 64, n_aq: 128, n_pairs: 32, n_final: 10 };
-    let lut_only = SearchParams { nprobe: 8, ef_search: 64, n_aq: 10, n_pairs: 0, n_final: 0 };
-    let res_full = ids_only(&index.search_batch(&queries, &full));
-    let res_lut = ids_only(&index.search_batch(&queries, &lut_only));
+    let full = SearchParams { nprobe: 8, ef_search: 64, n_aq: 128, n_pairs: 32, n_final: 10, ..Default::default() };
+    let lut_only = SearchParams { nprobe: 8, ef_search: 64, n_aq: 10, n_pairs: 0, n_final: 0, ..Default::default() };
+    let res_full = ids_only(&index.search_batch(&queries, &full).unwrap());
+    let res_lut = ids_only(&index.search_batch(&queries, &lut_only).unwrap());
     let r_full = recall_at(&res_full, &gt, 1);
     let r_lut = recall_at(&res_lut, &gt, 1);
     // allow 2 queries of slack out of 60: the tiny 9-bit test model makes
@@ -70,11 +70,11 @@ fn pipeline_end_to_end() {
     // exhaustive re-rank of every database vector (the quantizer's
     // intrinsic R@1 limit — the tiny 9-bit test model caps this low)
     let exhaustive =
-        SearchParams { nprobe: 16, ef_search: 256, n_aq: 800, n_pairs: 800, n_final: 10 };
+        SearchParams { nprobe: 16, ef_search: 256, n_aq: 800, n_pairs: 800, n_final: 10, ..Default::default() };
     let generous =
-        SearchParams { nprobe: 16, ef_search: 128, n_aq: 400, n_pairs: 100, n_final: 10 };
-    let r_ceiling = recall_at(&ids_only(&index.search_batch(&queries, &exhaustive)), &gt, 1);
-    let res_gen = ids_only(&index.search_batch(&queries, &generous));
+        SearchParams { nprobe: 16, ef_search: 128, n_aq: 400, n_pairs: 100, n_final: 10, ..Default::default() };
+    let r_ceiling = recall_at(&ids_only(&index.search_batch(&queries, &exhaustive).unwrap()), &gt, 1);
+    let res_gen = ids_only(&index.search_batch(&queries, &generous).unwrap());
     let r_gen = recall_at(&res_gen, &gt, 1);
     assert!(
         r_gen >= r_ceiling - 0.05,
@@ -96,8 +96,8 @@ fn pipeline_end_to_end() {
     // --- more probes never hurt (monotone recall in nprobe) ---
     let mut prev = 0.0;
     for nprobe in [1usize, 4, 16] {
-        let sp = SearchParams { nprobe, ef_search: 128, n_aq: 256, n_pairs: 64, n_final: 10 };
-        let r = recall_at(&ids_only(&index.search_batch(&queries, &sp)), &gt, 1);
+        let sp = SearchParams { nprobe, ef_search: 128, n_aq: 256, n_pairs: 64, n_final: 10, ..Default::default() };
+        let r = recall_at(&ids_only(&index.search_batch(&queries, &sp).unwrap()), &gt, 1);
         assert!(
             r + 0.08 >= prev,
             "recall dropped sharply with more probes: {r} vs {prev}"
@@ -143,7 +143,7 @@ fn pipeline_end_to_end() {
         router_results.push(resp.results.iter().map(|&(_, id)| id).collect::<Vec<_>>());
     }
     // router answers must match direct search answers
-    let direct = ids_only(&index.search_batch(&queries, &sp));
+    let direct = ids_only(&index.search_batch(&queries, &sp).unwrap());
     assert_eq!(router_results, direct, "router must be a pure wrapper");
     let stats = router.stats();
     assert_eq!(stats.served as usize, queries.rows + 1);
