@@ -235,8 +235,7 @@ fn main() -> anyhow::Result<()> {
             pipeline: pcfg,
             ..Default::default()
         };
-        let spec2 = Manifest::load(&manifest_path)?.model("test")?.clone();
-        let params2 = ParamStore::init(&spec2, "test", &ds.train, 23);
+        let params2 = ParamStore::init(&spec, "test", &ds.train, 23);
         let pidx = SearchIndex::build_reference(params2, &ds.train, &ds.database, &bcfg);
         for (nprobe, n_aq, n_pairs) in [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)]
         {
@@ -259,6 +258,151 @@ fn main() -> anyhow::Result<()> {
             csv.push(format!("pipeline:{label},{nprobe},{n_aq},{n_pairs},{qps:.0},{r1:.4}"));
         }
         common::hr(64);
+    }
+
+    // ---- shard scaling: scatter/gather cost at shards ∈ {1, 2, 4} ----
+    // The shard layer is supposed to be free at this scale: same floats,
+    // same merge order, just partitioned storage. Results are asserted
+    // bit-identical (scores included) against the single-shard build, so
+    // QPS is the only free variable and any scatter/gather overhead is
+    // directly visible.
+    println!();
+    common::banner(
+        "SHARD SCALING — bucket-owned shards behind scatter/gather",
+        "bit-identical to shards=1 by construction; QPS per shard count",
+    );
+    println!(
+        "{:<18} {:>7} {:>10} {:>9}  {}",
+        "shards", "threads", "QPS", "speedup", "scan split"
+    );
+    common::hr(72);
+    {
+        let sp = SearchParams {
+            nprobe: 8,
+            ef_search: 64,
+            n_aq: 128,
+            n_pairs: 32,
+            n_final: 10,
+            ..Default::default()
+        };
+        let mut baseline: Option<Vec<Vec<(f32, u32)>>> = None;
+        let mut qps_one_shard = 0.0f64;
+        for shards in [1usize, 2, 4] {
+            let bcfg = BuildCfg {
+                k_ivf: 64,
+                m_tilde: 2,
+                fit_sample: 1_000,
+                shards,
+                ..Default::default()
+            };
+            let params_s = ParamStore::init(&spec, "test", &ds.train, 23);
+            let sidx = SearchIndex::build_reference(params_s, &ds.train, &ds.database, &bcfg);
+            // warm-up + equality pin, then best-of-3 timing
+            let res = sidx.search_batch(&ds.queries, &sp)?;
+            match &baseline {
+                Some(base) => assert_eq!(
+                    &res, base,
+                    "sharded search must be bit-identical to the single-shard index"
+                ),
+                None => baseline = Some(res),
+            }
+            let scans_before = sidx.shards.scan_counts();
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = Instant::now();
+                let r = sidx.search_batch(&ds.queries, &sp)?;
+                best = best.min(t0.elapsed().as_secs_f64());
+                std::hint::black_box(r);
+            }
+            let qps = ds.queries.rows as f64 / best;
+            if shards == 1 {
+                qps_one_shard = qps;
+            }
+            // per-shard scan counters show the bucket-ownership balance
+            let scans: Vec<u64> = sidx
+                .shards
+                .scan_counts()
+                .iter()
+                .zip(&scans_before)
+                .map(|(a, b)| (a - b) / 3)
+                .collect();
+            println!(
+                "{shards:<18} {:>7} {qps:>10.0} {:>8.2}x  {scans:?}",
+                qinco2::util::pool::default_threads(),
+                qps / qps_one_shard
+            );
+            csv.push(format!("shards:{shards},8,128,32,{qps:.0},"));
+        }
+    }
+    common::hr(72);
+
+    // ---- pipeline-matrix sweep: stage-1 family × stage-2 on/off ----
+    // The ROADMAP's open sweep: nobody had mapped where the cheaper
+    // stage-1 scorers pareto-dominate. Full cross of the five stage-1
+    // families (AQ and the PQ/OPQ/LSQ/RQ side-table scorers) with the
+    // pairwise stage 2 on and off, at three probe/shortlist knob points
+    // — QPS + R@1 rows make the pareto regions visible: compare rows at
+    // matched R@1 to read off what a stage swap costs or buys.
+    println!();
+    common::banner(
+        "PIPELINE MATRIX SWEEP — stage-1 family × stage-2 on/off",
+        "AQ/PQ/OPQ/LSQ/RQ × {pair, no-pair}; QPS + R@1 per knob point",
+    );
+    println!(
+        "{:<20} {:>7} {:>6} {:>8} {:>10} {:>8}",
+        "pipeline", "nprobe", "naq", "npairs", "QPS", "R@1"
+    );
+    common::hr(64);
+    let stage1_families: Vec<(&str, Stage1Kind)> = vec![
+        ("aq", Stage1Kind::Aq),
+        ("pq4", Stage1Kind::Pq { m: 4 }),
+        ("opq4", Stage1Kind::Opq { m: 4, iters: 4 }),
+        ("lsq4", Stage1Kind::Lsq { m: 4 }),
+        ("rq4", Stage1Kind::Rq { m: 4 }),
+    ];
+    for (s1_label, s1) in &stage1_families {
+        for stage2 in [true, false] {
+            let label = format!("{s1_label}{}", if stage2 { "+pair" } else { "-pair" });
+            let bcfg = BuildCfg {
+                k_ivf: 64,
+                m_tilde: 2,
+                fit_sample: 1_000,
+                pipeline: PipelineConfig {
+                    stage1: s1.clone(),
+                    stage2,
+                    stage3: Stage3Kind::Reference,
+                },
+                ..Default::default()
+            };
+            let params_m = ParamStore::init(&spec, "test", &ds.train, 23);
+            let midx = SearchIndex::build_reference(params_m, &ds.train, &ds.database, &bcfg);
+            for (nprobe, n_aq, n_pairs) in
+                [(4usize, 64usize, 16usize), (8, 128, 32), (16, 256, 64)]
+            {
+                let sp = SearchParams {
+                    nprobe,
+                    ef_search: 64,
+                    n_aq,
+                    n_pairs: if stage2 { n_pairs } else { 0 },
+                    n_final: 10,
+                    ..Default::default()
+                };
+                let t0 = Instant::now();
+                let res = ids_only(&midx.search_batch(&ds.queries, &sp)?);
+                let qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+                let r1 = recall_at(&res, &ds.ground_truth, 1);
+                println!(
+                    "{label:<20} {nprobe:>7} {n_aq:>6} {:>8} {qps:>10.0} {:>8}",
+                    sp.n_pairs,
+                    common::pct(r1)
+                );
+                csv.push(format!(
+                    "sweep:{label},{nprobe},{n_aq},{},{qps:.0},{r1:.4}",
+                    sp.n_pairs
+                ));
+            }
+            common::hr(64);
+        }
     }
 
     let path = qinco2::experiments::write_csv(

@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
                 &residuals, &cfg2)?;
             let index = SearchIndex::build(
                 &mut engine, &codec, params_r, &ds.train, &ds.database, &bcfg)?;
-            let m = index.codes.m;
+            let m = index.code_positions();
             print!("  pairs: ");
             for (i, j, mse) in index.pairwise_trace.iter().take(16) {
                 let f = |p: &usize| if *p >= m { format!("~{}", p - m + 1) } else { format!("{}", p + 1) };

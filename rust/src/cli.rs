@@ -185,6 +185,11 @@ COMMON FLAGS
 
 SEARCH FLAGS
   --k-ivf 64  --nprobe 8  --ef 64  --n-aq 256  --n-pairs 32  --topk 10
+  --shards 1             partition the index into N bucket-owned shards
+                         (1 <= N <= k-ivf); probed buckets scatter to their
+                         owning shards and shortlists gather-merge before
+                         the single stage-3 decode — results bit-identical
+                         for every N
   --encoder runtime|reference
                          database encoder: "reference" builds the index with
                          the pure-Rust greedy encoder and untrained params —
@@ -323,6 +328,26 @@ fn pipeline_of(args: &Args) -> Result<PipelineConfig> {
     )
 }
 
+/// Validate `--shards` against the bucket count: the index partitions
+/// into bucket-owned shards, so the count must be in `1..=k_ivf`.
+/// Out-of-range values are hard errors naming the flag (matching the
+/// malformed-numeric-flag policy of [`Args::usize_or`]), not silent
+/// clamps — `--shards 0` would otherwise build an index with no shards
+/// and `--shards > k_ivf` one with empty shards.
+fn shards_of(args: &Args, k_ivf: usize) -> Result<usize> {
+    let shards = args.usize_or("shards", 1)?;
+    if shards == 0 {
+        bail!("--shards must be at least 1, got 0");
+    }
+    if shards > k_ivf {
+        bail!(
+            "--shards {shards} exceeds the IVF bucket count (--k-ivf {k_ivf}): \
+             every shard must own at least one bucket"
+        );
+    }
+    Ok(shards)
+}
+
 fn build_index(
     args: &Args,
     engine: &mut Engine,
@@ -332,10 +357,12 @@ fn build_index(
 ) -> Result<(SearchIndex, crate::data::Dataset)> {
     let spec = engine.manifest.model(model)?.clone();
     let ds = exp::dataset(flavor, spec.cfg.d, scale);
+    let k_ivf = args.usize_or("k-ivf", 64)?;
     let bcfg = BuildCfg {
-        k_ivf: args.usize_or("k-ivf", 64)?,
+        k_ivf,
         m_tilde: args.usize_or("m-tilde", 2)?,
         pipeline: pipeline_of(args)?,
+        shards: shards_of(args, k_ivf)?,
         ..Default::default()
     };
     // the fine quantizer is trained on IVF residuals (Fig. 3 pipeline)
@@ -365,10 +392,12 @@ fn build_index_reference(
     let scale = scale_of(args)?;
     let ds = exp::dataset(flavor, spec.cfg.d, &scale);
     let params = ParamStore::init(&spec, model, &ds.train, args.usize_or("seed", 0xA11CE)? as u64);
+    let k_ivf = args.usize_or("k-ivf", 64)?;
     let bcfg = BuildCfg {
-        k_ivf: args.usize_or("k-ivf", 64)?,
+        k_ivf,
         m_tilde: args.usize_or("m-tilde", 2)?,
         pipeline: pipeline_of(args)?,
+        shards: shards_of(args, k_ivf)?,
         ..Default::default()
     };
     Ok((SearchIndex::build_reference(params, &ds.train, &ds.database, &bcfg), ds))
@@ -396,6 +425,30 @@ fn cmd_search(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let results = index.search_batch(&ds.queries, &sp)?;
     let secs = t0.elapsed().as_secs_f64();
+    // structural self-check (the CI smoke jobs rely on it): every result
+    // list must be ranked under the total (score, id) order with ids in
+    // range, and a non-empty database must produce at least one result
+    let mut non_empty = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        non_empty += usize::from(!r.is_empty());
+        if let Some(&(_, bad)) = r.iter().find(|&&(_, id)| id as usize >= index.db_len) {
+            bail!("result list {i} references out-of-range id {bad}");
+        }
+        for w in r.windows(2) {
+            if w[1].0.total_cmp(&w[0].0).then(w[1].1.cmp(&w[0].1)).is_lt() {
+                bail!("result list {i} is not ranked under the (score, id) order");
+            }
+        }
+    }
+    // all-empty results are a pipeline failure only when the knobs could
+    // have produced any: --topk 0 / --n-aq 0 / --nprobe 0 legitimately
+    // return empty lists (the same degenerate knobs batch_equivalence
+    // treats as valid), as does an empty database
+    let expect_results =
+        ds.queries.rows > 0 && index.db_len > 0 && sp.n_final > 0 && sp.n_aq > 0 && sp.nprobe > 0;
+    if expect_results && non_empty == 0 {
+        bail!("search produced only empty result lists");
+    }
     let (r1, r10, r100) =
         crate::metrics::recall_triple(&crate::metrics::ids_only(&results), &ds.ground_truth);
     println!(
@@ -406,6 +459,11 @@ fn cmd_search(args: &Args) -> Result<()> {
         100.0 * r100,
         ds.queries.rows as f64 / secs,
         ds.queries.rows
+    );
+    println!(
+        "shards: {}  (stage-1 scans per shard: {:?})",
+        index.shards.n_shards(),
+        index.shards.scan_counts()
     );
     Ok(())
 }
@@ -456,6 +514,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.p50,
         stats.p99
     );
+    println!(
+        "shards: {}  (stage-1 scans per shard: {:?})",
+        stats.shard_scans.len(),
+        stats.shard_scans
+    );
     router.shutdown();
     Ok(())
 }
@@ -494,6 +557,29 @@ mod tests {
         // a valueless `--flag` treated as numeric is malformed, not 0
         let b = Args::parse(&["--batch-threads".to_string()]);
         assert!(b.usize_or("batch-threads", 1).is_err());
+    }
+
+    #[test]
+    fn shards_flag_is_validated_against_the_bucket_count() {
+        // in range: parses through
+        let a = Args::parse(&["--shards".to_string(), "3".to_string()]);
+        assert_eq!(shards_of(&a, 16).unwrap(), 3);
+        // absent: defaults to one shard
+        assert_eq!(shards_of(&Args::parse(&[]), 16).unwrap(), 1);
+        // --shards 0 is a hard error naming the flag
+        let zero = Args::parse(&["--shards".to_string(), "0".to_string()]);
+        let err = shards_of(&zero, 16).unwrap_err().to_string();
+        assert!(err.contains("--shards") && err.contains("at least 1"), "{err}");
+        // --shards > k-ivf is a hard error naming both flags
+        let big = Args::parse(&["--shards".to_string(), "17".to_string()]);
+        let err = shards_of(&big, 16).unwrap_err().to_string();
+        assert!(err.contains("--shards 17") && err.contains("--k-ivf 16"), "{err}");
+        // boundary: exactly k-ivf shards is allowed
+        assert_eq!(shards_of(&big, 17).unwrap(), 17);
+        // malformed values ride the usize_or hard-error policy
+        let bad = Args::parse(&["--shards".to_string(), "two".to_string()]);
+        let err = shards_of(&bad, 16).unwrap_err().to_string();
+        assert!(err.contains("shards") && err.contains("two"), "{err}");
     }
 
     #[test]

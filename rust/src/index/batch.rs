@@ -8,31 +8,37 @@
 //! *execute* ([`BatchSearcher`]):
 //!
 //!   1. **Plan**: HNSW coarse probe per query (cheap, independent).
-//!   2. **Stage 1**: all per-query LUTs (whatever
-//!      [`ApproxScorer`](crate::quantizers::ApproxScorer) the
-//!      pipeline's stage 1 is) are packed into one flat cache-contiguous
-//!      buffer; queries are grouped by probed bucket so each co-probed
-//!      inverted list is scanned *once per batch*. Within a group the
-//!      members are split into blocks of up to
-//!      [`SCORE_BLOCK`](crate::quantizers::SCORE_BLOCK) queries and each
-//!      code row is scored against the whole block in one
+//!   2. **Stage 1 (scatter)**: per-query LUTs are packed into flat
+//!      cache-contiguous buffers — one pack per LUT slot: every shard on
+//!      the shared [`PipelineSpec`](super::pipeline::PipelineSpec) reads
+//!      the same pack, each heterogeneous override shard gets its own
+//!      ([`ShardSet::lut_slot`](super::shard::ShardSet::lut_slot)).
+//!      [`ShardSet::plan`](super::shard::ShardSet::plan) routes the
+//!      batch's probed buckets to their owning
+//!      [`IndexShard`](super::shard::IndexShard)s as bucket groups, in
+//!      ascending bucket order, so each co-probed inverted list is
+//!      scanned *once per batch*. Each shard scans its local groups with
+//!      the multi-query
 //!      [`score_block`](crate::quantizers::ApproxScorer::score_block)
-//!      call — the code row is read once and the LUT gathers vectorize
-//!      across the block's accumulator lanes instead of serializing per
-//!      query. Shortlists are bounded binary max-heaps with a total
-//!      (score, id) order, so neither the scan-order change nor the
-//!      block kernel changes results.
+//!      kernel (blocks of up to
+//!      [`SCORE_BLOCK`](crate::quantizers::SCORE_BLOCK) co-probed
+//!      queries per code row), pushing `(score, global id)` into the
+//!      per-query shortlists — bounded binary max-heaps with a total
+//!      (score, id) order, so neither the scan-order change, the block
+//!      kernel, nor the shard partition changes results (gather =
+//!      shortlist merge under that total order).
 //!   3. **Stage 2**: per-query re-scoring through the shared
 //!      (crate-private) `SearchIndex::stage2_rescore` — a per-query joint
 //!      LUT or direct dots, chosen by the scorer's
-//!      [`use_lut`](crate::quantizers::ApproxScorer::use_lut) cost model.
+//!      [`use_lut`](crate::quantizers::ApproxScorer::use_lut) cost model,
+//!      with each candidate scored by its owning shard's stage-2 scorer.
 //!   4. **Stage 3**: ONE decode over the union of all surviving
-//!      shortlists (deduplicated across queries), then per-query exact
-//!      distances. The decoder is pluggable: [`BatchSearcher::execute`]
-//!      uses the index's own [`StageDecoder`], while
-//!      [`BatchSearcher::execute_with_decoder`] accepts any
-//!      `&dyn StageDecoder` — this is how server workers route the
-//!      union through their thread-local
+//!      shortlists (deduplicated across queries, rows gathered from the
+//!      owning shards), then per-query exact distances. The decoder is
+//!      pluggable: [`BatchSearcher::execute`] uses the index's own
+//!      [`StageDecoder`], while [`BatchSearcher::execute_with_decoder`]
+//!      accepts any `&dyn StageDecoder` — this is how server workers
+//!      route the union through their thread-local
 //!      [`RuntimeDecoder`](crate::qinco::RuntimeDecoder) (one padded XLA
 //!      dispatch per batch, engine-per-worker). Either way a decode
 //!      failure surfaces as an `Err`, never a panic inside the engine.
@@ -40,27 +46,29 @@
 //! # Intra-batch parallelism
 //!
 //! One execute call is no longer pinned to a single thread:
-//! [`SearchParams::batch_threads`] splits the bucket groups of the
-//! stage-1 scan across the scoped thread pool
+//! [`SearchParams::batch_threads`] splits the scattered shard groups
+//! across the scoped thread pool
 //! ([`par_map_into`](crate::util::pool::par_map_into) over per-thread
-//! partials; each thread scans a contiguous chunk of groups into its own
-//! per-query shortlists, which are then merged under the total
-//! (score, id) order), and runs the per-query stage-2/stage-3 loops
-//! across the same thread count. Because
+//! partials; each thread scans a contiguous chunk of groups — which may
+//! span shard boundaries — into its own per-query shortlists, which are
+//! then merged under the total (score, id) order), and runs the
+//! per-query stage-2/stage-3 loops across the same thread count. Because
 //! every (query, candidate) pair is scored exactly once with identical
 //! floats and the shortlist order is total, results are bit-identical
-//! for **every** thread count — the default `batch_threads = 1` keeps
-//! the historical behavior where the serving router parallelizes across
-//! batches/workers and [`SearchIndex::search_batch`] chunks a query
-//! matrix across threads; raise it when one large batch would otherwise
-//! execute on a single worker thread.
+//! for **every** thread count and **every** shard count — the default
+//! `batch_threads = 1` keeps the historical behavior where the serving
+//! router parallelizes across batches/workers and
+//! [`SearchIndex::search_batch`] chunks a query matrix across threads;
+//! raise it when one large batch would otherwise execute on a single
+//! worker thread (multi-shard scans then proceed in parallel across
+//! shards, since the group list is shard-major).
 //!
 //! Every path is result-identical to [`SearchIndex::search`] for every
-//! pipeline configuration and thread count (pinned by the
+//! pipeline configuration, thread count and shard count (pinned by the
 //! `batch_equivalence` property suite).
 
-use super::pipeline::{gather_codes, SearchIndex, SearchParams};
-use crate::quantizers::{StageDecoder, SCORE_BLOCK};
+use super::pipeline::{SearchIndex, SearchParams};
+use crate::quantizers::StageDecoder;
 use crate::util::pool;
 use crate::util::topk::Shortlist;
 use anyhow::Result;
@@ -130,7 +138,7 @@ impl<'a> BatchSearcher<'a> {
         }
         let threads = idx.batch_threads(sp);
 
-        // ---- stage 1: flat LUT pack + blocked bucket-grouped scan ----
+        // ---- stage 1: flat LUT packs + scattered shard-group scan ----
         let shortlists = self.scan_shortlists(plans, sp, threads, true);
 
         // ---- stage 2: per-query re-scoring ----
@@ -165,7 +173,8 @@ impl<'a> BatchSearcher<'a> {
                 .collect());
         }
 
-        // ---- stage 3: one decode over the union of all survivors ----
+        // ---- stage 3: one decode over the union of all survivors,
+        // gathered from their owning shards ----
         let mut union: BTreeMap<u32, usize> = BTreeMap::new();
         for list in &stage2 {
             for &(_, id) in list {
@@ -178,8 +187,8 @@ impl<'a> BatchSearcher<'a> {
         for (row, slot) in union.values_mut().enumerate() {
             *slot = row;
         }
-        let ids: Vec<usize> = union.keys().map(|&id| id as usize).collect();
-        let dec = decoder.decode(&gather_codes(&idx.codes, &ids))?;
+        let ids: Vec<u32> = union.keys().copied().collect();
+        let dec = decoder.decode(&idx.shards.gather_stage3_codes(&ids))?;
         let rerank_one = |qi: usize, list: &[(f32, u32)]| {
             let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
             idx.exact_rerank(&plans[qi].query, list, &dec, &rows, sp.n_final)
@@ -199,12 +208,12 @@ impl<'a> BatchSearcher<'a> {
         }
     }
 
-    /// Stage-1 only: pack the per-query LUTs and run the bucket-grouped
-    /// scan, returning each plan's stage-1 shortlist in ascending
-    /// (score, id) order. `block` selects the multi-query
+    /// Stage-1 only: pack the per-query LUTs and run the scattered
+    /// shard-group scan, returning each plan's stage-1 shortlist in
+    /// ascending (score, id) order. `block` selects the multi-query
     /// [`score_block`](crate::quantizers::ApproxScorer::score_block)
     /// kernel vs the scalar per-member `score` loop and `threads` the
-    /// bucket-group parallelism — every combination returns bit-identical
+    /// group parallelism — every combination returns bit-identical
     /// lists; the knobs exist so `bench_batch_qps` can measure the
     /// kernels against each other.
     pub fn scan_stage1(
@@ -220,8 +229,9 @@ impl<'a> BatchSearcher<'a> {
             .collect()
     }
 
-    /// The stage-1 scan over bucket groups: one bounded shortlist per
-    /// plan. See [`Self::scan_stage1`] for the `threads`/`block` knobs.
+    /// The stage-1 scan over scattered shard groups: one bounded
+    /// shortlist per plan. See [`Self::scan_stage1`] for the
+    /// `threads`/`block` knobs.
     fn scan_shortlists(
         &self,
         plans: &[QueryPlan],
@@ -230,64 +240,52 @@ impl<'a> BatchSearcher<'a> {
         block: bool,
     ) -> Vec<Shortlist> {
         let idx = self.index;
-        let scorer = idx.pipeline.stage1.as_ref();
-        let stride = scorer.lut_len();
-        let mut luts = vec![0.0f32; plans.len() * stride];
-        for (qi, plan) in plans.iter().enumerate() {
-            scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
-        }
-        // bucket → [(query, probe distance)]: every co-probed inverted
-        // list is scanned once for the whole batch
-        let mut grouped: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
-        for (qi, plan) in plans.iter().enumerate() {
-            for &(probe_d, bucket) in &plan.probes {
-                grouped.entry(bucket).or_default().push((qi as u32, probe_d));
+        let set = &idx.shards;
+
+        // scatter: bucket → [(query, probe distance)] groups routed to
+        // their owning shards, ascending bucket order (= shard-major) —
+        // every co-probed inverted list is scanned once for the batch
+        let groups = set.plan(plans);
+
+        // flat LUT packs, one per LUT slot (slot 0 = the shared spec,
+        // one extra slot per heterogeneous override shard). A slot's
+        // pack only fills the LUT rows of queries whose probes actually
+        // reach that slot's shard(s) — a batch that rarely (or never)
+        // touches an override shard pays nothing for its scorer; rows
+        // left unfilled are never read by the scan
+        let nslots = set.n_lut_slots;
+        let mut query_uses_slot = vec![false; nslots * plans.len()];
+        for group in &groups {
+            let slot = set.lut_slot[group.shard as usize] as usize;
+            for &(qi, _) in &group.members {
+                query_uses_slot[slot * plans.len() + qi as usize] = true;
             }
         }
-        let groups: Vec<(u32, Vec<(u32, f32)>)> = grouped.into_iter().collect();
-        let s1_codes = idx.stage1_codes();
+        let packs: Vec<(usize, Vec<f32>)> = (0..nslots)
+            .map(|slot| {
+                let used = &query_uses_slot[slot * plans.len()..(slot + 1) * plans.len()];
+                if !used.iter().any(|&u| u) {
+                    return (0, Vec::new());
+                }
+                let scorer = set.slot_spec(slot, &idx.pipeline).stage1.as_ref();
+                let stride = scorer.lut_len();
+                let mut luts = vec![0.0f32; plans.len() * stride];
+                for (qi, plan) in plans.iter().enumerate() {
+                    if used[qi] {
+                        scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
+                    }
+                }
+                (stride, luts)
+            })
+            .collect();
 
         // scan groups[lo..hi] into `shortlists` (one slot per plan)
         let scan_range = |lo: usize, hi: usize, shortlists: &mut [Shortlist]| {
-            for (bucket, members) in &groups[lo..hi] {
-                let list = &idx.ivf.lists[*bucket as usize];
-                if block {
-                    // block fast path: one score_block call scores a code
-                    // row for up to SCORE_BLOCK co-probed queries
-                    let mut mq = [0u32; SCORE_BLOCK];
-                    let mut scores = [0.0f32; SCORE_BLOCK];
-                    for chunk in members.chunks(SCORE_BLOCK) {
-                        for (l, &(qi, _)) in chunk.iter().enumerate() {
-                            mq[l] = qi;
-                        }
-                        for &id in list {
-                            let i = id as usize;
-                            scorer.score_block(
-                                &luts,
-                                stride,
-                                &mq[..chunk.len()],
-                                s1_codes.row(i),
-                                idx.stage1_terms[i],
-                                &mut scores[..chunk.len()],
-                            );
-                            for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
-                                shortlists[qi as usize].push(probe_d + scores[l], id);
-                            }
-                        }
-                    }
-                } else {
-                    // scalar reference path (bench comparisons only)
-                    for &id in list {
-                        let i = id as usize;
-                        let code = s1_codes.row(i);
-                        let term = idx.stage1_terms[i];
-                        for &(qi, probe_d) in members {
-                            let lut = &luts[qi as usize * stride..][..stride];
-                            shortlists[qi as usize]
-                                .push(probe_d + scorer.score(lut, code, term), id);
-                        }
-                    }
-                }
+            for group in &groups[lo..hi] {
+                let sh = &set.shards[group.shard as usize];
+                let scorer = sh.spec(&idx.pipeline).stage1.as_ref();
+                let (stride, luts) = &packs[set.lut_slot[group.shard as usize] as usize];
+                sh.scan_group(scorer, luts, *stride, group, block, shortlists);
             }
         };
 
@@ -300,7 +298,7 @@ impl<'a> BatchSearcher<'a> {
             return shortlists;
         }
         // group-parallel scan: per-thread partial shortlists over
-        // contiguous chunks of bucket groups, merged afterwards. Every
+        // contiguous chunks of shard groups, merged afterwards. Every
         // (query, candidate) pair still scores exactly once, and the
         // merge pushes under the same total (score, id) order, so the
         // result is bit-identical to the serial scan.

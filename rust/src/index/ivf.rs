@@ -10,7 +10,12 @@ use crate::util::prng::Rng;
 pub struct Ivf {
     pub centroids: Matrix,
     pub hnsw: Hnsw,
-    /// inverted lists: database row ids per bucket
+    /// inverted lists: database row ids per bucket. NOTE: when this Ivf
+    /// is assembled into a [`crate::index::SearchIndex`], the lists are
+    /// **drained into the bucket-owned shards**
+    /// ([`crate::index::ShardSet`]) — on an assembled index read the
+    /// per-bucket candidates through the owning
+    /// [`crate::index::IndexShard`], not here.
     pub lists: Vec<Vec<u32>>,
     /// bucket of each database row
     pub assign: Vec<u32>,

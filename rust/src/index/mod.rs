@@ -6,17 +6,52 @@
 //! [`StageDecoder`](crate::quantizers::StageDecoder) traits into a
 //! [`PipelineSpec`] (see [`pipeline`] for the trait-level architecture).
 //!
+//! # Ownership: ShardSet → IndexShard → BatchSearcher
+//!
+//! The index is shard-partitioned ([`shard`]): all per-bucket state
+//! lives in bucket-owned shards, the shared read-only parts stay at the
+//! top.
+//!
+//! ```text
+//! SearchIndex
+//! ├── ivf: Ivf                   coarse quantizer: centroids + HNSW +
+//! │                              per-row bucket assignment (its inverted
+//! │                              lists are drained into the shards)
+//! ├── pipeline: PipelineSpec     shared stage-1/2/3 trait objects
+//! ├── params: Arc<ParamStore>    QINCo2 model weights (stage 3)
+//! └── shards: ShardSet           scatter/gather layer + routing maps
+//!     │                          (bucket → shard, id → shard/local row)
+//!     └── [IndexShard; S]        one per contiguous bucket range:
+//!         ├── lists              shard-local inverted lists
+//!         ├── codes, stage1_*,   code tables + cached terms, indexed by
+//!         │   stage2_*           local row (global_ids maps back)
+//!         └── pipeline: Option<PipelineSpec>   heterogeneous override
+//! ```
+//!
+//! Execution scatters and gathers over that tree:
+//! [`ShardSet::plan`](shard::ShardSet::plan) routes each batch's probed
+//! buckets to their owning shards; per-shard scans
+//! ([`IndexShard`](shard::IndexShard) + the block kernel) run the
+//! existing stage-1 machinery on local rows (in parallel across
+//! [`SearchParams::batch_threads`] threads); per-shard shortlists merge
+//! under the total (score, id) order *before* the single stage-3 decode,
+//! so sharding never costs extra f_theta work and results are
+//! bit-identical to the unsharded index for every shard count.
+//!
 //! Two execution paths share one set of scoring kernels: the per-query
 //! [`SearchIndex::search`] and the batched [`batch::BatchSearcher`]
-//! engine (per-batch LUT packing, bucket-grouped scans, union stage-3
-//! decode) that the serving router dispatches whole batches through.
+//! engine (per-batch LUT packs, scattered shard-group scans, union
+//! stage-3 decode) that the serving router dispatches whole batches
+//! through.
 
 pub mod batch;
 pub mod hnsw;
 pub mod ivf;
 pub mod pipeline;
+pub mod shard;
 
 pub use batch::{stage2_use_lut, BatchSearcher, QueryPlan};
 pub use pipeline::{
     BuildCfg, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
 };
+pub use shard::{IndexShard, ShardGroup, ShardSet};

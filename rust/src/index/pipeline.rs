@@ -1,4 +1,5 @@
-//! The Fig. 3 search pipeline, generic over pluggable stage traits.
+//! The Fig. 3 search pipeline, generic over pluggable stage traits and
+//! partitioned into bucket-owned shards.
 //!
 //! # Three stages, two traits
 //!
@@ -6,21 +7,36 @@
 //! approximate LUT scan → re-scoring → exact decode of the survivors.
 //! Each stage is a trait object, assembled into a [`PipelineSpec`]:
 //!
-//! * **stage 1** — `Box<dyn ApproxScorer>` scanning [`SearchIndex::stage1_codes`]
-//!   with the cached additive terms [`SearchIndex::stage1_terms`]. The
-//!   default is the unitary [`AdditiveDecoder`] re-fit on the QINCo2
-//!   codes; [`PqScorer`]/[`OpqScorer`] swap in a product quantizer with
-//!   its *own* code table over the same IVF residuals.
+//! * **stage 1** — `Box<dyn ApproxScorer>` scanning each shard's code
+//!   table ([`IndexShard::stage1_codes`](super::shard::IndexShard::stage1_codes)) with the cached additive terms
+//!   ([`IndexShard::stage1_terms`](super::shard::IndexShard::stage1_terms)). The default is the unitary
+//!   [`AdditiveDecoder`] re-fit on the QINCo2 codes;
+//!   [`PqScorer`]/[`OpqScorer`] swap in a product quantizer with its
+//!   *own* code table over the same IVF residuals.
 //! * **stage 2** — `Option<Box<dyn ApproxScorer>>` re-scoring the stage-1
-//!   shortlist over the extended code table ([`SearchIndex::stage2_codes`]).
-//!   The default is the paper's [`PairwiseDecoder`] (Sec. 3.3, Eqs. 8-9);
-//!   `None` forwards the stage-1 shortlist unchanged.
+//!   shortlist over the extended code table
+//!   ([`IndexShard::stage2_codes`](super::shard::IndexShard::stage2_codes)). The default is the paper's
+//!   [`PairwiseDecoder`] (Sec. 3.3, Eqs. 8-9); `None` forwards the
+//!   stage-1 shortlist unchanged.
 //! * **stage 3** — `Box<dyn StageDecoder>`: one batch decode of the
 //!   surviving codes, then exact distances. The default is the pure-Rust
 //!   [`ReferenceDecoder`]; [`crate::qinco::RuntimeDecoder`] routes the
 //!   same call through one padded XLA dispatch per batch. With
 //!   [`Stage3Kind::Disabled`] ("pairwise-only fast mode") the stage-2
 //!   ranking is returned directly, truncated to `n_final`.
+//!
+//! # Shards
+//!
+//! The per-bucket state — inverted lists, stage-1/2 code tables, cached
+//! terms — is partitioned into [`IndexShard`](super::shard::IndexShard)s, each owning a contiguous
+//! IVF bucket range, collected in [`SearchIndex::shards`]
+//! (a [`ShardSet`]); the shared read-only parts (coarse quantizer,
+//! [`PipelineSpec`] scorers, model params) stay here. [`BuildCfg::shards`]
+//! selects the shard count, and [`BuildCfg::shard_pipelines`] may give
+//! individual shards their own stage-1/2 configuration (heterogeneous
+//! shards). Search results are bit-identical for every shard count by
+//! construction — see [`super::shard`] for the scatter/gather argument
+//! and the global-id remap invariant.
 //!
 //! # Distance algebra (per stage)
 //!
@@ -51,18 +67,20 @@
 //!
 //! * [`SearchIndex::search`] — one query at a time.
 //! * [`super::batch::BatchSearcher`] — the batched engine: per-batch
-//!   flat LUT packs, bucket-grouped inverted-list scans (each co-probed
-//!   list is read once per batch, each code row scored against a block
-//!   of co-probed queries via [`ApproxScorer::score_block`], bucket
-//!   groups optionally split across [`SearchParams::batch_threads`]
-//!   threads), and a single union decode for stage 3. Result-identical
-//!   to `search` for *every* pipeline configuration and thread count —
-//!   both paths share the crate-private `stage2_rescore` /
-//!   `exact_rerank` helpers, the [`ApproxScorer::use_lut`] cost model,
-//!   and the total (score, id) shortlist order of [`Shortlist`] (pinned
-//!   by `batch_equivalence.rs` across all configurations).
+//!   flat LUT packs, bucket groups scattered to their owning shards
+//!   ([`ShardSet::plan`]), each scanned once per batch with the
+//!   multi-query [`ApproxScorer::score_block`] kernel (groups optionally
+//!   split across [`SearchParams::batch_threads`] threads), per-shard
+//!   shortlists merged under the total (score, id) order, and a single
+//!   union decode for stage 3. Result-identical to `search` for *every*
+//!   pipeline configuration, thread count **and shard count** — both
+//!   paths share the crate-private `stage2_rescore` / `exact_rerank`
+//!   helpers, the [`ApproxScorer::use_lut`] cost model, and the total
+//!   (score, id) shortlist order of [`Shortlist`] (pinned by
+//!   `batch_equivalence.rs` across all configurations).
 
 use super::ivf::Ivf;
+use super::shard::ShardSet;
 use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder};
 use crate::quantizers::aq_lut::AdditiveDecoder;
 use crate::quantizers::lsq::{Lsq, LsqScorer};
@@ -76,6 +94,7 @@ use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
 use crate::util::topk::Shortlist;
 use anyhow::{bail, Result};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 /// Search-time knobs (the Fig. 6 sweep axes).
@@ -93,7 +112,7 @@ pub struct SearchParams {
     /// `n_final` instead)
     pub n_final: usize,
     /// intra-batch parallelism of one batched execute: the stage-1
-    /// bucket-group scan (and the per-query stage-2/3 loops) split
+    /// shard-group scan (and the per-query stage-2/3 loops) split
     /// across this many threads, with per-thread shortlists merged
     /// under the total (score, id) order — results stay bit-identical
     /// for every thread count (pinned by `batch_equivalence`).
@@ -204,7 +223,9 @@ impl PipelineConfig {
 /// index shares these read-only across every serving thread, so stage 1/2
 /// scorers are `Send + Sync` by trait bound and the stage-3 box carries
 /// the marker bounds explicitly (thread-local runtime decoders live
-/// *outside* the spec, handed to workers by a `DecoderFactory`).
+/// *outside* the spec, handed to workers by a `DecoderFactory`). An
+/// [`IndexShard`](super::shard::IndexShard) may carry its own spec (heterogeneous shards); shards
+/// without one run this shared spec.
 pub struct PipelineSpec {
     pub stage1: Box<dyn ApproxScorer>,
     pub stage2: Option<Box<dyn ApproxScorer>>,
@@ -224,6 +245,22 @@ pub struct BuildCfg {
     pub seed: u64,
     /// which scorer/decoder runs each stage
     pub pipeline: PipelineConfig,
+    /// number of bucket-owned [`IndexShard`](super::shard::IndexShard)s the per-bucket state is
+    /// partitioned into (contiguous bucket ranges). Must be in
+    /// `1..=k_ivf`. Search results are bit-identical for every value;
+    /// the knob exists for placement/parallelism. CLI: `--shards`.
+    pub shards: usize,
+    /// heterogeneous shards: per-shard pipeline overrides as
+    /// `(shard index, config)` pairs. Each named shard gets its own
+    /// stage-1/2 scorers and tables, fit on the same decoder-fit split;
+    /// stage 3 must match the shared config (the QINCo2 codes are
+    /// uniform across shards). Empty — the default — means every shard
+    /// runs [`Self::pipeline`]. Note: every override — including two
+    /// shards given *identical* configs — fits its own stage-1 scorer
+    /// and claims its own per-query LUT slot; overrides are meant to be
+    /// sparse (a few special shards), not a way to re-spell a
+    /// homogeneous pipeline.
+    pub shard_pipelines: Vec<(usize, PipelineConfig)>,
     /// default intra-batch thread count for searches against this index,
     /// used when [`SearchParams::batch_threads`] is `0` (inherit).
     /// `0` here means "all cores" (`pool::default_threads`); the
@@ -240,30 +277,25 @@ impl Default for BuildCfg {
             fit_sample: 20_000,
             seed: 0x5EA2C4,
             pipeline: PipelineConfig::default(),
+            shards: 1,
+            shard_pipelines: Vec::new(),
             batch_threads: 1,
         }
     }
 }
 
 pub struct SearchIndex {
+    /// Coarse quantizer (centroids + HNSW + per-row bucket assignment).
+    /// Its inverted lists are **drained into the shards** at assembly —
+    /// per-bucket candidate lists live in [`Self::shards`].
     pub ivf: Ivf,
-    /// QINCo2 codes of the database residuals [N, M] — the stage-3
-    /// decode source
-    pub codes: Codes,
     pub params: Arc<ParamStore>,
-    /// the pluggable stage implementations
+    /// the shared stage implementations (shards without an override run
+    /// these)
     pub pipeline: PipelineSpec,
-    /// side code table scanned by the stage-1 scorer when it differs
-    /// from the QINCo2 codes (PQ/OPQ stage 1); `None` means stage 1
-    /// scans [`Self::codes`] directly — no duplicated table for the
-    /// default AQ pipeline. Resolve with [`Self::stage1_codes`].
-    pub stage1_side_codes: Option<Codes>,
-    /// cached stage-1 terms: ||x̂_r||² + 2⟨cent, x̂_r⟩ per db vector
-    pub stage1_terms: Vec<f32>,
-    /// extended code table scored by stage 2 (empty when stage 2 is off)
-    pub stage2_codes: Codes,
-    /// cached ||x̂_pw||² per db vector (empty when stage 2 is off)
-    pub stage2_norms: Vec<f32>,
+    /// the partitioned per-bucket state: inverted lists, stage-1/2 code
+    /// tables and caches, one [`IndexShard`](super::shard::IndexShard) per contiguous bucket range
+    pub shards: ShardSet,
     /// whether the exact stage-3 re-rank runs at all
     /// ([`Stage3Kind::Disabled`] turns searches into stage-2-final mode)
     pub stage3_enabled: bool,
@@ -274,6 +306,130 @@ pub struct SearchIndex {
     /// count a search with `SearchParams::batch_threads == 0` inherits
     pub default_batch_threads: usize,
     pub db_len: usize,
+}
+
+/// The fitted stage-2 machinery, shared by every shard that enables
+/// stage 2: the pairwise decoder (fit once on the decoder-fit split) and
+/// the RQ bucket codes of the IVF centroids. Per-row tables are derived
+/// from it by [`stage2_tables`] — fitting is independent of which rows a
+/// shard owns, so one fit serves the shared spec and every override.
+struct Stage2Fit {
+    pairwise: PairwiseDecoder,
+    bucket_codes: Codes,
+}
+
+/// Fit the configured stage-1 scorer on the decoder-fit split and encode
+/// the given residual rows into the side table it scans (`None` for AQ,
+/// which scans the QINCo2 codes directly). Shared by the global build
+/// and the per-shard heterogeneous overrides — same seeds, so a full
+/// override is bit-identical to the homogeneous pipeline of that kind.
+fn build_stage1(
+    kind: &Stage1Kind,
+    fit_res: &Matrix,
+    fit_codes: &Codes,
+    residuals: &Matrix,
+    k: usize,
+    seed: u64,
+) -> (Box<dyn ApproxScorer>, Option<Codes>) {
+    match kind {
+        Stage1Kind::Aq => {
+            // unitary RQ re-fit on (residual, code) pairs; scans the
+            // QINCo2 code table directly (no side table)
+            let aq = AdditiveDecoder::fit_rq(fit_res, fit_codes, k);
+            (Box::new(aq), None)
+        }
+        Stage1Kind::Pq { m: m_pq } => {
+            let pq = Pq::train(fit_res, *m_pq, k, seed ^ 0x9106);
+            let s1_codes = pq.encode(residuals);
+            (Box::new(PqScorer(pq)), Some(s1_codes))
+        }
+        Stage1Kind::Opq { m: m_pq, iters } => {
+            let opq = Opq::train(fit_res, *m_pq, k, *iters, seed ^ 0x0619);
+            let s1_codes = opq.encode(residuals);
+            (Box::new(OpqScorer::new(opq)), Some(s1_codes))
+        }
+        Stage1Kind::Lsq { m: m_s1 } => {
+            let lsq = Lsq::train(fit_res, *m_s1, k, 2, seed ^ 0x15D1);
+            let s1_codes = lsq.encode(residuals);
+            (Box::new(LsqScorer(lsq)), Some(s1_codes))
+        }
+        Stage1Kind::Rq { m: m_s1 } => {
+            let rq = Rq::train(fit_res, *m_s1, k, 1, seed ^ 0x4217);
+            let s1_codes = rq.encode(residuals);
+            (Box::new(RqScorer(rq)), Some(s1_codes))
+        }
+    }
+}
+
+/// Cached stage-1 terms for a set of rows: `||x̂||² + 2⟨cent, x̂⟩` from
+/// the scorer's decode of `scan_codes`, with each row's centroid given
+/// by `row_buckets`.
+fn stage1_terms_of(
+    scorer: &dyn ApproxScorer,
+    scan_codes: &Codes,
+    centroids: &Matrix,
+    row_buckets: &[u32],
+) -> Vec<f32> {
+    debug_assert_eq!(scan_codes.n, row_buckets.len());
+    let dec = scorer.decode(scan_codes);
+    (0..scan_codes.n)
+        .map(|i| {
+            let cent = centroids.row(row_buckets[i] as usize);
+            tensor::sqnorm(dec.row(i)) + 2.0 * tensor::dot(cent, dec.row(i))
+        })
+        .collect()
+}
+
+/// Fit the pairwise stage-2 decoder on the decoder-fit split. Runs at
+/// most once per index build, regardless of how many shards enable
+/// stage 2 — the fit does not depend on which rows a shard owns.
+#[allow(clippy::too_many_arguments)]
+fn fit_stage2(
+    ivf: &Ivf,
+    fit_x: &Matrix,
+    fit_assign: &[u32],
+    fit_codes: &Codes,
+    m_tilde: usize,
+    n_pairs_train: usize,
+    k: usize,
+    seed: u64,
+) -> Stage2Fit {
+    // RQ-quantize the IVF centroids into M̃ codes (bucket-level only:
+    // storage independent of the database size)
+    let ivf_rq = Rq::train(&ivf.centroids, m_tilde, k, 4, seed ^ 0x77);
+    let bucket_codes = ivf_rq.encode(&ivf.centroids);
+    let n_pairs = if n_pairs_train == 0 { 2 * fit_codes.m } else { n_pairs_train };
+    let mut fit_extra = Codes::zeros(fit_x.rows, m_tilde);
+    for i in 0..fit_x.rows {
+        fit_extra
+            .row_mut(i)
+            .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
+    }
+    let fit_pw_codes = append_positions(fit_codes, &fit_extra);
+    let pairwise = PairwiseDecoder::train(fit_x, &fit_pw_codes, k, n_pairs);
+    Stage2Fit { pairwise, bucket_codes }
+}
+
+/// Derive the stage-2 extended code table and norm cache for a set of
+/// rows (`row_codes` + `row_buckets`, parallel) from a fitted
+/// [`Stage2Fit`]. Per-row and order-preserving, so a shard's tables are
+/// exactly the corresponding rows of the global tables.
+fn stage2_tables(
+    fit: &Stage2Fit,
+    row_codes: &Codes,
+    row_buckets: &[u32],
+    m_tilde: usize,
+) -> (Codes, Vec<f32>) {
+    let n_rows = row_codes.n;
+    let mut extra = Codes::zeros(n_rows, m_tilde);
+    for i in 0..n_rows {
+        extra
+            .row_mut(i)
+            .copy_from_slice(fit.bucket_codes.row(row_buckets[i] as usize));
+    }
+    let pw_codes = append_positions(row_codes, &extra);
+    let norms = fit.pairwise.norms(&pw_codes);
+    (pw_codes, norms)
 }
 
 impl SearchIndex {
@@ -348,21 +504,29 @@ impl SearchIndex {
 
     /// Assemble an index from pre-computed codes: instantiate the
     /// pipeline stages selected by `cfg.pipeline`, fit their lookup
-    /// structures and per-vector caches. Engine-free — the codes may come
-    /// from [`Codec::encode`] (the XLA path, see [`Self::build`]) or from
-    /// the pure-Rust reference encoder, which is how the property tests
-    /// and artifact-free benches construct real indexes without a PJRT
-    /// runtime.
+    /// structures and per-vector caches, then partition the per-bucket
+    /// state into `cfg.shards` bucket-owned [`IndexShard`](super::shard::IndexShard)s (applying
+    /// any [`BuildCfg::shard_pipelines`] overrides). Engine-free — the
+    /// codes may come from [`Codec::encode`] (the XLA path, see
+    /// [`Self::build`]) or from the pure-Rust reference encoder, which
+    /// is how the property tests and artifact-free benches construct
+    /// real indexes without a PJRT runtime.
     ///
     /// `codes` are the database residual codes (row i ↔ `ivf.assign[i]`),
     /// `residuals` the residual vectors themselves (needed when stage 1
     /// trains its own quantizer); `fit_x` / `fit_assign` / `fit_codes`
     /// are the decoder-fit split: raw training vectors, their IVF
     /// buckets, and the codes of their residuals.
+    ///
+    /// Panics when `cfg.shards` is outside `1..=k_ivf`, when a
+    /// `shard_pipelines` entry names a shard out of range, or when an
+    /// override's stage-3 kind differs from the shared one (stage 3 is
+    /// global — the QINCo2 codes are uniform across shards). The CLI
+    /// validates `--shards` before reaching here.
     #[allow(clippy::too_many_arguments)]
     pub fn assemble(
         params: ParamStore,
-        ivf: Ivf,
+        mut ivf: Ivf,
         codes: Codes,
         residuals: &Matrix,
         fit_x: &Matrix,
@@ -374,7 +538,6 @@ impl SearchIndex {
         assert_eq!(residuals.rows, codes.n, "residuals must cover the database");
         assert_eq!(fit_x.rows, fit_codes.n, "fit split size mismatch");
         assert_eq!(fit_x.rows, fit_assign.len(), "fit split size mismatch");
-        let m = codes.m;
         let k = params.cfg.k;
         let db_rows = codes.n;
 
@@ -385,76 +548,48 @@ impl SearchIndex {
             let crow = ivf.centroids.row(fit_assign[i] as usize).to_vec();
             tensor::sub_assign(fit_res.row_mut(i), &crow);
         }
-        let (stage1, stage1_side_codes): (Box<dyn ApproxScorer>, Option<Codes>) =
-            match &cfg.pipeline.stage1 {
-                Stage1Kind::Aq => {
-                    // unitary RQ re-fit on (residual, code) pairs; scans
-                    // the QINCo2 code table directly (no side table)
-                    let aq = AdditiveDecoder::fit_rq(&fit_res, fit_codes, k);
-                    (Box::new(aq), None)
-                }
-                Stage1Kind::Pq { m: m_pq } => {
-                    let pq = Pq::train(&fit_res, *m_pq, k, cfg.seed ^ 0x9106);
-                    let s1_codes = pq.encode(residuals);
-                    (Box::new(PqScorer(pq)), Some(s1_codes))
-                }
-                Stage1Kind::Opq { m: m_pq, iters } => {
-                    let opq = Opq::train(&fit_res, *m_pq, k, *iters, cfg.seed ^ 0x0619);
-                    let s1_codes = opq.encode(residuals);
-                    (Box::new(OpqScorer::new(opq)), Some(s1_codes))
-                }
-                Stage1Kind::Lsq { m: m_s1 } => {
-                    let lsq = Lsq::train(&fit_res, *m_s1, k, 2, cfg.seed ^ 0x15D1);
-                    let s1_codes = lsq.encode(residuals);
-                    (Box::new(LsqScorer(lsq)), Some(s1_codes))
-                }
-                Stage1Kind::Rq { m: m_s1 } => {
-                    let rq = Rq::train(&fit_res, *m_s1, k, 1, cfg.seed ^ 0x4217);
-                    let s1_codes = rq.encode(residuals);
-                    (Box::new(RqScorer(rq)), Some(s1_codes))
-                }
-            };
+        let (stage1, stage1_side_codes) =
+            build_stage1(&cfg.pipeline.stage1, &fit_res, fit_codes, residuals, k, cfg.seed);
         // cached term_i = ||x̂_r||² + 2⟨cent, x̂_r⟩ from the stage-1 decode
-        let s1_dec = stage1.decode(stage1_side_codes.as_ref().unwrap_or(&codes));
-        let mut stage1_terms = Vec::with_capacity(db_rows);
-        for i in 0..db_rows {
-            let cent = ivf.centroids.row(ivf.assign[i] as usize);
-            stage1_terms
-                .push(tensor::sqnorm(s1_dec.row(i)) + 2.0 * tensor::dot(cent, s1_dec.row(i)));
-        }
+        let stage1_terms = stage1_terms_of(
+            stage1.as_ref(),
+            stage1_side_codes.as_ref().unwrap_or(&codes),
+            &ivf.centroids,
+            &ivf.assign,
+        );
 
-        // ---- stage 2: pairwise decoder over extended positions ----
-        let (stage2, stage2_codes, stage2_norms, pairwise_trace): (
+        // ---- stage 2: pairwise decoder over extended positions, fit
+        // ONCE and shared by the global spec and every override shard
+        // that enables stage 2 (the fit is row-independent) ----
+        let need_stage2 =
+            cfg.pipeline.stage2 || cfg.shard_pipelines.iter().any(|(_, p)| p.stage2);
+        let s2_fit = need_stage2.then(|| {
+            fit_stage2(
+                &ivf,
+                fit_x,
+                fit_assign,
+                fit_codes,
+                cfg.m_tilde,
+                cfg.n_pairs_train,
+                k,
+                cfg.seed,
+            )
+        });
+        let (stage2_scorer, stage2_codes, stage2_norms, pairwise_trace): (
             Option<Box<dyn ApproxScorer>>,
             Codes,
             Vec<f32>,
             Vec<(usize, usize, f64)>,
         ) = if cfg.pipeline.stage2 {
-            // RQ-quantize the IVF centroids into M̃ codes (bucket-level
-            // only: storage independent of the database size)
-            let ivf_rq = Rq::train(&ivf.centroids, cfg.m_tilde, k, 4, cfg.seed ^ 0x77);
-            let bucket_codes = ivf_rq.encode(&ivf.centroids);
-            let mut extra = Codes::zeros(db_rows, cfg.m_tilde);
-            for i in 0..db_rows {
-                extra
-                    .row_mut(i)
-                    .copy_from_slice(bucket_codes.row(ivf.assign[i] as usize));
-            }
-            let pw_codes = append_positions(&codes, &extra);
-            let n_pairs = if cfg.n_pairs_train == 0 { 2 * m } else { cfg.n_pairs_train };
-            let mut fit_extra = Codes::zeros(fit_x.rows, cfg.m_tilde);
-            for i in 0..fit_x.rows {
-                fit_extra
-                    .row_mut(i)
-                    .copy_from_slice(bucket_codes.row(fit_assign[i] as usize));
-            }
-            let fit_pw_codes = append_positions(fit_codes, &fit_extra);
-            let pairwise = PairwiseDecoder::train(fit_x, &fit_pw_codes, k, n_pairs);
-            let pw_norms = pairwise.norms(&pw_codes);
-            let trace = pairwise.trace();
-            (Some(Box::new(pairwise)), pw_codes, pw_norms, trace)
+            let fit = s2_fit.as_ref().expect("stage-2 fit exists when the shared spec needs it");
+            let (pw_codes, norms) = stage2_tables(fit, &codes, &ivf.assign, cfg.m_tilde);
+            let trace = fit.pairwise.trace();
+            (Some(Box::new(fit.pairwise.clone())), pw_codes, norms, trace)
         } else {
-            (None, Codes::zeros(0, 0), Vec::new(), Vec::new())
+            // the fit may still exist (override-only stage 2) — surface
+            // its trace so Table S3 consumers see the pairs that were fit
+            let trace = s2_fit.as_ref().map(|f| f.pairwise.trace()).unwrap_or_default();
+            (None, Codes::zeros(0, 0), Vec::new(), trace)
         };
 
         // ---- stage 3: the index-held decoder is always the infallible,
@@ -466,15 +601,77 @@ impl SearchIndex {
             Box::new(ReferenceDecoder { params: params.clone() });
         let stage3_enabled = cfg.pipeline.stage3 != Stage3Kind::Disabled;
 
-        SearchIndex {
-            ivf,
+        // ---- partition the per-bucket state into bucket-owned shards:
+        // the coarse quantizer keeps centroids/HNSW/assign, its inverted
+        // lists move into the shards ----
+        let lists = std::mem::take(&mut ivf.lists);
+        let mut shards = ShardSet::partition(
+            lists,
             codes,
-            params,
-            pipeline: PipelineSpec { stage1, stage2, stage3 },
             stage1_side_codes,
             stage1_terms,
             stage2_codes,
             stage2_norms,
+            cfg.shards,
+        );
+
+        // ---- heterogeneous overrides: named shards get their own
+        // stage-1/2 scorers + tables, fit with the same seeds as a
+        // homogeneous build of that kind would use ----
+        for (s, pcfg) in &cfg.shard_pipelines {
+            assert!(
+                *s < shards.n_shards(),
+                "shard_pipelines names shard {s} but the index has {} shards",
+                shards.n_shards()
+            );
+            assert_eq!(
+                pcfg.stage3, cfg.pipeline.stage3,
+                "per-shard stage-3 overrides are not supported: stage 3 is \
+                 global (the QINCo2 codes are uniform across shards)"
+            );
+            let sh = &shards.shards[*s];
+            let rows: Vec<usize> = sh.global_ids.iter().map(|&g| g as usize).collect();
+            let sh_res = residuals.gather_rows(&rows);
+            let row_buckets: Vec<u32> = rows.iter().map(|&g| ivf.assign[g]).collect();
+            let (o_stage1, o_side) =
+                build_stage1(&pcfg.stage1, &fit_res, fit_codes, &sh_res, k, cfg.seed);
+            let o_terms = stage1_terms_of(
+                o_stage1.as_ref(),
+                o_side.as_ref().unwrap_or(&sh.codes),
+                &ivf.centroids,
+                &row_buckets,
+            );
+            // stage 2 for the override reuses the single fit — only the
+            // per-row tables are derived for this shard's rows
+            let (o_s2_scorer, o_s2_codes, o_s2_norms): (
+                Option<Box<dyn ApproxScorer>>,
+                Codes,
+                Vec<f32>,
+            ) = if pcfg.stage2 {
+                let fit =
+                    s2_fit.as_ref().expect("stage-2 fit exists when any override needs it");
+                let (pw_codes, norms) = stage2_tables(fit, &sh.codes, &row_buckets, cfg.m_tilde);
+                (Some(Box::new(fit.pairwise.clone())), pw_codes, norms)
+            } else {
+                (None, Codes::zeros(0, 0), Vec::new())
+            };
+            // the override's stage-3 slot exists only because a
+            // PipelineSpec is a complete three-stage pipeline; execution
+            // always decodes through the index-level stage 3 (asserted
+            // equal above), never through this box
+            let o_spec = PipelineSpec {
+                stage1: o_stage1,
+                stage2: o_s2_scorer,
+                stage3: Box::new(ReferenceDecoder { params: params.clone() }),
+            };
+            shards.install_override(*s, o_spec, o_side, o_terms, o_s2_codes, o_s2_norms);
+        }
+
+        SearchIndex {
+            ivf,
+            params,
+            pipeline: PipelineSpec { stage1, stage2: stage2_scorer, stage3 },
+            shards,
             stage3_enabled,
             pairwise_trace,
             default_batch_threads: if cfg.batch_threads == 0 {
@@ -493,9 +690,17 @@ impl SearchIndex {
         t.max(1)
     }
 
+    /// Number of QINCo2 code positions per database vector (M).
+    #[inline]
+    pub fn code_positions(&self) -> usize {
+        self.shards.shards[0].codes.m
+    }
+
     /// Full pipeline search for one query. Returns ranked (score, id) —
     /// exact squared distances when stage 3 ran, approximate scores
-    /// (missing the constant ||q||²) otherwise.
+    /// (missing the constant ||q||²) otherwise. Probed buckets are read
+    /// from their owning shards; results are bit-identical for every
+    /// shard count.
     ///
     /// Panics if the index-held stage-3 decoder fails; the built-in
     /// decoders are infallible (fallible runtime decoders belong to
@@ -503,17 +708,32 @@ impl SearchIndex {
     pub fn search(&self, q: &[f32], sp: &SearchParams) -> Vec<(f32, u32)> {
         // ---- stage 0: coarse probe ----
         let probes = self.ivf.probe(q, sp.nprobe, sp.ef_search);
-        // ---- stage 1: LUT scan over the probed lists ----
-        let scorer = self.pipeline.stage1.as_ref();
-        let s1_codes = self.stage1_codes();
-        let lut = scorer.lut(q);
+        // ---- stage 1: LUT scan over the probed lists, shard-routed.
+        // One LUT per slot: all shards on the shared spec reuse slot 0,
+        // override shards build their own (lazily — only if probed) ----
+        let set = &self.shards;
+        let mut luts: Vec<Option<Vec<f32>>> = vec![None; set.n_lut_slots];
+        // local scan tallies, flushed once per shard after the loop —
+        // no per-probe atomic RMW on the (contended) shard counters
+        let mut scanned = vec![0u64; set.n_shards()];
         let mut shortlist = Shortlist::new(sp.n_aq);
         for &(probe_d, bucket) in &probes {
-            for &id in &self.ivf.lists[bucket as usize] {
-                let i = id as usize;
-                let s =
-                    probe_d + scorer.score(&lut, s1_codes.row(i), self.stage1_terms[i]);
-                shortlist.push(s, id);
+            let si = set.shard_of[bucket as usize] as usize;
+            let sh = &set.shards[si];
+            let scorer = sh.spec(&self.pipeline).stage1.as_ref();
+            let lut = luts[set.lut_slot[si] as usize].get_or_insert_with(|| scorer.lut(q));
+            let s1_codes = sh.stage1_codes();
+            let list = sh.list(bucket);
+            scanned[si] += list.len() as u64;
+            for &local in list {
+                let i = local as usize;
+                let s = probe_d + scorer.score(lut, s1_codes.row(i), sh.stage1_terms[i]);
+                shortlist.push(s, sh.global_ids[i]);
+            }
+        }
+        for (sh, &n) in set.shards.iter().zip(&scanned) {
+            if n > 0 {
+                sh.scanned.fetch_add(n, Ordering::Relaxed);
             }
         }
         // ---- stage 2: approximate re-scoring ----
@@ -527,47 +747,91 @@ impl SearchIndex {
             out.truncate(sp.n_final);
             return out;
         }
-        let ids: Vec<usize> = stage2.iter().map(|&(_, id)| id as usize).collect();
+        let ids: Vec<u32> = stage2.iter().map(|&(_, id)| id).collect();
         let dec = self
             .pipeline
             .stage3
-            .decode(&gather_codes(&self.codes, &ids))
+            .decode(&self.shards.gather_stage3_codes(&ids))
             .expect("index-held stage-3 decoder failed");
         let rows: Vec<usize> = (0..ids.len()).collect();
         self.exact_rerank(q, &stage2, &dec, &rows, sp.n_final)
     }
 
-    /// Stage 2: re-score a stage-1 shortlist with the configured scorer
-    /// and keep the best `sp.n_pairs`. Chooses between a per-query joint
-    /// LUT and direct dots via the scorer's [`ApproxScorer::use_lut`]
-    /// cost model. Shared by the per-query and batched paths (identical
-    /// float rounding). A `None` stage 2 forwards the shortlist as-is.
+    /// Stage 2: re-score a stage-1 shortlist with each candidate's
+    /// owning-shard stage-2 scorer and keep the best `sp.n_pairs`.
+    /// Chooses between a per-query joint LUT and direct dots via the
+    /// scorer's [`ApproxScorer::use_lut`] cost model. Shared by the
+    /// per-query and batched paths (identical float rounding). With no
+    /// effective stage 2 anywhere, forwards the shortlist as-is; with
+    /// heterogeneous shards, a shard without stage 2 forwards its
+    /// candidates' stage-1 scores into the merged shortlist.
     pub(crate) fn stage2_rescore(
         &self,
         q: &[f32],
         stage1: Vec<(f32, u32)>,
         sp: &SearchParams,
     ) -> Vec<(f32, u32)> {
-        let Some(scorer) = self.pipeline.stage2.as_deref() else {
-            return stage1;
-        };
         if sp.n_pairs == 0 || stage1.is_empty() {
             return stage1;
         }
+        let set = &self.shards;
+        if !set.heterogeneous() {
+            // homogeneous fast path: one scorer, one LUT-vs-direct
+            // choice for the whole shortlist (the historical behavior)
+            let Some(scorer) = self.pipeline.stage2.as_deref() else {
+                return stage1;
+            };
+            let mut keep = Shortlist::new(sp.n_pairs);
+            if scorer.use_lut(stage1.len(), q.len()) {
+                let lut = scorer.lut(q);
+                for &(_, id) in &stage1 {
+                    let (sh, i) = set.locate(id);
+                    let s = scorer.score(&lut, sh.stage2_codes.row(i), sh.stage2_norms[i]);
+                    keep.push(s, id);
+                }
+            } else {
+                for &(_, id) in &stage1 {
+                    let (sh, i) = set.locate(id);
+                    let s = scorer.score_direct(q, sh.stage2_codes.row(i), sh.stage2_norms[i]);
+                    keep.push(s, id);
+                }
+            }
+            return keep.into_sorted();
+        }
+        // heterogeneous: score each candidate through its owning shard's
+        // spec, with per-slot LUTs. The LUT-vs-direct cost model is
+        // consulted with the FULL shortlist size, not the slot's share:
+        // LUT and direct scores agree only to float tolerance, so using
+        // per-slot counts would let the partition flip the choice and
+        // break the contract that a full per-shard override is
+        // bit-identical to the homogeneous pipeline of that kind (pinned
+        // by `full_override_matches_the_homogeneous_pipeline`).
+        if !set.shards.iter().any(|sh| sh.spec(&self.pipeline).stage2.is_some()) {
+            return stage1;
+        }
+        let mut luts: Vec<Option<Vec<f32>>> = vec![None; set.n_lut_slots];
+        // the use_lut inputs are loop-invariant per slot: decide once
+        let mut slot_use_lut: Vec<Option<bool>> = vec![None; set.n_lut_slots];
         let mut keep = Shortlist::new(sp.n_pairs);
-        if scorer.use_lut(stage1.len(), q.len()) {
-            let lut = scorer.lut(q);
-            for &(_, id) in &stage1 {
-                let i = id as usize;
-                let s = scorer.score(&lut, self.stage2_codes.row(i), self.stage2_norms[i]);
-                keep.push(s, id);
-            }
-        } else {
-            for &(_, id) in &stage1 {
-                let i = id as usize;
-                let s = scorer.score_direct(q, self.stage2_codes.row(i), self.stage2_norms[i]);
-                keep.push(s, id);
-            }
+        for &(s1_score, id) in &stage1 {
+            let si = set.owner_of[id as usize] as usize;
+            let sh = &set.shards[si];
+            let Some(scorer) = sh.spec(&self.pipeline).stage2.as_deref() else {
+                // this shard runs stage-2-less: its stage-1 score stands
+                keep.push(s1_score, id);
+                continue;
+            };
+            let slot = set.lut_slot[si] as usize;
+            let i = set.local_of[id as usize] as usize;
+            let use_lut = *slot_use_lut[slot]
+                .get_or_insert_with(|| scorer.use_lut(stage1.len(), q.len()));
+            let s = if use_lut {
+                let lut = luts[slot].get_or_insert_with(|| scorer.lut(q));
+                scorer.score(lut, sh.stage2_codes.row(i), sh.stage2_norms[i])
+            } else {
+                scorer.score_direct(q, sh.stage2_codes.row(i), sh.stage2_norms[i])
+            };
+            keep.push(s, id);
         }
         keep.into_sorted()
     }
@@ -611,7 +875,7 @@ impl SearchIndex {
     /// callers handle one result type. Runs the batched engine over
     /// per-thread chunks of the query set — result-identical to calling
     /// [`Self::search`] per row. With `sp.batch_threads > 1` each chunk
-    /// additionally splits its bucket-group scan across that many
+    /// additionally splits its shard-group scan across that many
     /// threads (the outer chunk count shrinks so total thread use stays
     /// near the core count). A failing stage-3 decoder surfaces as an
     /// `Err` instead of panicking inside the engine.
@@ -645,25 +909,27 @@ impl SearchIndex {
         Ok(out)
     }
 
-    /// The code table stage 1 scans: the side table when the scorer owns
-    /// one (PQ/OPQ), the QINCo2 codes otherwise.
-    #[inline]
-    pub fn stage1_codes(&self) -> &Codes {
-        self.stage1_side_codes.as_ref().unwrap_or(&self.codes)
-    }
-
     /// Bytes per database vector (codes + the per-vector f32 caches),
-    /// for the bitrate accounting in EXPERIMENTS.md.
+    /// for the bitrate accounting in EXPERIMENTS.md. Accounted at the
+    /// shared configuration — read off the first shard *without* a
+    /// pipeline override; if every shard is overridden, shard 0's
+    /// (override) layout is reported instead.
     pub fn bytes_per_vector(&self) -> f64 {
         let bits_per_code = usize::BITS - (self.params.cfg.k - 1).leading_zeros();
+        let sh = self
+            .shards
+            .shards
+            .iter()
+            .find(|sh| sh.pipeline.is_none())
+            .unwrap_or(&self.shards.shards[0]);
         // QINCo2 codes + the stage-1 term cache (f32)
-        let mut bytes = (self.codes.m * bits_per_code as usize) as f64 / 8.0 + 4.0;
-        // a PQ/OPQ stage 1 scans its own side table
-        if let Some(side) = &self.stage1_side_codes {
+        let mut bytes = (sh.codes.m * bits_per_code as usize) as f64 / 8.0 + 4.0;
+        // a PQ/OPQ/LSQ/RQ stage 1 scans its own side table
+        if let Some(side) = &sh.stage1_side_codes {
             bytes += (side.m * bits_per_code as usize) as f64 / 8.0;
         }
         // stage-2 norm cache (f32)
-        if self.pipeline.stage2.is_some() {
+        if sh.spec(&self.pipeline).stage2.is_some() {
             bytes += 4.0;
         }
         bytes

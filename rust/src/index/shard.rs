@@ -1,0 +1,510 @@
+//! Bucket-owned index shards and the scatter/gather layer.
+//!
+//! A [`crate::index::SearchIndex`] no longer holds one monolithic set of
+//! per-vector tables: the per-bucket state — inverted lists, stage-1/2
+//! code tables, cached terms/norms — lives in [`IndexShard`]s, each
+//! owning a **contiguous range of IVF buckets**, collected in a
+//! [`ShardSet`]. The shared read-only parts (the coarse quantizer, the
+//! [`PipelineSpec`] scorers, the model parameters) stay on the index and
+//! are referenced by every shard.
+//!
+//! # Scatter / gather
+//!
+//! [`ShardSet::plan`] routes a batch's probed buckets to their owning
+//! shards as [`ShardGroup`]s, in ascending bucket order — which, because
+//! shards own contiguous ranges, is also shard-major order.
+//! [`IndexShard::scan_group`] then runs the existing multi-query
+//! block-scan kernel over the shard's *local* rows, pushing
+//! `(score, global id)` pairs into the per-query shortlists. Per-shard
+//! shortlists merge under the total (score, id) order of
+//! [`Shortlist`], so the merged stage-1 shortlist — and therefore the
+//! whole pipeline — is **bit-identical to the unsharded index for every
+//! shard count**: each (query, candidate) pair is scored with identical
+//! floats wherever its row is stored, and the order is total.
+//!
+//! # The global-id remap invariant
+//!
+//! Each shard stores its rows contiguously in *local* row order and
+//! carries [`IndexShard::global_ids`] mapping local row → global
+//! database id. The invariant (pinned by `tests/batch_equivalence.rs`):
+//!
+//! * `shards[s].global_ids[local]` enumerates, in ascending owned-bucket
+//!   order (and original inverted-list order within a bucket), exactly
+//!   the database rows whose IVF bucket falls in
+//!   `[bucket_lo, bucket_hi)`; every database row appears in exactly one
+//!   shard;
+//! * `ShardSet::owner_of[gid]` / `ShardSet::local_of[gid]` invert the
+//!   map: `shards[owner_of[gid]].global_ids[local_of[gid]] == gid`;
+//! * `shards[s].lists[b - bucket_lo]` holds *local* rows, all of which
+//!   decode back (via `global_ids`) to rows assigned to bucket `b`.
+//!
+//! All scoring state (`codes`, `stage1_side_codes`, `stage1_terms`,
+//! `stage2_codes`, `stage2_norms`) is indexed by local row; only
+//! shortlist entries carry global ids.
+//!
+//! # Heterogeneous shards
+//!
+//! A shard may carry its own [`PipelineSpec`] override
+//! ([`IndexShard::pipeline`]) with stage-1/2 tables fit for its rows —
+//! the ROADMAP's design intent of heterogeneous stage configurations
+//! behind one router. Shards without an override share the index-level
+//! spec (and, at execution time, one LUT per query — see
+//! [`ShardSet::lut_slot`]).
+
+use super::batch::QueryPlan;
+use super::pipeline::{gather_codes, PipelineSpec};
+use crate::quantizers::{ApproxScorer, Codes, SCORE_BLOCK};
+use crate::util::topk::Shortlist;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One scatter unit produced by [`ShardSet::plan`]: a probed bucket, its
+/// owning shard, and the batch members interested in it.
+pub struct ShardGroup {
+    /// owning shard index in [`ShardSet::shards`]
+    pub shard: u32,
+    /// global bucket id
+    pub bucket: u32,
+    /// (query index within the batch, coarse probe distance)
+    pub members: Vec<(u32, f32)>,
+}
+
+/// Per-bucket-range slice of the index: inverted lists, code tables and
+/// cached terms for the database rows whose IVF bucket falls in
+/// `[bucket_lo, bucket_hi)`. See the module docs for the global-id remap
+/// invariant.
+pub struct IndexShard {
+    /// first owned bucket (inclusive)
+    pub bucket_lo: u32,
+    /// one past the last owned bucket (exclusive)
+    pub bucket_hi: u32,
+    /// inverted lists of the owned buckets, indexed by
+    /// `bucket - bucket_lo`; values are **shard-local** rows
+    pub lists: Vec<Vec<u32>>,
+    /// local row → global database id (the remap invariant)
+    pub global_ids: Vec<u32>,
+    /// QINCo2 codes of the shard's rows — the stage-3 decode source
+    pub codes: Codes,
+    /// side code table scanned by stage 1 when the scorer owns one
+    /// (PQ/OPQ/LSQ/RQ); `None` means stage 1 scans [`Self::codes`]
+    pub stage1_side_codes: Option<Codes>,
+    /// cached stage-1 terms: ||x̂_r||² + 2⟨cent, x̂_r⟩ per local row
+    pub stage1_terms: Vec<f32>,
+    /// extended code table scored by stage 2 (empty when stage 2 is off)
+    pub stage2_codes: Codes,
+    /// cached ||x̂_pw||² per local row (empty when stage 2 is off)
+    pub stage2_norms: Vec<f32>,
+    /// per-shard pipeline override (heterogeneous shards). `None` —
+    /// the common case — means the shard runs the index-level
+    /// [`PipelineSpec`]. Stage 3 is always index-level: the QINCo2
+    /// codes are uniform across shards.
+    pub pipeline: Option<PipelineSpec>,
+    /// lifetime count of (query, candidate) pairs this shard's stage-1
+    /// scan has scored — surfaced per shard in
+    /// [`crate::server::Stats::shard_scans`]
+    pub scanned: AtomicU64,
+}
+
+impl IndexShard {
+    /// Number of database rows this shard owns.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.global_ids.is_empty()
+    }
+
+    /// Does this shard own `bucket`?
+    #[inline]
+    pub fn owns(&self, bucket: u32) -> bool {
+        (self.bucket_lo..self.bucket_hi).contains(&bucket)
+    }
+
+    /// The shard-local inverted list of an owned bucket.
+    #[inline]
+    pub fn list(&self, bucket: u32) -> &[u32] {
+        debug_assert!(self.owns(bucket));
+        &self.lists[(bucket - self.bucket_lo) as usize]
+    }
+
+    /// The pipeline this shard executes: its override, or the shared one.
+    #[inline]
+    pub fn spec<'a>(&'a self, shared: &'a PipelineSpec) -> &'a PipelineSpec {
+        self.pipeline.as_ref().unwrap_or(shared)
+    }
+
+    /// The code table stage 1 scans: the side table when the shard's
+    /// scorer owns one, the QINCo2 codes otherwise.
+    #[inline]
+    pub fn stage1_codes(&self) -> &Codes {
+        self.stage1_side_codes.as_ref().unwrap_or(&self.codes)
+    }
+
+    /// Scan one owned bucket group with the given stage-1 scorer and
+    /// flat LUT pack, pushing `(score, global id)` into each member's
+    /// shortlist — the existing block-scan machinery, unchanged, over
+    /// shard-local rows. `block` selects the multi-query
+    /// [`ApproxScorer::score_block`] kernel vs the scalar per-member
+    /// loop; both are bit-identical by the trait contract.
+    pub(crate) fn scan_group(
+        &self,
+        scorer: &dyn ApproxScorer,
+        luts: &[f32],
+        stride: usize,
+        group: &ShardGroup,
+        block: bool,
+        shortlists: &mut [Shortlist],
+    ) {
+        let list = self.list(group.bucket);
+        let codes = self.stage1_codes();
+        self.scanned
+            .fetch_add((list.len() * group.members.len()) as u64, Ordering::Relaxed);
+        if block {
+            // block fast path: one score_block call scores a code row
+            // for up to SCORE_BLOCK co-probed queries
+            let mut mq = [0u32; SCORE_BLOCK];
+            let mut scores = [0.0f32; SCORE_BLOCK];
+            for chunk in group.members.chunks(SCORE_BLOCK) {
+                for (l, &(qi, _)) in chunk.iter().enumerate() {
+                    mq[l] = qi;
+                }
+                for &local in list {
+                    let i = local as usize;
+                    scorer.score_block(
+                        luts,
+                        stride,
+                        &mq[..chunk.len()],
+                        codes.row(i),
+                        self.stage1_terms[i],
+                        &mut scores[..chunk.len()],
+                    );
+                    for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
+                        shortlists[qi as usize].push(probe_d + scores[l], self.global_ids[i]);
+                    }
+                }
+            }
+        } else {
+            // scalar reference path (bench comparisons only)
+            for &local in list {
+                let i = local as usize;
+                let code = codes.row(i);
+                let term = self.stage1_terms[i];
+                for &(qi, probe_d) in &group.members {
+                    let lut = &luts[qi as usize * stride..][..stride];
+                    shortlists[qi as usize]
+                        .push(probe_d + scorer.score(lut, code, term), self.global_ids[i]);
+                }
+            }
+        }
+    }
+}
+
+/// The partitioned per-bucket state of a [`crate::index::SearchIndex`]:
+/// every shard plus the routing maps. Shared read-only parts (coarse
+/// quantizer, scorers, params) stay on the index.
+pub struct ShardSet {
+    pub shards: Vec<IndexShard>,
+    /// global bucket → owning shard index
+    pub shard_of: Vec<u32>,
+    /// global database id → owning shard index
+    pub owner_of: Vec<u32>,
+    /// global database id → local row within its owning shard
+    pub local_of: Vec<u32>,
+    /// per-shard LUT slot: shards running the shared [`PipelineSpec`]
+    /// all map to slot `0` (one LUT / LUT pack per query serves them
+    /// all); each override shard gets its own slot. `n_lut_slots` sizes
+    /// per-query LUT caches and per-batch LUT packs.
+    pub lut_slot: Vec<u32>,
+    pub n_lut_slots: usize,
+}
+
+impl ShardSet {
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Any shard carrying a pipeline override?
+    #[inline]
+    pub fn heterogeneous(&self) -> bool {
+        self.n_lut_slots > 1
+    }
+
+    /// Contiguous bucket ranges for an `n_shards`-way split of
+    /// `n_buckets` buckets: shard `s` owns
+    /// `[s·B/S, (s+1)·B/S)`. Every shard owns at least one bucket when
+    /// `n_shards <= n_buckets`.
+    pub fn bucket_ranges(n_buckets: usize, n_shards: usize) -> Vec<(u32, u32)> {
+        (0..n_shards)
+            .map(|s| {
+                ((s * n_buckets / n_shards) as u32, ((s + 1) * n_buckets / n_shards) as u32)
+            })
+            .collect()
+    }
+
+    /// Partition the assembled per-bucket state into `n_shards`
+    /// bucket-owned shards. `lists` are the global inverted lists
+    /// (bucket → global ids) taken from the coarse quantizer; the code
+    /// tables and caches are indexed by global id and are re-gathered
+    /// into each shard's local row order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn partition(
+        lists: Vec<Vec<u32>>,
+        codes: Codes,
+        stage1_side_codes: Option<Codes>,
+        stage1_terms: Vec<f32>,
+        stage2_codes: Codes,
+        stage2_norms: Vec<f32>,
+        n_shards: usize,
+    ) -> ShardSet {
+        let n_buckets = lists.len();
+        assert!(n_shards >= 1, "shard count must be at least 1 (got {n_shards})");
+        assert!(
+            n_shards <= n_buckets,
+            "shard count {n_shards} exceeds the bucket count {n_buckets}: \
+             every shard must own at least one IVF bucket"
+        );
+        let db = codes.n;
+        let has_s2 = stage2_codes.m > 0;
+        let mut shard_of = vec![0u32; n_buckets];
+        let mut owner_of = vec![0u32; db];
+        let mut local_of = vec![0u32; db];
+        let mut shards = Vec::with_capacity(n_shards);
+        for (s, &(lo, hi)) in Self::bucket_ranges(n_buckets, n_shards).iter().enumerate() {
+            let (lo_u, hi_u) = (lo as usize, hi as usize);
+            let mut local_lists = Vec::with_capacity(hi_u - lo_u);
+            let mut global_ids: Vec<u32> = Vec::new();
+            for b in lo_u..hi_u {
+                shard_of[b] = s as u32;
+                let mut local_list = Vec::with_capacity(lists[b].len());
+                for &gid in &lists[b] {
+                    let local = global_ids.len() as u32;
+                    owner_of[gid as usize] = s as u32;
+                    local_of[gid as usize] = local;
+                    global_ids.push(gid);
+                    local_list.push(local);
+                }
+                local_lists.push(local_list);
+            }
+            let rows: Vec<usize> = global_ids.iter().map(|&g| g as usize).collect();
+            let (sh_s2_codes, sh_s2_norms) = if has_s2 {
+                (
+                    gather_codes(&stage2_codes, &rows),
+                    rows.iter().map(|&i| stage2_norms[i]).collect(),
+                )
+            } else {
+                (Codes::zeros(0, 0), Vec::new())
+            };
+            shards.push(IndexShard {
+                bucket_lo: lo,
+                bucket_hi: hi,
+                lists: local_lists,
+                codes: gather_codes(&codes, &rows),
+                stage1_side_codes: stage1_side_codes.as_ref().map(|c| gather_codes(c, &rows)),
+                stage1_terms: rows.iter().map(|&i| stage1_terms[i]).collect(),
+                stage2_codes: sh_s2_codes,
+                stage2_norms: sh_s2_norms,
+                pipeline: None,
+                scanned: AtomicU64::new(0),
+                global_ids,
+            });
+        }
+        let lut_slot = vec![0u32; n_shards];
+        ShardSet { shards, shard_of, owner_of, local_of, lut_slot, n_lut_slots: 1 }
+    }
+
+    /// Install a heterogeneous pipeline override on shard `s`, replacing
+    /// its stage-1/2 tables with ones fit for the override's scorers
+    /// (all indexed by the shard's existing local row order), and
+    /// reassign LUT slots.
+    pub fn install_override(
+        &mut self,
+        s: usize,
+        spec: PipelineSpec,
+        stage1_side_codes: Option<Codes>,
+        stage1_terms: Vec<f32>,
+        stage2_codes: Codes,
+        stage2_norms: Vec<f32>,
+    ) {
+        let sh = &mut self.shards[s];
+        assert_eq!(stage1_terms.len(), sh.len(), "override terms must cover the shard");
+        if let Some(side) = &stage1_side_codes {
+            assert_eq!(side.n, sh.len(), "override side table must cover the shard");
+        }
+        if stage2_codes.m > 0 {
+            assert_eq!(stage2_codes.n, sh.len(), "override stage-2 table must cover the shard");
+            assert_eq!(stage2_norms.len(), sh.len(), "override stage-2 norms must cover the shard");
+        }
+        sh.pipeline = Some(spec);
+        sh.stage1_side_codes = stage1_side_codes;
+        sh.stage1_terms = stage1_terms;
+        sh.stage2_codes = stage2_codes;
+        sh.stage2_norms = stage2_norms;
+        self.recompute_slots();
+    }
+
+    fn recompute_slots(&mut self) {
+        self.n_lut_slots = 1;
+        for (si, sh) in self.shards.iter().enumerate() {
+            self.lut_slot[si] = if sh.pipeline.is_some() {
+                let slot = self.n_lut_slots as u32;
+                self.n_lut_slots += 1;
+                slot
+            } else {
+                0
+            };
+        }
+    }
+
+    /// The [`PipelineSpec`] behind a LUT slot: slot 0 is the shared
+    /// spec, every other slot belongs to exactly one override shard.
+    pub fn slot_spec<'a>(&'a self, slot: usize, shared: &'a PipelineSpec) -> &'a PipelineSpec {
+        if slot == 0 {
+            return shared;
+        }
+        self.shards
+            .iter()
+            .zip(&self.lut_slot)
+            .find(|&(_, &ls)| ls as usize == slot)
+            .and_then(|(sh, _)| sh.pipeline.as_ref())
+            .unwrap_or(shared)
+    }
+
+    /// Locate a global database id: its owning shard and local row.
+    #[inline]
+    pub fn locate(&self, id: u32) -> (&IndexShard, usize) {
+        let si = self.owner_of[id as usize] as usize;
+        (&self.shards[si], self.local_of[id as usize] as usize)
+    }
+
+    /// Gather the stage-3 (QINCo2) code rows of `ids` — the union decode
+    /// input — from their owning shards, in the given order.
+    pub fn gather_stage3_codes(&self, ids: &[u32]) -> Codes {
+        let m = self.shards[0].codes.m;
+        let mut out = Codes::zeros(ids.len(), m);
+        for (o, &id) in ids.iter().enumerate() {
+            let (sh, local) = self.locate(id);
+            out.row_mut(o).copy_from_slice(sh.codes.row(local));
+        }
+        out
+    }
+
+    /// Scatter a batch's probes to their owning shards: one
+    /// [`ShardGroup`] per probed bucket, in ascending bucket order (=
+    /// shard-major order, since shards own contiguous ranges — the same
+    /// scan order the unsharded engine used, which keeps the group
+    /// chunking of the parallel scan identical for every shard count).
+    pub fn plan(&self, plans: &[QueryPlan]) -> Vec<ShardGroup> {
+        let mut grouped: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+        for (qi, plan) in plans.iter().enumerate() {
+            for &(probe_d, bucket) in &plan.probes {
+                grouped.entry(bucket).or_default().push((qi as u32, probe_d));
+            }
+        }
+        grouped
+            .into_iter()
+            .map(|(bucket, members)| ShardGroup {
+                shard: self.shard_of[bucket as usize],
+                bucket,
+                members,
+            })
+            .collect()
+    }
+
+    /// Snapshot of the per-shard stage-1 scan counters.
+    pub fn scan_counts(&self) -> Vec<u64> {
+        self.shards.iter().map(|sh| sh.scanned.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_ranges_cover_contiguously_and_nonempty() {
+        for n_buckets in [1usize, 5, 12, 64] {
+            for n_shards in 1..=n_buckets.min(8) {
+                let ranges = ShardSet::bucket_ranges(n_buckets, n_shards);
+                assert_eq!(ranges.len(), n_shards);
+                let mut next = 0u32;
+                for &(lo, hi) in &ranges {
+                    assert_eq!(lo, next, "ranges must be contiguous");
+                    assert!(hi > lo, "every shard must own at least one bucket");
+                    next = hi;
+                }
+                assert_eq!(next as usize, n_buckets, "ranges must cover all buckets");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_ranges_balance_within_one() {
+        // non-divisible splits differ by at most one bucket
+        for (n_buckets, n_shards) in [(12usize, 5usize), (7, 3), (64, 6)] {
+            let sizes: Vec<usize> = ShardSet::bucket_ranges(n_buckets, n_shards)
+                .iter()
+                .map(|&(lo, hi)| (hi - lo) as usize)
+                .collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced split {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn partition_remaps_lists_tables_and_ids() {
+        // 4 buckets, 6 rows, 3 shards (ranges [0,1), [1,2), [2,4))
+        let lists = vec![vec![3, 0], vec![5], vec![], vec![1, 4, 2]];
+        let codes = Codes::from_vec(6, 1, vec![10, 11, 12, 13, 14, 15]);
+        let terms: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let set = ShardSet::partition(
+            lists,
+            codes,
+            None,
+            terms,
+            Codes::zeros(0, 0),
+            Vec::new(),
+            3,
+        );
+        assert_eq!(set.n_shards(), 3);
+        assert!(!set.heterogeneous());
+        assert_eq!(set.shards[0].global_ids, vec![3, 0]);
+        assert_eq!(set.shards[1].global_ids, vec![5]);
+        assert_eq!(set.shards[2].global_ids, vec![1, 4, 2]);
+        // local lists reference local rows
+        assert_eq!(set.shards[0].lists, vec![vec![0, 1]]);
+        assert_eq!(set.shards[2].lists, vec![Vec::<u32>::new(), vec![0, 1, 2]]);
+        // tables follow the remap
+        assert_eq!(set.shards[2].codes.row(1), &[14]);
+        assert_eq!(set.shards[2].stage1_terms, vec![1.0, 4.0, 2.0]);
+        // inverse maps round-trip
+        for (si, sh) in set.shards.iter().enumerate() {
+            for (local, &gid) in sh.global_ids.iter().enumerate() {
+                assert_eq!(set.owner_of[gid as usize] as usize, si);
+                assert_eq!(set.local_of[gid as usize] as usize, local);
+            }
+        }
+        // gather follows global ids across shards
+        let gathered = set.gather_stage3_codes(&[2, 5, 0]);
+        assert_eq!(gathered.row(0), &[12]);
+        assert_eq!(gathered.row(1), &[15]);
+        assert_eq!(gathered.row(2), &[10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the bucket count")]
+    fn partition_rejects_more_shards_than_buckets() {
+        ShardSet::partition(
+            vec![vec![0u32], vec![1]],
+            Codes::from_vec(2, 1, vec![0, 0]),
+            None,
+            vec![0.0; 2],
+            Codes::zeros(0, 0),
+            Vec::new(),
+            3,
+        );
+    }
+}

@@ -40,19 +40,36 @@
 //! are `Rc`-based and cannot cross threads). See [`index::pipeline`]
 //! for the trait contracts and extension points.
 //!
+//! # Sharded index: scatter/gather over bucket-owned shards
+//!
+//! The per-bucket state — inverted lists, stage-1/2 code tables, cached
+//! terms — is partitioned into [`index::IndexShard`]s, each owning a
+//! contiguous range of IVF buckets plus a global-id remap, collected in
+//! an [`index::ShardSet`] (ownership diagram in [`index`]); the shared
+//! read-only parts (coarse quantizer, [`index::PipelineSpec`] scorers,
+//! model params) stay on the [`index::SearchIndex`]. Searches scatter
+//! each query's probed buckets to their owning shards, scan them with
+//! the existing block kernels, and gather-merge the per-shard shortlists
+//! under the total (score, id) order *before* the single stage-3 decode
+//! — so sharding costs no extra neural-decode work and results are
+//! bit-identical to the unsharded index for every shard count
+//! (`BuildCfg::shards`, CLI `--shards`). Individual shards may run their
+//! own stage-1/2 configuration (`BuildCfg::shard_pipelines`) behind the
+//! same router.
+//!
 //! Search executes through one of two result-identical paths:
 //! - per-query [`index::SearchIndex::search`] (Fig. 3, one request at a
 //!   time), and
 //! - the batched engine [`index::batch`] — per-batch flat LUT packs,
-//!   bucket-grouped inverted-list scans (each co-probed list is read
+//!   shard-scattered bucket-group scans (each co-probed list is read
 //!   once per batch, each code row scored against up to 8 co-probed
 //!   queries in one multi-query
 //!   [`quantizers::ApproxScorer::score_block`] kernel call, with the
-//!   bucket groups optionally split across threads —
+//!   shard groups optionally split across threads —
 //!   `SearchParams::batch_threads`), per-query stage-2 joint LUTs chosen
 //!   by the [`index::stage2_use_lut`] cost model, and a single union
-//!   decode for stage 3. The [`server`] router forms dynamic batches and
-//!   dispatches
+//!   decode for stage 3 gathered from the owning shards. The [`server`]
+//!   router forms dynamic batches and dispatches
 //!   them whole through this engine; [`index::SearchIndex::search_batch`]
 //!   and `search` return the same `Vec<(score, id)>` shape per query,
 //!   ranked under the total (score, id) order of [`util::topk`].

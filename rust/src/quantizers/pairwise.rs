@@ -18,6 +18,7 @@ use crate::util::pool;
 use anyhow::Result;
 
 /// One selected pair and its joint codebook.
+#[derive(Clone)]
 pub struct PairStep {
     pub i: usize,
     pub j: usize,
@@ -27,6 +28,7 @@ pub struct PairStep {
     pub mse: f64,
 }
 
+#[derive(Clone)]
 pub struct PairwiseDecoder {
     pub d: usize,
     pub k: usize,

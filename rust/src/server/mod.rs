@@ -26,9 +26,15 @@
 //! ever dropped.
 //!
 //! The index is immutable after build, so workers share it via `Arc`
-//! with no locking on the hot path. Latency and throughput metrics are
-//! collected per request (the §B latency experiment and Fig. 6 QPS
-//! numbers come from here).
+//! with no locking on the hot path — including a sharded index
+//! ([`crate::index::ShardSet`]): each dispatched batch scatters its
+//! probed buckets to the owning shards inside the engine, so
+//! heterogeneous per-shard pipelines serve behind this one router
+//! unchanged. Latency and throughput metrics are collected per request
+//! into per-worker rings and merged at [`Router::stats`] time (see
+//! [`Stats`] for the aggregation semantics; [`Stats::shard_scans`]
+//! surfaces the per-shard scan counters). The §B latency experiment and
+//! Fig. 6 QPS numbers come from here.
 //!
 //! Lifecycle: [`Router::shutdown`] closes the ingress; the batcher
 //! flushes whatever it buffered and exits when the ingress disconnects,
@@ -120,22 +126,69 @@ pub struct Response {
     pub latency: Duration,
 }
 
-#[derive(Default)]
 struct MetricsInner {
     served: AtomicU64,
     /// nanoseconds, summed
     total_latency: AtomicU64,
-    /// most recent latencies (ring, for percentiles)
-    recent: Mutex<Vec<u64>>,
+    /// per-worker recent-latency rings (ns). Each worker pushes only
+    /// into its own ring (capped at RECENT_CAP, oldest half evicted), so
+    /// a chatty worker can never evict a quiet worker's samples;
+    /// [`Router::stats`] merges every ring before ranking, which keeps
+    /// the percentiles consistent under any worker/shard interleaving.
+    recent: Vec<Mutex<Vec<u64>>>,
+}
+
+/// Per-worker recent-latency ring capacity.
+const RECENT_CAP: usize = 4096;
+
+impl MetricsInner {
+    fn new(workers: usize) -> MetricsInner {
+        MetricsInner {
+            served: AtomicU64::new(0),
+            total_latency: AtomicU64::new(0),
+            recent: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+}
+
+/// Merge the per-worker latency rings into one ascending-sorted vector —
+/// the sample set the nearest-rank percentiles are computed over.
+fn merged_sorted(rings: &[Mutex<Vec<u64>>]) -> Vec<u64> {
+    let mut merged = Vec::new();
+    for ring in rings {
+        merged.extend(ring.lock().unwrap().iter().copied());
+    }
+    merged.sort_unstable();
+    merged
 }
 
 /// Snapshot of server health.
+///
+/// Latency percentiles are **nearest-rank** — the smallest sample with
+/// at least `p·n` samples at or below it — computed
+/// over the **union of every worker's recent ring** (the newest ≤4096
+/// samples per worker), merged and sorted at snapshot time. Aggregating
+/// before ranking (rather than averaging per-worker percentiles, or
+/// letting workers share one eviction-contended ring) keeps the
+/// percentiles consistent across workers and shards: every worker's
+/// traffic is represented, and a chatty worker cannot evict a quiet
+/// worker's samples.
 #[derive(Clone, Debug)]
 pub struct Stats {
     pub served: u64,
     pub mean_latency: Duration,
     pub p50: Duration,
     pub p99: Duration,
+    /// per-shard stage-1 scan counters: (query, candidate) pairs scored
+    /// by each [`IndexShard`](crate::index::IndexShard) **since this
+    /// router started**, in shard order — the scatter/gather layer's
+    /// load view (uneven counts reveal skewed bucket ownership). The
+    /// underlying index counters are lifetime totals shared by every
+    /// execution path; the router snapshots them at startup and reports
+    /// the delta, so these stay consistent with the router-scoped
+    /// `served`/latency fields even when the index served other
+    /// routers or direct searches before.
+    pub shard_scans: Vec<u64>,
 }
 
 /// Nearest-rank percentile of an ascending-sorted latency vector: the
@@ -153,16 +206,23 @@ fn percentile(sorted: &[u64], p: f64) -> Duration {
 pub struct Router {
     ingress: SyncSender<Request>,
     metrics: Arc<MetricsInner>,
+    /// shared with the workers; [`Self::stats`] reads the per-shard scan
+    /// counters off it
+    index: Arc<SearchIndex>,
+    /// per-shard scan counts at router startup — subtracted in
+    /// [`Self::stats`] so `shard_scans` covers only this router's traffic
+    scan_base: Vec<u64>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Router {
     /// Spawn the batcher and worker threads over a shared index.
     pub fn start(index: Arc<SearchIndex>, cfg: ServerCfg) -> Router {
+        let workers = cfg.workers.max(1);
         let (in_tx, in_rx) = sync_channel::<Request>(cfg.queue_cap);
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(cfg.workers * 2);
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Request>>(workers * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let metrics = Arc::new(MetricsInner::default());
+        let metrics = Arc::new(MetricsInner::new(workers));
         let mut handles = Vec::new();
 
         // --- batcher: groups ingress into dispatch units ---
@@ -178,7 +238,7 @@ impl Router {
         let factory: Arc<dyn DecoderFactory> = cfg.decoder_factory.clone().unwrap_or_else(|| {
             Arc::new(ReferenceDecoderFactory { params: index.params.clone() })
         });
-        for w in 0..cfg.workers.max(1) {
+        for w in 0..workers {
             let rx = batch_rx.clone();
             let idx = index.clone();
             let metrics = metrics.clone();
@@ -204,7 +264,7 @@ impl Router {
                         guard.recv()
                     };
                     match batch {
-                        Ok(batch) => serve_batch(&idx, &metrics, batch, &mut local),
+                        Ok(batch) => serve_batch(&idx, &metrics, w, batch, &mut local),
                         // the batcher exited and every queued batch has
                         // been drained — nothing in flight can be lost
                         Err(_) => return,
@@ -212,7 +272,8 @@ impl Router {
                 }
             }));
         }
-        Router { ingress: in_tx, metrics, handles }
+        let scan_base = index.shards.scan_counts();
+        Router { ingress: in_tx, metrics, index, scan_base, handles }
     }
 
     /// Submit a query; returns the channel the response arrives on.
@@ -257,13 +318,22 @@ impl Router {
     pub fn stats(&self) -> Stats {
         let served = self.metrics.served.load(Ordering::Relaxed);
         let total = self.metrics.total_latency.load(Ordering::Relaxed);
-        let mut recent = self.metrics.recent.lock().unwrap().clone();
-        recent.sort_unstable();
+        // union of every worker's ring, merged before ranking (see the
+        // Stats docs for the aggregation semantics)
+        let recent = merged_sorted(&self.metrics.recent);
         Stats {
             served,
             mean_latency: Duration::from_nanos(if served > 0 { total / served } else { 0 }),
             p50: percentile(&recent, 0.5),
             p99: percentile(&recent, 0.99),
+            shard_scans: self
+                .index
+                .shards
+                .scan_counts()
+                .iter()
+                .zip(&self.scan_base)
+                .map(|(now, base)| now.saturating_sub(*base))
+                .collect(),
         }
     }
 
@@ -280,7 +350,10 @@ impl Router {
 
 /// Serve one dispatch unit: group requests by identical [`SearchParams`]
 /// and run each group through the batched engine in a single execute —
-/// one bucket-grouped scan and one union decode per group. `decoder` is
+/// one scattered shard-group scan and one union decode per group
+/// (heterogeneous per-shard pipelines, when configured on the index,
+/// are resolved inside the engine). `worker` indexes this thread's own
+/// latency ring in `metrics`. `decoder` is
 /// this worker's thread-local stage-3 decoder (engine-per-worker); when
 /// it is absent the index's own decoder runs. A decode failure
 /// re-executes the group with the index decoder (every request still
@@ -292,6 +365,7 @@ impl Router {
 fn serve_batch(
     idx: &SearchIndex,
     metrics: &MetricsInner,
+    worker: usize,
     batch: Vec<Request>,
     decoder: &mut Option<Box<dyn StageDecoder>>,
 ) {
@@ -353,8 +427,10 @@ fn serve_batch(
                 .total_latency
                 .fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
             {
-                let mut recent = metrics.recent.lock().unwrap();
-                if recent.len() >= 4096 {
+                // this worker's own ring: eviction here can never drop
+                // another worker's samples (see the Stats docs)
+                let mut recent = metrics.recent[worker].lock().unwrap();
+                if recent.len() >= RECENT_CAP {
                     let n = recent.len();
                     recent.copy_within(n / 2.., 0);
                     recent.truncate(n / 2);
@@ -438,6 +514,36 @@ mod tests {
             assert!(cur >= last, "p={p}: {cur:?} < {last:?}");
             last = cur;
         }
+    }
+
+    #[test]
+    fn percentiles_merge_across_worker_rings() {
+        // regression for the multi-worker merge: percentiles must be
+        // computed over the *union* of the per-worker rings — identical
+        // to ranking the flat concatenation — not any single ring's view
+        let rings = vec![
+            Mutex::new(vec![5, 1, 3]),
+            Mutex::new(vec![2]),
+            Mutex::new(Vec::new()),
+            Mutex::new(vec![4, 6]),
+        ];
+        let merged = merged_sorted(&rings);
+        assert_eq!(merged, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(percentile(&merged, 0.50), Duration::from_nanos(3));
+        assert_eq!(percentile(&merged, 0.99), Duration::from_nanos(6));
+        // uneven load: a chatty worker's full ring must not displace a
+        // quiet worker's lone sample (the old shared-ring design let it)
+        let rings = vec![
+            Mutex::new((0..RECENT_CAP as u64).map(|i| 10 + i).collect::<Vec<_>>()),
+            Mutex::new(vec![1]),
+        ];
+        let merged = merged_sorted(&rings);
+        assert_eq!(merged.len(), RECENT_CAP + 1);
+        assert_eq!(merged[0], 1, "quiet worker's sample must survive the merge");
+        assert_eq!(percentile(&merged, 0.0), Duration::from_nanos(1));
+        // no workers / empty rings degrade to zero, matching a fresh router
+        assert!(merged_sorted(&[]).is_empty());
+        assert_eq!(percentile(&merged_sorted(&[Mutex::new(Vec::new())]), 0.99), Duration::ZERO);
     }
 
     #[test]

@@ -4,10 +4,14 @@
 //! degenerate knobs `n_pairs = 0` / `n_final = 0` / `n_aq = 0`), for
 //! **every pipeline configuration** (the default AQ→pairwise→reference
 //! pipeline, pairwise-only fast mode, PQ/LSQ/RQ stage-1 scorers, a
-//! stage-2-less pipeline), and for **every intra-batch thread count**:
-//! the multi-query `score_block` scan kernel and the
+//! stage-2-less pipeline), for **every intra-batch thread count** (the
+//! multi-query `score_block` scan kernel and the
 //! `batch_threads ∈ {1, 2, 4}` group-parallel scan are pinned
-//! bit-identical to the scalar per-query path.
+//! bit-identical to the scalar per-query path), and for **every shard
+//! count**: `shards ∈ {1, 2, 3, 5}` — including counts that do not
+//! divide the bucket count — must be bit-identical to the unsharded
+//! index for both `search` and `search_batch`. The shard layer's
+//! global-id remap invariant is pinned here too.
 //!
 //! The index is built engine-free: parameters come from the in-repo
 //! `artifacts/manifest.json` test model and codes from the pure-Rust
@@ -69,15 +73,35 @@ fn configs() -> Vec<(&'static str, PipelineConfig)> {
     ]
 }
 
-fn build_index(seed: u64, n_train: usize, n_db: usize, pipeline: PipelineConfig) -> SearchIndex {
+fn build_index_cfg(seed: u64, n_train: usize, n_db: usize, cfg: &BuildCfg) -> SearchIndex {
     let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
     let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
     let train = generate(Flavor::Deep, n_train, spec.cfg.d, seed);
     let db = generate(Flavor::Deep, n_db, spec.cfg.d, seed ^ 1);
     let params = ParamStore::init(&spec, "test", &train, seed ^ 2);
-    let cfg =
-        BuildCfg { k_ivf: 12, m_tilde: 1, fit_sample: 200, pipeline, ..Default::default() };
-    SearchIndex::build_reference(params, &train, &db, &cfg)
+    SearchIndex::build_reference(params, &train, &db, cfg)
+}
+
+fn build_index(seed: u64, n_train: usize, n_db: usize, pipeline: PipelineConfig) -> SearchIndex {
+    build_index_sharded(seed, n_train, n_db, pipeline, 1)
+}
+
+fn build_index_sharded(
+    seed: u64,
+    n_train: usize,
+    n_db: usize,
+    pipeline: PipelineConfig,
+    shards: usize,
+) -> SearchIndex {
+    let cfg = BuildCfg {
+        k_ivf: 12,
+        m_tilde: 1,
+        fit_sample: 200,
+        pipeline,
+        shards,
+        ..Default::default()
+    };
+    build_index_cfg(seed, n_train, n_db, &cfg)
 }
 
 #[test]
@@ -236,8 +260,10 @@ fn pipeline_configs_are_actually_distinct() {
     assert!(reference.pipeline.stage2.is_some());
     assert!(!reference.pairwise_trace.is_empty());
     // the AQ default scans the QINCo2 codes directly — no duplicate table
-    assert!(reference.stage1_side_codes.is_none());
-    assert_eq!(reference.stage1_codes().m, reference.codes.m);
+    // (per-bucket tables live on the shards)
+    let ref_shard = &reference.shards.shards[0];
+    assert!(ref_shard.stage1_side_codes.is_none());
+    assert_eq!(ref_shard.stage1_codes().m, reference.code_positions());
 
     let pw_only = build_index(
         71,
@@ -270,8 +296,213 @@ fn pipeline_configs_are_actually_distinct() {
         },
     );
     // PQ stage 1 scans its own 4-position table, not the QINCo2 codes
-    assert!(pq1.stage1_side_codes.is_some());
-    assert_eq!(pq1.stage1_codes().m, 4);
-    assert_ne!(pq1.stage1_codes().m, pq1.codes.m);
+    let pq_shard = &pq1.shards.shards[0];
+    assert!(pq_shard.stage1_side_codes.is_some());
+    assert_eq!(pq_shard.stage1_codes().m, 4);
+    assert_ne!(pq_shard.stage1_codes().m, pq1.code_positions());
     assert_eq!(pq1.pipeline.stage1.lut_len(), 4 * pq1.params.cfg.k);
+}
+
+#[test]
+fn shard_count_invariance_bit_identical_across_pipelines() {
+    // the ISSUE-5 acceptance pin: partitioning the index into bucket-owned
+    // shards must be invisible in the results — shards ∈ {1, 2, 3, 5}
+    // (5 does not divide the 12 buckets) bit-identical to the unsharded
+    // index for every pipeline configuration, for both `search` and
+    // `search_batch`, at batch_threads ∈ {1, 4}
+    let queries = generate(Flavor::Deep, 14, 8, 95);
+    let sps = [
+        SearchParams { nprobe: 6, ef_search: 48, n_aq: 48, n_pairs: 12, n_final: 6, batch_threads: 1 },
+        // degenerate knobs must stay invariant too
+        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0, batch_threads: 1 },
+    ];
+    for (label, cfg) in configs() {
+        let base = build_index_sharded(101, 240, 200, cfg.clone(), 1);
+        assert_eq!(base.shards.n_shards(), 1);
+        let baselines: Vec<(Vec<Vec<(f32, u32)>>, Vec<Vec<(f32, u32)>>)> = sps
+            .iter()
+            .map(|sp| {
+                (
+                    (0..queries.rows).map(|i| base.search(queries.row(i), sp)).collect(),
+                    base.search_batch(&queries, sp).unwrap(),
+                )
+            })
+            .collect();
+        for shards in [2usize, 3, 5] {
+            let idx = build_index_sharded(101, 240, 200, cfg.clone(), shards);
+            assert_eq!(idx.shards.n_shards(), shards, "[{label}]");
+            for (base_sp, (base_single, base_batch)) in sps.iter().zip(&baselines) {
+                for threads in [1usize, 4] {
+                    let sp = SearchParams { batch_threads: threads, ..*base_sp };
+                    for i in 0..queries.rows {
+                        assert_eq!(
+                            idx.search(queries.row(i), &sp),
+                            base_single[i],
+                            "[{label}] shards={shards} threads={threads} query {i}: \
+                             per-query search diverged from the unsharded index"
+                        );
+                    }
+                    assert_eq!(
+                        &idx.search_batch(&queries, &sp).unwrap(),
+                        base_batch,
+                        "[{label}] shards={shards} threads={threads}: \
+                         batched search diverged from the unsharded index"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_global_id_remap_invariant_holds() {
+    // the IndexShard contract: shards own contiguous bucket ranges that
+    // cover all buckets; every database row lives in exactly one shard;
+    // owner_of/local_of invert global_ids; local lists reference valid
+    // local rows of the bucket they claim; per-row caches cover the shard
+    for shards in [1usize, 2, 3, 5] {
+        let idx = build_index_sharded(111, 240, 200, PipelineConfig::default(), shards);
+        let set = &idx.shards;
+        assert_eq!(set.n_shards(), shards);
+        let mut next = 0u32;
+        for sh in &set.shards {
+            assert_eq!(sh.bucket_lo, next, "bucket ranges must be contiguous");
+            assert!(sh.bucket_hi > sh.bucket_lo, "every shard owns >= 1 bucket");
+            assert_eq!(sh.lists.len(), (sh.bucket_hi - sh.bucket_lo) as usize);
+            next = sh.bucket_hi;
+        }
+        assert_eq!(next as usize, idx.ivf.k_ivf(), "ranges must cover all buckets");
+        let mut seen = vec![false; idx.db_len];
+        for (si, sh) in set.shards.iter().enumerate() {
+            assert_eq!(sh.len(), sh.codes.n);
+            assert_eq!(sh.len(), sh.stage1_terms.len());
+            assert_eq!(sh.len(), sh.stage2_codes.n);
+            assert_eq!(sh.len(), sh.stage2_norms.len());
+            for (local, &gid) in sh.global_ids.iter().enumerate() {
+                assert!(!seen[gid as usize], "row {gid} owned by two shards");
+                seen[gid as usize] = true;
+                assert_eq!(set.owner_of[gid as usize] as usize, si);
+                assert_eq!(set.local_of[gid as usize] as usize, local);
+                // the row's IVF bucket really falls in the owned range
+                assert!(sh.owns(idx.ivf.assign[gid as usize]));
+            }
+            for (bi, list) in sh.lists.iter().enumerate() {
+                let bucket = sh.bucket_lo + bi as u32;
+                assert_eq!(set.shard_of[bucket as usize] as usize, si);
+                for &local in list {
+                    assert!((local as usize) < sh.len());
+                    assert_eq!(
+                        idx.ivf.assign[sh.global_ids[local as usize] as usize],
+                        bucket,
+                        "list row decodes to the wrong bucket"
+                    );
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some database row is in no shard");
+        // the coarse quantizer's own lists were drained into the shards
+        assert!(idx.ivf.lists.is_empty());
+    }
+}
+
+#[test]
+fn heterogeneous_shard_pipelines_run_their_own_tables() {
+    // two shards, shard 1 overridden to a PQ stage 1: the override shard
+    // must own its own side table/terms while shard 0 keeps the shared
+    // AQ layout, and both execution paths must still agree exactly
+    let cfg = BuildCfg {
+        k_ivf: 12,
+        m_tilde: 1,
+        fit_sample: 200,
+        shards: 2,
+        shard_pipelines: vec![(
+            1,
+            PipelineConfig {
+                stage1: Stage1Kind::Pq { m: 4 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        )],
+        ..Default::default()
+    };
+    let idx = build_index_cfg(121, 240, 200, &cfg);
+    assert!(idx.shards.heterogeneous());
+    assert_eq!(idx.shards.n_lut_slots, 2);
+    let sh0 = &idx.shards.shards[0];
+    assert!(sh0.pipeline.is_none());
+    assert!(sh0.stage1_side_codes.is_none(), "shared AQ shard scans the QINCo2 codes");
+    let sh1 = &idx.shards.shards[1];
+    assert!(sh1.pipeline.is_some());
+    assert_eq!(sh1.stage1_side_codes.as_ref().unwrap().m, 4, "override scans its PQ table");
+    assert_eq!(sh1.stage1_terms.len(), sh1.len());
+    assert_ne!(
+        sh1.spec(&idx.pipeline).stage1.lut_len(),
+        idx.pipeline.stage1.lut_len(),
+        "override shard must expose its own LUT geometry"
+    );
+    // batched == per-query, results well-formed
+    let queries = generate(Flavor::Deep, 16, 8, 96);
+    for threads in [1usize, 4] {
+        let sp = SearchParams {
+            nprobe: 8,
+            ef_search: 48,
+            n_aq: 48,
+            n_pairs: 12,
+            n_final: 6,
+            batch_threads: threads,
+        };
+        let batched = idx.search_batch(&queries, &sp).unwrap();
+        for i in 0..queries.rows {
+            let single = idx.search(queries.row(i), &sp);
+            assert_eq!(batched[i], single, "threads={threads} query {i}");
+            for w in single.windows(2) {
+                assert!(w[0].0 <= w[1].0, "results must be sorted");
+            }
+            assert!(single.iter().all(|&(_, id)| (id as usize) < idx.db_len));
+        }
+    }
+}
+
+#[test]
+fn full_override_matches_the_homogeneous_pipeline() {
+    // overriding EVERY shard to PQ must reproduce the homogeneous PQ
+    // index bit-for-bit: build_stage1 runs with the same seeds, the
+    // stage-2 fit is literally shared (fit once, cloned per spec), the
+    // stage-2 cost model is consulted with the full shortlist size, and
+    // per-row encodes are row-independent — so only the storage layout
+    // differs, and the layout must not be observable
+    let pq = PipelineConfig {
+        stage1: Stage1Kind::Pq { m: 4 },
+        stage2: true,
+        stage3: Stage3Kind::Reference,
+    };
+    let homog = build_index_sharded(131, 240, 200, pq.clone(), 2);
+    let over_cfg = BuildCfg {
+        k_ivf: 12,
+        m_tilde: 1,
+        fit_sample: 200,
+        shards: 2,
+        pipeline: PipelineConfig::default(),
+        shard_pipelines: vec![(0, pq.clone()), (1, pq)],
+        ..Default::default()
+    };
+    let over = build_index_cfg(131, 240, 200, &over_cfg);
+    assert!(over.shards.heterogeneous());
+    let queries = generate(Flavor::Deep, 12, 8, 97);
+    let sp = SearchParams {
+        nprobe: 6,
+        ef_search: 48,
+        n_aq: 48,
+        n_pairs: 12,
+        n_final: 6,
+        batch_threads: 1,
+    };
+    assert_eq!(
+        over.search_batch(&queries, &sp).unwrap(),
+        homog.search_batch(&queries, &sp).unwrap(),
+        "full per-shard override diverged from the homogeneous pipeline"
+    );
+    for i in 0..queries.rows {
+        assert_eq!(over.search(queries.row(i), &sp), homog.search(queries.row(i), &sp));
+    }
 }

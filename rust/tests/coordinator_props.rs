@@ -179,8 +179,9 @@ fn prop_shortlist_heap_keeps_k_smallest_in_any_order() {
 }
 
 /// Tiny engine-free index (reference encoder, no PJRT) shared by the
-/// router properties below.
-fn tiny_index() -> qinco2::index::SearchIndex {
+/// router properties below, partitioned into `shards` bucket-owned
+/// shards.
+fn tiny_index(shards: usize) -> qinco2::index::SearchIndex {
     use qinco2::data::{generate, Flavor};
     use qinco2::index::{BuildCfg, SearchIndex};
     use qinco2::qinco::ParamStore;
@@ -191,7 +192,7 @@ fn tiny_index() -> qinco2::index::SearchIndex {
     let train = generate(Flavor::Deep, 250, spec.cfg.d, 11);
     let db = generate(Flavor::Deep, 180, spec.cfg.d, 12);
     let params = ParamStore::init(&spec, "test", &train, 13);
-    let cfg = BuildCfg { k_ivf: 8, m_tilde: 1, fit_sample: 150, ..Default::default() };
+    let cfg = BuildCfg { k_ivf: 8, m_tilde: 1, fit_sample: 150, shards, ..Default::default() };
     SearchIndex::build_reference(params, &train, &db, &cfg)
 }
 
@@ -205,7 +206,7 @@ fn router_batched_dispatch_matches_direct_search() {
     use qinco2::server::{Router, ServerCfg};
     use std::sync::Arc;
 
-    let index = Arc::new(tiny_index());
+    let index = Arc::new(tiny_index(1));
     let queries = generate(Flavor::Deep, 40, 8, 21);
     let router = Router::start(
         index.clone(),
@@ -227,6 +228,47 @@ fn router_batched_dispatch_matches_direct_search() {
     let stats = router.stats();
     assert_eq!(stats.served as usize, queries.rows);
     assert!(stats.p50 <= stats.p99);
+    // the per-shard scan counters saw the traffic (single shard here)
+    assert_eq!(stats.shard_scans.len(), 1);
+    assert!(stats.shard_scans[0] > 0, "no stage-1 scans recorded");
+    router.shutdown();
+}
+
+#[test]
+fn router_over_a_sharded_index_matches_direct_search() {
+    // the scatter/gather layer behind the serving path: a 3-shard index
+    // served through the router must answer exactly like direct search,
+    // and Stats must aggregate latency percentiles across the workers
+    // while exposing one scan counter per shard
+    use qinco2::data::{generate, Flavor};
+    use qinco2::index::SearchParams;
+    use qinco2::server::{Router, ServerCfg};
+    use std::sync::Arc;
+
+    let index = Arc::new(tiny_index(3));
+    assert_eq!(index.shards.n_shards(), 3);
+    let queries = generate(Flavor::Deep, 36, 8, 22);
+    let router = Router::start(
+        index.clone(),
+        ServerCfg { workers: 4, max_batch: 8, ..Default::default() },
+    );
+    let sp = SearchParams { nprobe: 6, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() };
+    let pending: Vec<_> = (0..queries.rows)
+        .map(|i| router.submit(queries.row(i).to_vec(), sp).unwrap())
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.results, index.search(queries.row(i), &sp), "query {i}");
+    }
+    let stats = router.stats();
+    assert_eq!(stats.served as usize, queries.rows);
+    // percentiles come from the merged per-worker rings: with every
+    // request answered they must bracket the mean sanely
+    assert!(stats.p50 <= stats.p99);
+    assert!(stats.p99 >= stats.mean_latency || stats.served < 2);
+    assert_eq!(stats.shard_scans.len(), 3, "one scan counter per shard");
+    let direct_scans: u64 = stats.shard_scans.iter().sum();
+    assert!(direct_scans > 0, "sharded scans not recorded");
     router.shutdown();
 }
 
@@ -240,7 +282,7 @@ fn stats_on_a_fresh_router_are_all_zero() {
     use std::time::Duration;
 
     let router = Router::start(
-        Arc::new(tiny_index()),
+        Arc::new(tiny_index(2)),
         ServerCfg { workers: 2, ..Default::default() },
     );
     let stats = router.stats();
@@ -248,6 +290,7 @@ fn stats_on_a_fresh_router_are_all_zero() {
     assert_eq!(stats.mean_latency, Duration::ZERO);
     assert_eq!(stats.p50, Duration::ZERO);
     assert_eq!(stats.p99, Duration::ZERO);
+    assert_eq!(stats.shard_scans, vec![0, 0], "fresh shards must report zero scans");
     router.shutdown();
 }
 
@@ -261,7 +304,7 @@ fn router_shutdown_drains_inflight_requests() {
     use qinco2::server::{Router, ServerCfg};
     use std::sync::Arc;
 
-    let index = Arc::new(tiny_index());
+    let index = Arc::new(tiny_index(2));
     let queries = generate(Flavor::Deep, 48, 8, 31);
     let sp = SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() };
     let router = Router::start(

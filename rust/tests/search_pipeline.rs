@@ -111,7 +111,7 @@ fn pipeline_end_to_end() {
     for w in trace.windows(2) {
         assert!(w[1].2 <= w[0].2 + 1e-9, "pairwise trace not monotone");
     }
-    let m = index.codes.m;
+    let m = index.code_positions();
     assert!(
         trace.iter().any(|&(i, j, _)| i >= m || j >= m),
         "no pair ever used the IVF-derived positions: {trace:?}"
