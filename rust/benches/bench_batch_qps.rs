@@ -24,13 +24,13 @@ mod common;
 
 use qinco2::data::{self, Flavor};
 use qinco2::index::{
-    BatchSearcher, BuildCfg, PipelineConfig, QueryPlan, SearchIndex, SearchParams, Stage1Kind,
-    Stage3Kind,
+    BatchSearcher, BuildCfg, EncodeParams, PipelineConfig, QueryPlan, SearchIndex, SearchParams,
+    Stage1Kind, Stage3Kind,
 };
 use qinco2::metrics::{ids_only, recall_at};
 use qinco2::qinco::ParamStore;
 use qinco2::runtime::manifest::Manifest;
-use qinco2::server::{Router, ServerCfg};
+use qinco2::server::{Router, ServerCfg, WriteOp, WriteOutcome};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -306,7 +306,7 @@ fn main() -> anyhow::Result<()> {
                 ),
                 None => baseline = Some(res),
             }
-            let scans_before = sidx.shards.scan_counts();
+            let scans_before = sidx.snapshot().scan_counts();
             let mut best = f64::INFINITY;
             for _ in 0..3 {
                 let t0 = Instant::now();
@@ -320,7 +320,7 @@ fn main() -> anyhow::Result<()> {
             }
             // per-shard scan counters show the bucket-ownership balance
             let scans: Vec<u64> = sidx
-                .shards
+                .snapshot()
                 .scan_counts()
                 .iter()
                 .zip(&scans_before)
@@ -404,6 +404,135 @@ fn main() -> anyhow::Result<()> {
             common::hr(64);
         }
     }
+
+    // ---- live mutation: beam-encode ingest throughput ----
+    // The write path of the epoch-snapshotted shard layer: encode fresh
+    // vectors (codeword pre-selection A + beam B over the QINCo2 model),
+    // assign buckets, and publish a new epoch. B=1 is the greedy encode
+    // (bit-identical to a fresh build); wider beams buy reconstruction
+    // accuracy at encode cost, so vec/s vs B is the tradeoff curve. Each
+    // row retires its batch (delete + compact) so every beam starts from
+    // the same index.
+    println!();
+    common::banner(
+        "LIVE MUTATION — beam-search ingest + mixed read/write serving",
+        "epoch-snapshotted shards; reads pin an epoch, writes ride their own lane",
+    );
+    let k = index.params.cfg.k;
+    let d = spec.cfg.d;
+    let n_ingest = 512usize;
+    println!("{:<18} {:>5} {:>5} {:>10} {:>8}", "ingest", "A", "B", "vec/s", "epoch");
+    common::hr(52);
+    for beam in [1usize, 4, 16] {
+        // the tiny test model has K=8: the effective beam clamps to K
+        let ep = EncodeParams { a: k, b: beam.min(k) };
+        let fresh = data::generate(Flavor::Deep, n_ingest, d, 400 + beam as u64);
+        let t0 = Instant::now();
+        let gids = index.insert(&fresh, &ep)?;
+        let vps = n_ingest as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "{:<18} {k:>5} {:>5} {vps:>10.0} {:>8}",
+            format!("beam={beam}"),
+            ep.b,
+            index.epoch()
+        );
+        csv.push(format!("ingest:beam{},,,,{vps:.0},", ep.b));
+        index.delete(&gids)?;
+        index.compact();
+    }
+    common::hr(52);
+
+    // ---- mixed read/write through the router's write lane ----
+    // Sustained churn while queries flow: every ~1/8th of the read
+    // stream, a 32-vector chunk is ingested through the write lane and
+    // its rows are scheduled for deletion. Reads keep pinning complete
+    // epochs, so every response is well-formed mid-churn; after the
+    // churn drains (delete + compact), the live set equals the original
+    // database and results must be bit-identical to the pre-churn index.
+    {
+        let sp = SearchParams {
+            nprobe: 8,
+            ef_search: 64,
+            n_aq: 128,
+            n_pairs: 32,
+            n_final: 10,
+            ..Default::default()
+        };
+        let before = ids_only(&index.search_batch(&ds.queries, &sp)?);
+        let r1_before = recall_at(&before, &ds.ground_truth, 1);
+        let router = Router::start(
+            index.clone(),
+            ServerCfg { workers: nthreads, max_batch: 64, ..Default::default() },
+        );
+        let write_every = (ds.queries.rows / 8).max(1);
+        let t0 = Instant::now();
+        let mut read_pending = Vec::with_capacity(ds.queries.rows);
+        let mut delete_pending = Vec::new();
+        for i in 0..ds.queries.rows {
+            if i % write_every == 0 {
+                let chunk = data::generate(Flavor::Deep, 32, d, 900 + i as u64);
+                let resp = router
+                    .write_blocking(WriteOp::Insert {
+                        vectors: chunk,
+                        ep: EncodeParams::default(),
+                    })
+                    .expect("write lane accepting");
+                match resp.outcome.expect("ingest failed") {
+                    WriteOutcome::Inserted(gids) => delete_pending.push(
+                        router
+                            .submit_write(WriteOp::Delete { ids: gids })
+                            .expect("write lane accepting"),
+                    ),
+                    other => panic!("insert returned {other:?}"),
+                }
+            }
+            read_pending.push(
+                router.submit(ds.queries.row(i).to_vec(), sp).expect("router accepting"),
+            );
+        }
+        let mixed: Vec<Vec<u32>> = read_pending
+            .into_iter()
+            .map(|rx| {
+                let resp = rx.recv().expect("worker died");
+                resp.results.into_iter().map(|(_, id)| id).collect()
+            })
+            .collect();
+        let read_qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+        for rx in delete_pending {
+            rx.recv().expect("writer died").outcome.expect("delete failed");
+        }
+        router
+            .write_blocking(WriteOp::Compact)
+            .expect("write lane accepting")
+            .outcome
+            .expect("compaction failed");
+        let stats = router.stats();
+        router.shutdown();
+        let r1_mixed = recall_at(&mixed, &ds.ground_truth, 1);
+        // churn drained: the live set is the original database again, so
+        // the mutated index must answer bit-identically to pre-churn
+        let after = ids_only(&index.search_batch(&ds.queries, &sp)?);
+        assert_eq!(after, before, "post-churn index diverged from the pre-churn results");
+        println!(
+            "{:<18} {:>10} {:>8} {:>8} {:>8} {:>8}",
+            "mixed r/w", "readQPS", "p50", "p99", "ins", "del"
+        );
+        println!(
+            "{:<18} {read_qps:>10.0} {:>8} {:>8} {:>8} {:>8}",
+            format!("epoch={}", stats.epoch),
+            format!("{:.1?}", stats.p50),
+            format!("{:.1?}", stats.p99),
+            stats.inserted,
+            stats.deleted
+        );
+        println!(
+            "  R@1 during churn {} (pre-churn {}); post-churn results bit-identical",
+            common::pct(r1_mixed),
+            common::pct(r1_before)
+        );
+        csv.push(format!("mixed:rw,8,128,32,{read_qps:.0},{r1_mixed:.4}"));
+    }
+    common::hr(72);
 
     let path = qinco2::experiments::write_csv(
         "bench_batch_qps.csv",

@@ -12,7 +12,7 @@
 
 use crate::data::Flavor;
 use crate::experiments as exp;
-use crate::index::{BuildCfg, PipelineConfig, SearchIndex, SearchParams};
+use crate::index::{BuildCfg, EncodeParams, PipelineConfig, SearchIndex, SearchParams};
 use crate::qinco::{Codec, ParamStore, RuntimeDecoderFactory, TrainCfg, Trainer};
 use crate::runtime::Engine;
 use crate::server::{Router, ServerCfg};
@@ -152,6 +152,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "encode" => cmd_encode(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "insert" => cmd_insert(&args),
+        "delete" => cmd_delete(&args),
+        "compact" => cmd_compact(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => cmd_help(),
         other => bail!("unknown subcommand {other:?} (try `qinco2 help`)"),
@@ -174,6 +177,10 @@ SUBCOMMANDS
   encode   encode a database split to codes (.qnpz)
   search   build the IVF search index and report recall/QPS
   serve    run the serving coordinator over a built index
+  insert   build the index, then live-ingest vectors (beam encode) + search
+  delete   build the index, tombstone-delete rows, verify they vanish
+  compact  full live cycle: insert -> search -> delete -> compact -> search,
+           asserting deleted ids never reappear and rankings stay stable
   info     list models and artifacts in the manifest
 
 COMMON FLAGS
@@ -208,6 +215,12 @@ PIPELINE FLAGS (search + serve)
                          the stage-1 bucket-group scan (and per-query
                          stage-2/3 loops) split across N threads, results
                          bit-identical for every N
+LIVE MUTATION FLAGS (insert / delete / compact)
+  --a 0 / --b 0          ingest-encode pre-selection width A and beam width B
+                         (0 = default: A=K, B=1 — greedy, bit-identical to a
+                         fresh build; must satisfy 1 <= B <= A <= K)
+  --n-insert 64          vectors to live-ingest
+  --n-delete 32          rows to tombstone-delete
 SERVE FLAGS
   --workers N  --queries N
 "#;
@@ -348,6 +361,29 @@ fn shards_of(args: &Args, k_ivf: usize) -> Result<usize> {
     Ok(shards)
 }
 
+/// Validate the ingest-encode knobs `--a` (codeword pre-selection width)
+/// and `--b` (beam width) against the model's codebook size K. `0` (the
+/// default) means "model default": A=K, B=1 — the greedy encode. Like
+/// [`shards_of`], out-of-range values are hard errors naming the flag,
+/// not silent clamps — a clamped `--b` would silently change which codes
+/// the ingest path produces.
+fn encode_params_of(args: &Args, k: usize) -> Result<EncodeParams> {
+    let a = args.usize_or("a", 0)?;
+    let b = args.usize_or("b", 0)?;
+    let ea = if a == 0 { k } else { a };
+    let eb = if b == 0 { 1 } else { b };
+    if ea > k {
+        bail!("--a {ea} exceeds the model's codebook size K={k} (1 <= b <= a <= K)");
+    }
+    if eb > ea {
+        bail!(
+            "--b {eb} exceeds the pre-selection width --a {ea}: beam hypotheses \
+             are drawn from the pre-selected candidates (1 <= b <= a <= K)"
+        );
+    }
+    Ok(EncodeParams { a, b })
+}
+
 fn build_index(
     args: &Args,
     engine: &mut Engine,
@@ -403,35 +439,44 @@ fn build_index_reference(
     Ok((SearchIndex::build_reference(params, &ds.train, &ds.database, &bcfg), ds))
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
-    // --encoder reference: engine-free path (manifest spec + pure-Rust
-    // greedy encoder) — runs without any PJRT runtime or HLO artifacts
-    // (the CI smoke test exercises the whole pipeline through it)
-    let (index, ds, model, flavor) = match args.str_or("encoder", "runtime").as_str() {
+/// Build an index through the encoder selected by `--encoder` — shared
+/// by `search` and the mutation subcommands. `reference` is the
+/// engine-free path (manifest spec + pure-Rust greedy encoder) that runs
+/// without any PJRT runtime or HLO artifacts; the CI smoke jobs exercise
+/// the whole pipeline (and the live mutation cycle) through it.
+fn built_index(args: &Args) -> Result<(SearchIndex, crate::data::Dataset, String, Flavor)> {
+    match args.str_or("encoder", "runtime").as_str() {
         "reference" => {
             let model = args.str_or("model", "qinco2_xs");
             let flavor = flavor_of(args)?;
             let (index, ds) = build_index_reference(args, &model, flavor)?;
-            (index, ds, model, flavor)
+            Ok((index, ds, model, flavor))
         }
         "runtime" => {
             let (mut engine, model, flavor, scale) = common_setup(args)?;
             let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
-            (index, ds, model, flavor)
+            Ok((index, ds, model, flavor))
         }
         other => bail!("unknown encoder {other:?} (expected runtime|reference)"),
-    };
-    let sp = search_params(args)?;
-    let t0 = std::time::Instant::now();
-    let results = index.search_batch(&ds.queries, &sp)?;
-    let secs = t0.elapsed().as_secs_f64();
-    // structural self-check (the CI smoke jobs rely on it): every result
-    // list must be ranked under the total (score, id) order with ids in
-    // range, and a non-empty database must produce at least one result
+    }
+}
+
+/// Structural self-check shared by `search` and the mutation
+/// subcommands (the CI smoke jobs rely on it): every result list must be
+/// ranked under the total (score, id) order with ids inside the index's
+/// id space, and — unless the knobs legitimately return nothing
+/// (`--topk 0` / `--n-aq 0` / `--nprobe 0`, or an empty live set) — at
+/// least one list must be non-empty.
+fn check_results(
+    results: &[Vec<(f32, u32)>],
+    index: &SearchIndex,
+    sp: &SearchParams,
+) -> Result<()> {
+    let id_space = index.db_len();
     let mut non_empty = 0usize;
     for (i, r) in results.iter().enumerate() {
         non_empty += usize::from(!r.is_empty());
-        if let Some(&(_, bad)) = r.iter().find(|&&(_, id)| id as usize >= index.db_len) {
+        if let Some(&(_, bad)) = r.iter().find(|&&(_, id)| id as usize >= id_space) {
             bail!("result list {i} references out-of-range id {bad}");
         }
         for w in r.windows(2) {
@@ -440,15 +485,24 @@ fn cmd_search(args: &Args) -> Result<()> {
             }
         }
     }
-    // all-empty results are a pipeline failure only when the knobs could
-    // have produced any: --topk 0 / --n-aq 0 / --nprobe 0 legitimately
-    // return empty lists (the same degenerate knobs batch_equivalence
-    // treats as valid), as does an empty database
-    let expect_results =
-        ds.queries.rows > 0 && index.db_len > 0 && sp.n_final > 0 && sp.n_aq > 0 && sp.nprobe > 0;
+    let expect_results = !results.is_empty()
+        && index.live_len() > 0
+        && sp.n_final > 0
+        && sp.n_aq > 0
+        && sp.nprobe > 0;
     if expect_results && non_empty == 0 {
         bail!("search produced only empty result lists");
     }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let (index, ds, model, flavor) = built_index(args)?;
+    let sp = search_params(args)?;
+    let t0 = std::time::Instant::now();
+    let results = index.search_batch(&ds.queries, &sp)?;
+    let secs = t0.elapsed().as_secs_f64();
+    check_results(&results, &index, &sp)?;
     let (r1, r10, r100) =
         crate::metrics::recall_triple(&crate::metrics::ids_only(&results), &ds.ground_truth);
     println!(
@@ -460,10 +514,136 @@ fn cmd_search(args: &Args) -> Result<()> {
         ds.queries.rows as f64 / secs,
         ds.queries.rows
     );
+    let snap = index.snapshot();
     println!(
         "shards: {}  (stage-1 scans per shard: {:?})",
-        index.shards.n_shards(),
-        index.shards.scan_counts()
+        snap.n_shards(),
+        snap.scan_counts()
+    );
+    Ok(())
+}
+
+/// Ids in `results` that were tombstoned must never reappear — the
+/// mutation subcommands assert this after every post-delete search.
+fn check_no_deleted(results: &[Vec<(f32, u32)>], deleted: &[u32], when: &str) -> Result<()> {
+    for (i, r) in results.iter().enumerate() {
+        if let Some(&(_, bad)) = r.iter().find(|&&(_, id)| deleted.contains(&id)) {
+            bail!("result list {i} resurrected deleted id {bad} ({when})");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_insert(args: &Args) -> Result<()> {
+    let (index, ds, model, flavor) = built_index(args)?;
+    let ep = encode_params_of(args, index.params.cfg.k)?;
+    let n = args.usize_or("n-insert", 64)?;
+    let d = index.params.cfg.d;
+    // a fresh draw (distinct seed) so the ingested vectors are new, not
+    // re-encodes of rows the index already holds
+    let fresh = crate::data::generate(flavor, n, d, args.usize_or("seed", 0xA11CE)? as u64 ^ 0xF00D);
+    let before = (index.epoch(), index.live_len());
+    let t0 = std::time::Instant::now();
+    let gids = index.insert(&fresh, &ep)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let sp = search_params(args)?;
+    let results = index.search_batch(&ds.queries, &sp)?;
+    check_results(&results, &index, &sp)?;
+    println!(
+        "IVF-{model} on {}: ingested {n} vectors in {:.2}ms ({:.0} vec/s) with A={} B={}",
+        flavor.name(),
+        secs * 1e3,
+        n as f64 / secs,
+        if ep.a == 0 { index.params.cfg.k } else { ep.a },
+        if ep.b == 0 { 1 } else { ep.b },
+    );
+    println!(
+        "ids {}..{}  epoch {} -> {}  live rows {} -> {}",
+        gids.first().copied().unwrap_or(0),
+        gids.last().copied().unwrap_or(0),
+        before.0,
+        index.epoch(),
+        before.1,
+        index.live_len()
+    );
+    Ok(())
+}
+
+fn cmd_delete(args: &Args) -> Result<()> {
+    let (index, ds, model, flavor) = built_index(args)?;
+    let db_len = index.db_len();
+    let n = args.usize_or("n-delete", 32)?.min(db_len);
+    // spread the victims across the id space so every shard sees churn
+    let ids: Vec<u32> = (0..n).map(|j| (j * db_len / n.max(1)) as u32).collect();
+    let before = (index.epoch(), index.live_len());
+    let deleted = index.delete(&ids)?;
+    let sp = search_params(args)?;
+    let results = index.search_batch(&ds.queries, &sp)?;
+    check_results(&results, &index, &sp)?;
+    check_no_deleted(&results, &ids, "after delete")?;
+    println!(
+        "IVF-{model} on {}: tombstoned {deleted} of {n} requested rows; \
+         epoch {} -> {}  live rows {} -> {}",
+        flavor.name(),
+        before.0,
+        index.epoch(),
+        before.1,
+        index.live_len()
+    );
+    Ok(())
+}
+
+/// The full live cycle the CI smoke job drives: fresh search -> ingest
+/// -> delete (originals + some of the just-ingested) -> search (deleted
+/// ids must vanish) -> compact -> search again, asserting the compacted
+/// epoch returns **bit-identical** results to the tombstoned one
+/// (compaction only reclaims space, it never changes what a scan sees).
+fn cmd_compact(args: &Args) -> Result<()> {
+    let (index, ds, model, flavor) = built_index(args)?;
+    let sp = search_params(args)?;
+    let baseline = index.search_batch(&ds.queries, &sp)?;
+    check_results(&baseline, &index, &sp)?;
+
+    // ingest
+    let ep = encode_params_of(args, index.params.cfg.k)?;
+    let n_ins = args.usize_or("n-insert", 64)?;
+    let d = index.params.cfg.d;
+    let fresh =
+        crate::data::generate(flavor, n_ins, d, args.usize_or("seed", 0xA11CE)? as u64 ^ 0xF00D);
+    let gids = index.insert(&fresh, &ep)?;
+
+    // delete: spread originals plus every other ingested row
+    let n_orig = index.db_len() - gids.len();
+    let n_del = args.usize_or("n-delete", 32)?.min(n_orig);
+    let mut victims: Vec<u32> = (0..n_del).map(|j| (j * n_orig / n_del.max(1)) as u32).collect();
+    victims.extend(gids.iter().step_by(2));
+    let deleted = index.delete(&victims)?;
+
+    let tombstoned = index.search_batch(&ds.queries, &sp)?;
+    check_results(&tombstoned, &index, &sp)?;
+    check_no_deleted(&tombstoned, &victims, "after delete, before compaction")?;
+
+    let epoch_tomb = index.epoch();
+    let reclaimed = index.compact();
+    let compacted = index.search_batch(&ds.queries, &sp)?;
+    check_results(&compacted, &index, &sp)?;
+    check_no_deleted(&compacted, &victims, "after compaction")?;
+    // the pinned invariant: compaction is invisible to search
+    for (qi, (t, c)) in tombstoned.iter().zip(&compacted).enumerate() {
+        if t != c {
+            bail!(
+                "query {qi}: compaction changed the result list\n  tombstoned: {t:?}\n  compacted:  {c:?}"
+            );
+        }
+    }
+    println!(
+        "IVF-{model} on {}: live cycle ok — inserted {}  tombstoned {deleted}  \
+         reclaimed {reclaimed}  epoch {} -> {}  live rows {}",
+        flavor.name(),
+        gids.len(),
+        epoch_tomb,
+        index.epoch(),
+        index.live_len()
     );
     Ok(())
 }
@@ -580,6 +760,34 @@ mod tests {
         let bad = Args::parse(&["--shards".to_string(), "two".to_string()]);
         let err = shards_of(&bad, 16).unwrap_err().to_string();
         assert!(err.contains("shards") && err.contains("two"), "{err}");
+    }
+
+    #[test]
+    fn encode_params_are_validated_against_the_codebook() {
+        // absent: 0/0 means "model default" (A=K, B=1 at resolve time)
+        assert_eq!(encode_params_of(&Args::parse(&[]), 16).unwrap(), EncodeParams { a: 0, b: 0 });
+        // explicit in-range values pass through unresolved
+        let a = Args::parse(&["--a".to_string(), "8".to_string(), "--b".to_string(), "4".to_string()]);
+        assert_eq!(encode_params_of(&a, 16).unwrap(), EncodeParams { a: 8, b: 4 });
+        // --a > K is a hard error naming the flag and K
+        let big_a = Args::parse(&["--a".to_string(), "17".to_string()]);
+        let err = encode_params_of(&big_a, 16).unwrap_err().to_string();
+        assert!(err.contains("--a 17") && err.contains("K=16"), "{err}");
+        // --b > --a is a hard error naming both flags
+        let big_b =
+            Args::parse(&["--a".to_string(), "4".to_string(), "--b".to_string(), "5".to_string()]);
+        let err = encode_params_of(&big_b, 16).unwrap_err().to_string();
+        assert!(err.contains("--b 5") && err.contains("--a 4"), "{err}");
+        // --b alone is checked against the default A=K
+        let only_b = Args::parse(&["--b".to_string(), "17".to_string()]);
+        assert!(encode_params_of(&only_b, 16).is_err());
+        assert_eq!(
+            encode_params_of(&Args::parse(&["--b".to_string(), "16".to_string()]), 16).unwrap(),
+            EncodeParams { a: 0, b: 16 }
+        );
+        // malformed values ride the usize_or hard-error policy
+        let bad = Args::parse(&["--a".to_string(), "wide".to_string()]);
+        assert!(encode_params_of(&bad, 16).is_err());
     }
 
     #[test]

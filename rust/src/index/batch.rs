@@ -68,11 +68,13 @@
 //! `batch_equivalence` property suite).
 
 use super::pipeline::{SearchIndex, SearchParams};
+use super::shard::ShardSet;
 use crate::quantizers::StageDecoder;
 use crate::util::pool;
 use crate::util::topk::Shortlist;
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 // the cost model moved next to the ApproxScorer trait it now serves;
 // re-exported here (and from `crate::index`) for existing callers
@@ -87,14 +89,32 @@ pub struct QueryPlan {
     pub probes: Vec<(f32, u32)>,
 }
 
-/// Batched executor over a shared [`SearchIndex`].
+/// Batched executor over a shared [`SearchIndex`], pinned to one epoch
+/// snapshot: the [`ShardSet`] is captured at construction, so a whole
+/// plan+execute cycle — however long it runs — sees exactly one index
+/// state even while writers publish new epochs concurrently.
 pub struct BatchSearcher<'a> {
     pub index: &'a SearchIndex,
+    set: Arc<ShardSet>,
 }
 
 impl<'a> BatchSearcher<'a> {
+    /// Pin the index's *current* epoch for this searcher's lifetime.
     pub fn new(index: &'a SearchIndex) -> BatchSearcher<'a> {
-        BatchSearcher { index }
+        let set = index.snapshot();
+        BatchSearcher { index, set }
+    }
+
+    /// Pin an explicitly supplied snapshot — used by
+    /// [`SearchIndex::search_batch`] so every per-thread chunk of one
+    /// call shares a single epoch.
+    pub fn with_snapshot(index: &'a SearchIndex, set: Arc<ShardSet>) -> BatchSearcher<'a> {
+        BatchSearcher { index, set }
+    }
+
+    /// The epoch snapshot this searcher is pinned to.
+    pub fn snapshot(&self) -> &ShardSet {
+        &self.set
     }
 
     /// Stage 0 for one query: coarse-probe and snapshot the query.
@@ -149,14 +169,14 @@ impl<'a> BatchSearcher<'a> {
                 sorted.into_iter().map(|s| (s, Vec::new())).collect();
             pool::par_map_into(&mut slots, threads, |qi, slot| {
                 let stage1 = std::mem::take(&mut slot.0);
-                slot.1 = idx.stage2_rescore(&plans[qi].query, stage1, sp);
+                slot.1 = idx.stage2_rescore(&self.set, &plans[qi].query, stage1, sp);
             });
             slots.into_iter().map(|(_, rescored)| rescored).collect()
         } else {
             sorted
                 .into_iter()
                 .zip(plans)
-                .map(|(sl, plan)| idx.stage2_rescore(&plan.query, sl, sp))
+                .map(|(sl, plan)| idx.stage2_rescore(&self.set, &plan.query, sl, sp))
                 .collect()
         };
         if sp.n_final == 0 {
@@ -188,10 +208,10 @@ impl<'a> BatchSearcher<'a> {
             *slot = row;
         }
         let ids: Vec<u32> = union.keys().copied().collect();
-        let dec = decoder.decode(&idx.shards.gather_stage3_codes(&ids))?;
+        let dec = decoder.decode(&self.set.gather_stage3_codes(&ids))?;
         let rerank_one = |qi: usize, list: &[(f32, u32)]| {
             let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
-            idx.exact_rerank(&plans[qi].query, list, &dec, &rows, sp.n_final)
+            idx.exact_rerank(&self.set, &plans[qi].query, list, &dec, &rows, sp.n_final)
         };
         if threads > 1 && plans.len() > 1 {
             let mut out: Vec<Vec<(f32, u32)>> = vec![Vec::new(); plans.len()];
@@ -240,7 +260,7 @@ impl<'a> BatchSearcher<'a> {
         block: bool,
     ) -> Vec<Shortlist> {
         let idx = self.index;
-        let set = &idx.shards;
+        let set = &*self.set;
 
         // scatter: bucket → [(query, probe distance)] groups routed to
         // their owning shards, ascending bucket order (= shard-major) —
@@ -314,9 +334,7 @@ impl<'a> BatchSearcher<'a> {
         });
         for part in partials {
             for (sl, partial) in shortlists.iter_mut().zip(part) {
-                for (s, id) in partial.into_sorted() {
-                    sl.push(s, id);
-                }
+                sl.merge_from(partial);
             }
         }
         shortlists

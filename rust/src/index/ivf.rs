@@ -17,7 +17,10 @@ pub struct Ivf {
     /// per-bucket candidates through the owning
     /// [`crate::index::IndexShard`], not here.
     pub lists: Vec<Vec<u32>>,
-    /// bucket of each database row
+    /// bucket of each database row. Like [`Self::lists`], drained into
+    /// the [`crate::index::ShardSet`] snapshot at assembly (ingest
+    /// extends it per epoch) — on an assembled index read
+    /// `snapshot().assign`, not here.
     pub assign: Vec<u32>,
 }
 

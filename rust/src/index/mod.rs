@@ -6,27 +6,54 @@
 //! [`StageDecoder`](crate::quantizers::StageDecoder) traits into a
 //! [`PipelineSpec`] (see [`pipeline`] for the trait-level architecture).
 //!
-//! # Ownership: ShardSet → IndexShard → BatchSearcher
+//! # Ownership: ShardSet epochs → IndexShard → BatchSearcher snapshot
 //!
 //! The index is shard-partitioned ([`shard`]): all per-bucket state
 //! lives in bucket-owned shards, the shared read-only parts stay at the
-//! top.
+//! top. The shard layer is **live-mutable** behind epoch snapshots: a
+//! [`ShardSet`](shard::ShardSet) is one immutable epoch of the whole
+//! per-bucket state, published behind `RwLock<Arc<ShardSet>>`.
 //!
 //! ```text
 //! SearchIndex
-//! ├── ivf: Ivf                   coarse quantizer: centroids + HNSW +
-//! │                              per-row bucket assignment (its inverted
-//! │                              lists are drained into the shards)
+//! ├── ivf: Ivf                   coarse quantizer: centroids + HNSW (its
+//! │                              inverted lists and per-row assignment
+//! │                              are drained into the snapshot)
 //! ├── pipeline: PipelineSpec     shared stage-1/2/3 trait objects
 //! ├── params: Arc<ParamStore>    QINCo2 model weights (stage 3)
-//! └── shards: ShardSet           scatter/gather layer + routing maps
-//!     │                          (bucket → shard, id → shard/local row)
-//!     └── [IndexShard; S]        one per contiguous bucket range:
-//!         ├── lists              shard-local inverted lists
-//!         ├── codes, stage1_*,   code tables + cached terms, indexed by
-//!         │   stage2_*           local row (global_ids maps back)
-//!         └── pipeline: Option<PipelineSpec>   heterogeneous override
+//! ├── writer: Mutex<()>          serializes insert/delete/compact
+//! │      │  (copy-on-write mutated shards, epoch += 1, publish)
+//! │      ▼
+//! └── shards: RwLock<Arc<ShardSet>>   the published epoch
+//!     └── ShardSet               scatter/gather layer + routing maps
+//!         │                      (bucket → shard, id → shard/local row,
+//!         │                      id → bucket) + the epoch counter
+//!         └── [Arc<IndexShard>; S]   one per contiguous bucket range,
+//!             │                  Arc-shared across epochs when untouched:
+//!             ├── lists          shard-local inverted lists
+//!             ├── codes, stage1_*,   code tables + cached terms, indexed
+//!             │   stage2_*       by local row (global_ids maps back)
+//!             ├── tombstones     per-row delete marks, skipped by scans,
+//!             │                  reclaimed by compaction
+//!             └── pipeline: Option<Arc<PipelineSpec>>  heterogeneous
+//!                                override
+//!
+//!         pin ──► SearchIndex::search / BatchSearcher (one Arc<ShardSet>
+//!                 per query / batch: the epoch is frozen for its whole
+//!                 plan+execute, concurrent publishes are invisible)
 //! ```
+//!
+//! Writers ([`SearchIndex::insert`] / `delete` / `compact`) never mutate
+//! a published shard: they rebuild the affected shards copy-on-write and
+//! swap in a complete replacement snapshot, so a pinned reader never
+//! observes a partial row, a half-linked inverted list, or a
+//! tombstone-without-epoch. Deletes are tombstones (rows skipped by
+//! every scan from the next epoch on); compaction rewrites a shard into
+//! the canonical fresh-build layout and retires the reclaimed global ids
+//! ([`shard::DEAD_LOCAL`] — ids are never reused). After any mutation
+//! sequence, search over the live set is bit-identical to a fresh
+//! assembly over the same surviving vectors (greedy-encode ingest;
+//! pinned by `tests/mutation_invariants.rs`).
 //!
 //! Execution scatters and gathers over that tree:
 //! [`ShardSet::plan`](shard::ShardSet::plan) routes each batch's probed
@@ -52,6 +79,7 @@ pub mod shard;
 
 pub use batch::{stage2_use_lut, BatchSearcher, QueryPlan};
 pub use pipeline::{
-    BuildCfg, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+    BuildCfg, EncodeParams, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind,
+    Stage3Kind,
 };
-pub use shard::{IndexShard, ShardGroup, ShardSet};
+pub use shard::{IndexShard, RowPayload, ShardGroup, ShardSet, DEAD_LOCAL};

@@ -80,7 +80,7 @@
 //!   `batch_equivalence.rs` across all configurations).
 
 use super::ivf::Ivf;
-use super::shard::ShardSet;
+use super::shard::{RowPayload, ShardSet, DEAD_LOCAL};
 use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder};
 use crate::quantizers::aq_lut::AdditiveDecoder;
 use crate::quantizers::lsq::{Lsq, LsqScorer};
@@ -95,7 +95,7 @@ use crate::util::prng::Rng;
 use crate::util::topk::Shortlist;
 use anyhow::{bail, Result};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Search-time knobs (the Fig. 6 sweep axes).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -285,17 +285,30 @@ impl Default for BuildCfg {
 }
 
 pub struct SearchIndex {
-    /// Coarse quantizer (centroids + HNSW + per-row bucket assignment).
-    /// Its inverted lists are **drained into the shards** at assembly —
-    /// per-bucket candidate lists live in [`Self::shards`].
+    /// Coarse quantizer (centroids + HNSW). Its inverted lists **and
+    /// per-row assignment are drained into the shard snapshot** at
+    /// assembly — per-bucket candidate lists live in the published
+    /// [`ShardSet`], and `assign` lives there too so ingest can extend
+    /// it per epoch.
     pub ivf: Ivf,
     pub params: Arc<ParamStore>,
     /// the shared stage implementations (shards without an override run
     /// these)
     pub pipeline: PipelineSpec,
-    /// the partitioned per-bucket state: inverted lists, stage-1/2 code
-    /// tables and caches, one [`IndexShard`](super::shard::IndexShard) per contiguous bucket range
-    pub shards: ShardSet,
+    /// the published epoch snapshot: inverted lists, stage-1/2 code
+    /// tables and caches, one [`IndexShard`](super::shard::IndexShard)
+    /// per contiguous bucket range, plus the id routing maps. Readers
+    /// pin it once per search / batch via [`Self::snapshot`]; writers
+    /// replace the whole `Arc` under [`Self::writer`] — see the
+    /// [`super::shard`] module docs for the protocol.
+    shards: RwLock<Arc<ShardSet>>,
+    /// serializes insert/delete/compact; readers never take it
+    writer: Mutex<()>,
+    /// the fitted stage-2 machinery, retained so ingest can derive new
+    /// rows' extended codes/norms (`None` iff no shard enables stage 2)
+    stage2_fit: Option<Stage2Fit>,
+    /// RQ steps of the bucket-level stage-2 extension (from BuildCfg)
+    m_tilde: usize,
     /// whether the exact stage-3 re-rank runs at all
     /// ([`Stage3Kind::Disabled`] turns searches into stage-2-final mode)
     pub stage3_enabled: bool,
@@ -305,7 +318,18 @@ pub struct SearchIndex {
     /// resolved [`BuildCfg::batch_threads`] — the intra-batch thread
     /// count a search with `SearchParams::batch_threads == 0` inherits
     pub default_batch_threads: usize,
-    pub db_len: usize,
+}
+
+/// Encode-time knobs of the live ingest path: codeword pre-selection
+/// width `a` and beam width `b` (the paper's A and B). `0` means
+/// "default": `a = K` (no pre-selection), `b = 1` — which together
+/// reproduce the greedy reference encode bit-for-bit. Validated by
+/// [`SearchIndex::insert`] against `1 <= b <= a <= K`; the CLI
+/// surfaces these as `--a` / `--b`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EncodeParams {
+    pub a: usize,
+    pub b: usize,
 }
 
 /// The fitted stage-2 machinery, shared by every shard that enables
@@ -539,7 +563,9 @@ impl SearchIndex {
         assert_eq!(fit_x.rows, fit_codes.n, "fit split size mismatch");
         assert_eq!(fit_x.rows, fit_assign.len(), "fit split size mismatch");
         let k = params.cfg.k;
-        let db_rows = codes.n;
+        // the per-row bucket assignment moves into the snapshot (like the
+        // inverted lists below) so ingest can extend it per epoch
+        let assign = std::mem::take(&mut ivf.assign);
 
         // ---- stage 1: fit the configured scorer on the fit split and
         // produce the code table it scans ----
@@ -555,7 +581,7 @@ impl SearchIndex {
             stage1.as_ref(),
             stage1_side_codes.as_ref().unwrap_or(&codes),
             &ivf.centroids,
-            &ivf.assign,
+            &assign,
         );
 
         // ---- stage 2: pairwise decoder over extended positions, fit
@@ -582,7 +608,7 @@ impl SearchIndex {
             Vec<(usize, usize, f64)>,
         ) = if cfg.pipeline.stage2 {
             let fit = s2_fit.as_ref().expect("stage-2 fit exists when the shared spec needs it");
-            let (pw_codes, norms) = stage2_tables(fit, &codes, &ivf.assign, cfg.m_tilde);
+            let (pw_codes, norms) = stage2_tables(fit, &codes, &assign, cfg.m_tilde);
             let trace = fit.pairwise.trace();
             (Some(Box::new(fit.pairwise.clone())), pw_codes, norms, trace)
         } else {
@@ -613,6 +639,7 @@ impl SearchIndex {
             stage2_codes,
             stage2_norms,
             cfg.shards,
+            assign,
         );
 
         // ---- heterogeneous overrides: named shards get their own
@@ -632,7 +659,7 @@ impl SearchIndex {
             let sh = &shards.shards[*s];
             let rows: Vec<usize> = sh.global_ids.iter().map(|&g| g as usize).collect();
             let sh_res = residuals.gather_rows(&rows);
-            let row_buckets: Vec<u32> = rows.iter().map(|&g| ivf.assign[g]).collect();
+            let row_buckets: Vec<u32> = rows.iter().map(|&g| shards.assign[g]).collect();
             let (o_stage1, o_side) =
                 build_stage1(&pcfg.stage1, &fit_res, fit_codes, &sh_res, k, cfg.seed);
             let o_terms = stage1_terms_of(
@@ -671,7 +698,10 @@ impl SearchIndex {
             ivf,
             params,
             pipeline: PipelineSpec { stage1, stage2: stage2_scorer, stage3 },
-            shards,
+            shards: RwLock::new(Arc::new(shards)),
+            writer: Mutex::new(()),
+            stage2_fit: s2_fit,
+            m_tilde: cfg.m_tilde,
             stage3_enabled,
             pairwise_trace,
             default_batch_threads: if cfg.batch_threads == 0 {
@@ -679,8 +709,34 @@ impl SearchIndex {
             } else {
                 cfg.batch_threads
             },
-            db_len: db_rows,
         }
+    }
+
+    /// Pin the current epoch snapshot. Every reader path (per-query
+    /// search, the batched engine, server stats) works entirely against
+    /// one pinned `Arc<ShardSet>`, so concurrent writers can never
+    /// expose a partial update to it — they publish whole replacement
+    /// snapshots instead.
+    pub fn snapshot(&self) -> Arc<ShardSet> {
+        self.shards.read().expect("shard snapshot lock poisoned").clone()
+    }
+
+    /// Current publication epoch (0 for a fresh build; +1 per
+    /// insert/delete/compaction publish).
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// Total id space ever allocated: live + tombstoned + reclaimed
+    /// rows. Result ids are always `< db_len()`. (Formerly the `db_len`
+    /// field of the immutable index.)
+    pub fn db_len(&self) -> usize {
+        self.snapshot().id_space()
+    }
+
+    /// Number of live (searchable) rows.
+    pub fn live_len(&self) -> usize {
+        self.snapshot().live_len()
     }
 
     /// Resolve the effective intra-batch thread count for one batched
@@ -693,25 +749,34 @@ impl SearchIndex {
     /// Number of QINCo2 code positions per database vector (M).
     #[inline]
     pub fn code_positions(&self) -> usize {
-        self.shards.shards[0].codes.m
+        self.params.cfg.m
     }
 
     /// Full pipeline search for one query. Returns ranked (score, id) —
     /// exact squared distances when stage 3 ran, approximate scores
     /// (missing the constant ||q||²) otherwise. Probed buckets are read
     /// from their owning shards; results are bit-identical for every
-    /// shard count.
+    /// shard count. The epoch snapshot is pinned once at entry, so a
+    /// query sees one consistent index state even under concurrent
+    /// writes.
     ///
     /// Panics if the index-held stage-3 decoder fails; the built-in
     /// decoders are infallible (fallible runtime decoders belong to
     /// server workers, which handle errors by falling back).
     pub fn search(&self, q: &[f32], sp: &SearchParams) -> Vec<(f32, u32)> {
+        let set = self.snapshot();
+        self.search_in(&set, q, sp)
+    }
+
+    /// [`Self::search`] against an explicitly pinned snapshot — the
+    /// epoch-stable entry point (used by the batched engine's chunks so
+    /// one batch never spans epochs).
+    pub fn search_in(&self, set: &ShardSet, q: &[f32], sp: &SearchParams) -> Vec<(f32, u32)> {
         // ---- stage 0: coarse probe ----
         let probes = self.ivf.probe(q, sp.nprobe, sp.ef_search);
         // ---- stage 1: LUT scan over the probed lists, shard-routed.
         // One LUT per slot: all shards on the shared spec reuse slot 0,
         // override shards build their own (lazily — only if probed) ----
-        let set = &self.shards;
         let mut luts: Vec<Option<Vec<f32>>> = vec![None; set.n_lut_slots];
         // local scan tallies, flushed once per shard after the loop —
         // no per-probe atomic RMW on the (contended) shard counters
@@ -724,9 +789,13 @@ impl SearchIndex {
             let lut = luts[set.lut_slot[si] as usize].get_or_insert_with(|| scorer.lut(q));
             let s1_codes = sh.stage1_codes();
             let list = sh.list(bucket);
-            scanned[si] += list.len() as u64;
+            let any_dead = sh.n_dead > 0;
             for &local in list {
                 let i = local as usize;
+                if any_dead && sh.tombstones[i] {
+                    continue;
+                }
+                scanned[si] += 1;
                 let s = probe_d + scorer.score(lut, s1_codes.row(i), sh.stage1_terms[i]);
                 shortlist.push(s, sh.global_ids[i]);
             }
@@ -737,7 +806,7 @@ impl SearchIndex {
             }
         }
         // ---- stage 2: approximate re-scoring ----
-        let stage2 = self.stage2_rescore(q, shortlist.into_sorted(), sp);
+        let stage2 = self.stage2_rescore(set, q, shortlist.into_sorted(), sp);
         // ---- stage 3: exact decode re-rank ----
         if sp.n_final == 0 || stage2.is_empty() {
             return stage2;
@@ -751,10 +820,10 @@ impl SearchIndex {
         let dec = self
             .pipeline
             .stage3
-            .decode(&self.shards.gather_stage3_codes(&ids))
+            .decode(&set.gather_stage3_codes(&ids))
             .expect("index-held stage-3 decoder failed");
         let rows: Vec<usize> = (0..ids.len()).collect();
-        self.exact_rerank(q, &stage2, &dec, &rows, sp.n_final)
+        self.exact_rerank(set, q, &stage2, &dec, &rows, sp.n_final)
     }
 
     /// Stage 2: re-score a stage-1 shortlist with each candidate's
@@ -767,6 +836,7 @@ impl SearchIndex {
     /// candidates' stage-1 scores into the merged shortlist.
     pub(crate) fn stage2_rescore(
         &self,
+        set: &ShardSet,
         q: &[f32],
         stage1: Vec<(f32, u32)>,
         sp: &SearchParams,
@@ -774,7 +844,6 @@ impl SearchIndex {
         if sp.n_pairs == 0 || stage1.is_empty() {
             return stage1;
         }
-        let set = &self.shards;
         if !set.heterogeneous() {
             // homogeneous fast path: one scorer, one LUT-vs-direct
             // choice for the whole shortlist (the historical behavior)
@@ -841,6 +910,7 @@ impl SearchIndex {
     /// the per-query and batched paths.
     pub(crate) fn exact_rerank(
         &self,
+        set: &ShardSet,
         q: &[f32],
         survivors: &[(f32, u32)],
         dec: &Matrix,
@@ -851,7 +921,7 @@ impl SearchIndex {
         let mut exact: Vec<(f32, u32)> = survivors
             .iter()
             .zip(rows)
-            .map(|(&(_, id), &row)| (self.exact_distance(q, id as usize, dec.row(row)), id))
+            .map(|(&(_, id), &row)| (self.exact_distance(set, q, id as usize, dec.row(row)), id))
             .collect();
         exact.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         exact.truncate(n_final);
@@ -859,8 +929,8 @@ impl SearchIndex {
     }
 
     /// Exact ||q − (cent_i + decode_i)||² given the decoded residual row.
-    pub(crate) fn exact_distance(&self, q: &[f32], i: usize, dec_row: &[f32]) -> f32 {
-        let cent = self.ivf.centroids.row(self.ivf.assign[i] as usize);
+    pub(crate) fn exact_distance(&self, set: &ShardSet, q: &[f32], i: usize, dec_row: &[f32]) -> f32 {
+        let cent = self.ivf.centroids.row(set.assign[i] as usize);
         let mut d = 0.0f32;
         for j in 0..q.len() {
             let rec = cent[j] + dec_row[j];
@@ -892,12 +962,15 @@ impl SearchIndex {
         let nthreads = (crate::util::pool::default_threads() / inner).max(1);
         let chunk = n.div_ceil(nthreads);
         let nchunks = n.div_ceil(chunk);
+        // pin ONE snapshot for the whole batch: every chunk searches the
+        // same epoch, even if a writer publishes mid-call
+        let set = self.snapshot();
         let mut per_chunk: Vec<Result<Vec<Vec<(f32, u32)>>>> =
             (0..nchunks).map(|_| Ok(Vec::new())).collect();
         crate::util::pool::par_map_into(&mut per_chunk, nchunks, |ci, slot| {
             let lo = ci * chunk;
             let hi = ((ci + 1) * chunk).min(n);
-            let searcher = super::batch::BatchSearcher::new(self);
+            let searcher = super::batch::BatchSearcher::with_snapshot(self, set.clone());
             let plans: Vec<super::batch::QueryPlan> =
                 (lo..hi).map(|i| searcher.plan(queries.row(i), sp)).collect();
             *slot = searcher.execute(&plans, sp);
@@ -916,12 +989,12 @@ impl SearchIndex {
     /// (override) layout is reported instead.
     pub fn bytes_per_vector(&self) -> f64 {
         let bits_per_code = usize::BITS - (self.params.cfg.k - 1).leading_zeros();
-        let sh = self
-            .shards
+        let set = self.snapshot();
+        let sh = set
             .shards
             .iter()
             .find(|sh| sh.pipeline.is_none())
-            .unwrap_or(&self.shards.shards[0]);
+            .unwrap_or(&set.shards[0]);
         // QINCo2 codes + the stage-1 term cache (f32)
         let mut bytes = (sh.codes.m * bits_per_code as usize) as f64 / 8.0 + 4.0;
         // a PQ/OPQ/LSQ/RQ stage 1 scans its own side table
@@ -933,6 +1006,231 @@ impl SearchIndex {
             bytes += 4.0;
         }
         bytes
+    }
+
+    // ------------------------- live mutation -------------------------
+    //
+    // All three write paths follow the same protocol: serialize on
+    // `writer`, pin the current snapshot, prepare every piece of derived
+    // state (codes, side tables, terms, stage-2 rows, routing) away from
+    // any published structure, then swap in a fully consistent
+    // replacement snapshot with the epoch bumped. Readers pinned on the
+    // old snapshot keep it alive through its `Arc` and never observe a
+    // partial write.
+
+    /// Ingest new vectors under live traffic: assign each to its IVF
+    /// bucket, encode its residual with the paper's codeword
+    /// pre-selection + beam search ([`reference::encode_beam`]), derive
+    /// the owning shard's stage-1/2 rows, append, and publish a new
+    /// epoch. Returns the freshly allocated global ids (dense,
+    /// ascending, in input order).
+    ///
+    /// With the default [`EncodeParams`] (`a = K, b = 1` — greedy),
+    /// search after any insert/delete/compact sequence is bit-identical
+    /// to a fresh greedy build over the same surviving vectors (pinned
+    /// by `tests/mutation_invariants.rs`; LSQ stage-1 pipelines are
+    /// excluded — their ICM encoder is batch-layout dependent).
+    pub fn insert(&self, vectors: &Matrix, ep: &EncodeParams) -> Result<Vec<u32>> {
+        let d = self.params.cfg.d;
+        let k = self.params.cfg.k;
+        if vectors.cols != d {
+            bail!("insert vectors have dimension {}, the index expects {d}", vectors.cols);
+        }
+        let a = if ep.a == 0 { k } else { ep.a };
+        let b = if ep.b == 0 { 1 } else { ep.b };
+        if !(1 <= b && b <= a && a <= k) {
+            bail!("encode params must satisfy 1 <= b <= a <= K={k} (got a={a}, b={b})");
+        }
+        if vectors.rows == 0 {
+            return Ok(Vec::new());
+        }
+        let _w = self.writer.lock().expect("writer lock poisoned");
+        let cur = self.snapshot();
+
+        // ---- encode everything before touching any routing state ----
+        // per-row nearest centroid (== batch assign_all, pinned by
+        // ivf::tests::assignment_is_nearest_centroid) and residual
+        let mut buckets = Vec::with_capacity(vectors.rows);
+        let mut residuals = vectors.clone();
+        for i in 0..vectors.rows {
+            let (bkt, _) = tensor::argmin_l2(vectors.row(i), &self.ivf.centroids);
+            buckets.push(bkt as u32);
+            let crow = self.ivf.centroids.row(bkt).to_vec();
+            tensor::sub_assign(residuals.row_mut(i), &crow);
+        }
+        let codes = reference::encode_beam(&self.params, &residuals, a, b);
+        let base = cur.id_space() as u32;
+        let gids: Vec<u32> = (0..vectors.rows as u32).map(|i| base + i).collect();
+
+        // group rows per destination shard preserving input order, so
+        // within-bucket inverted lists stay ascending-gid (the layout
+        // property the mutation bit-identity argument needs)
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); cur.n_shards()];
+        for (i, &bkt) in buckets.iter().enumerate() {
+            by_shard[cur.shard_of[bkt as usize] as usize].push(i);
+        }
+
+        let mut next = cur.cow_clone();
+        next.owner_of.extend(std::iter::repeat(0).take(vectors.rows));
+        next.local_of.extend(std::iter::repeat(0).take(vectors.rows));
+        next.assign.extend_from_slice(&buckets);
+        for (si, rows) in by_shard.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let sh = &cur.shards[si];
+            let spec = sh.spec(&self.pipeline);
+            let row_codes = gather_codes(&codes, rows);
+            let row_buckets: Vec<u32> = rows.iter().map(|&i| buckets[i]).collect();
+            // stage-1 side table rows, iff this shard scans one
+            let side = if sh.stage1_side_codes.is_some() {
+                let rows_res = residuals.gather_rows(rows);
+                match spec.stage1.encode_rows(&rows_res) {
+                    Some(c) => Some(c),
+                    None => bail!(
+                        "shard {si} scans a stage-1 side table but its scorer \
+                         cannot encode new rows; this pipeline does not support ingest"
+                    ),
+                }
+            } else {
+                None
+            };
+            let scan_codes = side.as_ref().unwrap_or(&row_codes);
+            let terms = stage1_terms_of(
+                spec.stage1.as_ref(),
+                scan_codes,
+                &self.ivf.centroids,
+                &row_buckets,
+            );
+            // stage-2 extension rows, iff this shard scores a stage 2
+            let has_s2 = sh.stage2_codes.m > 0;
+            let (s2_codes, s2_norms) = if has_s2 {
+                let fit = self
+                    .stage2_fit
+                    .as_ref()
+                    .expect("stage-2 fit is retained whenever any shard enables stage 2");
+                stage2_tables(fit, &row_codes, &row_buckets, self.m_tilde)
+            } else {
+                (Codes::zeros(0, 0), Vec::new())
+            };
+            let payloads: Vec<RowPayload> = rows
+                .iter()
+                .enumerate()
+                .map(|(o, &i)| RowPayload {
+                    gid: gids[i],
+                    bucket: buckets[i],
+                    code: row_codes.row(o).to_vec(),
+                    side_code: side.as_ref().map(|c| c.row(o).to_vec()),
+                    term: terms[o],
+                    stage2_code: if has_s2 { s2_codes.row(o).to_vec() } else { Vec::new() },
+                    stage2_norm: if has_s2 { s2_norms[o] } else { 0.0 },
+                })
+                .collect();
+            for (o, &i) in rows.iter().enumerate() {
+                next.owner_of[gids[i] as usize] = si as u32;
+                next.local_of[gids[i] as usize] = (sh.len() + o) as u32;
+            }
+            next.shards[si] = Arc::new(sh.with_rows_appended(&payloads));
+        }
+        // publish the new epoch atomically
+        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        Ok(gids)
+    }
+
+    /// Tombstone-delete rows by global id: the rows' tables stay in
+    /// place but every scan skips them from the next epoch on (space is
+    /// reclaimed by [`Self::compact`]). An out-of-range id is an error;
+    /// an already-deleted (tombstoned or reclaimed) id is skipped.
+    /// Returns the number of rows newly deleted — a new epoch publishes
+    /// iff it is non-zero.
+    pub fn delete(&self, ids: &[u32]) -> Result<usize> {
+        let _w = self.writer.lock().expect("writer lock poisoned");
+        let cur = self.snapshot();
+        let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); cur.n_shards()];
+        for &id in ids {
+            if id as usize >= cur.id_space() {
+                bail!("delete id {id} out of range (the id space is {})", cur.id_space());
+            }
+            let local = cur.local_of[id as usize];
+            if local == DEAD_LOCAL {
+                continue; // reclaimed by an earlier compaction
+            }
+            let si = cur.owner_of[id as usize] as usize;
+            if cur.shards[si].tombstones[local as usize] {
+                continue; // already tombstoned
+            }
+            by_shard[si].push(local);
+        }
+        let mut next = cur.cow_clone();
+        let mut newly = 0usize;
+        for (si, locals) in by_shard.iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let rebuilt = cur.shards[si].with_tombstones(locals);
+            newly += rebuilt.n_dead - cur.shards[si].n_dead;
+            next.shards[si] = Arc::new(rebuilt);
+        }
+        if newly == 0 {
+            return Ok(0);
+        }
+        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        Ok(newly)
+    }
+
+    /// Reclaim one shard's tombstoned rows: rewrite its local rows into
+    /// the canonical bucket-major layout (exactly what a fresh
+    /// [`ShardSet::partition`] over the survivors would produce) and
+    /// mark the reclaimed global ids [`DEAD_LOCAL`]. Global ids are
+    /// never reused. Returns the number of rows reclaimed; a new epoch
+    /// publishes iff it is non-zero.
+    pub fn compact_shard(&self, s: usize) -> Result<usize> {
+        let _w = self.writer.lock().expect("writer lock poisoned");
+        let cur = self.snapshot();
+        if s >= cur.n_shards() {
+            bail!("compact_shard({s}) out of range (the index has {} shards)", cur.n_shards());
+        }
+        if cur.shards[s].n_dead == 0 {
+            return Ok(0);
+        }
+        let mut next = cur.cow_clone();
+        let reclaimed = Self::compact_one(&cur, &mut next, s);
+        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        Ok(reclaimed)
+    }
+
+    /// [`Self::compact_shard`] over every shard that has tombstoned
+    /// rows, in one epoch bump. Returns the total rows reclaimed.
+    pub fn compact(&self) -> usize {
+        let _w = self.writer.lock().expect("writer lock poisoned");
+        let cur = self.snapshot();
+        if cur.shards.iter().all(|sh| sh.n_dead == 0) {
+            return 0;
+        }
+        let mut next = cur.cow_clone();
+        let mut reclaimed = 0usize;
+        for s in 0..cur.n_shards() {
+            if cur.shards[s].n_dead > 0 {
+                reclaimed += Self::compact_one(&cur, &mut next, s);
+            }
+        }
+        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        reclaimed
+    }
+
+    fn compact_one(cur: &ShardSet, next: &mut ShardSet, s: usize) -> usize {
+        let old = &cur.shards[s];
+        let rebuilt = old.compacted();
+        for (local, &gid) in old.global_ids.iter().enumerate() {
+            if old.tombstones[local] {
+                next.local_of[gid as usize] = DEAD_LOCAL;
+            }
+        }
+        for (local, &gid) in rebuilt.global_ids.iter().enumerate() {
+            next.local_of[gid as usize] = local as u32;
+        }
+        next.shards[s] = Arc::new(rebuilt);
+        old.n_dead
     }
 }
 

@@ -1,4 +1,5 @@
-//! Bucket-owned index shards and the scatter/gather layer.
+//! Bucket-owned index shards and the scatter/gather layer — now with
+//! epoch-snapshotted mutation.
 //!
 //! A [`crate::index::SearchIndex`] no longer holds one monolithic set of
 //! per-vector tables: the per-bucket state — inverted lists, stage-1/2
@@ -7,6 +8,41 @@
 //! [`ShardSet`]. The shared read-only parts (the coarse quantizer, the
 //! [`PipelineSpec`] scorers, the model parameters) stay on the index and
 //! are referenced by every shard.
+//!
+//! # Epochs and snapshots
+//!
+//! A [`ShardSet`] is an **immutable snapshot** of the whole per-bucket
+//! state at one epoch: it holds its shards behind [`Arc`]s and is itself
+//! published behind `RwLock<Arc<ShardSet>>` on the index. Readers pin
+//! the current snapshot once (at `plan` time — `SearchIndex::search`
+//! per query, [`crate::index::BatchSearcher::new`] per batch) and run
+//! entirely against it, so a reader never observes a partial write.
+//! Writers never mutate a published shard in place: the ingest, delete
+//! and compaction paths copy-on-write the affected shards, rebuild the
+//! routing maps, bump [`ShardSet::epoch`] and publish the new snapshot
+//! atomically (see `SearchIndex::insert` / `delete` / `compact`).
+//! Untouched shards are shared by `Arc` between consecutive epochs, so
+//! a write costs O(rows of the mutated shards), not O(database).
+//!
+//! ```text
+//!   writer (insert/delete/compact, serialized by SearchIndex::writer)
+//!      │  copy-on-write mutated shards, epoch += 1
+//!      ▼
+//!   RwLock<Arc<ShardSet>>  ── pin ──► BatchSearcher / search snapshot
+//!                                        (epoch frozen for the batch)
+//! ```
+//!
+//! # Tombstones and compaction
+//!
+//! A delete marks [`IndexShard::tombstones`] in a copy-on-write of the
+//! owning shard; the row's codes stay in place and
+//! [`IndexShard::scan_group`] skips it, so deleted ids stop appearing in
+//! results at the next epoch without touching the tables. Compaction
+//! ([`IndexShard::compacted`]) reclaims the space: it rewrites the
+//! shard's local rows bucket-major (the canonical fresh-build layout),
+//! drops tombstoned rows, and the caller rewrites `local_of` — a
+//! reclaimed global id keeps its `owner_of` entry but gets the
+//! [`DEAD_LOCAL`] sentinel in `local_of`. Global ids are never reused.
 //!
 //! # Scatter / gather
 //!
@@ -17,24 +53,32 @@
 //! block-scan kernel over the shard's *local* rows, pushing
 //! `(score, global id)` pairs into the per-query shortlists. Per-shard
 //! shortlists merge under the total (score, id) order of
-//! [`Shortlist`], so the merged stage-1 shortlist — and therefore the
-//! whole pipeline — is **bit-identical to the unsharded index for every
-//! shard count**: each (query, candidate) pair is scored with identical
-//! floats wherever its row is stored, and the order is total.
+//! [`Shortlist`] (see [`Shortlist::merge_from`]), so the merged stage-1
+//! shortlist — and therefore the whole pipeline — is **bit-identical to
+//! the unsharded index for every shard count**: each (query, candidate)
+//! pair is scored with identical floats wherever its row is stored, and
+//! the order is total.
 //!
 //! # The global-id remap invariant
 //!
 //! Each shard stores its rows contiguously in *local* row order and
 //! carries [`IndexShard::global_ids`] mapping local row → global
-//! database id. The invariant (pinned by `tests/batch_equivalence.rs`):
+//! database id. The invariant (pinned by `tests/batch_equivalence.rs`
+//! and `tests/mutation_invariants.rs`):
 //!
-//! * `shards[s].global_ids[local]` enumerates, in ascending owned-bucket
-//!   order (and original inverted-list order within a bucket), exactly
-//!   the database rows whose IVF bucket falls in
-//!   `[bucket_lo, bucket_hi)`; every database row appears in exactly one
-//!   shard;
+//! * in the canonical layout (fresh build, or any shard right after
+//!   compaction) `shards[s].global_ids[local]` enumerates, in ascending
+//!   owned-bucket order (and inverted-list order within a bucket),
+//!   exactly the live database rows whose IVF bucket falls in
+//!   `[bucket_lo, bucket_hi)`; between mutations, ingested rows append
+//!   at the tail in insertion order instead, but **within each bucket's
+//!   inverted list local rows always map to ascending global ids** —
+//!   appended rows get strictly larger gids — which is the property the
+//!   mutation bit-identity rests on;
 //! * `ShardSet::owner_of[gid]` / `ShardSet::local_of[gid]` invert the
-//!   map: `shards[owner_of[gid]].global_ids[local_of[gid]] == gid`;
+//!   map for every non-reclaimed id:
+//!   `shards[owner_of[gid]].global_ids[local_of[gid]] == gid`; reclaimed
+//!   ids hold [`DEAD_LOCAL`];
 //! * `shards[s].lists[b - bucket_lo]` holds *local* rows, all of which
 //!   decode back (via `global_ids`) to rows assigned to bucket `b`.
 //!
@@ -57,6 +101,11 @@ use crate::quantizers::{ApproxScorer, Codes, SCORE_BLOCK};
 use crate::util::topk::Shortlist;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// `local_of` sentinel for a global id whose row was reclaimed by
+/// compaction: the id stays allocated (never reused) but maps to no row.
+pub const DEAD_LOCAL: u32 = u32::MAX;
 
 /// One scatter unit produced by [`ShardSet::plan`]: a probed bucket, its
 /// owning shard, and the batch members interested in it.
@@ -69,10 +118,31 @@ pub struct ShardGroup {
     pub members: Vec<(u32, f32)>,
 }
 
+/// Everything a shard must append for one ingested database row: the
+/// ingest encoder (`SearchIndex::insert`) produces one of these per
+/// vector, fully consistent across stages, *before* any shard is
+/// rebuilt — so a published shard is never mid-update.
+pub struct RowPayload {
+    /// the row's freshly allocated global id
+    pub gid: u32,
+    /// destination IVF bucket (must be owned by the receiving shard)
+    pub bucket: u32,
+    /// QINCo2 code row (stage-3 decode source)
+    pub code: Vec<u32>,
+    /// stage-1 side code row, iff the shard scans a side table
+    pub side_code: Option<Vec<u32>>,
+    /// cached stage-1 term ‖x̂‖² + 2⟨cent, x̂⟩
+    pub term: f32,
+    /// extended stage-2 code row (empty iff stage 2 is off)
+    pub stage2_code: Vec<u32>,
+    /// cached stage-2 reconstruction norm (unused when stage 2 is off)
+    pub stage2_norm: f32,
+}
+
 /// Per-bucket-range slice of the index: inverted lists, code tables and
 /// cached terms for the database rows whose IVF bucket falls in
 /// `[bucket_lo, bucket_hi)`. See the module docs for the global-id remap
-/// invariant.
+/// invariant and the tombstone semantics.
 pub struct IndexShard {
     /// first owned bucket (inclusive)
     pub bucket_lo: u32,
@@ -94,22 +164,36 @@ pub struct IndexShard {
     pub stage2_codes: Codes,
     /// cached ||x̂_pw||² per local row (empty when stage 2 is off)
     pub stage2_norms: Vec<f32>,
+    /// per-local-row delete marks; a tombstoned row keeps its tables but
+    /// is skipped by every scan until compaction reclaims it
+    pub tombstones: Vec<bool>,
+    /// number of `true` entries in [`Self::tombstones`]
+    pub n_dead: usize,
     /// per-shard pipeline override (heterogeneous shards). `None` —
     /// the common case — means the shard runs the index-level
     /// [`PipelineSpec`]. Stage 3 is always index-level: the QINCo2
-    /// codes are uniform across shards.
-    pub pipeline: Option<PipelineSpec>,
+    /// codes are uniform across shards. `Arc` so copy-on-write shard
+    /// rebuilds share the (immutable, `Send + Sync`) spec.
+    pub pipeline: Option<Arc<PipelineSpec>>,
     /// lifetime count of (query, candidate) pairs this shard's stage-1
     /// scan has scored — surfaced per shard in
-    /// [`crate::server::Stats::shard_scans`]
-    pub scanned: AtomicU64,
+    /// [`crate::server::Stats::shard_scans`]. Shared (`Arc`) across the
+    /// shard's copy-on-write generations: the counter belongs to the
+    /// bucket range, not to one epoch's rebuild of it.
+    pub scanned: Arc<AtomicU64>,
 }
 
 impl IndexShard {
-    /// Number of database rows this shard owns.
+    /// Number of database rows this shard stores (tombstoned included).
     #[inline]
     pub fn len(&self) -> usize {
         self.global_ids.len()
+    }
+
+    /// Number of live (non-tombstoned) rows.
+    #[inline]
+    pub fn live_len(&self) -> usize {
+        self.global_ids.len() - self.n_dead
     }
 
     #[inline]
@@ -133,7 +217,7 @@ impl IndexShard {
     /// The pipeline this shard executes: its override, or the shared one.
     #[inline]
     pub fn spec<'a>(&'a self, shared: &'a PipelineSpec) -> &'a PipelineSpec {
-        self.pipeline.as_ref().unwrap_or(shared)
+        self.pipeline.as_deref().unwrap_or(shared)
     }
 
     /// The code table stage 1 scans: the side table when the shard's
@@ -146,7 +230,8 @@ impl IndexShard {
     /// Scan one owned bucket group with the given stage-1 scorer and
     /// flat LUT pack, pushing `(score, global id)` into each member's
     /// shortlist — the existing block-scan machinery, unchanged, over
-    /// shard-local rows. `block` selects the multi-query
+    /// shard-local rows. Tombstoned rows are skipped (and not counted in
+    /// [`Self::scanned`]). `block` selects the multi-query
     /// [`ApproxScorer::score_block`] kernel vs the scalar per-member
     /// loop; both are bit-identical by the trait contract.
     pub(crate) fn scan_group(
@@ -160,8 +245,14 @@ impl IndexShard {
     ) {
         let list = self.list(group.bucket);
         let codes = self.stage1_codes();
+        let any_dead = self.n_dead > 0;
+        let live_rows = if any_dead {
+            list.iter().filter(|&&l| !self.tombstones[l as usize]).count()
+        } else {
+            list.len()
+        };
         self.scanned
-            .fetch_add((list.len() * group.members.len()) as u64, Ordering::Relaxed);
+            .fetch_add((live_rows * group.members.len()) as u64, Ordering::Relaxed);
         if block {
             // block fast path: one score_block call scores a code row
             // for up to SCORE_BLOCK co-probed queries
@@ -173,6 +264,9 @@ impl IndexShard {
                 }
                 for &local in list {
                     let i = local as usize;
+                    if any_dead && self.tombstones[i] {
+                        continue;
+                    }
                     scorer.score_block(
                         luts,
                         stride,
@@ -190,6 +284,9 @@ impl IndexShard {
             // scalar reference path (bench comparisons only)
             for &local in list {
                 let i = local as usize;
+                if any_dead && self.tombstones[i] {
+                    continue;
+                }
                 let code = codes.row(i);
                 let term = self.stage1_terms[i];
                 for &(qi, probe_d) in &group.members {
@@ -200,31 +297,183 @@ impl IndexShard {
             }
         }
     }
+
+    /// Copy-on-write append: a new shard generation with `rows` added at
+    /// the local tail, each linked into its bucket's inverted list. The
+    /// receiving shard's tables and the payloads must agree on side /
+    /// stage-2 presence — the ingest encoder produced the payloads from
+    /// this shard's own spec, so a mismatch is a logic error.
+    pub(crate) fn with_rows_appended(&self, rows: &[RowPayload]) -> IndexShard {
+        let has_side = self.stage1_side_codes.is_some();
+        let has_s2 = self.stage2_codes.m > 0;
+        let mut lists = self.lists.clone();
+        let mut global_ids = self.global_ids.clone();
+        let mut codes = self.codes.clone();
+        let mut side = self.stage1_side_codes.clone();
+        let mut terms = self.stage1_terms.clone();
+        let mut s2_codes = self.stage2_codes.clone();
+        let mut s2_norms = self.stage2_norms.clone();
+        let mut tombstones = self.tombstones.clone();
+        for row in rows {
+            assert!(self.owns(row.bucket), "row routed to a non-owning shard");
+            assert_eq!(row.side_code.is_some(), has_side, "side-table presence mismatch");
+            assert_eq!(!row.stage2_code.is_empty(), has_s2, "stage-2 presence mismatch");
+            let local = global_ids.len() as u32;
+            lists[(row.bucket - self.bucket_lo) as usize].push(local);
+            global_ids.push(row.gid);
+            assert_eq!(row.code.len(), codes.m, "code width mismatch");
+            codes.data.extend_from_slice(&row.code);
+            codes.n += 1;
+            if let (Some(tbl), Some(sc)) = (side.as_mut(), row.side_code.as_ref()) {
+                assert_eq!(sc.len(), tbl.m, "side code width mismatch");
+                tbl.data.extend_from_slice(sc);
+                tbl.n += 1;
+            }
+            terms.push(row.term);
+            if has_s2 {
+                assert_eq!(row.stage2_code.len(), s2_codes.m, "stage-2 width mismatch");
+                s2_codes.data.extend_from_slice(&row.stage2_code);
+                s2_codes.n += 1;
+                s2_norms.push(row.stage2_norm);
+            }
+            tombstones.push(false);
+        }
+        IndexShard {
+            bucket_lo: self.bucket_lo,
+            bucket_hi: self.bucket_hi,
+            lists,
+            global_ids,
+            codes,
+            stage1_side_codes: side,
+            stage1_terms: terms,
+            stage2_codes: s2_codes,
+            stage2_norms: s2_norms,
+            tombstones,
+            n_dead: self.n_dead,
+            pipeline: self.pipeline.clone(),
+            scanned: self.scanned.clone(),
+        }
+    }
+
+    /// Copy-on-write delete: a new shard generation with the given local
+    /// rows tombstoned. Already-dead locals are counted once.
+    pub(crate) fn with_tombstones(&self, locals: &[u32]) -> IndexShard {
+        let mut tombstones = self.tombstones.clone();
+        let mut n_dead = self.n_dead;
+        for &l in locals {
+            let i = l as usize;
+            if !tombstones[i] {
+                tombstones[i] = true;
+                n_dead += 1;
+            }
+        }
+        IndexShard {
+            bucket_lo: self.bucket_lo,
+            bucket_hi: self.bucket_hi,
+            lists: self.lists.clone(),
+            global_ids: self.global_ids.clone(),
+            codes: self.codes.clone(),
+            stage1_side_codes: self.stage1_side_codes.clone(),
+            stage1_terms: self.stage1_terms.clone(),
+            stage2_codes: self.stage2_codes.clone(),
+            stage2_norms: self.stage2_norms.clone(),
+            tombstones,
+            n_dead,
+            pipeline: self.pipeline.clone(),
+            scanned: self.scanned.clone(),
+        }
+    }
+
+    /// Compaction: rewrite the shard into the canonical fresh-build
+    /// layout — live rows only, bucket-major, inverted-list order within
+    /// each bucket — exactly what [`ShardSet::partition`] would produce
+    /// for the surviving rows. Returns the new shard; the caller
+    /// rewrites `local_of` from the new shard's `global_ids` and marks
+    /// reclaimed gids [`DEAD_LOCAL`].
+    pub(crate) fn compacted(&self) -> IndexShard {
+        let mut lists = Vec::with_capacity(self.lists.len());
+        let mut keep: Vec<usize> = Vec::with_capacity(self.live_len());
+        for old_list in &self.lists {
+            let mut new_list = Vec::new();
+            for &local in old_list {
+                let i = local as usize;
+                if self.tombstones[i] {
+                    continue;
+                }
+                new_list.push(keep.len() as u32);
+                keep.push(i);
+            }
+            lists.push(new_list);
+        }
+        IndexShard {
+            bucket_lo: self.bucket_lo,
+            bucket_hi: self.bucket_hi,
+            lists,
+            global_ids: keep.iter().map(|&i| self.global_ids[i]).collect(),
+            codes: gather_codes(&self.codes, &keep),
+            stage1_side_codes: self.stage1_side_codes.as_ref().map(|c| gather_codes(c, &keep)),
+            stage1_terms: keep.iter().map(|&i| self.stage1_terms[i]).collect(),
+            stage2_codes: if self.stage2_codes.m > 0 {
+                gather_codes(&self.stage2_codes, &keep)
+            } else {
+                Codes::zeros(0, 0)
+            },
+            stage2_norms: if self.stage2_codes.m > 0 {
+                keep.iter().map(|&i| self.stage2_norms[i]).collect()
+            } else {
+                Vec::new()
+            },
+            tombstones: vec![false; keep.len()],
+            n_dead: 0,
+            pipeline: self.pipeline.clone(),
+            scanned: self.scanned.clone(),
+        }
+    }
 }
 
-/// The partitioned per-bucket state of a [`crate::index::SearchIndex`]:
-/// every shard plus the routing maps. Shared read-only parts (coarse
-/// quantizer, scorers, params) stay on the index.
+/// One epoch's immutable snapshot of the partitioned per-bucket state of
+/// a [`crate::index::SearchIndex`]: every shard (behind `Arc` for
+/// copy-on-write sharing across epochs) plus the routing maps. Shared
+/// read-only parts (coarse quantizer, scorers, params) stay on the
+/// index. See the module docs for the epoch/snapshot protocol.
 pub struct ShardSet {
-    pub shards: Vec<IndexShard>,
+    pub shards: Vec<Arc<IndexShard>>,
     /// global bucket → owning shard index
     pub shard_of: Vec<u32>,
-    /// global database id → owning shard index
+    /// global database id → owning shard index (kept for reclaimed ids)
     pub owner_of: Vec<u32>,
-    /// global database id → local row within its owning shard
+    /// global database id → local row within its owning shard, or
+    /// [`DEAD_LOCAL`] once compaction reclaimed the row
     pub local_of: Vec<u32>,
+    /// global database id → IVF bucket (drained from the coarse
+    /// quantizer at assembly so ingest can extend it per snapshot)
+    pub assign: Vec<u32>,
     /// per-shard LUT slot: shards running the shared [`PipelineSpec`]
     /// all map to slot `0` (one LUT / LUT pack per query serves them
     /// all); each override shard gets its own slot. `n_lut_slots` sizes
     /// per-query LUT caches and per-batch LUT packs.
     pub lut_slot: Vec<u32>,
     pub n_lut_slots: usize,
+    /// monotone publication counter: bumped by every successful
+    /// insert/delete/compaction publish
+    pub epoch: u64,
 }
 
 impl ShardSet {
     #[inline]
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Total id space ever allocated (live + tombstoned + reclaimed).
+    #[inline]
+    pub fn id_space(&self) -> usize {
+        self.owner_of.len()
+    }
+
+    /// Number of live (searchable) rows across all shards.
+    pub fn live_len(&self) -> usize {
+        self.shards.iter().map(|sh| sh.live_len()).sum()
     }
 
     /// Any shard carrying a pipeline override?
@@ -246,10 +495,11 @@ impl ShardSet {
     }
 
     /// Partition the assembled per-bucket state into `n_shards`
-    /// bucket-owned shards. `lists` are the global inverted lists
-    /// (bucket → global ids) taken from the coarse quantizer; the code
-    /// tables and caches are indexed by global id and are re-gathered
-    /// into each shard's local row order.
+    /// bucket-owned shards (epoch 0). `lists` are the global inverted
+    /// lists (bucket → global ids) and `assign` the row → bucket map,
+    /// both taken from the coarse quantizer; the code tables and caches
+    /// are indexed by global id and are re-gathered into each shard's
+    /// local row order.
     #[allow(clippy::too_many_arguments)]
     pub fn partition(
         lists: Vec<Vec<u32>>,
@@ -259,6 +509,7 @@ impl ShardSet {
         stage2_codes: Codes,
         stage2_norms: Vec<f32>,
         n_shards: usize,
+        assign: Vec<u32>,
     ) -> ShardSet {
         let n_buckets = lists.len();
         assert!(n_shards >= 1, "shard count must be at least 1 (got {n_shards})");
@@ -268,6 +519,7 @@ impl ShardSet {
              every shard must own at least one IVF bucket"
         );
         let db = codes.n;
+        assert_eq!(assign.len(), db, "assign must cover every database row");
         let has_s2 = stage2_codes.m > 0;
         let mut shard_of = vec![0u32; n_buckets];
         let mut owner_of = vec![0u32; db];
@@ -298,7 +550,7 @@ impl ShardSet {
             } else {
                 (Codes::zeros(0, 0), Vec::new())
             };
-            shards.push(IndexShard {
+            shards.push(Arc::new(IndexShard {
                 bucket_lo: lo,
                 bucket_hi: hi,
                 lists: local_lists,
@@ -307,19 +559,48 @@ impl ShardSet {
                 stage1_terms: rows.iter().map(|&i| stage1_terms[i]).collect(),
                 stage2_codes: sh_s2_codes,
                 stage2_norms: sh_s2_norms,
+                tombstones: vec![false; global_ids.len()],
+                n_dead: 0,
                 pipeline: None,
-                scanned: AtomicU64::new(0),
+                scanned: Arc::new(AtomicU64::new(0)),
                 global_ids,
-            });
+            }));
         }
         let lut_slot = vec![0u32; n_shards];
-        ShardSet { shards, shard_of, owner_of, local_of, lut_slot, n_lut_slots: 1 }
+        ShardSet {
+            shards,
+            shard_of,
+            owner_of,
+            local_of,
+            assign,
+            lut_slot,
+            n_lut_slots: 1,
+            epoch: 0,
+        }
+    }
+
+    /// The writer's working copy for the next epoch: shards shared by
+    /// `Arc` (to be swapped out per-shard via copy-on-write), routing
+    /// maps cloned for extension, epoch pre-bumped. The copy stays
+    /// private to the writer until published.
+    pub(crate) fn cow_clone(&self) -> ShardSet {
+        ShardSet {
+            shards: self.shards.clone(),
+            shard_of: self.shard_of.clone(),
+            owner_of: self.owner_of.clone(),
+            local_of: self.local_of.clone(),
+            assign: self.assign.clone(),
+            lut_slot: self.lut_slot.clone(),
+            n_lut_slots: self.n_lut_slots,
+            epoch: self.epoch + 1,
+        }
     }
 
     /// Install a heterogeneous pipeline override on shard `s`, replacing
     /// its stage-1/2 tables with ones fit for the override's scorers
     /// (all indexed by the shard's existing local row order), and
-    /// reassign LUT slots.
+    /// reassign LUT slots. Assembly-time only: the shards must not yet
+    /// be shared with any snapshot reader.
     pub fn install_override(
         &mut self,
         s: usize,
@@ -329,7 +610,8 @@ impl ShardSet {
         stage2_codes: Codes,
         stage2_norms: Vec<f32>,
     ) {
-        let sh = &mut self.shards[s];
+        let sh = Arc::get_mut(&mut self.shards[s])
+            .expect("install_override requires exclusive shard ownership (assembly time)");
         assert_eq!(stage1_terms.len(), sh.len(), "override terms must cover the shard");
         if let Some(side) = &stage1_side_codes {
             assert_eq!(side.n, sh.len(), "override side table must cover the shard");
@@ -338,7 +620,7 @@ impl ShardSet {
             assert_eq!(stage2_codes.n, sh.len(), "override stage-2 table must cover the shard");
             assert_eq!(stage2_norms.len(), sh.len(), "override stage-2 norms must cover the shard");
         }
-        sh.pipeline = Some(spec);
+        sh.pipeline = Some(Arc::new(spec));
         sh.stage1_side_codes = stage1_side_codes;
         sh.stage1_terms = stage1_terms;
         sh.stage2_codes = stage2_codes;
@@ -369,15 +651,18 @@ impl ShardSet {
             .iter()
             .zip(&self.lut_slot)
             .find(|&(_, &ls)| ls as usize == slot)
-            .and_then(|(sh, _)| sh.pipeline.as_ref())
+            .and_then(|(sh, _)| sh.pipeline.as_deref())
             .unwrap_or(shared)
     }
 
     /// Locate a global database id: its owning shard and local row.
+    /// Must not be called on a reclaimed id ([`DEAD_LOCAL`]).
     #[inline]
     pub fn locate(&self, id: u32) -> (&IndexShard, usize) {
         let si = self.owner_of[id as usize] as usize;
-        (&self.shards[si], self.local_of[id as usize] as usize)
+        let local = self.local_of[id as usize];
+        debug_assert_ne!(local, DEAD_LOCAL, "locate() on a reclaimed id {id}");
+        (&self.shards[si], local as usize)
     }
 
     /// Gather the stage-3 (QINCo2) code rows of `ids` — the union decode
@@ -414,7 +699,9 @@ impl ShardSet {
             .collect()
     }
 
-    /// Snapshot of the per-shard stage-1 scan counters.
+    /// Snapshot of the per-shard stage-1 scan counters. Counters are
+    /// shared across copy-on-write shard generations, so deltas taken
+    /// across epochs stay meaningful.
     pub fn scan_counts(&self) -> Vec<u64> {
         self.shards.iter().map(|sh| sh.scanned.load(Ordering::Relaxed)).collect()
     }
@@ -423,6 +710,17 @@ impl ShardSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// assign map implied by global inverted lists.
+    fn assign_of(lists: &[Vec<u32>], db: usize) -> Vec<u32> {
+        let mut assign = vec![0u32; db];
+        for (b, list) in lists.iter().enumerate() {
+            for &gid in list {
+                assign[gid as usize] = b as u32;
+            }
+        }
+        assign
+    }
 
     #[test]
     fn bucket_ranges_cover_contiguously_and_nonempty() {
@@ -454,13 +752,13 @@ mod tests {
         }
     }
 
-    #[test]
-    fn partition_remaps_lists_tables_and_ids() {
+    fn tiny_set() -> ShardSet {
         // 4 buckets, 6 rows, 3 shards (ranges [0,1), [1,2), [2,4))
         let lists = vec![vec![3, 0], vec![5], vec![], vec![1, 4, 2]];
+        let assign = assign_of(&lists, 6);
         let codes = Codes::from_vec(6, 1, vec![10, 11, 12, 13, 14, 15]);
         let terms: Vec<f32> = (0..6).map(|i| i as f32).collect();
-        let set = ShardSet::partition(
+        ShardSet::partition(
             lists,
             codes,
             None,
@@ -468,9 +766,17 @@ mod tests {
             Codes::zeros(0, 0),
             Vec::new(),
             3,
-        );
+            assign,
+        )
+    }
+
+    #[test]
+    fn partition_remaps_lists_tables_and_ids() {
+        let set = tiny_set();
         assert_eq!(set.n_shards(), 3);
         assert!(!set.heterogeneous());
+        assert_eq!(set.epoch, 0);
+        assert_eq!(set.live_len(), 6);
         assert_eq!(set.shards[0].global_ids, vec![3, 0]);
         assert_eq!(set.shards[1].global_ids, vec![5]);
         assert_eq!(set.shards[2].global_ids, vec![1, 4, 2]);
@@ -480,6 +786,8 @@ mod tests {
         // tables follow the remap
         assert_eq!(set.shards[2].codes.row(1), &[14]);
         assert_eq!(set.shards[2].stage1_terms, vec![1.0, 4.0, 2.0]);
+        // assign drained verbatim
+        assert_eq!(set.assign, vec![0, 3, 3, 0, 3, 1]);
         // inverse maps round-trip
         for (si, sh) in set.shards.iter().enumerate() {
             for (local, &gid) in sh.global_ids.iter().enumerate() {
@@ -495,6 +803,73 @@ mod tests {
     }
 
     #[test]
+    fn append_links_new_rows_into_lists_and_tables() {
+        let set = tiny_set();
+        // append gid 6 to bucket 2 and gid 7 to bucket 3 (both shard 2)
+        let rows = vec![
+            RowPayload {
+                gid: 6,
+                bucket: 2,
+                code: vec![16],
+                side_code: None,
+                term: 6.0,
+                stage2_code: Vec::new(),
+                stage2_norm: 0.0,
+            },
+            RowPayload {
+                gid: 7,
+                bucket: 3,
+                code: vec![17],
+                side_code: None,
+                term: 7.0,
+                stage2_code: Vec::new(),
+                stage2_norm: 0.0,
+            },
+        ];
+        let sh = set.shards[2].with_rows_appended(&rows);
+        assert_eq!(sh.len(), 5);
+        assert_eq!(sh.live_len(), 5);
+        assert_eq!(sh.global_ids, vec![1, 4, 2, 6, 7]);
+        assert_eq!(sh.lists, vec![vec![3u32], vec![0, 1, 2, 4]]);
+        assert_eq!(sh.codes.row(3), &[16]);
+        assert_eq!(sh.codes.row(4), &[17]);
+        assert_eq!(sh.stage1_terms, vec![1.0, 4.0, 2.0, 6.0, 7.0]);
+        // the original shard generation is untouched
+        assert_eq!(set.shards[2].len(), 3);
+    }
+
+    #[test]
+    fn tombstone_then_compact_restores_canonical_layout() {
+        let set = tiny_set();
+        // shard 2 rows: locals 0,1,2 = gids 1,4,2 (bucket 3)
+        let dead = set.shards[2].with_tombstones(&[1]);
+        assert_eq!(dead.live_len(), 2);
+        assert!(dead.tombstones[1]);
+        // double-tombstone is idempotent
+        assert_eq!(dead.with_tombstones(&[1]).n_dead, 1);
+        let compacted = dead.compacted();
+        assert_eq!(compacted.len(), 2);
+        assert_eq!(compacted.n_dead, 0);
+        assert_eq!(compacted.global_ids, vec![1, 2]);
+        assert_eq!(compacted.lists, vec![Vec::<u32>::new(), vec![0, 1]]);
+        assert_eq!(compacted.codes.row(0), &[11]);
+        assert_eq!(compacted.codes.row(1), &[12]);
+        assert_eq!(compacted.stage1_terms, vec![1.0, 2.0]);
+        // the shared scan counter survives both rebuilds
+        assert!(Arc::ptr_eq(&set.shards[2].scanned, &compacted.scanned));
+    }
+
+    #[test]
+    fn cow_clone_bumps_epoch_and_shares_shards() {
+        let set = tiny_set();
+        let next = set.cow_clone();
+        assert_eq!(next.epoch, set.epoch + 1);
+        for (a, b) in set.shards.iter().zip(&next.shards) {
+            assert!(Arc::ptr_eq(a, b), "untouched shards must be shared, not copied");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "exceeds the bucket count")]
     fn partition_rejects_more_shards_than_buckets() {
         ShardSet::partition(
@@ -505,6 +880,7 @@ mod tests {
             Codes::zeros(0, 0),
             Vec::new(),
             3,
+            vec![0, 1],
         );
     }
 }

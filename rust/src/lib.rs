@@ -57,6 +57,20 @@
 //! own stage-1/2 configuration (`BuildCfg::shard_pipelines`) behind the
 //! same router.
 //!
+//! The shard layer is **live-mutable** behind epoch snapshots:
+//! [`index::SearchIndex::insert`] encodes fresh vectors (codeword
+//! pre-selection + beam search over the QINCo2 model), assigns IVF
+//! buckets, and appends to the owning shards copy-on-write;
+//! [`index::SearchIndex::delete`] tombstones rows (skipped by every
+//! scan) and [`index::SearchIndex::compact`] rewrites shards into the
+//! canonical fresh-build layout. Each mutation publishes a complete
+//! replacement [`index::ShardSet`] snapshot, so concurrent readers pin
+//! an epoch and never observe partial writes; after any mutation
+//! sequence, greedy-ingested state answers bit-identically to a fresh
+//! build over the surviving vectors (`tests/mutation_invariants.rs`).
+//! The [`server`] router gives writes their own bounded lane
+//! (`server::WriteOp`) so ingest never steals a read worker.
+//!
 //! Search executes through one of two result-identical paths:
 //! - per-query [`index::SearchIndex::search`] (Fig. 3, one request at a
 //!   time), and

@@ -178,6 +178,115 @@ pub fn encode_greedy(params: &ParamStore, xs: &Matrix) -> Codes {
     codes
 }
 
+/// Beam-search encode with codeword pre-selection (the paper's Sec. 3.2
+/// encoding contribution, pure Rust): keep `b` hypotheses per step; each
+/// hypothesis proposes its `a` nearest codewords under the cheap RQ
+/// proxy `‖(x − x̂) − c‖²` (no `f_theta`), the proposals are scored
+/// exactly with one batched `f_theta` call, and the best `b` extensions
+/// survive under the total (err, hypothesis, codeword) order.
+///
+/// `a == K` skips pre-selection entirely (candidates are visited in
+/// codeword order), so `encode_beam(.., K, 1)` is **bit-identical** to
+/// [`encode_greedy`]: same `f_theta` batch layout, same per-candidate
+/// error expression, same first-strict-min tie-break. The live-index
+/// ingest path relies on this to keep mutation bit-identity with
+/// greedy-encoded fresh builds.
+pub fn encode_beam(params: &ParamStore, xs: &Matrix, a: usize, b: usize) -> Codes {
+    let cfg = &params.cfg;
+    let (d, k, m) = (cfg.d, cfg.k, cfg.m);
+    assert!(
+        1 <= b && b <= a && a <= k,
+        "beam parameters must satisfy 1 <= b <= a <= K (got a={a}, b={b}, K={k})"
+    );
+    let cb = &params.get("codebooks").data_f32;
+    let mut codes = Codes::zeros(xs.rows, m);
+    // per-hypothesis state: (xhat, code path)
+    for i in 0..xs.rows {
+        let x = xs.row(i);
+        let mut hyps: Vec<(Vec<f32>, Vec<u32>)> = vec![(vec![0.0f32; d], Vec::new())];
+        for step in 0..m {
+            let step_cb = &cb[step * k * d..(step + 1) * k * d];
+            // candidate codewords per hypothesis, ascending codeword order
+            let cand_sets: Vec<Vec<usize>> = hyps
+                .iter()
+                .map(|(xhat, _)| {
+                    if a == k {
+                        (0..k).collect()
+                    } else {
+                        // pre-select `a` by the RQ proxy, then restore
+                        // ascending codeword order so the exact-scoring
+                        // tie-break is independent of proxy ranking
+                        let mut proxy: Vec<(f32, usize)> = (0..k)
+                            .map(|c| {
+                                let cw = &step_cb[c * d..(c + 1) * d];
+                                let mut e = 0.0f32;
+                                for j in 0..d {
+                                    let r = x[j] - xhat[j] - cw[j];
+                                    e += r * r;
+                                }
+                                (e, c)
+                            })
+                            .collect();
+                        proxy.sort_unstable_by(|p, q| {
+                            p.0.total_cmp(&q.0).then(p.1.cmp(&q.1))
+                        });
+                        let mut sel: Vec<usize> =
+                            proxy[..a].iter().map(|&(_, c)| c).collect();
+                        sel.sort_unstable();
+                        sel
+                    }
+                })
+                .collect();
+            // one batched f_theta over every (hypothesis, candidate) pair
+            let n_pairs: usize = cand_sets.iter().map(|s| s.len()).sum();
+            let mut pair_hc: Vec<(usize, usize)> = Vec::with_capacity(n_pairs);
+            let mut cands = vec![0.0f32; n_pairs * d];
+            let mut xh_b = vec![0.0f32; n_pairs * d];
+            for (h, set) in cand_sets.iter().enumerate() {
+                for &c in set {
+                    let p = pair_hc.len();
+                    cands[p * d..(p + 1) * d].copy_from_slice(&step_cb[c * d..(c + 1) * d]);
+                    xh_b[p * d..(p + 1) * d].copy_from_slice(&hyps[h].0);
+                    pair_hc.push((h, c));
+                }
+            }
+            let f = f_theta(params, step, &cands, &xh_b, n_pairs);
+            // exact error per pair — the same float expression as greedy
+            let mut scored: Vec<(f32, usize)> = Vec::with_capacity(n_pairs);
+            for (p, &(h, _)) in pair_hc.iter().enumerate() {
+                let xhat = &hyps[h].0;
+                let mut err = 0.0f32;
+                for j in 0..d {
+                    let nv = xhat[j] + f[p * d + j];
+                    let dd = x[j] - nv;
+                    err += dd * dd;
+                }
+                scored.push((err, p));
+            }
+            // keep the best `b` under (err, hypothesis, codeword):
+            // pair index order is already (h asc, c asc)
+            scored.sort_unstable_by(|p, q| p.0.total_cmp(&q.0).then(p.1.cmp(&q.1)));
+            scored.truncate(b);
+            hyps = scored
+                .iter()
+                .map(|&(_, p)| {
+                    let (h, c) = pair_hc[p];
+                    let mut xhat = hyps[h].0.clone();
+                    for j in 0..d {
+                        xhat[j] += f[p * d + j];
+                    }
+                    let mut path = hyps[h].1.clone();
+                    path.push(c as u32);
+                    (xhat, path)
+                })
+                .collect();
+        }
+        // survivors are sorted best-first by the final selection
+        codes.row_mut(i).copy_from_slice(&hyps[0].1);
+    }
+    codes
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +336,48 @@ mod tests {
                 assert!((dec.row(i)[j] - want).abs() < 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn beam_with_full_preselection_and_width_one_is_greedy() {
+        // a = K, b = 1 must reproduce greedy bit-for-bit — the ingest
+        // path's bit-identity with fresh greedy builds rests on this
+        let (ps, xs) = setup();
+        let sample = xs.gather_rows(&(0..40).collect::<Vec<_>>());
+        let greedy = encode_greedy(&ps, &sample);
+        let beam = encode_beam(&ps, &sample, ps.cfg.k, 1);
+        assert_eq!(greedy, beam);
+    }
+
+    #[test]
+    fn beam_encode_is_deterministic_valid_and_no_worse() {
+        let (ps, xs) = setup();
+        let sample = xs.gather_rows(&(0..40).collect::<Vec<_>>());
+        let k = ps.cfg.k;
+        let greedy_mse = crate::tensor::mse(&sample, &decode(&ps, &encode_greedy(&ps, &sample)));
+        for (a, b) in [(k, 2), (4, 2), (4, 4), (2, 1)] {
+            let c1 = encode_beam(&ps, &sample, a, b);
+            let c2 = encode_beam(&ps, &sample, a, b);
+            assert_eq!(c1, c2, "beam encode must be deterministic (a={a}, b={b})");
+            assert!(c1.data.iter().all(|&c| (c as usize) < k), "codes out of range");
+            if a == k {
+                // with full pre-selection a wider beam explores a
+                // superset of greedy's path per step; allow only slack
+                // for float noise, not regressions
+                let mse = crate::tensor::mse(&sample, &decode(&ps, &c1));
+                assert!(
+                    mse <= greedy_mse * 1.05 + 1e-5,
+                    "beam (a={a}, b={b}) much worse than greedy: {mse} vs {greedy_mse}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "1 <= b <= a <= K")]
+    fn beam_rejects_width_above_preselection() {
+        let (ps, xs) = setup();
+        encode_beam(&ps, &xs.gather_rows(&[0]), 2, 4);
     }
 
     #[test]

@@ -174,6 +174,13 @@ impl ApproxScorer for LsqScorer {
     fn use_lut(&self, n_cands: usize, d: usize) -> bool {
         super::stage2_use_lut(n_cands, self.0.m, self.0.k, d)
     }
+
+    fn encode_rows(&self, xs: &Matrix) -> Option<Codes> {
+        // note: the ICM sweep seeds its RNG per batch chunk, so LSQ
+        // ingest is valid but not bit-identical to a fresh batch encode
+        // — the mutation bit-identity invariant excludes LSQ pipelines
+        Some(self.0.encode(xs))
+    }
 }
 
 impl VectorQuantizer for Lsq {

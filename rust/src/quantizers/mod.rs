@@ -324,6 +324,22 @@ pub trait ApproxScorer: Send + Sync {
         let _ = (n_cands, d);
         true
     }
+
+    /// Encode raw vectors into this scorer's own code space — the live
+    /// ingest path's hook for extending a side code table one row at a
+    /// time. `None` (the default) means the scorer scans an externally
+    /// produced table and owns no encoder: the additive AQ scorer scans
+    /// the QINCo2 codes themselves, and the pairwise stage-2 scorer's
+    /// table is derived by [`crate::quantizers::pairwise::append_positions`].
+    /// The quantizer-backed adapters (PQ/OPQ/LSQ/RQ) override this with
+    /// their [`VectorQuantizer::encode`]. All of those but LSQ are
+    /// per-row deterministic (LSQ's ICM sweep seeds its RNG per batch
+    /// chunk), which is why the mutation bit-identity invariant covers
+    /// AQ/PQ/OPQ/RQ stage-1 pipelines and excludes LSQ.
+    fn encode_rows(&self, xs: &Matrix) -> Option<Codes> {
+        let _ = xs;
+        None
+    }
 }
 
 /// A batch decoder for the exact re-ranking stage (stage 3): reconstruct

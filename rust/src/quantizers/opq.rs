@@ -97,6 +97,11 @@ impl ApproxScorer for OpqScorer {
         // decode in rotated space, rotate back with Rᵀ (R orthogonal)
         self.pq_scorer.0.decode(codes).matmul(&self.rotation.transpose())
     }
+
+    fn encode_rows(&self, xs: &Matrix) -> Option<Codes> {
+        let rot = xs.matmul(&self.rotation);
+        Some(self.pq_scorer.0.encode(&rot))
+    }
 }
 
 impl VectorQuantizer for Opq {

@@ -145,6 +145,10 @@ impl ApproxScorer for PqScorer {
         self.0.decode(codes)
     }
 
+    fn encode_rows(&self, xs: &Matrix) -> Option<Codes> {
+        Some(self.0.encode(xs))
+    }
+
     // default `use_lut` (always true): a PQ LUT costs only k·d flops to
     // build — the subspaces partition the d dimensions — so it amortizes
     // even for tiny shortlists.

@@ -134,6 +134,10 @@ impl ApproxScorer for RqScorer {
     fn use_lut(&self, n_cands: usize, d: usize) -> bool {
         super::stage2_use_lut(n_cands, self.0.m, self.0.k, d)
     }
+
+    fn encode_rows(&self, xs: &Matrix) -> Option<Codes> {
+        Some(self.0.encode(xs))
+    }
 }
 
 impl VectorQuantizer for Rq {

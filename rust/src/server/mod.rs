@@ -25,27 +25,40 @@
 //! worker degrades to the index's own infallible decoder; no request is
 //! ever dropped.
 //!
-//! The index is immutable after build, so workers share it via `Arc`
-//! with no locking on the hot path — including a sharded index
-//! ([`crate::index::ShardSet`]): each dispatched batch scatters its
-//! probed buckets to the owning shards inside the engine, so
-//! heterogeneous per-shard pipelines serve behind this one router
-//! unchanged. Latency and throughput metrics are collected per request
-//! into per-worker rings and merged at [`Router::stats`] time (see
-//! [`Stats`] for the aggregation semantics; [`Stats::shard_scans`]
-//! surfaces the per-shard scan counters). The §B latency experiment and
-//! Fig. 6 QPS numbers come from here.
+//! # Reads share the index lock-free; writes get their own lane
 //!
-//! Lifecycle: [`Router::shutdown`] closes the ingress; the batcher
+//! Workers share the index via `Arc` with no locking on the hot path —
+//! including a sharded index ([`crate::index::ShardSet`]): each
+//! dispatched batch pins one epoch snapshot and scatters its probed
+//! buckets to the owning shards inside the engine, so heterogeneous
+//! per-shard pipelines serve behind this one router unchanged. The index
+//! is **live-mutable** underneath: [`Router::submit_write`] feeds a
+//! dedicated write lane — its own bounded ingress channel
+//! ([`ServerCfg::write_queue_cap`], backpressure independent of the
+//! query queue) drained by a single writer thread that applies
+//! [`WriteOp`]s through `SearchIndex::insert` / `delete` / `compact`.
+//! One writer thread means write operations apply in submission order
+//! and never contend with each other; readers keep serving their pinned
+//! epochs throughout and pick up the new epoch on their next batch.
+//! Latency and throughput metrics are collected per request into
+//! per-worker rings and merged at [`Router::stats`] time (see [`Stats`]
+//! for the aggregation semantics; [`Stats::shard_scans`] surfaces the
+//! per-shard scan counters, [`Stats::inserted`] / [`Stats::deleted`] the
+//! ingest counters). The §B latency experiment and Fig. 6 QPS numbers
+//! come from here.
+//!
+//! Lifecycle: [`Router::shutdown`] closes both ingresses; the batcher
 //! flushes whatever it buffered and exits when the ingress disconnects,
-//! and workers exit only when the batch channel is *both* disconnected
-//! and drained — every accepted request gets its reply before the
-//! threads are joined. Submission after shutdown fails with
-//! [`RouterError::Stopped`] instead of panicking.
+//! workers exit only when the batch channel is *both* disconnected and
+//! drained, and the writer thread drains every queued write — every
+//! accepted request gets its reply before the threads are joined.
+//! Submission after shutdown fails with [`RouterError::Stopped`] instead
+//! of panicking.
 
-use crate::index::{BatchSearcher, QueryPlan, SearchIndex, SearchParams};
+use crate::index::{BatchSearcher, EncodeParams, QueryPlan, SearchIndex, SearchParams};
 use crate::qinco::ReferenceDecoderFactory;
 use crate::quantizers::{DecoderFactory, StageDecoder};
+use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -60,6 +73,10 @@ pub struct ServerCfg {
     pub batch_timeout: Duration,
     /// ingress queue capacity (backpressure: submit blocks when full)
     pub queue_cap: usize,
+    /// write-lane queue capacity — its own backpressure, independent of
+    /// the query ingress: a burst of ingest can never starve reads of
+    /// queue space, and vice versa
+    pub write_queue_cap: usize,
     /// per-worker stage-3 decoder factory; `None` defaults to the
     /// reference decoder. Each worker thread calls `make()` once at
     /// startup (engine-per-worker — see the module docs).
@@ -73,6 +90,7 @@ impl std::fmt::Debug for ServerCfg {
             .field("max_batch", &self.max_batch)
             .field("batch_timeout", &self.batch_timeout)
             .field("queue_cap", &self.queue_cap)
+            .field("write_queue_cap", &self.write_queue_cap)
             .field("decoder_factory", &self.decoder_factory.as_ref().map(|_| "custom"))
             .finish()
     }
@@ -85,6 +103,7 @@ impl Default for ServerCfg {
             max_batch: 32,
             batch_timeout: Duration::from_micros(200),
             queue_cap: 1024,
+            write_queue_cap: 64,
             decoder_factory: None,
         }
     }
@@ -126,10 +145,51 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// One mutation for the write lane, applied by the single writer thread
+/// in submission order.
+#[derive(Clone, Debug)]
+pub enum WriteOp {
+    /// Encode + ingest vectors (`ep` carries the `--a`/`--b` beam knobs).
+    Insert { vectors: Matrix, ep: EncodeParams },
+    /// Tombstone-delete rows by global id.
+    Delete { ids: Vec<u32> },
+    /// Reclaim every shard's tombstoned rows.
+    Compact,
+}
+
+/// What a [`WriteOp`] produced.
+#[derive(Clone, Debug)]
+pub enum WriteOutcome {
+    /// The global ids allocated to the inserted vectors.
+    Inserted(Vec<u32>),
+    /// Rows newly tombstoned.
+    Deleted(usize),
+    /// Rows reclaimed by compaction.
+    Compacted(usize),
+}
+
+pub struct WriteRequest {
+    pub op: WriteOp,
+    pub reply: SyncSender<WriteResponse>,
+    pub t_submit: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct WriteResponse {
+    /// The op's outcome, or the index's validation error (bad encode
+    /// params, out-of-range delete id, …) as a string.
+    pub outcome: Result<WriteOutcome, String>,
+    pub latency: Duration,
+}
+
 struct MetricsInner {
     served: AtomicU64,
     /// nanoseconds, summed
     total_latency: AtomicU64,
+    /// rows ingested through the write lane
+    inserted: AtomicU64,
+    /// rows tombstoned through the write lane
+    deleted: AtomicU64,
     /// per-worker recent-latency rings (ns). Each worker pushes only
     /// into its own ring (capped at RECENT_CAP, oldest half evicted), so
     /// a chatty worker can never evict a quiet worker's samples;
@@ -146,6 +206,8 @@ impl MetricsInner {
         MetricsInner {
             served: AtomicU64::new(0),
             total_latency: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
+            deleted: AtomicU64::new(0),
             recent: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
@@ -189,6 +251,12 @@ pub struct Stats {
     /// `served`/latency fields even when the index served other
     /// routers or direct searches before.
     pub shard_scans: Vec<u64>,
+    /// rows ingested through this router's write lane
+    pub inserted: u64,
+    /// rows tombstone-deleted through this router's write lane
+    pub deleted: u64,
+    /// the index's current publication epoch at snapshot time
+    pub epoch: u64,
 }
 
 /// Nearest-rank percentile of an ascending-sorted latency vector: the
@@ -205,6 +273,8 @@ fn percentile(sorted: &[u64], p: f64) -> Duration {
 
 pub struct Router {
     ingress: SyncSender<Request>,
+    /// the write lane's own bounded ingress (see the module docs)
+    write_ingress: SyncSender<WriteRequest>,
     metrics: Arc<MetricsInner>,
     /// shared with the workers; [`Self::stats`] reads the per-shard scan
     /// counters off it
@@ -272,8 +342,17 @@ impl Router {
                 }
             }));
         }
-        let scan_base = index.shards.scan_counts();
-        Router { ingress: in_tx, metrics, index, scan_base, handles }
+        // --- write lane: one bounded channel, one writer thread. A
+        // single drainer keeps ops in submission order and means the
+        // index's writer mutex is never contended from here ---
+        let (write_tx, write_rx) = sync_channel::<WriteRequest>(cfg.write_queue_cap.max(1));
+        {
+            let idx = index.clone();
+            let metrics = metrics.clone();
+            handles.push(std::thread::spawn(move || writer_loop(&idx, &metrics, write_rx)));
+        }
+        let scan_base = index.snapshot().scan_counts();
+        Router { ingress: in_tx, write_ingress: write_tx, metrics, index, scan_base, handles }
     }
 
     /// Submit a query; returns the channel the response arrives on.
@@ -315,6 +394,33 @@ impl Router {
             .map_err(|_| RouterError::WorkerDied)
     }
 
+    /// Submit a mutation to the write lane; returns the channel the
+    /// [`WriteResponse`] arrives on. Blocks when the write queue is full
+    /// (backpressure, independent of the query ingress).
+    pub fn submit_write(&self, op: WriteOp) -> Result<Receiver<WriteResponse>, RouterError> {
+        let (tx, rx) = sync_channel(1);
+        let req = WriteRequest { op, reply: tx, t_submit: Instant::now() };
+        self.write_ingress.send(req).map_err(|_| RouterError::Stopped)?;
+        Ok(rx)
+    }
+
+    /// Non-blocking write submit: fails fast when the write queue is
+    /// saturated.
+    pub fn try_submit_write(&self, op: WriteOp) -> Result<Receiver<WriteResponse>, RouterError> {
+        let (tx, rx) = sync_channel(1);
+        let req = WriteRequest { op, reply: tx, t_submit: Instant::now() };
+        match self.write_ingress.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => Err(RouterError::Saturated),
+            Err(TrySendError::Disconnected(_)) => Err(RouterError::Stopped),
+        }
+    }
+
+    /// Synchronous write convenience wrapper.
+    pub fn write_blocking(&self, op: WriteOp) -> Result<WriteResponse, RouterError> {
+        self.submit_write(op)?.recv().map_err(|_| RouterError::WorkerDied)
+    }
+
     pub fn stats(&self) -> Stats {
         let served = self.metrics.served.load(Ordering::Relaxed);
         let total = self.metrics.total_latency.load(Ordering::Relaxed);
@@ -328,23 +434,57 @@ impl Router {
             p99: percentile(&recent, 0.99),
             shard_scans: self
                 .index
-                .shards
+                .snapshot()
                 .scan_counts()
                 .iter()
                 .zip(&self.scan_base)
                 .map(|(now, base)| now.saturating_sub(*base))
                 .collect(),
+            inserted: self.metrics.inserted.load(Ordering::Relaxed),
+            deleted: self.metrics.deleted.load(Ordering::Relaxed),
+            epoch: self.index.epoch(),
         }
     }
 
-    /// Graceful shutdown: close the ingress, let the batcher flush its
-    /// buffer, let workers drain and answer every queued batch, then
-    /// join all threads. No accepted request is dropped.
+    /// Graceful shutdown: close both ingresses, let the batcher flush
+    /// its buffer, let workers drain and answer every queued batch, let
+    /// the writer apply every queued write, then join all threads. No
+    /// accepted request is dropped.
     pub fn shutdown(mut self) {
         drop(self.ingress);
+        drop(self.write_ingress);
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// The write lane's single drainer: apply each op, count rows, reply.
+/// Exits when the write ingress disconnects and every queued op has been
+/// applied.
+fn writer_loop(idx: &SearchIndex, metrics: &MetricsInner, rx: Receiver<WriteRequest>) {
+    while let Ok(req) = rx.recv() {
+        let outcome = match &req.op {
+            WriteOp::Insert { vectors, ep } => idx
+                .insert(vectors, ep)
+                .map(|gids| {
+                    metrics.inserted.fetch_add(gids.len() as u64, Ordering::Relaxed);
+                    WriteOutcome::Inserted(gids)
+                })
+                .map_err(|e| e.to_string()),
+            WriteOp::Delete { ids } => idx
+                .delete(ids)
+                .map(|n| {
+                    metrics.deleted.fetch_add(n as u64, Ordering::Relaxed);
+                    WriteOutcome::Deleted(n)
+                })
+                .map_err(|e| e.to_string()),
+            WriteOp::Compact => Ok(WriteOutcome::Compacted(idx.compact())),
+        };
+        // a dropped receiver (caller gave up) is not an error
+        let _ = req
+            .reply
+            .send(WriteResponse { outcome, latency: req.t_submit.elapsed() });
     }
 }
 

@@ -99,6 +99,18 @@ impl Shortlist {
             .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         self.heap
     }
+
+    /// Absorb every entry of `other`, keeping the `cap` best of the
+    /// union under the total (score, id) order. Because the order is
+    /// total, merging partial shortlists in any order (or pushing all
+    /// candidates into one list directly) yields the same kept set —
+    /// the gather step of the parallel scan and the per-shard scatter
+    /// path both rely on this.
+    pub fn merge_from(&mut self, other: Shortlist) {
+        for (s, id) in other.heap {
+            self.push(s, id);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +162,43 @@ mod tests {
         sl.push(0.0, 1);
         assert!(sl.is_empty());
         assert!(sl.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn merge_from_equals_direct_push() {
+        // property: partition a candidate stream into arbitrary partial
+        // shortlists, merge them — same kept set as one direct pass
+        crate::util::prop::check("merge-from", 60, 120, |g| {
+            let n = 1 + g.usize_in(0, g.size);
+            let cap = g.usize_in(0, 16);
+            let items: Vec<(f32, u32)> = (0..n)
+                .map(|id| {
+                    // coarse grid forces plenty of score ties
+                    let s = (g.rng.uniform(-4.0, 4.0) as i32) as f32;
+                    (s, id as u32)
+                })
+                .collect();
+            let mut direct = Shortlist::new(cap);
+            for &(s, id) in &items {
+                direct.push(s, id);
+            }
+            let n_parts = 1 + g.usize_in(0, 4);
+            let mut parts: Vec<Shortlist> =
+                (0..n_parts).map(|_| Shortlist::new(cap)).collect();
+            for &(s, id) in &items {
+                parts[g.usize_in(0, n_parts - 1)].push(s, id);
+            }
+            let mut merged = Shortlist::new(cap);
+            for p in parts {
+                merged.merge_from(p);
+            }
+            let (a, b) = (merged.into_sorted(), direct.into_sorted());
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("merged {a:?} != direct {b:?}"))
+            }
+        });
     }
 
     #[test]

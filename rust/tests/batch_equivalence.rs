@@ -199,7 +199,7 @@ fn batched_results_are_sorted_unique_and_in_range() {
                 assert!(w[0].0 <= w[1].0, "[{label}] results must be sorted by score");
             }
             let mut ids: Vec<u32> = ranked.iter().map(|&(_, id)| id).collect();
-            assert!(ids.iter().all(|&id| (id as usize) < index.db_len), "[{label}]");
+            assert!(ids.iter().all(|&id| (id as usize) < index.db_len()), "[{label}]");
             ids.sort_unstable();
             ids.dedup();
             assert_eq!(ids.len(), ranked.len(), "[{label}] duplicate ids in one result list");
@@ -261,7 +261,8 @@ fn pipeline_configs_are_actually_distinct() {
     assert!(!reference.pairwise_trace.is_empty());
     // the AQ default scans the QINCo2 codes directly — no duplicate table
     // (per-bucket tables live on the shards)
-    let ref_shard = &reference.shards.shards[0];
+    let ref_set = reference.snapshot();
+    let ref_shard = &ref_set.shards[0];
     assert!(ref_shard.stage1_side_codes.is_none());
     assert_eq!(ref_shard.stage1_codes().m, reference.code_positions());
 
@@ -296,7 +297,8 @@ fn pipeline_configs_are_actually_distinct() {
         },
     );
     // PQ stage 1 scans its own 4-position table, not the QINCo2 codes
-    let pq_shard = &pq1.shards.shards[0];
+    let pq_set = pq1.snapshot();
+    let pq_shard = &pq_set.shards[0];
     assert!(pq_shard.stage1_side_codes.is_some());
     assert_eq!(pq_shard.stage1_codes().m, 4);
     assert_ne!(pq_shard.stage1_codes().m, pq1.code_positions());
@@ -318,7 +320,7 @@ fn shard_count_invariance_bit_identical_across_pipelines() {
     ];
     for (label, cfg) in configs() {
         let base = build_index_sharded(101, 240, 200, cfg.clone(), 1);
-        assert_eq!(base.shards.n_shards(), 1);
+        assert_eq!(base.snapshot().n_shards(), 1);
         let baselines: Vec<(Vec<Vec<(f32, u32)>>, Vec<Vec<(f32, u32)>>)> = sps
             .iter()
             .map(|sp| {
@@ -330,7 +332,7 @@ fn shard_count_invariance_bit_identical_across_pipelines() {
             .collect();
         for shards in [2usize, 3, 5] {
             let idx = build_index_sharded(101, 240, 200, cfg.clone(), shards);
-            assert_eq!(idx.shards.n_shards(), shards, "[{label}]");
+            assert_eq!(idx.snapshot().n_shards(), shards, "[{label}]");
             for (base_sp, (base_single, base_batch)) in sps.iter().zip(&baselines) {
                 for threads in [1usize, 4] {
                     let sp = SearchParams { batch_threads: threads, ..*base_sp };
@@ -362,7 +364,7 @@ fn shard_global_id_remap_invariant_holds() {
     // local rows of the bucket they claim; per-row caches cover the shard
     for shards in [1usize, 2, 3, 5] {
         let idx = build_index_sharded(111, 240, 200, PipelineConfig::default(), shards);
-        let set = &idx.shards;
+        let set = idx.snapshot();
         assert_eq!(set.n_shards(), shards);
         let mut next = 0u32;
         for sh in &set.shards {
@@ -372,7 +374,7 @@ fn shard_global_id_remap_invariant_holds() {
             next = sh.bucket_hi;
         }
         assert_eq!(next as usize, idx.ivf.k_ivf(), "ranges must cover all buckets");
-        let mut seen = vec![false; idx.db_len];
+        let mut seen = vec![false; idx.db_len()];
         for (si, sh) in set.shards.iter().enumerate() {
             assert_eq!(sh.len(), sh.codes.n);
             assert_eq!(sh.len(), sh.stage1_terms.len());
@@ -384,7 +386,8 @@ fn shard_global_id_remap_invariant_holds() {
                 assert_eq!(set.owner_of[gid as usize] as usize, si);
                 assert_eq!(set.local_of[gid as usize] as usize, local);
                 // the row's IVF bucket really falls in the owned range
-                assert!(sh.owns(idx.ivf.assign[gid as usize]));
+                // (the per-row assignment lives on the snapshot now)
+                assert!(sh.owns(set.assign[gid as usize]));
             }
             for (bi, list) in sh.lists.iter().enumerate() {
                 let bucket = sh.bucket_lo + bi as u32;
@@ -392,7 +395,7 @@ fn shard_global_id_remap_invariant_holds() {
                 for &local in list {
                     assert!((local as usize) < sh.len());
                     assert_eq!(
-                        idx.ivf.assign[sh.global_ids[local as usize] as usize],
+                        set.assign[sh.global_ids[local as usize] as usize],
                         bucket,
                         "list row decodes to the wrong bucket"
                     );
@@ -400,8 +403,11 @@ fn shard_global_id_remap_invariant_holds() {
             }
         }
         assert!(seen.iter().all(|&s| s), "some database row is in no shard");
-        // the coarse quantizer's own lists were drained into the shards
+        // the coarse quantizer's own lists and per-row assignment were
+        // drained into the shard snapshot
         assert!(idx.ivf.lists.is_empty());
+        assert!(idx.ivf.assign.is_empty());
+        assert_eq!(set.assign.len(), idx.db_len());
     }
 }
 
@@ -426,12 +432,13 @@ fn heterogeneous_shard_pipelines_run_their_own_tables() {
         ..Default::default()
     };
     let idx = build_index_cfg(121, 240, 200, &cfg);
-    assert!(idx.shards.heterogeneous());
-    assert_eq!(idx.shards.n_lut_slots, 2);
-    let sh0 = &idx.shards.shards[0];
+    let set = idx.snapshot();
+    assert!(set.heterogeneous());
+    assert_eq!(set.n_lut_slots, 2);
+    let sh0 = &set.shards[0];
     assert!(sh0.pipeline.is_none());
     assert!(sh0.stage1_side_codes.is_none(), "shared AQ shard scans the QINCo2 codes");
-    let sh1 = &idx.shards.shards[1];
+    let sh1 = &set.shards[1];
     assert!(sh1.pipeline.is_some());
     assert_eq!(sh1.stage1_side_codes.as_ref().unwrap().m, 4, "override scans its PQ table");
     assert_eq!(sh1.stage1_terms.len(), sh1.len());
@@ -458,7 +465,7 @@ fn heterogeneous_shard_pipelines_run_their_own_tables() {
             for w in single.windows(2) {
                 assert!(w[0].0 <= w[1].0, "results must be sorted");
             }
-            assert!(single.iter().all(|&(_, id)| (id as usize) < idx.db_len));
+            assert!(single.iter().all(|&(_, id)| (id as usize) < idx.db_len()));
         }
     }
 }
@@ -487,7 +494,7 @@ fn full_override_matches_the_homogeneous_pipeline() {
         ..Default::default()
     };
     let over = build_index_cfg(131, 240, 200, &over_cfg);
-    assert!(over.shards.heterogeneous());
+    assert!(over.snapshot().heterogeneous());
     let queries = generate(Flavor::Deep, 12, 8, 97);
     let sp = SearchParams {
         nprobe: 6,

@@ -246,7 +246,7 @@ fn router_over_a_sharded_index_matches_direct_search() {
     use std::sync::Arc;
 
     let index = Arc::new(tiny_index(3));
-    assert_eq!(index.shards.n_shards(), 3);
+    assert_eq!(index.snapshot().n_shards(), 3);
     let queries = generate(Flavor::Deep, 36, 8, 22);
     let router = Router::start(
         index.clone(),

@@ -1,0 +1,408 @@
+//! The live-mutation contract of the epoch-snapshotted shard layer:
+//!
+//! 1. **Bit-identity under churn** — after any insert/delete/compaction
+//!    sequence, search over the live set is *bit-identical* (scores
+//!    included) to a fresh `build_reference` over the same surviving
+//!    vectors, for shards ∈ {1, 2, 3, 5}, for both `search` and
+//!    `search_batch`, at `batch_threads ∈ {1, 4}` — both while the
+//!    deletes are still tombstones and after compaction rewrites the
+//!    shards. This holds because greedy ingest (A=K, B=1) runs the same
+//!    per-row float path as the builder and appends in ascending-gid
+//!    order, and every fitted table (IVF centroids, stage-1 codebooks,
+//!    stage-2 pairwise fit) is estimated on the *training* split only.
+//! 2. **Global-id remap invariant under churn** — owner_of/local_of
+//!    keep inverting global_ids through appends, tombstones, and
+//!    compaction; reclaimed ids go to `DEAD_LOCAL` and are never
+//!    reused.
+//! 3. **Epoch pinning** — a reader that pinned a snapshot (or a
+//!    `BatchSearcher`) before a mutation keeps seeing the old epoch,
+//!    bit-for-bit, no matter how many epochs are published after it;
+//!    concurrent readers during sustained churn never observe a
+//!    partial write.
+//!
+//! Engine-free like `batch_equivalence`: the `test` manifest model +
+//! the pure-Rust reference encoder, no PJRT runtime.
+
+use qinco2::data::{generate, Flavor};
+use qinco2::index::{
+    BatchSearcher, BuildCfg, EncodeParams, PipelineConfig, SearchIndex, SearchParams, Stage1Kind,
+    Stage3Kind, DEAD_LOCAL,
+};
+use qinco2::qinco::ParamStore;
+use qinco2::runtime::manifest::Manifest;
+use qinco2::tensor::Matrix;
+
+const SEED: u64 = 2026;
+const N_TRAIN: usize = 240;
+const N_DB: usize = 200;
+const N_EXTRA: usize = 40;
+
+fn test_params(train: &Matrix) -> ParamStore {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
+    ParamStore::init(&spec, "test", train, SEED ^ 2)
+}
+
+fn build_cfg(pipeline: PipelineConfig, shards: usize) -> BuildCfg {
+    BuildCfg { k_ivf: 12, m_tilde: 1, fit_sample: 200, pipeline, shards, ..Default::default() }
+}
+
+/// Build over `train`, index `db` — the layout every test uses.
+fn build_over(train: &Matrix, db: &Matrix, pipeline: PipelineConfig, shards: usize) -> SearchIndex {
+    SearchIndex::build_reference(test_params(train), train, db, &build_cfg(pipeline, shards))
+}
+
+/// LSQ is excluded on purpose: its ICM sweep seeds a RNG per batch
+/// chunk, so ingest is valid but not bit-identical to a bulk build.
+fn bit_identity_configs() -> Vec<(&'static str, PipelineConfig)> {
+    vec![
+        ("aq+pw+reference", PipelineConfig::default()),
+        (
+            "pq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Pq { m: 4 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+        (
+            "rq-stage1",
+            PipelineConfig {
+                stage1: Stage1Kind::Rq { m: 3 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+        (
+            "no-stage2",
+            PipelineConfig {
+                stage1: Stage1Kind::Aq,
+                stage2: false,
+                stage3: Stage3Kind::Reference,
+            },
+        ),
+    ]
+}
+
+/// The churn script every test runs: ingest `extra` (greedy), then
+/// tombstone a spread of originals plus every other ingested row.
+/// Returns (inserted gids, deleted gids).
+fn churn(idx: &SearchIndex, extra: &Matrix) -> (Vec<u32>, Vec<u32>) {
+    let n_orig = idx.db_len();
+    let gids = idx.insert(extra, &EncodeParams::default()).unwrap();
+    let mut victims: Vec<u32> = (0..16).map(|j| (j * n_orig / 16) as u32).collect();
+    victims.extend(gids.iter().step_by(2));
+    let n = idx.delete(&victims).unwrap();
+    assert_eq!(n, victims.len(), "every victim was live exactly once");
+    (gids, victims)
+}
+
+/// Map a mutated-index result list into survivor-rank id space so it can
+/// be compared bit-for-bit against a fresh build over the survivors.
+/// `rank_of[gid]` is the surviving row's index in the fresh database.
+fn remap(results: &[Vec<(f32, u32)>], rank_of: &[u32]) -> Vec<Vec<(f32, u32)>> {
+    results
+        .iter()
+        .map(|r| r.iter().map(|&(s, id)| (s, rank_of[id as usize])).collect())
+        .collect()
+}
+
+#[test]
+fn mutated_index_is_bit_identical_to_fresh_build_over_survivors() {
+    let d = 8;
+    let train = generate(Flavor::Deep, N_TRAIN, d, SEED);
+    let db = generate(Flavor::Deep, N_DB, d, SEED ^ 1);
+    let extra = generate(Flavor::Deep, N_EXTRA, d, SEED ^ 7);
+    let queries = generate(Flavor::Deep, 12, d, SEED ^ 9);
+    // the full combined row set, indexed by gid
+    let mut all = db.clone();
+    all.rows += extra.rows;
+    all.data.extend_from_slice(&extra.data);
+
+    for (label, cfg) in bit_identity_configs() {
+        for shards in [1usize, 2, 3, 5] {
+            let idx = build_over(&train, &db, cfg.clone(), shards);
+            let (gids, victims) = churn(&idx, &extra);
+            assert_eq!(gids.len(), N_EXTRA);
+
+            // survivors in ascending-gid order == fresh-build row order
+            let dead: Vec<bool> = {
+                let mut v = vec![false; all.rows];
+                for &g in &victims {
+                    v[g as usize] = true;
+                }
+                v
+            };
+            let live: Vec<usize> = (0..all.rows).filter(|&g| !dead[g]).collect();
+            let mut rank_of = vec![u32::MAX; all.rows];
+            for (rank, &g) in live.iter().enumerate() {
+                rank_of[g] = rank as u32;
+            }
+            let survivors = all.gather_rows(&live);
+            let fresh = build_over(&train, &survivors, cfg.clone(), shards);
+            assert_eq!(idx.live_len(), fresh.db_len(), "[{label}]");
+
+            let sps = [
+                SearchParams {
+                    nprobe: 6,
+                    ef_search: 48,
+                    n_aq: 48,
+                    n_pairs: 12,
+                    n_final: 6,
+                    batch_threads: 1,
+                },
+                // stage-2/3 disabled must stay identical too
+                SearchParams {
+                    nprobe: 4,
+                    ef_search: 32,
+                    n_aq: 24,
+                    n_pairs: 0,
+                    n_final: 0,
+                    batch_threads: 1,
+                },
+            ];
+            // phase 1: deletes are still tombstones; phase 2: compacted
+            for phase in ["tombstoned", "compacted"] {
+                if phase == "compacted" {
+                    let reclaimed = idx.compact();
+                    assert_eq!(reclaimed, victims.len(), "[{label}] shards={shards}");
+                }
+                for base in &sps {
+                    for threads in [1usize, 4] {
+                        let sp = SearchParams { batch_threads: threads, ..*base };
+                        let batched = remap(&idx.search_batch(&queries, &sp).unwrap(), &rank_of);
+                        let fresh_batched = fresh.search_batch(&queries, &sp).unwrap();
+                        for qi in 0..queries.rows {
+                            let single =
+                                remap(&[idx.search(queries.row(qi), &sp)], &rank_of).remove(0);
+                            let fresh_single = fresh.search(queries.row(qi), &sp);
+                            assert_eq!(
+                                single, fresh_single,
+                                "[{label}] {phase} shards={shards} threads={threads} q{qi}: \
+                                 per-query search diverged from the fresh build"
+                            );
+                            assert_eq!(
+                                batched[qi], fresh_batched[qi],
+                                "[{label}] {phase} shards={shards} threads={threads} q{qi}: \
+                                 batched search diverged from the fresh build"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn global_id_remap_invariant_survives_churn() {
+    let d = 8;
+    let train = generate(Flavor::Deep, N_TRAIN, d, SEED);
+    let db = generate(Flavor::Deep, N_DB, d, SEED ^ 1);
+    let extra = generate(Flavor::Deep, N_EXTRA, d, SEED ^ 7);
+    for shards in [1usize, 3, 5] {
+        let idx = build_over(&train, &db, PipelineConfig::default(), shards);
+        let (gids, victims) = churn(&idx, &extra);
+        let id_space = N_DB + N_EXTRA;
+        assert_eq!(idx.db_len(), id_space, "gids extend the id space, never reuse it");
+        assert_eq!(idx.live_len(), id_space - victims.len());
+
+        // --- tombstoned epoch: every gid still resolves, victims are
+        // marked dead in their owning shard ---
+        let set = idx.snapshot();
+        assert_eq!(set.assign.len(), id_space, "per-row assignment extended by ingest");
+        let mut seen = vec![false; id_space];
+        for (si, sh) in set.shards.iter().enumerate() {
+            assert_eq!(sh.tombstones.len(), sh.len());
+            assert_eq!(sh.len() - sh.n_dead, sh.live_len());
+            for (local, &gid) in sh.global_ids.iter().enumerate() {
+                assert!(!seen[gid as usize], "row {gid} owned by two shards");
+                seen[gid as usize] = true;
+                assert_eq!(set.owner_of[gid as usize] as usize, si);
+                assert_eq!(set.local_of[gid as usize] as usize, local);
+                assert!(sh.owns(set.assign[gid as usize]));
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "pre-compaction: every gid resolves");
+        for &v in &victims {
+            let (sh, local) = set.locate(v);
+            assert!(sh.tombstones[local], "victim {v} not tombstoned");
+        }
+        for &g in &gids {
+            if !victims.contains(&g) {
+                let (sh, local) = set.locate(g);
+                assert!(!sh.tombstones[local], "survivor {g} wrongly tombstoned");
+            }
+        }
+
+        // --- compaction: victims retire to DEAD_LOCAL, survivors keep
+        // resolving, the id space never shrinks ---
+        let reclaimed = idx.compact();
+        assert_eq!(reclaimed, victims.len());
+        let set = idx.snapshot();
+        assert_eq!(idx.db_len(), id_space, "compaction reclaims rows, not ids");
+        for &v in &victims {
+            assert_eq!(set.local_of[v as usize], DEAD_LOCAL, "victim {v} must be retired");
+        }
+        let mut live_seen = 0usize;
+        for (si, sh) in set.shards.iter().enumerate() {
+            assert_eq!(sh.n_dead, 0, "compacted shard keeps no tombstones");
+            for (local, &gid) in sh.global_ids.iter().enumerate() {
+                live_seen += 1;
+                assert_eq!(set.owner_of[gid as usize] as usize, si);
+                assert_eq!(set.local_of[gid as usize] as usize, local);
+            }
+            // lists reference valid local rows in the canonical layout
+            for (bi, list) in sh.lists.iter().enumerate() {
+                let bucket = sh.bucket_lo + bi as u32;
+                for &local in list {
+                    assert!((local as usize) < sh.len());
+                    assert_eq!(set.assign[sh.global_ids[local as usize] as usize], bucket);
+                }
+            }
+        }
+        assert_eq!(live_seen, idx.live_len());
+        // compacting a clean index is a no-op that publishes no epoch
+        let e = idx.epoch();
+        assert_eq!(idx.compact(), 0);
+        assert_eq!(idx.epoch(), e);
+    }
+}
+
+#[test]
+fn pinned_readers_never_observe_a_mutation() {
+    let d = 8;
+    let train = generate(Flavor::Deep, N_TRAIN, d, SEED);
+    let db = generate(Flavor::Deep, N_DB, d, SEED ^ 1);
+    let extra = generate(Flavor::Deep, N_EXTRA, d, SEED ^ 7);
+    let queries = generate(Flavor::Deep, 10, d, SEED ^ 9);
+    let idx = build_over(&train, &db, PipelineConfig::default(), 3);
+    let sp = SearchParams {
+        nprobe: 8,
+        ef_search: 48,
+        n_aq: 64,
+        n_pairs: 16,
+        n_final: 8,
+        batch_threads: 1,
+    };
+
+    // pin a snapshot and a BatchSearcher before any mutation
+    let pinned = idx.snapshot();
+    let searcher = BatchSearcher::new(&idx);
+    let before = searcher.search(&queries, &sp).unwrap();
+    let e0 = idx.epoch();
+
+    let (_, victims) = churn(&idx, &extra);
+    idx.compact();
+    assert!(idx.epoch() > e0, "mutations must publish new epochs");
+
+    // the pinned epoch is frozen: same shard set, bit-identical results
+    assert_eq!(pinned.epoch, e0);
+    assert_eq!(pinned.live_len(), N_DB, "pinned snapshot predates the churn");
+    let after = searcher.search(&queries, &sp).unwrap();
+    assert_eq!(before, after, "a pinned BatchSearcher must never see a mutation");
+    // the pinned reader still returns since-deleted rows; a fresh read
+    // must not
+    let fresh = idx.search_batch(&queries, &sp).unwrap();
+    for r in &fresh {
+        assert!(
+            r.iter().all(|&(_, id)| !victims.contains(&id)),
+            "fresh read resurrected a deleted id"
+        );
+    }
+
+    // sustained churn: readers race a writer through many epochs and
+    // must only ever see complete snapshots (well-formed ranked lists)
+    let idx = build_over(&train, &db, PipelineConfig::default(), 3);
+    let id_cap = N_DB + 8 * 10; // 8 rounds of 10 ingests below
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| {
+            for round in 0..8u64 {
+                let batch = generate(Flavor::Deep, 10, d, SEED ^ (100 + round));
+                let gids = idx.insert(&batch, &EncodeParams::default()).unwrap();
+                idx.delete(&gids[..5]).unwrap();
+                if round % 3 == 2 {
+                    idx.compact();
+                }
+            }
+        });
+        for _ in 0..3 {
+            s.spawn(|| {
+                for _ in 0..12 {
+                    let results = idx.search_batch(&queries, &sp).unwrap();
+                    for r in &results {
+                        assert!(r.iter().all(|&(_, id)| (id as usize) < id_cap));
+                        for w in r.windows(2) {
+                            assert!(
+                                w[1].0.total_cmp(&w[0].0).then(w[1].1.cmp(&w[0].1)).is_ge(),
+                                "racing reader saw an unranked list"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+        writer.join().unwrap();
+    });
+    assert_eq!(idx.db_len(), id_cap);
+    assert_eq!(idx.live_len(), N_DB + 8 * 5);
+}
+
+#[test]
+fn beam_ingest_is_valid_and_encode_params_are_validated() {
+    let d = 8;
+    let train = generate(Flavor::Deep, N_TRAIN, d, SEED);
+    let db = generate(Flavor::Deep, N_DB, d, SEED ^ 1);
+    let extra = generate(Flavor::Deep, 8, d, SEED ^ 7);
+    let idx = build_over(&train, &db, PipelineConfig::default(), 2);
+    let k = idx.params.cfg.k;
+
+    // beam ingest (B > 1) is valid — rows land, epoch bumps, searches
+    // stay well-formed (bit-identity is only pinned for the greedy path)
+    let (a, b) = (k, 4.min(k));
+    let gids = idx.insert(&extra, &EncodeParams { a, b }).unwrap();
+    assert_eq!(gids.len(), 8);
+    // the stored codes are exactly the beam encode of each row's IVF
+    // residual — pins the whole ingest path (bucket assignment, residual
+    // subtraction, beam search, shard storage)
+    let set = idx.snapshot();
+    let mut residuals = extra.clone();
+    for (j, &g) in gids.iter().enumerate() {
+        let c = idx.ivf.centroids.row(set.assign[g as usize] as usize).to_vec();
+        qinco2::tensor::sub_assign(residuals.row_mut(j), &c);
+    }
+    let expected = qinco2::qinco::reference::encode_beam(&idx.params, &residuals, a, b);
+    for (j, &g) in gids.iter().enumerate() {
+        let (sh, local) = set.locate(g);
+        assert_eq!(
+            sh.codes.row(local),
+            expected.row(j),
+            "ingested row {j}: stored code is not the beam encode of its residual"
+        );
+    }
+    let sp = SearchParams {
+        nprobe: 12,
+        ef_search: 64,
+        n_aq: 256,
+        n_pairs: 32,
+        n_final: 10,
+        batch_threads: 1,
+    };
+    let res = idx.search_batch(&extra, &sp).unwrap();
+    assert!(res.iter().all(|r| !r.is_empty() && r.iter().all(|&(_, id)| (id as usize) < idx.db_len())));
+
+    // invalid knobs are hard errors, not clamps
+    let err = idx.insert(&extra, &EncodeParams { a: k + 1, b: 1 }).unwrap_err().to_string();
+    assert!(err.contains("encode params"), "{err}");
+    assert!(idx.insert(&extra, &EncodeParams { a: 2, b: 3 }).is_err());
+    // dimension mismatches and out-of-range deletes bail too
+    let wrong_d = generate(Flavor::Deep, 4, d + 1, SEED ^ 11);
+    assert!(idx.insert(&wrong_d, &EncodeParams::default()).is_err());
+    let err = idx.delete(&[idx.db_len() as u32]).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+    // deleting the same id twice in one call counts it once
+    let twice = idx.delete(&[gids[0], gids[0]]).unwrap();
+    assert_eq!(twice, 1);
+    // and zero the second time around
+    assert_eq!(idx.delete(&[gids[0]]).unwrap(), 0);
+}

@@ -90,7 +90,7 @@ fn pipeline_end_to_end() {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), r.len(), "duplicate ids in results");
-        assert!(r.iter().all(|&id| (id as usize) < index.db_len));
+        assert!(r.iter().all(|&id| (id as usize) < index.db_len()));
     }
 
     // --- more probes never hurt (monotone recall in nprobe) ---
