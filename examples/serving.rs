@@ -26,7 +26,10 @@ fn main() -> anyhow::Result<()> {
 
     for workers in [1usize, 4, qinco2::util::pool::default_threads()] {
         let router = Router::start(index.clone(), ServerCfg { workers, ..Default::default() });
-        let sp = SearchParams { nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10 };
+        let sp = SearchParams {
+            nprobe: 8, ef_search: 64, n_aq: 256, n_pairs: 32, n_final: 10,
+            ..Default::default()
+        };
         let n = 2_000;
         let t0 = std::time::Instant::now();
         let mut pending = Vec::with_capacity(n);
@@ -34,7 +37,9 @@ fn main() -> anyhow::Result<()> {
             pending.push(router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp)?);
         }
         for rx in pending {
-            rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+            // exactly one reply per accepted request: the response, or a
+            // typed RouterError (never a silently dropped channel)
+            rx.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))??;
         }
         let secs = t0.elapsed().as_secs_f64();
         let st = router.stats();

@@ -105,7 +105,7 @@ fn main() -> anyhow::Result<()> {
         let routed: Vec<Vec<u32>> = pending
             .into_iter()
             .map(|rx| {
-                let resp = rx.recv().expect("worker died");
+                let resp = rx.recv().expect("reply channel dropped").expect("typed reply");
                 resp.results.into_iter().map(|(_, id)| id).collect()
             })
             .collect();
@@ -493,13 +493,17 @@ fn main() -> anyhow::Result<()> {
         let mixed: Vec<Vec<u32>> = read_pending
             .into_iter()
             .map(|rx| {
-                let resp = rx.recv().expect("worker died");
+                let resp = rx.recv().expect("reply channel dropped").expect("typed reply");
                 resp.results.into_iter().map(|(_, id)| id).collect()
             })
             .collect();
         let read_qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
         for rx in delete_pending {
-            rx.recv().expect("writer died").outcome.expect("delete failed");
+            rx.recv()
+                .expect("reply channel dropped")
+                .expect("typed write reply")
+                .outcome
+                .expect("delete failed");
         }
         router
             .write_blocking(WriteOp::Compact)

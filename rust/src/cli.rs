@@ -15,7 +15,8 @@ use crate::experiments as exp;
 use crate::index::{BuildCfg, EncodeParams, PipelineConfig, SearchIndex, SearchParams};
 use crate::qinco::{Codec, ParamStore, RuntimeDecoderFactory, TrainCfg, Trainer};
 use crate::runtime::Engine;
-use crate::server::{Router, ServerCfg};
+use crate::server::{Router, RouterError, ServerCfg};
+use crate::util::deadline::Deadline;
 use crate::util::qnpz::{Store, Tensor};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -223,6 +224,18 @@ LIVE MUTATION FLAGS (insert / delete / compact)
   --n-delete 32          rows to tombstone-delete
 SERVE FLAGS
   --workers N  --queries N
+ROBUSTNESS FLAGS (search + serve)
+  --deadline-ms 0        per-request deadline in milliseconds (0 = disabled).
+                         A request already expired when picked up gets a typed
+                         DeadlineExceeded reply; one that expires mid-pipeline
+                         returns its stage-1/2 shortlist ranking flagged
+                         `degraded` instead of running stage 3 long
+  --shed-watermark 0     serve only: refuse new submissions with Overloaded
+                         (carrying a retry-after hint) once this many requests
+                         are in flight (0 = disabled)
+  --retries 0            serve only: bounded retry count (jittered backoff)
+                         the blocking helpers use for shed/saturated
+                         submissions before giving up
 "#;
 
 fn cmd_info() -> Result<()> {
@@ -465,12 +478,15 @@ fn built_index(args: &Args) -> Result<(SearchIndex, crate::data::Dataset, String
 /// subcommands (the CI smoke jobs rely on it): every result list must be
 /// ranked under the total (score, id) order with ids inside the index's
 /// id space, and — unless the knobs legitimately return nothing
-/// (`--topk 0` / `--n-aq 0` / `--nprobe 0`, or an empty live set) — at
-/// least one list must be non-empty.
+/// (`--topk 0` / `--n-aq 0` / `--nprobe 0`, an empty live set, or a
+/// `degraded` reply whose deadline expired before anything was scanned)
+/// — at least one list must be non-empty. Ranking and id-space checks
+/// always apply: a degraded reply is still a valid (truncated) ranking.
 fn check_results(
     results: &[Vec<(f32, u32)>],
     index: &SearchIndex,
     sp: &SearchParams,
+    degraded: bool,
 ) -> Result<()> {
     let id_space = index.db_len();
     let mut non_empty = 0usize;
@@ -486,6 +502,7 @@ fn check_results(
         }
     }
     let expect_results = !results.is_empty()
+        && !degraded
         && index.live_len() > 0
         && sp.n_final > 0
         && sp.n_aq > 0
@@ -499,10 +516,12 @@ fn check_results(
 fn cmd_search(args: &Args) -> Result<()> {
     let (index, ds, model, flavor) = built_index(args)?;
     let sp = search_params(args)?;
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u64;
     let t0 = std::time::Instant::now();
-    let results = index.search_batch(&ds.queries, &sp)?;
+    let (results, degraded) =
+        index.search_batch_within(&ds.queries, &sp, Deadline::from_ms(deadline_ms))?;
     let secs = t0.elapsed().as_secs_f64();
-    check_results(&results, &index, &sp)?;
+    check_results(&results, &index, &sp, degraded)?;
     let (r1, r10, r100) =
         crate::metrics::recall_triple(&crate::metrics::ids_only(&results), &ds.ground_truth);
     println!(
@@ -520,6 +539,12 @@ fn cmd_search(args: &Args) -> Result<()> {
         snap.n_shards(),
         snap.scan_counts()
     );
+    if degraded {
+        println!(
+            "degraded: --deadline-ms {deadline_ms} expired mid-pipeline; the rankings \
+             above are the stage-1/2 shortlist order (stage 3 skipped whole)"
+        );
+    }
     Ok(())
 }
 
@@ -548,7 +573,7 @@ fn cmd_insert(args: &Args) -> Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let sp = search_params(args)?;
     let results = index.search_batch(&ds.queries, &sp)?;
-    check_results(&results, &index, &sp)?;
+    check_results(&results, &index, &sp, false)?;
     println!(
         "IVF-{model} on {}: ingested {n} vectors in {:.2}ms ({:.0} vec/s) with A={} B={}",
         flavor.name(),
@@ -579,7 +604,7 @@ fn cmd_delete(args: &Args) -> Result<()> {
     let deleted = index.delete(&ids)?;
     let sp = search_params(args)?;
     let results = index.search_batch(&ds.queries, &sp)?;
-    check_results(&results, &index, &sp)?;
+    check_results(&results, &index, &sp, false)?;
     check_no_deleted(&results, &ids, "after delete")?;
     println!(
         "IVF-{model} on {}: tombstoned {deleted} of {n} requested rows; \
@@ -602,7 +627,7 @@ fn cmd_compact(args: &Args) -> Result<()> {
     let (index, ds, model, flavor) = built_index(args)?;
     let sp = search_params(args)?;
     let baseline = index.search_batch(&ds.queries, &sp)?;
-    check_results(&baseline, &index, &sp)?;
+    check_results(&baseline, &index, &sp, false)?;
 
     // ingest
     let ep = encode_params_of(args, index.params.cfg.k)?;
@@ -620,13 +645,13 @@ fn cmd_compact(args: &Args) -> Result<()> {
     let deleted = index.delete(&victims)?;
 
     let tombstoned = index.search_batch(&ds.queries, &sp)?;
-    check_results(&tombstoned, &index, &sp)?;
+    check_results(&tombstoned, &index, &sp, false)?;
     check_no_deleted(&tombstoned, &victims, "after delete, before compaction")?;
 
     let epoch_tomb = index.epoch();
     let reclaimed = index.compact();
     let compacted = index.search_batch(&ds.queries, &sp)?;
-    check_results(&compacted, &index, &sp)?;
+    check_results(&compacted, &index, &sp, false)?;
     check_no_deleted(&compacted, &victims, "after compaction")?;
     // the pinned invariant: compaction is invisible to search
     for (qi, (t, c)) in tombstoned.iter().zip(&compacted).enumerate() {
@@ -652,6 +677,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (mut engine, model, flavor, scale) = common_setup(args)?;
     let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
     let workers = args.usize_or("workers", crate::util::pool::default_threads())?;
+    // robustness knobs (0 = disabled; malformed values hard-error naming
+    // the flag via usize_or)
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u64;
+    let shed_watermark = args.usize_or("shed-watermark", 0)?;
+    let retries = args.usize_or("retries", 0)?;
     // --stage3 runtime: hand every worker thread its own PJRT engine +
     // codec through the factory (engine-per-worker; see server docs).
     // Workers fall back to the reference decoder if the runtime is
@@ -671,7 +701,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
     let router = Router::start(
         Arc::new(index),
-        ServerCfg { workers, decoder_factory, ..Default::default() },
+        ServerCfg {
+            workers,
+            decoder_factory,
+            shed_watermark,
+            blocking_retries: retries,
+            ..Default::default()
+        },
     );
     // --batch-threads > 1 rides along in each request's SearchParams:
     // workers split a big dispatched group's bucket scan across threads
@@ -679,17 +715,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize_or("queries", ds.queries.rows)?;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n);
+    // each request gets a *fresh* deadline at submission time, like a
+    // network frontend stamping arrival + budget would
+    let mut shed = 0usize;
     for i in 0..n {
-        pending.push(router.submit(ds.queries.row(i % ds.queries.rows).to_vec(), sp)?);
+        let q = ds.queries.row(i % ds.queries.rows).to_vec();
+        match router.submit_within(q, sp, Deadline::from_ms(deadline_ms)) {
+            Ok(rx) => pending.push(rx),
+            Err(RouterError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
     }
+    // every pushed receiver gets exactly one reply: Ok(response) or a
+    // typed error. DeadlineExceeded is an expected outcome under
+    // --deadline-ms; anything else fails the command.
+    let (mut ok, mut degraded, mut expired) = (0usize, 0usize, 0usize);
     for rx in pending {
-        rx.recv().map_err(|_| anyhow::anyhow!("worker died"))?;
+        match rx.recv().map_err(|_| anyhow::anyhow!("worker died"))? {
+            Ok(resp) => {
+                ok += 1;
+                degraded += usize::from(resp.degraded);
+            }
+            Err(RouterError::DeadlineExceeded) => expired += 1,
+            Err(e) => return Err(anyhow::anyhow!("request failed: {e}")),
+        }
     }
     let secs = t0.elapsed().as_secs_f64();
     let stats = router.stats();
     println!(
-        "served {n} queries with {workers} workers: {:.0} QPS, mean {:.2?}, p50 {:.2?}, p99 {:.2?}",
-        n as f64 / secs,
+        "served {ok}/{n} queries with {workers} workers: {:.0} QPS, mean {:.2?}, p50 {:.2?}, p99 {:.2?}",
+        ok as f64 / secs,
         stats.mean_latency,
         stats.p50,
         stats.p99
@@ -698,6 +753,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "shards: {}  (stage-1 scans per shard: {:?})",
         stats.shard_scans.len(),
         stats.shard_scans
+    );
+    println!(
+        "robustness: degraded {degraded}  deadline-exceeded {expired}  shed {shed}  \
+         (counters: shed {}  deadline_exceeded {}  degraded {}  panics {}  respawns {})",
+        stats.shed, stats.deadline_exceeded, stats.degraded, stats.panics, stats.respawns
     );
     router.shutdown();
     Ok(())
@@ -788,6 +848,37 @@ mod tests {
         // malformed values ride the usize_or hard-error policy
         let bad = Args::parse(&["--a".to_string(), "wide".to_string()]);
         assert!(encode_params_of(&bad, 16).is_err());
+    }
+
+    #[test]
+    fn robustness_flags_are_validated() {
+        // absent: all three default to 0 = disabled
+        let none = Args::parse(&[]);
+        assert_eq!(none.usize_or("deadline-ms", 0).unwrap(), 0);
+        assert_eq!(none.usize_or("shed-watermark", 0).unwrap(), 0);
+        assert_eq!(none.usize_or("retries", 0).unwrap(), 0);
+        // Deadline::from_ms(0) is "no deadline", never "already expired"
+        assert!(Deadline::from_ms(0).is_none());
+        assert!(!Deadline::from_ms(0).expired());
+        // well-formed values parse through
+        let a = Args::parse(
+            &["--deadline-ms", "250", "--shed-watermark", "64", "--retries", "3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(a.usize_or("deadline-ms", 0).unwrap(), 250);
+        assert_eq!(a.usize_or("shed-watermark", 0).unwrap(), 64);
+        assert_eq!(a.usize_or("retries", 0).unwrap(), 3);
+        // malformed values hard-error naming the flag
+        let bad = Args::parse(&["--deadline-ms".to_string(), "soon".to_string()]);
+        let err = bad.usize_or("deadline-ms", 0).unwrap_err().to_string();
+        assert!(err.contains("deadline-ms") && err.contains("soon"), "{err}");
+        let bad = Args::parse(&["--shed-watermark".to_string(), "-1".to_string()]);
+        assert!(bad.usize_or("shed-watermark", 0).is_err());
+        let bad = Args::parse(&["--retries".to_string(), "3.5".to_string()]);
+        let err = bad.usize_or("retries", 0).unwrap_err().to_string();
+        assert!(err.contains("retries") && err.contains("3.5"), "{err}");
     }
 
     #[test]

@@ -70,6 +70,8 @@
 use super::pipeline::{SearchIndex, SearchParams};
 use super::shard::ShardSet;
 use crate::quantizers::StageDecoder;
+use crate::util::deadline::Deadline;
+use crate::util::fault::{self, FaultPoint};
 use crate::util::pool;
 use crate::util::topk::Shortlist;
 use anyhow::Result;
@@ -87,6 +89,30 @@ pub struct QueryPlan {
     pub query: Vec<f32>,
     /// (probe distance, bucket) from the HNSW coarse quantizer
     pub probes: Vec<(f32, u32)>,
+}
+
+/// What a deadline-aware execute returns: the ranked lists plus whether
+/// deadline pressure cut the pipeline short.
+///
+/// The degraded ladder (each rung sets `degraded: true`, and `degraded`
+/// is **never** false unless the full configured pipeline ran):
+/// 1. the stage-1 scan aborted between (or inside) bucket groups — the
+///    lists rank whatever was scanned before the deadline;
+/// 2. the deadline expired after a complete scan — stage 2 is skipped
+///    and the stage-1 ranking stands;
+/// 3. the deadline expired after stage 2 — stage 3 is skipped **whole**
+///    (never half-run) and the stage-2 ranking is returned, truncated
+///    to `n_final`.
+///
+/// With [`Deadline::none()`] no rung can trigger and the output is
+/// bit-identical to [`BatchSearcher::execute`] — which is how the
+/// equivalence suites stay pinned.
+#[derive(Clone, Debug)]
+pub struct BatchOutput {
+    /// ranked (score, id) lists, one per plan
+    pub results: Vec<Vec<(f32, u32)>>,
+    /// true iff the pipeline was cut short by the deadline
+    pub degraded: bool,
 }
 
 /// Batched executor over a shared [`SearchIndex`], pinned to one epoch
@@ -136,7 +162,7 @@ impl<'a> BatchSearcher<'a> {
         plans: &[QueryPlan],
         sp: &SearchParams,
     ) -> Result<Vec<Vec<(f32, u32)>>> {
-        self.execute_with_decoder(plans, sp, self.index.pipeline.stage3.as_ref())
+        self.execute_within(plans, sp, None, Deadline::none()).map(|o| o.results)
     }
 
     /// Execute with a caller-supplied stage-3 decoder. The decoder is
@@ -152,19 +178,46 @@ impl<'a> BatchSearcher<'a> {
         sp: &SearchParams,
         decoder: &dyn StageDecoder,
     ) -> Result<Vec<Vec<(f32, u32)>>> {
+        self.execute_within(plans, sp, Some(decoder), Deadline::none()).map(|o| o.results)
+    }
+
+    /// Deadline-aware execute — the serving router's entry point.
+    /// `decoder` selects the stage-3 decoder (`None` = the index's own);
+    /// `deadline` is checked between bucket-group scans (and every
+    /// [`DEADLINE_CHECK_ROWS`](super::shard) scanned rows inside a
+    /// group), after stage 1, and **before** stage 3 — stage 3 either
+    /// runs whole or is skipped whole. Under deadline pressure the
+    /// result is the stage-1/2 shortlist ranking with
+    /// [`BatchOutput::degraded`] set (see [`BatchOutput`] for the exact
+    /// ladder); with [`Deadline::none()`] this is bit-identical to
+    /// [`Self::execute`] / [`Self::execute_with_decoder`].
+    pub fn execute_within(
+        &self,
+        plans: &[QueryPlan],
+        sp: &SearchParams,
+        decoder: Option<&dyn StageDecoder>,
+        deadline: Deadline,
+    ) -> Result<BatchOutput> {
         let idx = self.index;
         if plans.is_empty() {
-            return Ok(Vec::new());
+            return Ok(BatchOutput { results: Vec::new(), degraded: false });
         }
         let threads = idx.batch_threads(sp);
 
         // ---- stage 1: flat LUT packs + scattered shard-group scan ----
-        let shortlists = self.scan_shortlists(plans, sp, threads, true);
+        let (shortlists, scan_complete) =
+            self.scan_shortlists_within(plans, sp, threads, true, deadline);
+        let mut degraded = !scan_complete;
 
-        // ---- stage 2: per-query re-scoring ----
+        // ---- stage 2: per-query re-scoring (skipped under pressure:
+        // an aborted scan, or a deadline that expired during a complete
+        // scan, leaves the stage-1 ranking standing) ----
         let sorted: Vec<Vec<(f32, u32)>> =
             shortlists.into_iter().map(|sl| sl.into_sorted()).collect();
-        let stage2: Vec<Vec<(f32, u32)>> = if threads > 1 && plans.len() > 1 {
+        let stage2: Vec<Vec<(f32, u32)>> = if degraded || deadline.expired() {
+            degraded = true;
+            sorted
+        } else if threads > 1 && plans.len() > 1 {
             let mut slots: Vec<(Vec<(f32, u32)>, Vec<(f32, u32)>)> =
                 sorted.into_iter().map(|s| (s, Vec::new())).collect();
             pool::par_map_into(&mut slots, threads, |qi, slot| {
@@ -180,21 +233,31 @@ impl<'a> BatchSearcher<'a> {
                 .collect()
         };
         if sp.n_final == 0 {
-            return Ok(stage2);
+            return Ok(BatchOutput { results: stage2, degraded });
         }
-        if !idx.stage3_enabled {
-            // stage-2-final mode: the approximate ranking is the answer
-            return Ok(stage2
+        let truncated = |lists: Vec<Vec<(f32, u32)>>| {
+            lists
                 .into_iter()
                 .map(|mut list| {
                     list.truncate(sp.n_final);
                     list
                 })
-                .collect());
+                .collect()
+        };
+        if !idx.stage3_enabled {
+            // stage-2-final mode: the approximate ranking is the answer
+            return Ok(BatchOutput { results: truncated(stage2), degraded });
+        }
+        // the deadline gate for stage 3: skipped whole, never half-run.
+        // A degraded reply is exactly the stage-1/2 ranking (truncated
+        // to the requested depth), flagged as such.
+        if degraded || deadline.expired() {
+            return Ok(BatchOutput { results: truncated(stage2), degraded: true });
         }
 
         // ---- stage 3: one decode over the union of all survivors,
         // gathered from their owning shards ----
+        let decoder = decoder.unwrap_or_else(|| idx.pipeline.stage3.as_ref());
         let mut union: BTreeMap<u32, usize> = BTreeMap::new();
         for list in &stage2 {
             for &(_, id) in list {
@@ -202,7 +265,7 @@ impl<'a> BatchSearcher<'a> {
             }
         }
         if union.is_empty() {
-            return Ok(stage2); // every shortlist is empty
+            return Ok(BatchOutput { results: stage2, degraded: false }); // every shortlist is empty
         }
         for (row, slot) in union.values_mut().enumerate() {
             *slot = row;
@@ -213,19 +276,20 @@ impl<'a> BatchSearcher<'a> {
             let rows: Vec<usize> = list.iter().map(|&(_, id)| union[&id]).collect();
             idx.exact_rerank(&self.set, &plans[qi].query, list, &dec, &rows, sp.n_final)
         };
-        if threads > 1 && plans.len() > 1 {
+        let results = if threads > 1 && plans.len() > 1 {
             let mut out: Vec<Vec<(f32, u32)>> = vec![Vec::new(); plans.len()];
             pool::par_map_into(&mut out, threads, |qi, slot| {
                 *slot = rerank_one(qi, &stage2[qi]);
             });
-            Ok(out)
+            out
         } else {
-            Ok(stage2
+            stage2
                 .iter()
                 .enumerate()
                 .map(|(qi, list)| rerank_one(qi, list))
-                .collect())
-        }
+                .collect()
+        };
+        Ok(BatchOutput { results, degraded: false })
     }
 
     /// Stage-1 only: pack the per-query LUTs and run the scattered
@@ -243,22 +307,28 @@ impl<'a> BatchSearcher<'a> {
         threads: usize,
         block: bool,
     ) -> Vec<Vec<(f32, u32)>> {
-        self.scan_shortlists(plans, sp, threads, block)
+        self.scan_shortlists_within(plans, sp, threads, block, Deadline::none())
+            .0
             .into_iter()
             .map(|sl| sl.into_sorted())
             .collect()
     }
 
     /// The stage-1 scan over scattered shard groups: one bounded
-    /// shortlist per plan. See [`Self::scan_stage1`] for the
-    /// `threads`/`block` knobs.
-    fn scan_shortlists(
+    /// shortlist per plan, plus whether the scan ran to completion
+    /// (`false` = the deadline expired between or inside bucket groups
+    /// and the tail was abandoned — the shortlists rank whatever was
+    /// scanned). With [`Deadline::none()`] the completion flag is always
+    /// `true` and the scan is bit-identical to its historical behavior.
+    /// See [`Self::scan_stage1`] for the `threads`/`block` knobs.
+    fn scan_shortlists_within(
         &self,
         plans: &[QueryPlan],
         sp: &SearchParams,
         threads: usize,
         block: bool,
-    ) -> Vec<Shortlist> {
+        deadline: Deadline,
+    ) -> (Vec<Shortlist>, bool) {
         let idx = self.index;
         let set = &*self.set;
 
@@ -299,14 +369,29 @@ impl<'a> BatchSearcher<'a> {
             })
             .collect();
 
-        // scan groups[lo..hi] into `shortlists` (one slot per plan)
-        let scan_range = |lo: usize, hi: usize, shortlists: &mut [Shortlist]| {
+        // scan groups[lo..hi] into `shortlists` (one slot per plan);
+        // returns false when the deadline cut the range short. The
+        // deadline is checked before every bucket group (and every
+        // DEADLINE_CHECK_ROWS rows inside scan_group) — with no
+        // deadline both checks are a dead branch.
+        let scan_range = |lo: usize, hi: usize, shortlists: &mut [Shortlist]| -> bool {
             for group in &groups[lo..hi] {
+                // fault probe: a stalled scan (drives the mid-scan
+                // deadline-degradation path in tests)
+                if let Some(delay) = fault::fire(FaultPoint::SlowScan) {
+                    std::thread::sleep(delay);
+                }
+                if deadline.expired() {
+                    return false;
+                }
                 let sh = &set.shards[group.shard as usize];
                 let scorer = sh.spec(&idx.pipeline).stage1.as_ref();
                 let (stride, luts) = &packs[set.lut_slot[group.shard as usize] as usize];
-                sh.scan_group(scorer, luts, *stride, group, block, shortlists);
+                if !sh.scan_group(scorer, luts, *stride, group, block, deadline, shortlists) {
+                    return false;
+                }
             }
+            true
         };
 
         let ngroups = groups.len();
@@ -314,30 +399,33 @@ impl<'a> BatchSearcher<'a> {
             plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect();
         let threads = threads.min(ngroups).max(1);
         if threads <= 1 {
-            scan_range(0, ngroups, &mut shortlists);
-            return shortlists;
+            let complete = scan_range(0, ngroups, &mut shortlists);
+            return (shortlists, complete);
         }
         // group-parallel scan: per-thread partial shortlists over
         // contiguous chunks of shard groups, merged afterwards. Every
         // (query, candidate) pair still scores exactly once, and the
         // merge pushes under the same total (score, id) order, so the
-        // result is bit-identical to the serial scan.
+        // result is bit-identical to the serial scan. Under a deadline,
+        // any chunk aborting marks the whole scan incomplete.
         let chunk = ngroups.div_ceil(threads);
         let nchunks = ngroups.div_ceil(chunk);
-        let mut partials: Vec<Vec<Shortlist>> = (0..nchunks)
-            .map(|_| plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect())
+        let mut partials: Vec<(Vec<Shortlist>, bool)> = (0..nchunks)
+            .map(|_| (plans.iter().map(|_| Shortlist::new(sp.n_aq)).collect(), true))
             .collect();
         // one scoped thread per group chunk, each owning one partial
         // slot (disjoint &mut via par_map_into — no aliasing possible)
         pool::par_map_into(&mut partials, nchunks, |t, part| {
-            scan_range(t * chunk, ((t + 1) * chunk).min(ngroups), part);
+            part.1 = scan_range(t * chunk, ((t + 1) * chunk).min(ngroups), &mut part.0);
         });
-        for part in partials {
+        let mut complete = true;
+        for (part, chunk_complete) in partials {
+            complete &= chunk_complete;
             for (sl, partial) in shortlists.iter_mut().zip(part) {
                 sl.merge_from(partial);
             }
         }
-        shortlists
+        (shortlists, complete)
     }
 
     /// Plan + execute a whole query matrix in one batch.

@@ -70,6 +70,16 @@
 //! engine (per-batch LUT packs, scattered shard-group scans, union
 //! stage-3 decode) that the serving router dispatches whole batches
 //! through.
+//!
+//! Both batched entry points are deadline-aware
+//! ([`BatchSearcher::execute_within`](batch::BatchSearcher::execute_within),
+//! [`SearchIndex::search_batch_within`]): a
+//! [`Deadline`](crate::util::deadline::Deadline) is checked between
+//! bucket-group scans (and every
+//! [`DEADLINE_CHECK_ROWS`](shard::DEADLINE_CHECK_ROWS) rows inside
+//! one), and before stage 3 — expiry degrades the call to the stage-1/2
+//! shortlist ranking, flagged on [`batch::BatchOutput`], instead of
+//! running long. No deadline ⇒ bit-identical to the historical paths.
 
 pub mod batch;
 pub mod hnsw;
@@ -77,7 +87,7 @@ pub mod ivf;
 pub mod pipeline;
 pub mod shard;
 
-pub use batch::{stage2_use_lut, BatchSearcher, QueryPlan};
+pub use batch::{stage2_use_lut, BatchOutput, BatchSearcher, QueryPlan};
 pub use pipeline::{
     BuildCfg, EncodeParams, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind,
     Stage3Kind,

@@ -717,8 +717,14 @@ impl SearchIndex {
     /// one pinned `Arc<ShardSet>`, so concurrent writers can never
     /// expose a partial update to it — they publish whole replacement
     /// snapshots instead.
+    ///
+    /// Poison-recovering: the guarded value is just an `Arc` that is
+    /// swapped atomically at publish time, so even a writer thread that
+    /// panicked mid-mutation left it pointing at the last *complete*
+    /// snapshot — readers must keep serving while a supervisor respawns
+    /// the writer (see the server failure model).
     pub fn snapshot(&self) -> Arc<ShardSet> {
-        self.shards.read().expect("shard snapshot lock poisoned").clone()
+        self.shards.read().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Current publication epoch (0 for a fresh build; +1 per
@@ -954,9 +960,28 @@ impl SearchIndex {
         queries: &Matrix,
         sp: &SearchParams,
     ) -> Result<Vec<Vec<(f32, u32)>>> {
+        self.search_batch_within(queries, sp, crate::util::deadline::Deadline::none())
+            .map(|(results, _)| results)
+    }
+
+    /// [`Self::search_batch`] under a deadline: every per-thread chunk
+    /// threads the deadline into the engine
+    /// ([`BatchSearcher::execute_within`](super::batch::BatchSearcher::execute_within)),
+    /// so an expiring deadline degrades the whole call to the stage-1/2
+    /// shortlist ranking instead of running long. Returns the ranked
+    /// lists plus whether **any** chunk degraded — the CLI's
+    /// `--deadline-ms` lands here. With [`Deadline::none()`]
+    /// (how `search_batch` calls it) the flag is always `false` and
+    /// results are bit-identical to the historical path.
+    pub fn search_batch_within(
+        &self,
+        queries: &Matrix,
+        sp: &SearchParams,
+        deadline: crate::util::deadline::Deadline,
+    ) -> Result<(Vec<Vec<(f32, u32)>>, bool)> {
         let n = queries.rows;
         if n == 0 {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), false));
         }
         let inner = self.batch_threads(sp);
         let nthreads = (crate::util::pool::default_threads() / inner).max(1);
@@ -965,21 +990,25 @@ impl SearchIndex {
         // pin ONE snapshot for the whole batch: every chunk searches the
         // same epoch, even if a writer publishes mid-call
         let set = self.snapshot();
-        let mut per_chunk: Vec<Result<Vec<Vec<(f32, u32)>>>> =
-            (0..nchunks).map(|_| Ok(Vec::new())).collect();
+        let mut per_chunk: Vec<Result<super::batch::BatchOutput>> = (0..nchunks)
+            .map(|_| Ok(super::batch::BatchOutput { results: Vec::new(), degraded: false }))
+            .collect();
         crate::util::pool::par_map_into(&mut per_chunk, nchunks, |ci, slot| {
             let lo = ci * chunk;
             let hi = ((ci + 1) * chunk).min(n);
             let searcher = super::batch::BatchSearcher::with_snapshot(self, set.clone());
             let plans: Vec<super::batch::QueryPlan> =
                 (lo..hi).map(|i| searcher.plan(queries.row(i), sp)).collect();
-            *slot = searcher.execute(&plans, sp);
+            *slot = searcher.execute_within(&plans, sp, None, deadline);
         });
         let mut out = Vec::with_capacity(n);
+        let mut degraded = false;
         for chunk_res in per_chunk {
-            out.extend(chunk_res?);
+            let o = chunk_res?;
+            degraded |= o.degraded;
+            out.extend(o.results);
         }
-        Ok(out)
+        Ok((out, degraded))
     }
 
     /// Bytes per database vector (codes + the per-vector f32 caches),
@@ -1044,7 +1073,7 @@ impl SearchIndex {
         if vectors.rows == 0 {
             return Ok(Vec::new());
         }
-        let _w = self.writer.lock().expect("writer lock poisoned");
+        let _w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let cur = self.snapshot();
 
         // ---- encode everything before touching any routing state ----
@@ -1133,7 +1162,7 @@ impl SearchIndex {
             next.shards[si] = Arc::new(sh.with_rows_appended(&payloads));
         }
         // publish the new epoch atomically
-        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        *self.shards.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(next);
         Ok(gids)
     }
 
@@ -1144,7 +1173,7 @@ impl SearchIndex {
     /// Returns the number of rows newly deleted — a new epoch publishes
     /// iff it is non-zero.
     pub fn delete(&self, ids: &[u32]) -> Result<usize> {
-        let _w = self.writer.lock().expect("writer lock poisoned");
+        let _w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let cur = self.snapshot();
         let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); cur.n_shards()];
         for &id in ids {
@@ -1174,7 +1203,7 @@ impl SearchIndex {
         if newly == 0 {
             return Ok(0);
         }
-        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        *self.shards.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(next);
         Ok(newly)
     }
 
@@ -1185,7 +1214,7 @@ impl SearchIndex {
     /// never reused. Returns the number of rows reclaimed; a new epoch
     /// publishes iff it is non-zero.
     pub fn compact_shard(&self, s: usize) -> Result<usize> {
-        let _w = self.writer.lock().expect("writer lock poisoned");
+        let _w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let cur = self.snapshot();
         if s >= cur.n_shards() {
             bail!("compact_shard({s}) out of range (the index has {} shards)", cur.n_shards());
@@ -1195,14 +1224,14 @@ impl SearchIndex {
         }
         let mut next = cur.cow_clone();
         let reclaimed = Self::compact_one(&cur, &mut next, s);
-        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        *self.shards.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(next);
         Ok(reclaimed)
     }
 
     /// [`Self::compact_shard`] over every shard that has tombstoned
     /// rows, in one epoch bump. Returns the total rows reclaimed.
     pub fn compact(&self) -> usize {
-        let _w = self.writer.lock().expect("writer lock poisoned");
+        let _w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let cur = self.snapshot();
         if cur.shards.iter().all(|sh| sh.n_dead == 0) {
             return 0;
@@ -1214,7 +1243,7 @@ impl SearchIndex {
                 reclaimed += Self::compact_one(&cur, &mut next, s);
             }
         }
-        *self.shards.write().expect("shard snapshot lock poisoned") = Arc::new(next);
+        *self.shards.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(next);
         reclaimed
     }
 

@@ -98,10 +98,18 @@
 use super::batch::QueryPlan;
 use super::pipeline::{gather_codes, PipelineSpec};
 use crate::quantizers::{ApproxScorer, Codes, SCORE_BLOCK};
+use crate::util::deadline::Deadline;
 use crate::util::topk::Shortlist;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// How many scanned code rows a deadline-carrying scan scores between
+/// `Deadline::expired()` checks inside one bucket group. Coarse enough
+/// that the `Instant::now()` syscall never shows up in profiles, fine
+/// enough that a single huge inverted list cannot blow past a deadline
+/// unchecked. Requests without a deadline never check at all.
+pub const DEADLINE_CHECK_ROWS: usize = 1024;
 
 /// `local_of` sentinel for a global id whose row was reclaimed by
 /// compaction: the id stays allocated (never reused) but maps to no row.
@@ -234,6 +242,14 @@ impl IndexShard {
     /// [`Self::scanned`]). `block` selects the multi-query
     /// [`ApproxScorer::score_block`] kernel vs the scalar per-member
     /// loop; both are bit-identical by the trait contract.
+    ///
+    /// `deadline` bounds the scan: every [`DEADLINE_CHECK_ROWS`] scored
+    /// rows the deadline is re-checked, and on expiry the scan returns
+    /// `false` with the shortlists ranking whatever was scored so far
+    /// (the caller marks the batch degraded). With [`Deadline::none()`]
+    /// the check is a dead branch and the return is always `true` —
+    /// bit-identity preserved. [`Self::scanned`] counts pairs *actually
+    /// scored*, so an aborted scan does not over-report.
     pub(crate) fn scan_group(
         &self,
         scorer: &dyn ApproxScorer,
@@ -241,24 +257,22 @@ impl IndexShard {
         stride: usize,
         group: &ShardGroup,
         block: bool,
+        deadline: Deadline,
         shortlists: &mut [Shortlist],
-    ) {
+    ) -> bool {
         let list = self.list(group.bucket);
         let codes = self.stage1_codes();
         let any_dead = self.n_dead > 0;
-        let live_rows = if any_dead {
-            list.iter().filter(|&&l| !self.tombstones[l as usize]).count()
-        } else {
-            list.len()
-        };
-        self.scanned
-            .fetch_add((live_rows * group.members.len()) as u64, Ordering::Relaxed);
+        let check = !deadline.is_none();
+        let mut rows_since_check = 0usize;
+        let mut scored: u64 = 0;
+        let mut complete = true;
         if block {
             // block fast path: one score_block call scores a code row
             // for up to SCORE_BLOCK co-probed queries
             let mut mq = [0u32; SCORE_BLOCK];
             let mut scores = [0.0f32; SCORE_BLOCK];
-            for chunk in group.members.chunks(SCORE_BLOCK) {
+            'chunks: for chunk in group.members.chunks(SCORE_BLOCK) {
                 for (l, &(qi, _)) in chunk.iter().enumerate() {
                     mq[l] = qi;
                 }
@@ -266,6 +280,16 @@ impl IndexShard {
                     let i = local as usize;
                     if any_dead && self.tombstones[i] {
                         continue;
+                    }
+                    if check {
+                        rows_since_check += 1;
+                        if rows_since_check >= DEADLINE_CHECK_ROWS {
+                            rows_since_check = 0;
+                            if deadline.expired() {
+                                complete = false;
+                                break 'chunks;
+                            }
+                        }
                     }
                     scorer.score_block(
                         luts,
@@ -278,14 +302,25 @@ impl IndexShard {
                     for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
                         shortlists[qi as usize].push(probe_d + scores[l], self.global_ids[i]);
                     }
+                    scored += chunk.len() as u64;
                 }
             }
         } else {
             // scalar reference path (bench comparisons only)
-            for &local in list {
+            'rows: for &local in list {
                 let i = local as usize;
                 if any_dead && self.tombstones[i] {
                     continue;
+                }
+                if check {
+                    rows_since_check += 1;
+                    if rows_since_check >= DEADLINE_CHECK_ROWS {
+                        rows_since_check = 0;
+                        if deadline.expired() {
+                            complete = false;
+                            break 'rows;
+                        }
+                    }
                 }
                 let code = codes.row(i);
                 let term = self.stage1_terms[i];
@@ -294,8 +329,11 @@ impl IndexShard {
                     shortlists[qi as usize]
                         .push(probe_d + scorer.score(lut, code, term), self.global_ids[i]);
                 }
+                scored += group.members.len() as u64;
             }
         }
+        self.scanned.fetch_add(scored, Ordering::Relaxed);
+        complete
     }
 
     /// Copy-on-write append: a new shard generation with `rows` added at

@@ -87,6 +87,30 @@
 //!   them whole through this engine; [`index::SearchIndex::search_batch`]
 //!   and `search` return the same `Vec<(score, id)>` shape per query,
 //!   ranked under the total (score, id) order of [`util::topk`].
+//!
+//! # Failure model: deadlines, shedding, supervision
+//!
+//! The serving layer carries an explicit end-to-end failure model (the
+//! full contract lives in the [`server`] module docs): every request
+//! can carry a [`util::deadline::Deadline`], checked by the batcher, at
+//! dispatch, between bucket-group scans (and every
+//! [`index::shard::DEADLINE_CHECK_ROWS`] rows inside one), and before
+//! stage 3 — expiry surfaces as a typed
+//! `RouterError::DeadlineExceeded` or as a reply explicitly flagged
+//! `degraded: true` carrying the stage-1/2 shortlist ranking (stage 3
+//! is skipped whole, never half-run, and degraded results are **never**
+//! emitted unflagged). Admission control sheds past a configurable
+//! in-flight watermark with `RouterError::Overloaded` plus a
+//! retry-after hint; the blocking helpers bound every wait with
+//! `recv_timeout` and bounded, jittered retries, so no caller hangs on
+//! a dead worker. Worker and writer threads run under `catch_unwind`
+//! supervision — a panicking batch answers its callers
+//! `RouterError::WorkerDied` while the thread respawns — and all shared
+//! metrics locks recover from poisoning. A deterministic, seeded fault
+//! injector ([`util::fault`], behind the `fault-injection` feature)
+//! drives `tests/fault_injection.rs`, which proves each named fault
+//! point resolves to a typed error or a flagged degraded reply — never
+//! a hang, a poisoned lock, or an abort.
 
 pub mod cli;
 pub mod clustering;

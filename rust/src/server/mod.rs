@@ -10,12 +10,82 @@
 //! co-probed inverted lists are scanned once per group and stage 3 runs
 //! one union decode — not one `search` call per request.
 //!
+//! # Failure model
+//!
+//! Every accepted request gets **exactly one typed reply** — a
+//! [`Reply`] (`Result<Response, RouterError>`) on the read lane, a
+//! [`WriteReply`] on the write lane — and every refused request gets a
+//! typed [`RouterError`]. No path hangs, drops a reply silently, or
+//! poisons shared state. The variants:
+//!
+//! - [`RouterError::Stopped`] — the router has shut down; submission is
+//!   refused. In-flight requests at shutdown still drain (see below).
+//! - [`RouterError::Saturated`] — [`Router::try_submit`] /
+//!   [`Router::try_submit_write`] found the bounded ingress full. This
+//!   is backpressure, not shedding: the blocking `submit` variants wait
+//!   instead.
+//! - [`RouterError::Overloaded`] — admission control refused the
+//!   request: the lane's in-flight count crossed its high-water mark
+//!   ([`ServerCfg::shed_watermark`] /
+//!   [`ServerCfg::write_shed_watermark`]). Carries a
+//!   `retry_after_hint` estimated from the current mean latency and
+//!   queue pressure. Shedding at the door is deliberate: a request we
+//!   cannot serve within its deadline is cheapest to reject before it
+//!   consumes queue space and scan work.
+//! - [`RouterError::DeadlineExceeded`] — the request's
+//!   [`Deadline`] passed before a worker *started* it (in the ingress
+//!   queue, in the batcher, or in the dispatch queue). Expired requests
+//!   are dropped at dispatch time with this typed reply instead of
+//!   being served late.
+//! - [`RouterError::WorkerDied`] — the thread serving this request
+//!   panicked or its decoder failed before a reply was produced. Reply
+//!   delivery is guard-based ([`ReplyGuard`]): the guard's `Drop` runs
+//!   during unwind, so even a panicking worker answers its callers with
+//!   this typed error rather than a dropped channel. The blocking
+//!   helpers additionally bound their wait with `recv_timeout` (derived
+//!   from the request deadline, or
+//!   [`ServerCfg::blocking_recv_timeout`]) and map a timeout to this
+//!   variant — no caller can hang on a dead worker.
+//!
+//! **Degraded replies.** A request that reaches a worker but cannot
+//! afford the full three-stage pipeline within its deadline is answered
+//! with the stage-1/2 shortlist ranking and `degraded: true` on
+//! [`Response`] — the QINCo2 pipeline's cheap approximate decoders are
+//! an explicit operating point, not a failure. Stage 3 is skipped
+//! whole, never half-run, so a degraded reply is exactly the stage-1/2
+//! ranking. The invariant: **degraded results are never emitted without
+//! the flag** — `degraded: false` always means the configured pipeline
+//! ran to completion (enforced in
+//! [`BatchSearcher::execute_within`](crate::index::BatchSearcher::execute_within),
+//! which only ever weakens the pipeline at the same points it sets the
+//! flag). Requests in one dispatch group execute under the tightest
+//! member's deadline and degrade together — the flag applies to every
+//! member of the group.
+//!
+//! **Supervision.** Read workers and the writer run under
+//! `catch_unwind`: a panic answers the offending batch's callers with
+//! `WorkerDied` (via the reply guards), bumps [`Stats::panics`] /
+//! [`Stats::respawns`], and re-enters the serve loop with a freshly
+//! constructed decoder — the pool never shrinks. This is safe on the
+//! write lane because mutations publish a complete epoch snapshot
+//! *atomically at the end*: a panicked mutation published nothing
+//! (see [`crate::index::pipeline`]). All shared metrics locks are
+//! poison-recovering ([`lock_ignore_poison`]): a panicked worker can
+//! never take down [`Router::stats`].
+//!
+//! **Fault injection.** With the `fault-injection` cargo feature the
+//! named probes of [`crate::util::fault`] come alive inside this module
+//! and the engine (batcher delay, worker panic, decoder error,
+//! queue-full, slow scan); `tests/fault_injection.rs` drives them with
+//! deterministic seeded plans to prove each one surfaces as a typed
+//! error or a flagged degraded reply.
+//!
 //! # Engine-per-worker stage-3 decoding
 //!
 //! Every worker thread constructs its own stage-3 [`StageDecoder`] by
-//! calling [`DecoderFactory::make`] **once at thread startup**. The
-//! factory defaults to the reference decoder
-//! ([`ReferenceDecoderFactory`]); configuring
+//! calling [`DecoderFactory::make`] **once at thread startup** (and
+//! again on respawn after a panic). The factory defaults to the
+//! reference decoder ([`ReferenceDecoderFactory`]); configuring
 //! [`ServerCfg::decoder_factory`] with a
 //! [`RuntimeDecoderFactory`](crate::qinco::RuntimeDecoderFactory) gives
 //! each worker a thread-local PJRT engine + codec — PJRT clients are
@@ -47,21 +117,26 @@
 //! ingest counters). The §B latency experiment and Fig. 6 QPS numbers
 //! come from here.
 //!
-//! Lifecycle: [`Router::shutdown`] closes both ingresses; the batcher
-//! flushes whatever it buffered and exits when the ingress disconnects,
-//! workers exit only when the batch channel is *both* disconnected and
-//! drained, and the writer thread drains every queued write — every
-//! accepted request gets its reply before the threads are joined.
-//! Submission after shutdown fails with [`RouterError::Stopped`] instead
-//! of panicking.
+//! Lifecycle: dropping the [`Router`] (or calling [`Router::shutdown`])
+//! closes both ingresses; the batcher flushes whatever it buffered and
+//! exits when the ingress disconnects, workers exit only when the batch
+//! channel is *both* disconnected and drained, and the writer thread
+//! drains every queued write — every accepted request gets its reply
+//! (possibly a typed error) before the threads are joined. Submission
+//! after shutdown fails with [`RouterError::Stopped`] instead of
+//! panicking.
 
 use crate::index::{BatchSearcher, EncodeParams, QueryPlan, SearchIndex, SearchParams};
 use crate::qinco::ReferenceDecoderFactory;
 use crate::quantizers::{DecoderFactory, StageDecoder};
 use crate::tensor::Matrix;
+use crate::util::deadline::Deadline;
+use crate::util::fault::{self, FaultPoint};
+use crate::util::prng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 #[derive(Clone)]
@@ -77,6 +152,26 @@ pub struct ServerCfg {
     /// the query ingress: a burst of ingest can never starve reads of
     /// queue space, and vice versa
     pub write_queue_cap: usize,
+    /// read-lane admission high-water mark: when this many read requests
+    /// are in flight (queued + serving), further submits are shed with
+    /// [`RouterError::Overloaded`]. `0` disables shedding (the bounded
+    /// ingress still applies backpressure).
+    pub shed_watermark: usize,
+    /// same, for the write lane
+    pub write_shed_watermark: usize,
+    /// how many times the blocking helpers retry an
+    /// `Overloaded`/`Saturated` submission (with exponential, jittered
+    /// backoff) before returning the error. `0` disables retry.
+    pub blocking_retries: usize,
+    /// base backoff between blocking-helper retries (doubles per
+    /// attempt, plus a deterministic jitter of up to half the step)
+    pub retry_backoff: Duration,
+    /// how long the blocking helpers wait for a reply when the request
+    /// carries **no** deadline, before concluding the serving thread
+    /// died ([`RouterError::WorkerDied`]). Deadline-carrying requests
+    /// wait `deadline + batch_timeout + grace` instead. Generous by
+    /// default — this is a liveness backstop, not a latency control.
+    pub blocking_recv_timeout: Duration,
     /// per-worker stage-3 decoder factory; `None` defaults to the
     /// reference decoder. Each worker thread calls `make()` once at
     /// startup (engine-per-worker — see the module docs).
@@ -91,6 +186,11 @@ impl std::fmt::Debug for ServerCfg {
             .field("batch_timeout", &self.batch_timeout)
             .field("queue_cap", &self.queue_cap)
             .field("write_queue_cap", &self.write_queue_cap)
+            .field("shed_watermark", &self.shed_watermark)
+            .field("write_shed_watermark", &self.write_shed_watermark)
+            .field("blocking_retries", &self.blocking_retries)
+            .field("retry_backoff", &self.retry_backoff)
+            .field("blocking_recv_timeout", &self.blocking_recv_timeout)
             .field("decoder_factory", &self.decoder_factory.as_ref().map(|_| "custom"))
             .finish()
     }
@@ -104,20 +204,33 @@ impl Default for ServerCfg {
             batch_timeout: Duration::from_micros(200),
             queue_cap: 1024,
             write_queue_cap: 64,
+            shed_watermark: 0,
+            write_shed_watermark: 0,
+            blocking_retries: 0,
+            retry_backoff: Duration::from_millis(1),
+            blocking_recv_timeout: Duration::from_secs(30),
             decoder_factory: None,
         }
     }
 }
 
-/// Why a router operation could not complete.
+/// Why a router operation could not complete. See the module-level
+/// "Failure model" section for when each variant is produced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RouterError {
     /// The router has been shut down; no new requests are accepted.
     Stopped,
     /// The ingress queue is full (backpressure) — retry or shed load.
     Saturated,
-    /// The serving thread handling this request died before replying.
+    /// The serving thread handling this request died (or its decoder
+    /// failed) before replying.
     WorkerDied,
+    /// The request's deadline passed before a worker started it.
+    DeadlineExceeded,
+    /// Admission control shed this request: the lane's in-flight
+    /// high-water mark is crossed. `retry_after_hint` estimates when
+    /// capacity should free up (mean latency × queue pressure, clamped).
+    Overloaded { retry_after_hint: Duration },
 }
 
 impl std::fmt::Display for RouterError {
@@ -126,16 +239,82 @@ impl std::fmt::Display for RouterError {
             RouterError::Stopped => write!(f, "router stopped"),
             RouterError::Saturated => write!(f, "ingress queue saturated"),
             RouterError::WorkerDied => write!(f, "worker died before replying"),
+            RouterError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the request was served")
+            }
+            RouterError::Overloaded { retry_after_hint } => {
+                write!(f, "overloaded; retry after ~{retry_after_hint:?}")
+            }
         }
     }
 }
 
 impl std::error::Error for RouterError {}
 
+/// What a read caller receives on its reply channel: the response, or a
+/// typed router error. Exactly one is delivered per accepted request.
+pub type Reply = Result<Response, RouterError>;
+
+/// The write lane's reply payload.
+pub type WriteReply = Result<WriteResponse, RouterError>;
+
+/// Which lane a reply guard accounts against.
+#[derive(Clone, Copy, Debug)]
+enum Lane {
+    Read,
+    Write,
+}
+
+/// Guard-based reply delivery: wraps a request's reply sender so that
+/// **some** reply always goes out — [`fulfill`](Self::fulfill) sends the
+/// real one; if the guard is instead dropped (worker panic → unwind,
+/// decoder failure path, router teardown with the request still queued)
+/// its `Drop` sends a typed [`RouterError::WorkerDied`]. Either way the
+/// lane's in-flight counter is decremented exactly once. This is what
+/// turns "a worker died" from a hung `recv()` into a typed error.
+pub struct ReplyGuard<T> {
+    tx: Option<SyncSender<Result<T, RouterError>>>,
+    metrics: Arc<MetricsInner>,
+    lane: Lane,
+}
+
+impl<T> ReplyGuard<T> {
+    fn new(tx: SyncSender<Result<T, RouterError>>, metrics: Arc<MetricsInner>, lane: Lane) -> Self {
+        ReplyGuard { tx: Some(tx), metrics, lane }
+    }
+
+    /// Deliver the reply. A dropped receiver (caller gave up) is not an
+    /// error.
+    pub fn fulfill(mut self, reply: Result<T, RouterError>) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(reply);
+        }
+        // Drop still runs and decrements the in-flight counter; it sees
+        // `tx == None` and sends nothing.
+    }
+}
+
+impl<T> Drop for ReplyGuard<T> {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Err(RouterError::WorkerDied));
+        }
+        let ctr = match self.lane {
+            Lane::Read => &self.metrics.read_inflight,
+            Lane::Write => &self.metrics.write_inflight,
+        };
+        ctr.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 pub struct Request {
     pub query: Vec<f32>,
     pub sp: SearchParams,
-    pub reply: SyncSender<Response>,
+    /// when this request must complete ([`Deadline::none()`] = never) —
+    /// checked by the batcher, the dispatch path, and the engine's scan
+    /// loops
+    pub deadline: Deadline,
+    pub reply: ReplyGuard<Response>,
     pub t_submit: Instant,
 }
 
@@ -143,6 +322,12 @@ pub struct Request {
 pub struct Response {
     pub results: Vec<(f32, u32)>,
     pub latency: Duration,
+    /// `true` when deadline pressure cut the pipeline short: `results`
+    /// is the stage-1/2 shortlist ranking (stage 3 skipped whole, or the
+    /// scan aborted early). `false` **guarantees** the configured
+    /// pipeline ran to completion — degraded results are never emitted
+    /// without this flag.
+    pub degraded: bool,
 }
 
 /// One mutation for the write lane, applied by the single writer thread
@@ -170,7 +355,11 @@ pub enum WriteOutcome {
 
 pub struct WriteRequest {
     pub op: WriteOp,
-    pub reply: SyncSender<WriteResponse>,
+    /// writes carry deadlines too: an op whose deadline passed before
+    /// the writer picked it up is answered `DeadlineExceeded` and never
+    /// applied (atomic: an op either fully publishes or does nothing)
+    pub deadline: Deadline,
+    pub reply: ReplyGuard<WriteResponse>,
     pub t_submit: Instant,
 }
 
@@ -182,6 +371,17 @@ pub struct WriteResponse {
     pub latency: Duration,
 }
 
+/// Lock a mutex, recovering from poisoning. Every shared-metrics lock in
+/// this module goes through here: a worker that panics while holding a
+/// latency-ring lock marks it poisoned, but the data inside is a plain
+/// `Vec<u64>` that is valid after any partial update (at worst one
+/// sample is missing), so recovery is always sound — and
+/// [`Router::stats`] must keep working precisely when workers are
+/// crashing. Same reasoning for the shared batch-channel mutex.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 struct MetricsInner {
     served: AtomicU64,
     /// nanoseconds, summed
@@ -190,6 +390,21 @@ struct MetricsInner {
     inserted: AtomicU64,
     /// rows tombstoned through the write lane
     deleted: AtomicU64,
+    /// worker panics caught by the supervisors
+    panics: AtomicU64,
+    /// worker loops re-entered after a panic (== panics today; kept
+    /// separate so a future restart-budget policy can diverge)
+    respawns: AtomicU64,
+    /// requests refused by admission control (both lanes)
+    shed: AtomicU64,
+    /// requests answered `DeadlineExceeded` before serving started
+    deadline_exceeded: AtomicU64,
+    /// replies delivered with `degraded: true`
+    degraded: AtomicU64,
+    /// read requests accepted and not yet replied to
+    read_inflight: AtomicU64,
+    /// write requests accepted and not yet replied to
+    write_inflight: AtomicU64,
     /// per-worker recent-latency rings (ns). Each worker pushes only
     /// into its own ring (capped at RECENT_CAP, oldest half evicted), so
     /// a chatty worker can never evict a quiet worker's samples;
@@ -201,6 +416,13 @@ struct MetricsInner {
 /// Per-worker recent-latency ring capacity.
 const RECENT_CAP: usize = 4096;
 
+/// Extra wait the blocking helpers grant past a request's deadline
+/// before declaring the worker dead: the reply for a deadline-expired
+/// request (typed `DeadlineExceeded`, or a degraded result) is produced
+/// *at* dispatch/scan-abort time, which can trail the deadline by a
+/// batching window.
+const RECV_GRACE: Duration = Duration::from_millis(100);
+
 impl MetricsInner {
     fn new(workers: usize) -> MetricsInner {
         MetricsInner {
@@ -208,6 +430,13 @@ impl MetricsInner {
             total_latency: AtomicU64::new(0),
             inserted: AtomicU64::new(0),
             deleted: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            read_inflight: AtomicU64::new(0),
+            write_inflight: AtomicU64::new(0),
             recent: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
@@ -215,10 +444,13 @@ impl MetricsInner {
 
 /// Merge the per-worker latency rings into one ascending-sorted vector —
 /// the sample set the nearest-rank percentiles are computed over.
+/// Poison-recovering: a worker that panicked mid-record must not take
+/// down `stats()` (satellite regression: `fault_injection.rs` panics a
+/// worker while it holds its ring lock, then asserts this still works).
 fn merged_sorted(rings: &[Mutex<Vec<u64>>]) -> Vec<u64> {
     let mut merged = Vec::new();
     for ring in rings {
-        merged.extend(ring.lock().unwrap().iter().copied());
+        merged.extend(lock_ignore_poison(ring).iter().copied());
     }
     merged.sort_unstable();
     merged
@@ -257,6 +489,16 @@ pub struct Stats {
     pub deleted: u64,
     /// the index's current publication epoch at snapshot time
     pub epoch: u64,
+    /// worker/writer panics caught by the supervisors
+    pub panics: u64,
+    /// serve loops re-entered after a caught panic
+    pub respawns: u64,
+    /// requests shed by admission control (both lanes)
+    pub shed: u64,
+    /// requests answered `DeadlineExceeded` before serving started
+    pub deadline_exceeded: u64,
+    /// replies delivered with `degraded: true`
+    pub degraded: u64,
 }
 
 /// Nearest-rank percentile of an ascending-sorted latency vector: the
@@ -272,9 +514,12 @@ fn percentile(sorted: &[u64], p: f64) -> Duration {
 }
 
 pub struct Router {
-    ingress: SyncSender<Request>,
+    /// `Option` so `Drop` can close the lane and then join (shutdown
+    /// drain); always `Some` while the router is live
+    ingress: Option<SyncSender<Request>>,
     /// the write lane's own bounded ingress (see the module docs)
-    write_ingress: SyncSender<WriteRequest>,
+    write_ingress: Option<SyncSender<WriteRequest>>,
+    cfg: ServerCfg,
     metrics: Arc<MetricsInner>,
     /// shared with the workers; [`Self::stats`] reads the per-shard scan
     /// counters off it
@@ -282,6 +527,9 @@ pub struct Router {
     /// per-shard scan counts at router startup — subtracted in
     /// [`Self::stats`] so `shard_scans` covers only this router's traffic
     scan_base: Vec<u64>,
+    /// feeds the deterministic retry-backoff jitter (each retry draws a
+    /// fresh SplitMix64 stream keyed by this sequence)
+    jitter_seq: AtomicU64,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -295,16 +543,21 @@ impl Router {
         let metrics = Arc::new(MetricsInner::new(workers));
         let mut handles = Vec::new();
 
-        // --- batcher: groups ingress into dispatch units ---
+        // --- batcher: groups ingress into dispatch units, drops expired
+        // requests with a typed DeadlineExceeded reply ---
         {
             let max_batch = cfg.max_batch;
             let timeout = cfg.batch_timeout;
+            let metrics = metrics.clone();
             handles.push(std::thread::spawn(move || {
-                batcher_loop(in_rx, batch_tx, max_batch, timeout)
+                batcher_loop(in_rx, batch_tx, max_batch, timeout, &metrics)
             }));
         }
         // --- workers: each dispatches whole batches through the engine,
-        // with a stage-3 decoder built once per thread by the factory ---
+        // with a stage-3 decoder built once per (re)spawn by the
+        // factory. Supervised: a panic is caught, counted, and the loop
+        // re-entered — the offending batch's callers got WorkerDied
+        // through their reply guards during the unwind ---
         let factory: Arc<dyn DecoderFactory> = cfg.decoder_factory.clone().unwrap_or_else(|| {
             Arc::new(ReferenceDecoderFactory { params: index.params.clone() })
         });
@@ -313,112 +566,340 @@ impl Router {
             let idx = index.clone();
             let metrics = metrics.clone();
             let factory = factory.clone();
-            handles.push(std::thread::spawn(move || {
-                // engine-per-worker: PJRT clients are Rc-based and not
-                // Send, so each thread constructs its own decoder. A
-                // failed factory (stub runtime, missing artifacts)
-                // degrades this worker to the index's shared decoder.
-                let mut local: Option<Box<dyn StageDecoder>> = match factory.make() {
-                    Ok(d) => Some(d),
-                    Err(e) => {
+            handles.push(std::thread::spawn(move || loop {
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    worker_loop(&idx, &metrics, w, &rx, factory.as_ref())
+                }));
+                match run {
+                    // batch channel disconnected + drained: clean exit
+                    Ok(()) => return,
+                    Err(_) => {
+                        metrics.panics.fetch_add(1, Ordering::Relaxed);
+                        metrics.respawns.fetch_add(1, Ordering::Relaxed);
                         eprintln!(
-                            "[server] worker {w}: decoder factory failed ({e}); \
-                             falling back to the index's stage-3 decoder"
+                            "[server] worker {w} panicked; respawning \
+                             (its in-flight callers were answered WorkerDied)"
                         );
-                        None
-                    }
-                };
-                loop {
-                    let batch = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    match batch {
-                        Ok(batch) => serve_batch(&idx, &metrics, w, batch, &mut local),
-                        // the batcher exited and every queued batch has
-                        // been drained — nothing in flight can be lost
-                        Err(_) => return,
                     }
                 }
             }));
         }
-        // --- write lane: one bounded channel, one writer thread. A
-        // single drainer keeps ops in submission order and means the
-        // index's writer mutex is never contended from here ---
+        // --- write lane: one bounded channel, one supervised writer
+        // thread. A single drainer keeps ops in submission order and
+        // means the index's writer mutex is never contended from here.
+        // Respawn-after-panic is safe here because every mutation
+        // publishes its epoch snapshot atomically at the end — a
+        // panicked mutation published nothing ---
         let (write_tx, write_rx) = sync_channel::<WriteRequest>(cfg.write_queue_cap.max(1));
         {
             let idx = index.clone();
             let metrics = metrics.clone();
-            handles.push(std::thread::spawn(move || writer_loop(&idx, &metrics, write_rx)));
+            handles.push(std::thread::spawn(move || loop {
+                let run =
+                    catch_unwind(AssertUnwindSafe(|| writer_loop(&idx, &metrics, &write_rx)));
+                match run {
+                    Ok(()) => return,
+                    Err(_) => {
+                        metrics.panics.fetch_add(1, Ordering::Relaxed);
+                        metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "[server] writer panicked; respawning \
+                             (the offending op's caller was answered WorkerDied)"
+                        );
+                    }
+                }
+            }));
         }
         let scan_base = index.snapshot().scan_counts();
-        Router { ingress: in_tx, write_ingress: write_tx, metrics, index, scan_base, handles }
+        Router {
+            ingress: Some(in_tx),
+            write_ingress: Some(write_tx),
+            cfg,
+            metrics,
+            index,
+            scan_base,
+            jitter_seq: AtomicU64::new(0),
+            handles,
+        }
     }
 
-    /// Submit a query; returns the channel the response arrives on.
-    /// Blocks when the ingress queue is full (backpressure).
-    pub fn submit(
+    fn ingress(&self) -> &SyncSender<Request> {
+        self.ingress.as_ref().expect("ingress is Some until Drop")
+    }
+
+    fn write_ingress(&self) -> &SyncSender<WriteRequest> {
+        self.write_ingress.as_ref().expect("write ingress is Some until Drop")
+    }
+
+    /// Estimated wait before a shed caller should retry: mean request
+    /// latency scaled by queue pressure (in-flight per worker), clamped
+    /// to [100µs, 1s]. Cheap and advisory — the point is giving shed
+    /// clients *something* better than blind hammering.
+    fn retry_after_hint(&self) -> Duration {
+        let served = self.metrics.served.load(Ordering::Relaxed);
+        let mean_ns = if served > 0 {
+            self.metrics.total_latency.load(Ordering::Relaxed) / served
+        } else {
+            self.cfg.batch_timeout.as_nanos() as u64
+        };
+        let queued = self.metrics.read_inflight.load(Ordering::Relaxed);
+        let per_worker = queued / self.cfg.workers.max(1) as u64 + 1;
+        Duration::from_nanos(mean_ns.saturating_mul(per_worker))
+            .clamp(Duration::from_micros(100), Duration::from_secs(1))
+    }
+
+    /// Admission gate for the read lane (and the `QueueFull` fault
+    /// probe): shed with `Overloaded` when the in-flight high-water mark
+    /// is crossed.
+    fn admit_read(&self) -> Result<(), RouterError> {
+        let tripped = fault::fire(FaultPoint::QueueFull).is_some()
+            || (self.cfg.shed_watermark > 0
+                && self.metrics.read_inflight.load(Ordering::Relaxed)
+                    >= self.cfg.shed_watermark as u64);
+        if tripped {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(RouterError::Overloaded { retry_after_hint: self.retry_after_hint() });
+        }
+        Ok(())
+    }
+
+    fn admit_write(&self) -> Result<(), RouterError> {
+        let tripped = self.cfg.write_shed_watermark > 0
+            && self.metrics.write_inflight.load(Ordering::Relaxed)
+                >= self.cfg.write_shed_watermark as u64;
+        if tripped {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(RouterError::Overloaded { retry_after_hint: self.retry_after_hint() });
+        }
+        Ok(())
+    }
+
+    /// Submit a query with no deadline; returns the channel the
+    /// [`Reply`] arrives on. Blocks when the ingress queue is full
+    /// (backpressure); sheds with [`RouterError::Overloaded`] when the
+    /// admission watermark is crossed.
+    pub fn submit(&self, query: Vec<f32>, sp: SearchParams) -> Result<Receiver<Reply>, RouterError> {
+        self.submit_within(query, sp, Deadline::none())
+    }
+
+    /// [`Self::submit`] with a deadline carried on the request.
+    pub fn submit_within(
         &self,
         query: Vec<f32>,
         sp: SearchParams,
-    ) -> Result<Receiver<Response>, RouterError> {
+        deadline: Deadline,
+    ) -> Result<Receiver<Reply>, RouterError> {
+        self.admit_read()?;
         let (tx, rx) = sync_channel(1);
-        let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
-        self.ingress.send(req).map_err(|_| RouterError::Stopped)?;
+        self.metrics.read_inflight.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            query,
+            sp,
+            deadline,
+            reply: ReplyGuard::new(tx, self.metrics.clone(), Lane::Read),
+            t_submit: Instant::now(),
+        };
+        // a failed send drops `req`, whose guard decrements the
+        // in-flight count again — accounting stays exact
+        self.ingress().send(req).map_err(|_| RouterError::Stopped)?;
         Ok(rx)
     }
 
-    /// Non-blocking submit: fails fast when the queue is saturated.
+    /// Non-blocking submit: fails fast with [`RouterError::Saturated`]
+    /// when the bounded queue is full (admission shedding still applies
+    /// first).
     pub fn try_submit(
         &self,
         query: Vec<f32>,
         sp: SearchParams,
-    ) -> Result<Receiver<Response>, RouterError> {
+    ) -> Result<Receiver<Reply>, RouterError> {
+        self.try_submit_within(query, sp, Deadline::none())
+    }
+
+    /// [`Self::try_submit`] with a deadline carried on the request.
+    pub fn try_submit_within(
+        &self,
+        query: Vec<f32>,
+        sp: SearchParams,
+        deadline: Deadline,
+    ) -> Result<Receiver<Reply>, RouterError> {
+        self.admit_read()?;
         let (tx, rx) = sync_channel(1);
-        let req = Request { query, sp, reply: tx, t_submit: Instant::now() };
-        match self.ingress.try_send(req) {
+        self.metrics.read_inflight.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            query,
+            sp,
+            deadline,
+            reply: ReplyGuard::new(tx, self.metrics.clone(), Lane::Read),
+            t_submit: Instant::now(),
+        };
+        match self.ingress().try_send(req) {
             Ok(()) => Ok(rx),
+            // the rejected request (inside the error) drops here, which
+            // reverses its in-flight increment via the guard
             Err(TrySendError::Full(_)) => Err(RouterError::Saturated),
             Err(TrySendError::Disconnected(_)) => Err(RouterError::Stopped),
         }
     }
 
-    /// Synchronous convenience wrapper.
+    /// Synchronous convenience wrapper (no deadline; the
+    /// [`ServerCfg::blocking_recv_timeout`] backstop still applies).
     pub fn search_blocking(
         &self,
         query: &[f32],
         sp: SearchParams,
     ) -> Result<Response, RouterError> {
-        self.submit(query.to_vec(), sp)?
-            .recv()
-            .map_err(|_| RouterError::WorkerDied)
+        self.search_within(query, sp, Deadline::none())
     }
 
-    /// Submit a mutation to the write lane; returns the channel the
-    /// [`WriteResponse`] arrives on. Blocks when the write queue is full
-    /// (backpressure, independent of the query ingress).
-    pub fn submit_write(&self, op: WriteOp) -> Result<Receiver<WriteResponse>, RouterError> {
+    /// Synchronous search under a deadline. Retries
+    /// `Overloaded`/`Saturated` submissions up to
+    /// [`ServerCfg::blocking_retries`] times with exponential,
+    /// deterministically-jittered backoff, then waits for the reply with
+    /// `recv_timeout` (deadline + grace, or the configured backstop) —
+    /// a timeout maps to [`RouterError::WorkerDied`], so this can never
+    /// hang on a dead worker.
+    pub fn search_within(
+        &self,
+        query: &[f32],
+        sp: SearchParams,
+        deadline: Deadline,
+    ) -> Result<Response, RouterError> {
+        let mut attempt = 0usize;
+        loop {
+            match self.submit_within(query.to_vec(), sp, deadline) {
+                Ok(rx) => return self.bounded_recv(&rx, deadline),
+                Err(e @ (RouterError::Overloaded { .. } | RouterError::Saturated)) => {
+                    if attempt >= self.cfg.blocking_retries || deadline.expired() {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.backoff(attempt, deadline);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Wait for a reply, bounded: never longer than the request deadline
+    /// plus a batching-window grace, never unbounded even without a
+    /// deadline.
+    fn bounded_recv<T>(
+        &self,
+        rx: &Receiver<Result<T, RouterError>>,
+        deadline: Deadline,
+    ) -> Result<T, RouterError> {
+        let timeout = match deadline.remaining() {
+            Some(rem) => rem + self.cfg.batch_timeout + RECV_GRACE,
+            None => self.cfg.blocking_recv_timeout,
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(reply) => reply,
+            // Timeout: the serving thread is wedged (the guard protocol
+            // would have delivered *something* by now). Disconnected:
+            // sender vanished without the guard firing — only possible
+            // on abnormal teardown. Both are a dead worker to the caller.
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                Err(RouterError::WorkerDied)
+            }
+        }
+    }
+
+    /// Exponential backoff with deterministic jitter (SplitMix64 over a
+    /// submission sequence number — reproducible, no shared RNG state),
+    /// capped by the remaining deadline.
+    fn backoff(&self, attempt: usize, deadline: Deadline) {
+        let base = self.cfg.retry_backoff.max(Duration::from_micros(50));
+        let step = base.saturating_mul(1u32 << (attempt - 1).min(6));
+        let seq = self.jitter_seq.fetch_add(1, Ordering::Relaxed);
+        let jitter_ns =
+            Rng::new(0x9E37_79B9_7F4A_7C15 ^ seq).next_u64() % (step.as_nanos() as u64 / 2 + 1);
+        let mut wait = step + Duration::from_nanos(jitter_ns);
+        if let Some(rem) = deadline.remaining() {
+            wait = wait.min(rem);
+        }
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+
+    /// Submit a mutation to the write lane (no deadline); returns the
+    /// channel the [`WriteReply`] arrives on. Blocks when the write
+    /// queue is full (backpressure, independent of the query ingress).
+    pub fn submit_write(&self, op: WriteOp) -> Result<Receiver<WriteReply>, RouterError> {
+        self.submit_write_within(op, Deadline::none())
+    }
+
+    /// [`Self::submit_write`] with a deadline: the writer answers
+    /// `DeadlineExceeded` (and does not apply the op) if it picks the op
+    /// up too late.
+    pub fn submit_write_within(
+        &self,
+        op: WriteOp,
+        deadline: Deadline,
+    ) -> Result<Receiver<WriteReply>, RouterError> {
+        self.admit_write()?;
         let (tx, rx) = sync_channel(1);
-        let req = WriteRequest { op, reply: tx, t_submit: Instant::now() };
-        self.write_ingress.send(req).map_err(|_| RouterError::Stopped)?;
+        self.metrics.write_inflight.fetch_add(1, Ordering::Relaxed);
+        let req = WriteRequest {
+            op,
+            deadline,
+            reply: ReplyGuard::new(tx, self.metrics.clone(), Lane::Write),
+            t_submit: Instant::now(),
+        };
+        self.write_ingress().send(req).map_err(|_| RouterError::Stopped)?;
         Ok(rx)
     }
 
     /// Non-blocking write submit: fails fast when the write queue is
     /// saturated.
-    pub fn try_submit_write(&self, op: WriteOp) -> Result<Receiver<WriteResponse>, RouterError> {
+    pub fn try_submit_write(&self, op: WriteOp) -> Result<Receiver<WriteReply>, RouterError> {
+        self.admit_write()?;
         let (tx, rx) = sync_channel(1);
-        let req = WriteRequest { op, reply: tx, t_submit: Instant::now() };
-        match self.write_ingress.try_send(req) {
+        self.metrics.write_inflight.fetch_add(1, Ordering::Relaxed);
+        let req = WriteRequest {
+            op,
+            deadline: Deadline::none(),
+            reply: ReplyGuard::new(tx, self.metrics.clone(), Lane::Write),
+            t_submit: Instant::now(),
+        };
+        match self.write_ingress().try_send(req) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => Err(RouterError::Saturated),
             Err(TrySendError::Disconnected(_)) => Err(RouterError::Stopped),
         }
     }
 
-    /// Synchronous write convenience wrapper.
+    /// Synchronous write convenience wrapper (bounded wait — see
+    /// [`Self::write_within`]).
     pub fn write_blocking(&self, op: WriteOp) -> Result<WriteResponse, RouterError> {
-        self.submit_write(op)?.recv().map_err(|_| RouterError::WorkerDied)
+        self.write_within(op, Deadline::none())
+    }
+
+    /// Synchronous write under a deadline, with the same bounded
+    /// retry/backoff/`recv_timeout` discipline as [`Self::search_within`].
+    pub fn write_within(
+        &self,
+        op: WriteOp,
+        deadline: Deadline,
+    ) -> Result<WriteResponse, RouterError> {
+        let mut attempt = 0usize;
+        loop {
+            // WriteOp is Clone; retries are rare and bounded, so a clone
+            // per attempt beats threading ownership back out of a
+            // refused submit
+            match self.submit_write_within(op.clone(), deadline) {
+                Ok(rx) => return self.bounded_recv(&rx, deadline),
+                Err(e @ (RouterError::Overloaded { .. } | RouterError::Saturated)) => {
+                    if attempt >= self.cfg.blocking_retries || deadline.expired() {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.backoff(attempt, deadline);
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     pub fn stats(&self) -> Stats {
@@ -443,16 +924,32 @@ impl Router {
             inserted: self.metrics.inserted.load(Ordering::Relaxed),
             deleted: self.metrics.deleted.load(Ordering::Relaxed),
             epoch: self.index.epoch(),
+            panics: self.metrics.panics.load(Ordering::Relaxed),
+            respawns: self.metrics.respawns.load(Ordering::Relaxed),
+            shed: self.metrics.shed.load(Ordering::Relaxed),
+            deadline_exceeded: self.metrics.deadline_exceeded.load(Ordering::Relaxed),
+            degraded: self.metrics.degraded.load(Ordering::Relaxed),
         }
     }
 
-    /// Graceful shutdown: close both ingresses, let the batcher flush
-    /// its buffer, let workers drain and answer every queued batch, let
-    /// the writer apply every queued write, then join all threads. No
-    /// accepted request is dropped.
-    pub fn shutdown(mut self) {
-        drop(self.ingress);
-        drop(self.write_ingress);
+    /// Graceful shutdown: equivalent to dropping the router. Close both
+    /// ingresses, let the batcher flush its buffer, let workers drain
+    /// and answer every queued batch, let the writer apply every queued
+    /// write, then join all threads. Every accepted request receives its
+    /// reply (a result or a typed error) — no silently lost senders.
+    pub fn shutdown(self) {
+        // Drop does the work; see `impl Drop for Router`.
+    }
+}
+
+/// Dropping the router IS graceful shutdown — the drain property holds
+/// even when the router goes out of scope with reads in flight and
+/// writes queued (pinned by the shutdown-under-load property test in
+/// `tests/coordinator_props.rs`).
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.ingress.take();
+        self.write_ingress.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -461,10 +958,17 @@ impl Router {
 
 /// The write lane's single drainer: apply each op, count rows, reply.
 /// Exits when the write ingress disconnects and every queued op has been
-/// applied.
-fn writer_loop(idx: &SearchIndex, metrics: &MetricsInner, rx: Receiver<WriteRequest>) {
+/// applied. Deadline-expired ops are answered `DeadlineExceeded` and
+/// **not** applied — an op either fully publishes or does nothing.
+fn writer_loop(idx: &SearchIndex, metrics: &MetricsInner, rx: &Receiver<WriteRequest>) {
     while let Ok(req) = rx.recv() {
-        let outcome = match &req.op {
+        let WriteRequest { op, deadline, reply, t_submit } = req;
+        if deadline.expired() {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            reply.fulfill(Err(RouterError::DeadlineExceeded));
+            continue;
+        }
+        let outcome = match &op {
             WriteOp::Insert { vectors, ep } => idx
                 .insert(vectors, ep)
                 .map(|gids| {
@@ -481,10 +985,49 @@ fn writer_loop(idx: &SearchIndex, metrics: &MetricsInner, rx: Receiver<WriteRequ
                 .map_err(|e| e.to_string()),
             WriteOp::Compact => Ok(WriteOutcome::Compacted(idx.compact())),
         };
-        // a dropped receiver (caller gave up) is not an error
-        let _ = req
-            .reply
-            .send(WriteResponse { outcome, latency: req.t_submit.elapsed() });
+        reply.fulfill(Ok(WriteResponse { outcome, latency: t_submit.elapsed() }));
+    }
+}
+
+/// One read worker's serve loop: pull dispatch units off the shared
+/// batch channel and serve them. Runs under the supervisor's
+/// `catch_unwind`; a fresh decoder is constructed per entry (so a
+/// respawned worker gets a clean one). Returns when the batch channel is
+/// disconnected **and** drained — nothing in flight can be lost.
+fn worker_loop(
+    idx: &Arc<SearchIndex>,
+    metrics: &Arc<MetricsInner>,
+    w: usize,
+    rx: &Arc<Mutex<Receiver<Vec<Request>>>>,
+    factory: &dyn DecoderFactory,
+) {
+    // engine-per-worker: PJRT clients are Rc-based and not Send, so
+    // each thread constructs its own decoder. A failed factory (stub
+    // runtime, missing artifacts) degrades this worker to the index's
+    // shared decoder.
+    let mut local: Option<Box<dyn StageDecoder>> = match factory.make() {
+        Ok(d) => Some(d),
+        Err(e) => {
+            eprintln!(
+                "[server] worker {w}: decoder factory failed ({e}); \
+                 falling back to the index's stage-3 decoder"
+            );
+            None
+        }
+    };
+    loop {
+        // poison-recovering: another worker panicking between recv and
+        // guard-drop would poison this mutex for the whole pool
+        let batch = {
+            let guard = lock_ignore_poison(rx);
+            guard.recv()
+        };
+        match batch {
+            Ok(batch) => serve_batch(idx, metrics, w, batch, &mut local),
+            // the batcher exited and every queued batch has been
+            // drained — nothing in flight can be lost
+            Err(_) => return,
+        }
     }
 }
 
@@ -492,16 +1035,19 @@ fn writer_loop(idx: &SearchIndex, metrics: &MetricsInner, rx: Receiver<WriteRequ
 /// and run each group through the batched engine in a single execute —
 /// one scattered shard-group scan and one union decode per group
 /// (heterogeneous per-shard pipelines, when configured on the index,
-/// are resolved inside the engine). `worker` indexes this thread's own
-/// latency ring in `metrics`. `decoder` is
-/// this worker's thread-local stage-3 decoder (engine-per-worker); when
-/// it is absent the index's own decoder runs. A decode failure
-/// re-executes the group with the index decoder (every request still
-/// gets a reply unless that decoder *also* fails — then the replies
-/// drop and callers see `WorkerDied`) and then *drops* the local
-/// decoder — decoder failures are configuration errors (missing
-/// artifact, stubbed runtime), not transient, so the worker must not
-/// pay a doubled execute on every subsequent batch.
+/// are resolved inside the engine). Each group executes under the
+/// **earliest** deadline among its members (the group degrades
+/// together; every member gets the same `degraded` flag). Requests
+/// already expired at dispatch are answered `DeadlineExceeded` without
+/// being planned. `worker` indexes this thread's own latency ring in
+/// `metrics`. `decoder` is this worker's thread-local stage-3 decoder
+/// (engine-per-worker); when it is absent the index's own decoder runs.
+/// A decode failure re-executes the group with the index decoder (every
+/// request still gets a reply unless that decoder *also* fails — then
+/// the members' reply guards deliver typed `WorkerDied`) and then
+/// *drops* the local decoder — decoder failures are configuration
+/// errors (missing artifact, stubbed runtime), not transient, so the
+/// worker must not pay a doubled execute on every subsequent batch.
 fn serve_batch(
     idx: &SearchIndex,
     metrics: &MetricsInner,
@@ -510,57 +1056,73 @@ fn serve_batch(
     decoder: &mut Option<Box<dyn StageDecoder>>,
 ) {
     let searcher = BatchSearcher::new(idx);
-    let mut done = vec![false; batch.len()];
-    for s in 0..batch.len() {
-        if done[s] {
+    // group by identical SearchParams, preserving arrival order;
+    // deadline-expired requests are answered here, before any planning
+    let mut groups: Vec<(SearchParams, Deadline, Vec<Request>)> = Vec::new();
+    for req in batch {
+        if req.deadline.expired() {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            req.reply.fulfill(Err(RouterError::DeadlineExceeded));
             continue;
         }
-        let sp = batch[s].sp;
-        let members: Vec<usize> =
-            (s..batch.len()).filter(|&j| !done[j] && batch[j].sp == sp).collect();
-        for &j in &members {
-            done[j] = true;
+        match groups.iter_mut().find(|(sp, _, _)| *sp == req.sp) {
+            Some((_, dl, members)) => {
+                *dl = dl.earliest(req.deadline);
+                members.push(req);
+            }
+            None => groups.push((req.sp, req.deadline, vec![req])),
         }
+    }
+    for (sp, dl, members) in groups {
         let plans: Vec<QueryPlan> =
-            members.iter().map(|&j| searcher.plan(&batch[j].query, &sp)).collect();
-        let mut results = None;
-        let mut decoder_failed = false;
-        if let Some(d) = decoder.as_deref() {
-            match searcher.execute_with_decoder(&plans, &sp, d) {
-                Ok(r) => results = Some(r),
-                Err(e) => {
-                    decoder_failed = true;
-                    eprintln!(
-                        "[server] stage-3 decoder '{}' failed ({e}); this worker \
-                         serves with the index decoder from now on",
-                        d.name()
-                    );
+            members.iter().map(|r| searcher.plan(&r.query, &sp)).collect();
+        // fault probe: one decision per group; an injected decoder
+        // error fails BOTH decode paths (thread-local and index-held),
+        // modeling a corrupted artifact rather than a per-engine blip
+        let injected = fault::fire(FaultPoint::DecoderError).is_some();
+        let mut output = None;
+        if !injected {
+            if let Some(d) = decoder.as_deref() {
+                match searcher.execute_within(&plans, &sp, Some(d), dl) {
+                    Ok(out) => output = Some(out),
+                    Err(e) => {
+                        eprintln!(
+                            "[server] stage-3 decoder '{}' failed ({e}); this worker \
+                             serves with the index decoder from now on",
+                            d.name()
+                        );
+                        *decoder = None;
+                    }
                 }
             }
         }
-        if decoder_failed {
-            *decoder = None;
-        }
-        let results = match results {
-            Some(r) => r,
-            // the index-held decoders are infallible in practice; if one
-            // ever fails the affected requests' reply channels drop so
-            // callers observe WorkerDied instead of hanging — the engine
-            // no longer panics the worker thread from inside
-            None => match searcher.execute(&plans, &sp) {
-                Ok(r) => r,
-                Err(e) => {
-                    eprintln!(
-                        "[server] index stage-3 decoder failed ({e}); \
-                         dropping {} replies",
-                        members.len()
-                    );
-                    continue;
+        let output = match output {
+            Some(out) => out,
+            None => {
+                let fallback = if injected {
+                    Err(anyhow::anyhow!("injected stage-3 decoder failure"))
+                } else {
+                    searcher.execute_within(&plans, &sp, None, dl)
+                };
+                match fallback {
+                    Ok(out) => out,
+                    Err(e) => {
+                        eprintln!(
+                            "[server] stage-3 decode failed with no fallback ({e}); \
+                             {} callers get WorkerDied",
+                            members.len()
+                        );
+                        // dropping the members runs their reply guards:
+                        // every caller receives typed WorkerDied
+                        continue;
+                    }
                 }
-            },
+            }
         };
-        for (&j, results_j) in members.iter().zip(results) {
-            let req = &batch[j];
+        if output.degraded {
+            metrics.degraded.fetch_add(members.len() as u64, Ordering::Relaxed);
+        }
+        for (req, results_j) in members.into_iter().zip(output.results) {
             let latency = req.t_submit.elapsed();
             metrics.served.fetch_add(1, Ordering::Relaxed);
             metrics
@@ -569,7 +1131,14 @@ fn serve_batch(
             {
                 // this worker's own ring: eviction here can never drop
                 // another worker's samples (see the Stats docs)
-                let mut recent = metrics.recent[worker].lock().unwrap();
+                let mut recent = lock_ignore_poison(&metrics.recent[worker]);
+                // fault probe: panic while the ring lock is held — the
+                // worst case for stats() (lock poisoned mid-record) and
+                // for this request's caller (reply not yet sent; the
+                // guard delivers WorkerDied during unwind)
+                if fault::fire(FaultPoint::WorkerPanic).is_some() {
+                    panic!("injected worker panic (latency-ring lock held)");
+                }
                 if recent.len() >= RECENT_CAP {
                     let n = recent.len();
                     recent.copy_within(n / 2.., 0);
@@ -577,8 +1146,11 @@ fn serve_batch(
                 }
                 recent.push(latency.as_nanos() as u64);
             }
-            // a dropped receiver (caller gave up) is not an error
-            let _ = req.reply.send(Response { results: results_j, latency });
+            req.reply.fulfill(Ok(Response {
+                results: results_j,
+                latency,
+                degraded: output.degraded,
+            }));
         }
     }
 }
@@ -588,6 +1160,7 @@ fn batcher_loop(
     batch_tx: SyncSender<Vec<Request>>,
     max_batch: usize,
     timeout: Duration,
+    metrics: &MetricsInner,
 ) {
     loop {
         // block for the first request of a batch; a disconnect here means
@@ -597,13 +1170,13 @@ fn batcher_loop(
             Err(_) => return,
         };
         let mut batch = vec![first];
-        let deadline = Instant::now() + timeout;
+        let window = Instant::now() + timeout;
         while batch.len() < max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= window {
                 break;
             }
-            match in_rx.recv_timeout(deadline - now) {
+            match in_rx.recv_timeout(window - now) {
                 Ok(r) => batch.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 // ingress closed mid-batch: flush what we have, then the
@@ -611,7 +1184,26 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        if batch_tx.send(batch).is_err() {
+        // fault probe: a stalled dispatch thread
+        if let Some(delay) = fault::fire(FaultPoint::BatcherDelay) {
+            std::thread::sleep(delay);
+        }
+        // drop requests whose deadline passed while queued/batched, with
+        // a typed reply — serving them late helps no one and steals scan
+        // time from live requests
+        let mut live = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.deadline.expired() {
+                metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                req.reply.fulfill(Err(RouterError::DeadlineExceeded));
+            } else {
+                live.push(req);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        if batch_tx.send(live).is_err() {
             return;
         }
     }
@@ -687,9 +1279,52 @@ mod tests {
     }
 
     #[test]
+    fn merged_sorted_recovers_from_a_poisoned_ring() {
+        // satellite regression (unit-level): a worker that panicked
+        // while holding its ring lock must not take down the stats path.
+        // The full router-level version lives in tests/fault_injection.rs
+        let rings = vec![Mutex::new(vec![3u64, 1]), Mutex::new(vec![2u64])];
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = rings[0].lock().unwrap();
+            panic!("simulated mid-record panic");
+        }));
+        assert!(rings[0].is_poisoned(), "the panic must actually poison the lock");
+        assert_eq!(merged_sorted(&rings), vec![1, 2, 3]);
+    }
+
+    #[test]
     fn router_error_formats() {
         assert_eq!(RouterError::Stopped.to_string(), "router stopped");
         assert!(RouterError::Saturated.to_string().contains("saturated"));
         assert!(RouterError::WorkerDied.to_string().contains("died"));
+        assert!(RouterError::DeadlineExceeded.to_string().contains("deadline"));
+        let e = RouterError::Overloaded { retry_after_hint: Duration::from_millis(3) };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(e.to_string().contains("retry"));
+    }
+
+    #[test]
+    fn reply_guard_drop_delivers_typed_worker_died() {
+        let metrics = Arc::new(MetricsInner::new(0));
+        metrics.read_inflight.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel::<Reply>(1);
+        let guard: ReplyGuard<Response> = ReplyGuard::new(tx, metrics.clone(), Lane::Read);
+        drop(guard); // simulates an unwinding worker
+        assert_eq!(rx.recv().unwrap().unwrap_err(), RouterError::WorkerDied);
+        assert_eq!(metrics.read_inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn reply_guard_fulfill_sends_once_and_decrements_once() {
+        let metrics = Arc::new(MetricsInner::new(0));
+        metrics.write_inflight.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel::<WriteReply>(1);
+        let guard: ReplyGuard<WriteResponse> = ReplyGuard::new(tx, metrics.clone(), Lane::Write);
+        guard.fulfill(Err(RouterError::DeadlineExceeded));
+        assert_eq!(rx.recv().unwrap().unwrap_err(), RouterError::DeadlineExceeded);
+        // exactly one reply: the channel is now disconnected, not holding
+        // a second (guard-drop) message
+        assert!(rx.recv().is_err());
+        assert_eq!(metrics.write_inflight.load(Ordering::Relaxed), 0);
     }
 }

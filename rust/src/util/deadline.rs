@@ -1,0 +1,131 @@
+//! Request deadlines for the serving stack.
+//!
+//! A [`Deadline`] is an optional wall-clock instant carried on every
+//! [`Request`](crate::server::Request) /
+//! [`WriteRequest`](crate::server::WriteRequest) and threaded through
+//! the batched engine. It is the one currency of the failure model:
+//! the batcher drops requests whose deadline passed before dispatch
+//! (typed `DeadlineExceeded`), the engine checks it between bucket-group
+//! scans and before stage 3 (degrading to the stage-1/2 shortlist
+//! ranking instead of timing out — see
+//! [`BatchSearcher::execute_within`](crate::index::BatchSearcher::execute_within)),
+//! and the blocking helpers derive their `recv_timeout` from it so no
+//! caller can hang on a dead worker.
+//!
+//! `Deadline::none()` (the default) disables every check: all the
+//! deadline-aware paths reduce to their historical behavior, which is
+//! what keeps the bit-identity suites (`batch_equivalence`,
+//! `mutation_invariants`) pinned.
+
+use std::time::{Duration, Instant};
+
+/// An optional point in time a request must complete by. `Copy`, cheap
+/// to carry, cheap to check (`expired` is one `Instant::now()` when set,
+/// a branch on `None` otherwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// No deadline: every check passes, every wait is unbounded (the
+    /// blocking helpers still apply their own generous default).
+    pub const fn none() -> Deadline {
+        Deadline(None)
+    }
+
+    /// Deadline at a specific instant.
+    pub fn at(t: Instant) -> Deadline {
+        Deadline(Some(t))
+    }
+
+    /// Deadline `d` from now.
+    pub fn after(d: Duration) -> Deadline {
+        Deadline(Some(Instant::now() + d))
+    }
+
+    /// CLI convention: `0` means disabled, anything else is milliseconds
+    /// from now.
+    pub fn from_ms(ms: u64) -> Deadline {
+        if ms == 0 {
+            Deadline::none()
+        } else {
+            Deadline::after(Duration::from_millis(ms))
+        }
+    }
+
+    /// True when no deadline is set.
+    pub fn is_none(&self) -> bool {
+        self.0.is_none()
+    }
+
+    /// True when a deadline is set and has passed.
+    pub fn expired(&self) -> bool {
+        match self.0 {
+            Some(t) => Instant::now() >= t,
+            None => false,
+        }
+    }
+
+    /// Time left before expiry: `None` when no deadline is set,
+    /// `Some(ZERO)` when already expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.0.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+
+    /// The earlier of two deadlines (`none` acts as +infinity). Batch
+    /// groups execute under the tightest member's deadline — the whole
+    /// group degrades together (documented on
+    /// [`serve_batch`](crate::server)-level semantics).
+    pub fn earliest(self, other: Deadline) -> Deadline {
+        match (self.0, other.0) {
+            (Some(a), Some(b)) => Deadline(Some(a.min(b))),
+            (Some(a), None) => Deadline(Some(a)),
+            (None, b) => Deadline(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_expires() {
+        let d = Deadline::none();
+        assert!(d.is_none());
+        assert!(!d.expired());
+        assert_eq!(d.remaining(), None);
+        assert_eq!(Deadline::default(), Deadline::none());
+    }
+
+    #[test]
+    fn from_ms_zero_is_disabled() {
+        assert!(Deadline::from_ms(0).is_none());
+        assert!(!Deadline::from_ms(60_000).is_none());
+    }
+
+    #[test]
+    fn past_deadline_is_expired_with_zero_remaining() {
+        let d = Deadline::at(Instant::now() - Duration::from_millis(5));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn future_deadline_is_live() {
+        let d = Deadline::after(Duration::from_secs(3600));
+        assert!(!d.expired());
+        let rem = d.remaining().unwrap();
+        assert!(rem > Duration::from_secs(3599));
+    }
+
+    #[test]
+    fn earliest_treats_none_as_infinity() {
+        let soon = Deadline::at(Instant::now() + Duration::from_millis(1));
+        let late = Deadline::at(Instant::now() + Duration::from_secs(60));
+        assert_eq!(soon.earliest(late), soon);
+        assert_eq!(late.earliest(soon), soon);
+        assert_eq!(Deadline::none().earliest(soon), soon);
+        assert_eq!(soon.earliest(Deadline::none()), soon);
+        assert_eq!(Deadline::none().earliest(Deadline::none()), Deadline::none());
+    }
+}

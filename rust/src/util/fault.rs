@@ -1,0 +1,265 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! The serving code is laced with **named injection points** — places a
+//! real deployment fails: the batcher stalling, a worker panicking
+//! mid-batch, a stage-3 decoder erroring, an ingress queue rejecting, a
+//! scan running slow. Each point calls [`fire`], which is a no-op unless
+//! (a) the crate is built with the `fault-injection` feature AND (b) a
+//! test has installed a [`FaultPlan`]. Production builds compile the
+//! probes down to an inlined `None`; even fault-enabled builds pay one
+//! mutex lock per probe only while a plan is installed.
+//!
+//! Determinism: a plan is a set of per-point [`FaultRule`]s keyed by a
+//! hit counter — "skip the first `skip` passages, then fire `fires`
+//! times" — with any delay jittered by a SplitMix64 stream derived from
+//! the plan seed, the point, and the hit index. The same plan against
+//! the same request sequence injects the same faults; there is no global
+//! randomness and no time dependence. `tests/fault_injection.rs` uses
+//! this to prove every injected fault surfaces as a **typed error or a
+//! flagged degraded reply** — never a hang, a poisoned lock, or an
+//! abort.
+//!
+//! Plans are process-global (the probes live deep in worker threads that
+//! can't be parameterized per-call), so [`install`] also serializes:
+//! the returned [`FaultGuard`] holds a static mutex for its lifetime,
+//! keeping concurrently-running `#[test]`s from interleaving plans, and
+//! uninstalls the plan on drop.
+
+use crate::util::prng::Rng;
+use std::time::Duration;
+
+/// The named places a fault can be injected. Each maps to exactly one
+/// probe in the serving stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// The batcher sleeps before dispatching a formed batch — models a
+    /// stalled dispatch thread; drives deadline-expiry-at-dispatch.
+    BatcherDelay = 0,
+    /// A read worker panics mid-batch, **while holding its latency-ring
+    /// lock** — the worst-case poison scenario for `Router::stats()`.
+    WorkerPanic = 1,
+    /// Both stage-3 decoders (thread-local and index-held) fail for one
+    /// batch group — models a corrupted artifact / runtime fault.
+    DecoderError = 2,
+    /// A submit is rejected as if the admission gate tripped — models
+    /// ingress overload independent of real queue depth.
+    QueueFull = 3,
+    /// The stage-1 scan sleeps before a bucket group — models a slow /
+    /// stalled scan; drives mid-scan deadline degradation.
+    SlowScan = 4,
+}
+
+/// Number of distinct [`FaultPoint`]s (rule/hit-counter array size).
+pub const N_FAULT_POINTS: usize = 5;
+
+/// When and how one [`FaultPoint`] fires: pass `skip` hits untouched,
+/// then fire on the next `fires` hits, injecting `delay_ms` plus a
+/// deterministic jitter in `[0, jitter_ms]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultRule {
+    pub skip: u64,
+    pub fires: u64,
+    pub delay_ms: u64,
+    pub jitter_ms: u64,
+}
+
+impl FaultRule {
+    /// Fire on the first `fires` hits, no delay (panic/error/reject
+    /// points ignore the delay anyway).
+    pub fn first(fires: u64) -> FaultRule {
+        FaultRule { skip: 0, fires, delay_ms: 0, jitter_ms: 0 }
+    }
+
+    /// Fire on the first `fires` hits with a fixed delay.
+    pub fn delay(fires: u64, delay_ms: u64) -> FaultRule {
+        FaultRule { skip: 0, fires, delay_ms, jitter_ms: 0 }
+    }
+
+    /// Same, but skip the first `skip` hits.
+    pub fn after(skip: u64, fires: u64, delay_ms: u64) -> FaultRule {
+        FaultRule { skip, fires, delay_ms, jitter_ms: 0 }
+    }
+}
+
+/// A seeded, deterministic set of per-point rules.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rules: [Option<FaultRule>; N_FAULT_POINTS],
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: [None; N_FAULT_POINTS] }
+    }
+
+    /// Builder-style: attach a rule to one point.
+    pub fn with(mut self, point: FaultPoint, rule: FaultRule) -> FaultPlan {
+        self.rules[point as usize] = Some(rule);
+        self
+    }
+
+    /// Whether hit number `n` (0-based) at `point` fires, and with what
+    /// delay. Pure function of (plan, point, n) — the determinism
+    /// contract.
+    fn decide(&self, point: FaultPoint, n: u64) -> Option<Duration> {
+        let rule = self.rules[point as usize]?;
+        if n < rule.skip || n >= rule.skip + rule.fires {
+            return None;
+        }
+        let mut ms = rule.delay_ms;
+        if rule.jitter_ms > 0 {
+            let mut rng = Rng::new(
+                self.seed ^ (point as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ n,
+            );
+            ms += rng.next_u64() % (rule.jitter_ms + 1);
+        }
+        Some(Duration::from_millis(ms))
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+mod active {
+    use super::{FaultPlan, FaultPoint, N_FAULT_POINTS};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard};
+    use std::time::Duration;
+
+    struct State {
+        plan: Option<FaultPlan>,
+        hits: [u64; N_FAULT_POINTS],
+    }
+
+    static STATE: Mutex<State> = Mutex::new(State { plan: None, hits: [0; N_FAULT_POINTS] });
+    /// Serializes tests that install plans (cargo runs `#[test]`s
+    /// concurrently; a process-global plan must be exclusive).
+    static SERIAL: Mutex<()> = Mutex::new(());
+    /// Fast path: probes skip the STATE lock entirely while no plan is
+    /// installed, so fault-enabled builds don't serialize hot scans.
+    static INSTALLED: AtomicU64 = AtomicU64::new(0);
+
+    /// Uninstalls the plan (and releases the test-serialization lock)
+    /// on drop.
+    pub struct FaultGuard {
+        _serial: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            INSTALLED.store(0, Ordering::SeqCst);
+            let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+            st.plan = None;
+            st.hits = [0; N_FAULT_POINTS];
+        }
+    }
+
+    /// Install a plan process-wide until the guard drops. Hit counters
+    /// start at zero.
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        // an earlier test that panicked mid-plan poisons SERIAL; the
+        // guard's Drop still cleared the plan, so recovery is sound
+        let serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+            st.plan = Some(plan);
+            st.hits = [0; N_FAULT_POINTS];
+        }
+        INSTALLED.store(1, Ordering::SeqCst);
+        FaultGuard { _serial: serial }
+    }
+
+    /// Probe: does the installed plan fire at this point, this hit?
+    /// Returns the injected delay when it does (`ZERO` for points that
+    /// don't sleep). Counts the hit either way.
+    pub fn fire(point: FaultPoint) -> Option<Duration> {
+        if INSTALLED.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        let n = st.hits[point as usize];
+        st.hits[point as usize] = n + 1;
+        st.plan.as_ref().and_then(|p| p.decide(point, n))
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+pub use active::{fire, install, FaultGuard};
+
+/// Probe stub: without the `fault-injection` feature every injection
+/// point compiles to an inlined `None` — zero cost in production builds.
+#[cfg(not(feature = "fault-injection"))]
+#[inline(always)]
+pub fn fire(_point: FaultPoint) -> Option<Duration> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_window_is_half_open() {
+        let plan = FaultPlan::new(7).with(FaultPoint::SlowScan, FaultRule::after(2, 3, 10));
+        // hits 0,1 skipped; 2,3,4 fire; 5+ pass
+        for n in 0..2 {
+            assert_eq!(plan.decide(FaultPoint::SlowScan, n), None);
+        }
+        for n in 2..5 {
+            assert_eq!(plan.decide(FaultPoint::SlowScan, n), Some(Duration::from_millis(10)));
+        }
+        assert_eq!(plan.decide(FaultPoint::SlowScan, 5), None);
+        // other points have no rule
+        assert_eq!(plan.decide(FaultPoint::WorkerPanic, 0), None);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let plan = FaultPlan::new(42).with(
+            FaultPoint::BatcherDelay,
+            FaultRule { skip: 0, fires: 100, delay_ms: 5, jitter_ms: 7 },
+        );
+        for n in 0..100 {
+            let a = plan.decide(FaultPoint::BatcherDelay, n).unwrap();
+            let b = plan.decide(FaultPoint::BatcherDelay, n).unwrap();
+            assert_eq!(a, b, "same (plan, point, hit) must decide identically");
+            assert!(a >= Duration::from_millis(5) && a <= Duration::from_millis(12));
+        }
+        // a different seed moves the jitter (with overwhelming odds over
+        // 100 draws)
+        let other = FaultPlan::new(43).with(
+            FaultPoint::BatcherDelay,
+            FaultRule { skip: 0, fires: 100, delay_ms: 5, jitter_ms: 7 },
+        );
+        assert!(
+            (0..100).any(|n| {
+                plan.decide(FaultPoint::BatcherDelay, n)
+                    != other.decide(FaultPoint::BatcherDelay, n)
+            }),
+            "seed must influence jitter"
+        );
+    }
+
+    #[cfg(not(feature = "fault-injection"))]
+    #[test]
+    fn probe_is_inert_without_the_feature() {
+        assert_eq!(fire(FaultPoint::WorkerPanic), None);
+        assert_eq!(fire(FaultPoint::SlowScan), None);
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn install_fire_uninstall_cycle() {
+        // nothing installed → inert
+        assert_eq!(fire(FaultPoint::QueueFull), None);
+        {
+            let _g = install(FaultPlan::new(1).with(FaultPoint::QueueFull, FaultRule::first(2)));
+            assert_eq!(fire(FaultPoint::QueueFull), Some(Duration::ZERO));
+            assert_eq!(fire(FaultPoint::QueueFull), Some(Duration::ZERO));
+            assert_eq!(fire(FaultPoint::QueueFull), None, "rule exhausted after `fires` hits");
+            // un-ruled points count hits but never fire
+            assert_eq!(fire(FaultPoint::SlowScan), None);
+        }
+        // guard dropped → inert again, counters reset
+        assert_eq!(fire(FaultPoint::QueueFull), None);
+    }
+}

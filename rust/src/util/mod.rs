@@ -5,6 +5,8 @@
 //! available in this offline environment, so the pieces the system needs
 //! are implemented here from scratch (see DESIGN.md §Substitutions).
 
+pub mod deadline;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod prng;

@@ -221,9 +221,10 @@ fn router_batched_dispatch_matches_direct_search() {
         pending.push((q.to_vec(), sp, router.submit(q.to_vec(), sp).unwrap()));
     }
     for (q, sp, rx) in pending {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().expect("typed reply");
         let direct = index.search(&q, &sp);
         assert_eq!(resp.results, direct, "router diverged from direct search");
+        assert!(!resp.degraded, "no deadline was set, reply must not be degraded");
     }
     let stats = router.stats();
     assert_eq!(stats.served as usize, queries.rows);
@@ -257,8 +258,9 @@ fn router_over_a_sharded_index_matches_direct_search() {
         .map(|i| router.submit(queries.row(i).to_vec(), sp).unwrap())
         .collect();
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().expect("typed reply");
         assert_eq!(resp.results, index.search(queries.row(i), &sp), "query {i}");
+        assert!(!resp.degraded, "query {i} flagged degraded without a deadline");
     }
     let stats = router.stats();
     assert_eq!(stats.served as usize, queries.rows);
@@ -291,6 +293,12 @@ fn stats_on_a_fresh_router_are_all_zero() {
     assert_eq!(stats.p50, Duration::ZERO);
     assert_eq!(stats.p99, Duration::ZERO);
     assert_eq!(stats.shard_scans, vec![0, 0], "fresh shards must report zero scans");
+    // the robustness counters start at zero too
+    assert_eq!(stats.panics, 0);
+    assert_eq!(stats.respawns, 0);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.deadline_exceeded, 0);
+    assert_eq!(stats.degraded, 0);
     router.shutdown();
 }
 
@@ -317,7 +325,102 @@ fn router_shutdown_drains_inflight_requests() {
     // immediately shut down: the batcher must flush, workers must drain
     router.shutdown();
     for (i, rx) in pending.into_iter().enumerate() {
-        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped at shutdown"));
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} dropped at shutdown"))
+            .expect("typed reply");
         assert_eq!(resp.results, index.search(queries.row(i), &sp));
     }
+}
+
+#[test]
+fn prop_shutdown_under_load_answers_every_receiver_exactly_once() {
+    // the exactly-once delivery property: whatever mix of reads and
+    // writes is in flight when the Router drops, every receiver gets
+    // exactly one reply — a real response or a typed RouterError — and
+    // never a bare disconnected channel (the old hang). Repeats across
+    // seeds/mixes via the in-repo property harness.
+    use qinco2::data::{generate, Flavor};
+    use qinco2::index::SearchParams;
+    use qinco2::server::{Router, ServerCfg, WriteOp};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let index = Arc::new(tiny_index(2));
+    let d = index.params.cfg.d;
+    check("shutdown-under-load", 6, 10, |g| {
+        let n_reads = g.usize_in(4, 24);
+        let n_writes = g.usize_in(1, 6);
+        let queries = generate(Flavor::Deep, n_reads, d, 41 + g.rng.below(1000) as u64);
+        let sp = SearchParams {
+            nprobe: 4,
+            ef_search: 32,
+            n_aq: 32,
+            n_pairs: 8,
+            n_final: 5,
+            ..Default::default()
+        };
+        let router = Router::start(
+            index.clone(),
+            ServerCfg {
+                workers: 2,
+                max_batch: 4,
+                batch_timeout: Duration::from_micros(200),
+                ..Default::default()
+            },
+        );
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for i in 0..n_reads {
+            reads.push(router.submit(queries.row(i).to_vec(), sp).map_err(|e| e.to_string())?);
+            if i < n_writes {
+                // deletes of already-dead ids are harmless no-ops but
+                // still exercise the write lane end to end
+                let op = WriteOp::Delete { ids: vec![(i % 7) as u32] };
+                writes.push(router.submit_write(op).map_err(|e| e.to_string())?);
+            }
+        }
+        // drop mid-flight: Drop joins the batcher, workers, and writer
+        drop(router);
+        for (i, rx) in reads.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(_)) | Ok(Err(_)) => {}
+                Err(_) => return Err(format!("read {i}: channel dropped without a reply")),
+            }
+        }
+        for (i, rx) in writes.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(_)) | Ok(Err(_)) => {}
+                Err(_) => return Err(format!("write {i}: channel dropped without a reply")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn expired_write_deadline_gets_a_typed_error_and_skips_the_op() {
+    // a write submitted with an already-expired deadline must come back
+    // DeadlineExceeded *without* mutating the index (the op is dropped
+    // before apply), and the deadline_exceeded counter must see it
+    use qinco2::server::{Router, RouterError, ServerCfg, WriteOp, WriteOutcome};
+    use qinco2::util::deadline::Deadline;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let index = Arc::new(tiny_index(2));
+    let live_before = index.live_len();
+    let router = Router::start(index.clone(), ServerCfg { workers: 1, ..Default::default() });
+    let expired = Deadline::at(Instant::now() - Duration::from_millis(5));
+    let rx = router
+        .submit_write_within(WriteOp::Delete { ids: vec![0, 1, 2] }, expired)
+        .expect("submission itself is admitted");
+    assert!(matches!(rx.recv().unwrap(), Err(RouterError::DeadlineExceeded)));
+    assert_eq!(index.live_len(), live_before, "expired write must not mutate the index");
+    assert_eq!(router.stats().deadline_exceeded, 1);
+    // the lane stays healthy: the same op without a deadline applies
+    let done = router.write_blocking(WriteOp::Delete { ids: vec![0, 1, 2] }).unwrap();
+    assert!(matches!(done.outcome, Ok(WriteOutcome::Deleted(3))), "{:?}", done.outcome);
+    assert_eq!(index.live_len(), live_before - 3);
+    router.shutdown();
 }
