@@ -28,11 +28,12 @@ use qinco2::index::{
     Stage1Kind, Stage3Kind,
 };
 use qinco2::metrics::{ids_only, recall_at};
+use qinco2::net::{LoadCfg, NetCfg, NetClient, NetServer};
 use qinco2::qinco::ParamStore;
 use qinco2::runtime::manifest::Manifest;
 use qinco2::server::{Router, ServerCfg, WriteOp, WriteOutcome};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     common::banner(
@@ -535,6 +536,84 @@ fn main() -> anyhow::Result<()> {
             common::pct(r1_before)
         );
         csv.push(format!("mixed:rw,8,128,32,{read_qps:.0},{r1_mixed:.4}"));
+    }
+    common::hr(72);
+
+    // ---- network tier: loopback TCP through the frame protocol ----
+    // The same router behind the socket boundary: a closed-loop load
+    // generator over N connections shows what the frame codec + loopback
+    // hop cost relative to the in-process "router (e2e)" rows above. A
+    // spot-check pins wire replies bit-identical to direct search first,
+    // so QPS is again the only free variable.
+    println!();
+    common::banner(
+        "NETWORK TIER — loopback serving through the wire protocol",
+        "wire replies bit-identical to in-process; QPS per connection count",
+    );
+    {
+        let sp = SearchParams {
+            nprobe: 8,
+            ef_search: 64,
+            n_aq: 128,
+            n_pairs: 32,
+            n_final: 10,
+            ..Default::default()
+        };
+        let router = Arc::new(Router::start(
+            index.clone(),
+            ServerCfg { workers: nthreads, max_batch: 64, ..Default::default() },
+        ));
+        let server = NetServer::bind("127.0.0.1:0", router.clone(), NetCfg::default())?;
+        let addr = server.local_addr().to_string();
+
+        let mut probe = NetClient::connect(&addr)?;
+        for i in 0..ds.queries.rows.min(16) {
+            let q = ds.queries.row(i);
+            let wire = probe.search(q, &sp, 0)?.expect("typed reply");
+            assert_eq!(wire.results, index.search(q, &sp), "wire diverged from in-process");
+        }
+        drop(probe);
+
+        println!(
+            "{:<18} {:>7} {:>10} {:>9} {:>9} {:>9}",
+            "connections", "reqs", "QPS", "p50", "p99", "errors"
+        );
+        common::hr(72);
+        for conns in [1usize, 4, 8] {
+            let lcfg = LoadCfg {
+                addr: addr.clone(),
+                conns,
+                requests: ds.queries.rows,
+                pipeline: 4,
+                rate: 0.0,
+                duration: Duration::ZERO,
+                sp,
+                deadline_ms: 0,
+                queries: ds.queries.clone(),
+            };
+            let rep = qinco2::net::loadgen::run(&lcfg)?;
+            // an unloaded loopback server sheds nothing and loses nothing
+            assert_eq!(rep.completed, rep.sent, "every request must be answered");
+            assert_eq!(rep.ok, rep.completed, "loopback serving must not shed or fail");
+            println!(
+                "{conns:<18} {:>7} {:>10.0} {:>9} {:>9} {:>9}",
+                rep.completed,
+                rep.qps,
+                format!("{:.1?}", rep.p50),
+                format!("{:.1?}", rep.p99),
+                rep.completed - rep.ok
+            );
+            csv.push(format!("net:conns{conns},8,128,32,{:.0},", rep.qps));
+        }
+        let net_stats = server.drain();
+        println!(
+            "  net counters: {} connections, {} frames in, {} frames out, {} protocol errors",
+            net_stats.stats.connections,
+            net_stats.stats.frames_in,
+            net_stats.stats.frames_out,
+            net_stats.stats.protocol_errors
+        );
+        drop(router);
     }
     common::hr(72);
 

@@ -6,13 +6,15 @@
 //! qinco2 eval    --model qinco2_xs --dataset bigann [--a A --b B]
 //! qinco2 encode  --model qinco2_xs --dataset bigann --out codes.qnpz
 //! qinco2 search  --model qinco2_xs --dataset bigann [--nprobe ..]
-//! qinco2 serve   --model qinco2_xs --dataset bigann [--workers N]
+//! qinco2 serve   --model qinco2_xs --dataset bigann [--workers N] [--listen ADDR]
+//! qinco2 bench-net --connect HOST:PORT [--conns N --requests N | --rate QPS]
 //! qinco2 info
 //! ```
 
 use crate::data::Flavor;
 use crate::experiments as exp;
 use crate::index::{BuildCfg, EncodeParams, PipelineConfig, SearchIndex, SearchParams};
+use crate::net::{frame::MIN_FRAME_MAX, LoadCfg, NetCfg, NetClient, NetServer};
 use crate::qinco::{Codec, ParamStore, RuntimeDecoderFactory, TrainCfg, Trainer};
 use crate::runtime::Engine;
 use crate::server::{Router, RouterError, ServerCfg};
@@ -21,6 +23,7 @@ use crate::util::qnpz::{Store, Tensor};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimal `--flag value` / `--flag` parser.
 pub struct Args {
@@ -153,6 +156,7 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "encode" => cmd_encode(&args),
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "bench-net" => cmd_bench_net(&args),
         "insert" => cmd_insert(&args),
         "delete" => cmd_delete(&args),
         "compact" => cmd_compact(&args),
@@ -177,7 +181,9 @@ SUBCOMMANDS
   eval     MSE + recall of a trained model (trains/caches if needed)
   encode   encode a database split to codes (.qnpz)
   search   build the IVF search index and report recall/QPS
-  serve    run the serving coordinator over a built index
+  serve    run the serving coordinator over a built index; with --listen
+           it also fronts the router with the TCP frame protocol
+  bench-net  load-generate against a `serve --listen` server over TCP
   insert   build the index, then live-ingest vectors (beam encode) + search
   delete   build the index, tombstone-delete rows, verify they vanish
   compact  full live cycle: insert -> search -> delete -> compact -> search,
@@ -224,6 +230,31 @@ LIVE MUTATION FLAGS (insert / delete / compact)
   --n-delete 32          rows to tombstone-delete
 SERVE FLAGS
   --workers N  --queries N
+NETWORK FLAGS (serve --listen / bench-net)
+  --listen HOST:PORT     serve only: front the router with the TCP frame
+                         protocol (port 0 picks an ephemeral port; the
+                         bound address is printed and, with --addr-file,
+                         written to a file). The process runs until a
+                         client sends a Drain frame (bench-net --drain)
+  --addr-file PATH       serve only: write the bound address to PATH
+                         (how scripts find an ephemeral --listen port)
+  --max-conns 0          concurrent connections before typed refusal
+                         (0 = default 64)
+  --frame-max-bytes 0    per-frame payload ceiling; nonzero values must
+                         be >= 4096 (0 = default 8 MiB)
+  --conn-inflight 0      per-connection in-flight request cap before TCP
+                         backpressure (0 = default 32)
+  --connect HOST:PORT    bench-net only (required): the server address
+  --conns 4              bench-net: concurrent load connections
+  --requests 256         bench-net: total requests (closed-loop mode)
+  --pipeline 1           bench-net: per-connection in-flight window
+  --rate 0               bench-net: offered load in QPS across all
+                         connections (0 = closed loop)
+  --duration-s 5         bench-net: wall-clock run time (fixed-rate mode)
+  --n-query 64           bench-net: distinct query vectors in the pool
+                         (dimension is discovered from the server)
+  --drain                bench-net: send a Drain frame after the run so
+                         the server answers in-flight work and exits
 ROBUSTNESS FLAGS (search + serve)
   --deadline-ms 0        per-request deadline in milliseconds (0 = disabled).
                          A request already expired when picked up gets a typed
@@ -395,6 +426,35 @@ fn encode_params_of(args: &Args, k: usize) -> Result<EncodeParams> {
         );
     }
     Ok(EncodeParams { a, b })
+}
+
+/// Validate the network-tier knobs `--max-conns`, `--frame-max-bytes`
+/// and `--conn-inflight`. `0` (the default) means "server default"
+/// ([`NetCfg::default`]); nonzero values replace it. Like [`shards_of`],
+/// out-of-range values are hard errors naming the flag — a silently
+/// clamped `--frame-max-bytes` would accept frames the operator asked
+/// to refuse.
+fn net_cfg_of(args: &Args) -> Result<NetCfg> {
+    let mut cfg = NetCfg::default();
+    let max_conns = args.usize_or("max-conns", 0)?;
+    if max_conns != 0 {
+        cfg.max_conns = max_conns;
+    }
+    let frame_max = args.usize_or("frame-max-bytes", 0)?;
+    if frame_max != 0 {
+        if frame_max < MIN_FRAME_MAX {
+            bail!(
+                "--frame-max-bytes {frame_max} is below the protocol minimum {MIN_FRAME_MAX}: \
+                 even a header-only frame plus a small search body must fit"
+            );
+        }
+        cfg.frame_max_bytes = frame_max;
+    }
+    let conn_inflight = args.usize_or("conn-inflight", 0)?;
+    if conn_inflight != 0 {
+        cfg.conn_inflight = conn_inflight;
+    }
+    Ok(cfg)
 }
 
 fn build_index(
@@ -674,8 +734,10 @@ fn cmd_compact(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (mut engine, model, flavor, scale) = common_setup(args)?;
-    let (index, ds) = build_index(args, &mut engine, &model, flavor, &scale)?;
+    // `built_index` honors --encoder, so `serve --listen --encoder
+    // reference` is the engine-free network smoke path just like
+    // `search --encoder reference` is for the pipeline
+    let (index, ds, model, _flavor) = built_index(args)?;
     let workers = args.usize_or("workers", crate::util::pool::default_threads())?;
     // robustness knobs (0 = disabled; malformed values hard-error naming
     // the flag via usize_or)
@@ -685,9 +747,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --stage3 runtime: hand every worker thread its own PJRT engine +
     // codec through the factory (engine-per-worker; see server docs).
     // Workers fall back to the reference decoder if the runtime is
-    // unavailable (e.g. the vendored stub xla crate).
+    // unavailable (e.g. the vendored stub xla crate). The reference
+    // encoder path stays engine-free, so no factory there.
     let decoder_factory: Option<Arc<dyn crate::quantizers::DecoderFactory>> =
-        if args.str_or("stage3", "reference") == "runtime" {
+        if args.str_or("stage3", "reference") == "runtime"
+            && args.str_or("encoder", "runtime") == "runtime"
+        {
+            let scale = scale_of(args)?;
             let cfg = train_cfg(args, &scale)?;
             Some(Arc::new(RuntimeDecoderFactory {
                 artifacts_dir: exp::artifacts_dir(),
@@ -699,7 +765,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             None
         };
-    let router = Router::start(
+    let router = Arc::new(Router::start(
         Arc::new(index),
         ServerCfg {
             workers,
@@ -708,7 +774,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             blocking_retries: retries,
             ..Default::default()
         },
-    );
+    ));
+    if args.get("listen").is_some() {
+        return serve_network(args, router);
+    }
     // --batch-threads > 1 rides along in each request's SearchParams:
     // workers split a big dispatched group's bucket scan across threads
     let sp = search_params(args)?;
@@ -759,7 +828,126 @@ fn cmd_serve(args: &Args) -> Result<()> {
          (counters: shed {}  deadline_exceeded {}  degraded {}  panics {}  respawns {})",
         stats.shed, stats.deadline_exceeded, stats.degraded, stats.panics, stats.respawns
     );
-    router.shutdown();
+    drop(router); // last Arc: Drop stops the workers
+    Ok(())
+}
+
+/// The `serve --listen` tail: bind the TCP front-end, publish the bound
+/// address (stdout + optional `--addr-file`), and block until a client
+/// drains the server (`bench-net --drain` or a raw Drain frame). The
+/// router is torn down only after the network tier has answered every
+/// in-flight frame.
+fn serve_network(args: &Args, router: Arc<Router>) -> Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let cfg = net_cfg_of(args)?;
+    let server = NetServer::bind(&listen, router.clone(), cfg)
+        .with_context(|| format!("--listen {listen:?} is not a bindable address"))?;
+    let addr = server.local_addr();
+    println!("listening on {addr}");
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, addr.to_string())
+            .with_context(|| format!("--addr-file {path:?} is not writable"))?;
+    }
+    while !server.is_draining() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let ns = server.drain();
+    let s = &ns.stats;
+    println!(
+        "drained: served {}  mean {:.2?}  p50 {:.2?}  p99 {:.2?}",
+        s.served, s.mean_latency, s.p50, s.p99
+    );
+    println!(
+        "net: connections {}  frames_in {}  frames_out {}  protocol_errors {}",
+        s.connections, s.frames_in, s.frames_out, s.protocol_errors
+    );
+    println!(
+        "robustness: shed {}  deadline_exceeded {}  degraded {}  panics {}  respawns {}",
+        s.shed, s.deadline_exceeded, s.degraded, s.panics, s.respawns
+    );
+    drop(router); // last Arc: Drop stops the workers
+    Ok(())
+}
+
+/// `bench-net`: the wire-level load generator. Discovers the query
+/// dimension from the server's stats frame (no flag to get wrong),
+/// generates a deterministic query pool, runs the configured load
+/// ([`crate::net::loadgen`]), and prints QPS/latency plus the typed
+/// outcome counts. `--drain` then shuts the server down over the wire.
+fn cmd_bench_net(args: &Args) -> Result<()> {
+    let addr = match args.get("connect") {
+        Some(a) => a.to_string(),
+        None => bail!(
+            "bench-net needs --connect HOST:PORT (the address `serve --listen` printed)"
+        ),
+    };
+    let conns = args.usize_or("conns", 4)?;
+    if conns == 0 {
+        bail!("--conns must be at least 1, got 0");
+    }
+    let requests = args.usize_or("requests", 256)?;
+    let rate = args.f32_or("rate", 0.0)? as f64;
+    if rate < 0.0 {
+        bail!("--rate must be >= 0, got {rate}");
+    }
+    if rate == 0.0 && requests == 0 {
+        bail!("--requests must be at least 1 in closed-loop mode (--rate 0)");
+    }
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u64;
+    let sp = search_params(args)?;
+    let flavor = flavor_of(args)?;
+    // one probe connection up front: discover the index dimension (and
+    // fail fast with a connect error before spawning load threads)
+    let mut probe = NetClient::connect(&addr)?;
+    let before = probe.stats()?;
+    let d = before.dim as usize;
+    let n_query = args.usize_or("n-query", 64)?.max(1);
+    let queries =
+        crate::data::generate(flavor, n_query, d, args.usize_or("seed", 0xA11CE)? as u64 ^ 0xBE7C);
+    let cfg = LoadCfg {
+        addr: addr.clone(),
+        conns,
+        requests,
+        pipeline: args.usize_or("pipeline", 1)?,
+        rate,
+        duration: Duration::from_secs(args.usize_or("duration-s", 5)? as u64),
+        sp,
+        deadline_ms,
+        queries,
+    };
+    let report = crate::net::loadgen::run(&cfg)?;
+    println!(
+        "bench-net {addr} (dim {d}, {} live rows): sent {}  completed {}  wall {:.2?}",
+        before.live_rows, report.sent, report.completed, report.wall
+    );
+    println!(
+        "  {:.0} QPS  mean {:.2?}  p50 {:.2?}  p99 {:.2?}",
+        report.qps, report.mean, report.p50, report.p99
+    );
+    println!(
+        "  ok {}  degraded {}  shed {}  deadline-exceeded {}  worker-died {}  stopped {}",
+        report.ok,
+        report.degraded,
+        report.shed,
+        report.deadline_exceeded,
+        report.worker_died,
+        report.stopped
+    );
+    let after = probe.stats()?;
+    println!(
+        "  server: connections {}  frames_in {}  frames_out {}  protocol_errors {}",
+        after.stats.connections,
+        after.stats.frames_in,
+        after.stats.frames_out,
+        after.stats.protocol_errors
+    );
+    if report.completed > 0 && report.ok == 0 {
+        bail!("no request succeeded ({} replies, all typed errors)", report.completed);
+    }
+    if args.flag("drain") {
+        probe.drain_server()?;
+        println!("  server drained");
+    }
     Ok(())
 }
 
@@ -879,6 +1067,47 @@ mod tests {
         let bad = Args::parse(&["--retries".to_string(), "3.5".to_string()]);
         let err = bad.usize_or("retries", 0).unwrap_err().to_string();
         assert!(err.contains("retries") && err.contains("3.5"), "{err}");
+    }
+
+    #[test]
+    fn net_flags_are_validated() {
+        // absent (or explicit 0): server defaults
+        let d = NetCfg::default();
+        let cfg = net_cfg_of(&Args::parse(&[])).unwrap();
+        assert_eq!(
+            (cfg.max_conns, cfg.frame_max_bytes, cfg.conn_inflight),
+            (d.max_conns, d.frame_max_bytes, d.conn_inflight)
+        );
+        let zeros: Vec<String> =
+            ["--max-conns", "0", "--frame-max-bytes", "0", "--conn-inflight", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let cfg = net_cfg_of(&Args::parse(&zeros)).unwrap();
+        assert_eq!(cfg.max_conns, d.max_conns);
+        assert_eq!(cfg.frame_max_bytes, d.frame_max_bytes);
+        // nonzero values replace the defaults
+        let set: Vec<String> =
+            ["--max-conns", "2", "--frame-max-bytes", "65536", "--conn-inflight", "8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let cfg = net_cfg_of(&Args::parse(&set)).unwrap();
+        assert_eq!((cfg.max_conns, cfg.frame_max_bytes, cfg.conn_inflight), (2, 65536, 8));
+        // a nonzero frame cap below the protocol minimum is a hard
+        // error naming the flag, not a silent clamp
+        let low = Args::parse(&["--frame-max-bytes".to_string(), "100".to_string()]);
+        let err = net_cfg_of(&low).unwrap_err().to_string();
+        assert!(err.contains("--frame-max-bytes 100"), "{err}");
+        assert!(err.contains(&MIN_FRAME_MAX.to_string()), "{err}");
+        // the boundary value itself is accepted
+        let edge =
+            Args::parse(&["--frame-max-bytes".to_string(), MIN_FRAME_MAX.to_string()]);
+        assert_eq!(net_cfg_of(&edge).unwrap().frame_max_bytes, MIN_FRAME_MAX);
+        // malformed values ride the usize_or hard-error policy
+        let bad = Args::parse(&["--max-conns".to_string(), "many".to_string()]);
+        let err = net_cfg_of(&bad).unwrap_err().to_string();
+        assert!(err.contains("max-conns") && err.contains("many"), "{err}");
     }
 
     #[test]

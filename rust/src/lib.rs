@@ -111,6 +111,27 @@
 //! drives `tests/fault_injection.rs`, which proves each named fault
 //! point resolves to a typed error or a flagged degraded reply — never
 //! a hang, a poisoned lock, or an abort.
+//!
+//! # Serving over the network
+//!
+//! The [`net`] module puts a socket boundary in front of the router
+//! without changing its semantics: a versioned length-prefixed binary
+//! frame protocol (layout and status-code table in the [`net`] module
+//! docs) carries search/write/stats/ping/drain ops over TCP, a
+//! [`net::NetServer`] accept loop feeds per-connection reader/writer
+//! thread pairs into `Router::try_submit_within` /
+//! `try_submit_write_within`, and the matching [`net::NetClient`]
+//! reconstructs exactly the in-process types — results and the
+//! `degraded` flag bit-identical, every `RouterError` variant (hint
+//! included) a distinct wire status (`tests/net_equivalence.rs` pins
+//! loopback == in-process across all of them). Backpressure is layered:
+//! a connection cap with typed refusal, a per-connection in-flight cap
+//! that falls back on TCP flow control, per-frame size limits, and the
+//! router's own admission gates per request. Graceful drain mirrors the
+//! router's: stop accepting, answer everything in flight exactly once,
+//! close. The CLI serves with `serve --listen ADDR` and load-tests with
+//! `bench-net` (closed-loop or fixed-rate, wire-level QPS/p50/p99 plus
+//! typed shed/deadline/degraded counts).
 
 pub mod cli;
 pub mod clustering;
@@ -119,6 +140,7 @@ pub mod experiments;
 pub mod index;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod qinco;
 pub mod quantizers;
 pub mod runtime;

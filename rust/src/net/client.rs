@@ -1,0 +1,281 @@
+//! The matching client: a blocking, single-connection [`NetClient`]
+//! that speaks the frame protocol and hands back exactly the types an
+//! in-process caller would see.
+//!
+//! ## Two-level results
+//!
+//! Every request method returns `anyhow::Result<Result<_, RouterError>>`:
+//!
+//! - the **outer** `Result` is the transport/protocol level — the
+//!   connection broke, the server sent malformed bytes, or the server
+//!   rejected the request as semantically invalid
+//!   ([`WireStatus::BadRequest`]);
+//! - the **inner** `Result` is the in-process router contract,
+//!   reconstructed bit-for-bit: a successful reply (results + `degraded`
+//!   flag) or the exact [`RouterError`] the router produced — including
+//!   `Overloaded`'s `retry_after_hint`, which travels as nanoseconds.
+//!
+//! This split is what lets the equivalence suite compare a loopback
+//! call against `Router::search_blocking` with `assert_eq!`.
+//!
+//! ## Pipelining
+//!
+//! [`submit_search`] / [`recv_search`] split submission from receipt,
+//! so one connection can keep many requests in flight. Replies may
+//! arrive in any order; the client stashes frames for other request ids
+//! and hands each reply to the call that asked for it.
+//!
+//! [`submit_search`]: NetClient::submit_search
+//! [`recv_search`]: NetClient::recv_search
+
+use super::frame::{
+    decode_router_error, decode_search_ok, decode_stats, decode_write_ok, Frame, FrameIoError,
+    FrameReader, NetSearchReply, NetStats, NetWriteReply, Op, Poll, SearchBody, WireStatus,
+    WriteBody, CONN_NOTICE_ID, DEFAULT_FRAME_MAX,
+};
+use crate::index::SearchParams;
+use crate::server::{RouterError, WriteOp};
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A blocking protocol client over one TCP connection.
+pub struct NetClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+    /// replies that arrived while waiting for a different request id
+    stash: Vec<Frame>,
+}
+
+impl NetClient {
+    /// Connect and prepare to speak protocol v1.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(addr: A) -> anyhow::Result<NetClient> {
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient {
+            stream,
+            reader: FrameReader::new(DEFAULT_FRAME_MAX),
+            next_id: 1, // 0 is CONN_NOTICE_ID, never a request id
+            stash: Vec::new(),
+        })
+    }
+
+    pub fn peer_addr(&self) -> std::io::Result<SocketAddr> {
+        self.stream.peer_addr()
+    }
+
+    fn send(&mut self, frame: &Frame) -> anyhow::Result<()> {
+        self.stream
+            .write_all(&frame.encode())
+            .map_err(|e| anyhow::anyhow!("send failed: {e}"))
+    }
+
+    /// Read the next frame, blocking (bounded only by `timeout` if set
+    /// via [`set_recv_timeout`](Self::set_recv_timeout)). A clean EOF is
+    /// an error here — the caller was owed a reply.
+    fn next_frame(&mut self) -> anyhow::Result<Frame> {
+        loop {
+            match self.reader.poll(&mut self.stream) {
+                Ok(Poll::Frame(f)) => return Ok(f),
+                Ok(Poll::Pending) => {
+                    anyhow::bail!("timed out waiting for a reply frame")
+                }
+                Ok(Poll::Eof) => anyhow::bail!("server closed the connection"),
+                Err(FrameIoError::Protocol(pe)) => {
+                    anyhow::bail!("server sent a malformed frame: {pe}")
+                }
+                Err(FrameIoError::Io(e)) => anyhow::bail!("receive failed: {e}"),
+            }
+        }
+    }
+
+    /// Bound every subsequent reply wait (maps to a "timed out" outer
+    /// error instead of blocking forever). `None` restores blocking
+    /// reads — the default.
+    pub fn set_recv_timeout(&mut self, timeout: Option<Duration>) -> anyhow::Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .map_err(|e| anyhow::anyhow!("cannot set the receive timeout: {e}"))
+    }
+
+    /// Get the reply for `id`, stashing any interleaved replies for
+    /// other in-flight requests. A connection-level notice (request id
+    /// [`CONN_NOTICE_ID`]) aborts the wait with its message.
+    fn recv_for(&mut self, id: u64) -> anyhow::Result<Frame> {
+        if let Some(pos) = self.stash.iter().position(|f| f.request_id == id) {
+            return Ok(self.stash.swap_remove(pos));
+        }
+        loop {
+            let f = self.next_frame()?;
+            if f.request_id == id {
+                return Ok(f);
+            }
+            if f.request_id == CONN_NOTICE_ID {
+                anyhow::bail!(
+                    "connection notice from the server: {}",
+                    String::from_utf8_lossy(&f.payload)
+                );
+            }
+            self.stash.push(f);
+        }
+    }
+
+    /// Decode a search/write reply's status into the inner router
+    /// result, or an outer error for rejection/protocol statuses.
+    fn inner_error(f: &Frame) -> anyhow::Result<RouterError> {
+        match f.status {
+            WireStatus::BadRequest => anyhow::bail!(
+                "server rejected the request: {}",
+                String::from_utf8_lossy(&f.payload)
+            ),
+            WireStatus::Protocol => anyhow::bail!(
+                "server reported a protocol violation: {}",
+                String::from_utf8_lossy(&f.payload)
+            ),
+            s => decode_router_error(s, &f.payload)
+                .map_err(|pe| anyhow::anyhow!("malformed error reply: {pe}")),
+        }
+    }
+
+    /// Fire a search without waiting; returns the request id to pass to
+    /// [`recv_search`](Self::recv_search). `deadline_ms` follows the
+    /// CLI convention: 0 = no deadline.
+    pub fn submit_search(
+        &mut self,
+        query: &[f32],
+        sp: &SearchParams,
+        deadline_ms: u64,
+    ) -> anyhow::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let body = SearchBody { sp: *sp, deadline_ms, query: query.to_vec() };
+        self.send(&Frame::request(Op::Search, id, body.encode()))?;
+        Ok(id)
+    }
+
+    /// Wait for the reply to a submitted search.
+    pub fn recv_search(
+        &mut self,
+        id: u64,
+    ) -> anyhow::Result<Result<NetSearchReply, RouterError>> {
+        let f = self.recv_for(id)?;
+        match f.status {
+            WireStatus::Ok | WireStatus::OkDegraded => Ok(Ok(decode_search_ok(
+                f.status,
+                &f.payload,
+            )
+            .map_err(|pe| anyhow::anyhow!("malformed search reply: {pe}"))?)),
+            _ => Ok(Err(Self::inner_error(&f)?)),
+        }
+    }
+
+    /// Blocking search: submit + receive.
+    pub fn search(
+        &mut self,
+        query: &[f32],
+        sp: &SearchParams,
+        deadline_ms: u64,
+    ) -> anyhow::Result<Result<NetSearchReply, RouterError>> {
+        let id = self.submit_search(query, sp, deadline_ms)?;
+        self.recv_search(id)
+    }
+
+    /// Receive whichever in-flight search reply arrives next (stash
+    /// first, then the wire) — the load generator's completion pump.
+    /// `Ok(None)` means `timeout` elapsed with no complete frame; bytes
+    /// already received are kept for the next call.
+    #[allow(clippy::type_complexity)]
+    pub fn recv_any_search(
+        &mut self,
+        timeout: Option<Duration>,
+    ) -> anyhow::Result<Option<(u64, Result<NetSearchReply, RouterError>)>> {
+        let f = match self.stash.pop() {
+            Some(f) => f,
+            None => {
+                self.set_recv_timeout(timeout)?;
+                let polled = self.reader.poll(&mut self.stream);
+                self.set_recv_timeout(None)?;
+                match polled {
+                    Ok(Poll::Frame(f)) => f,
+                    Ok(Poll::Pending) => return Ok(None),
+                    Ok(Poll::Eof) => anyhow::bail!("server closed the connection"),
+                    Err(FrameIoError::Protocol(pe)) => {
+                        anyhow::bail!("server sent a malformed frame: {pe}")
+                    }
+                    Err(FrameIoError::Io(e)) => anyhow::bail!("receive failed: {e}"),
+                }
+            }
+        };
+        if f.request_id == CONN_NOTICE_ID {
+            anyhow::bail!(
+                "connection notice from the server: {}",
+                String::from_utf8_lossy(&f.payload)
+            );
+        }
+        let id = f.request_id;
+        let outcome = match f.status {
+            WireStatus::Ok | WireStatus::OkDegraded => Ok(decode_search_ok(f.status, &f.payload)
+                .map_err(|pe| anyhow::anyhow!("malformed search reply: {pe}"))?),
+            _ => Err(Self::inner_error(&f)?),
+        };
+        Ok(Some((id, outcome)))
+    }
+
+    /// Blocking write (insert / delete / compact).
+    pub fn write(
+        &mut self,
+        op: WriteOp,
+        deadline_ms: u64,
+    ) -> anyhow::Result<Result<NetWriteReply, RouterError>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let body = WriteBody { op, deadline_ms };
+        self.send(&Frame::request(Op::Write, id, body.encode()))?;
+        let f = self.recv_for(id)?;
+        match f.status {
+            WireStatus::Ok => Ok(Ok(decode_write_ok(&f.payload)
+                .map_err(|pe| anyhow::anyhow!("malformed write reply: {pe}"))?)),
+            _ => Ok(Err(Self::inner_error(&f)?)),
+        }
+    }
+
+    /// Fetch the server's stats snapshot (router stats + net counters +
+    /// index dim / live rows).
+    pub fn stats(&mut self) -> anyhow::Result<NetStats> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Frame::request(Op::Stats, id, Vec::new()))?;
+        let f = self.recv_for(id)?;
+        if f.status != WireStatus::Ok {
+            anyhow::bail!("stats request failed with status {:?}", f.status);
+        }
+        decode_stats(&f.payload).map_err(|pe| anyhow::anyhow!("malformed stats reply: {pe}"))
+    }
+
+    /// Liveness probe: the payload is echoed back.
+    pub fn ping(&mut self, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Frame::request(Op::Ping, id, payload.to_vec()))?;
+        let f = self.recv_for(id)?;
+        if f.status != WireStatus::Ok {
+            anyhow::bail!("ping failed with status {:?}", f.status);
+        }
+        Ok(f.payload)
+    }
+
+    /// Ask the server to drain: it acks, stops accepting connections,
+    /// answers everything in flight, and closes.
+    pub fn drain_server(&mut self) -> anyhow::Result<()> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(&Frame::request(Op::Drain, id, Vec::new()))?;
+        let f = self.recv_for(id)?;
+        if f.status != WireStatus::Ok {
+            anyhow::bail!("drain request failed with status {:?}", f.status);
+        }
+        Ok(())
+    }
+}

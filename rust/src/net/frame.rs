@@ -1,0 +1,1016 @@
+//! The wire format: a versioned, length-prefixed binary frame codec.
+//!
+//! This layer is pure — no sockets, no threads, nothing beyond
+//! `std::io::Read` — so every byte-level rule is testable against plain
+//! buffers (`tests/net_protocol.rs` drives it through chunked readers,
+//! truncation, and corruption). The frame layout and the status-code ↔
+//! [`RouterError`] mapping are specified in the [`crate::net`] module
+//! docs; this file is their single implementation.
+//!
+//! Two layers live here:
+//!
+//! 1. **Framing** — [`Frame`] (header + opaque payload), its encoder,
+//!    and the incremental [`FrameReader`] decoder. The reader owns an
+//!    accumulation buffer so partial reads (short `read()`s, read
+//!    timeouts used for drain polling) never lose bytes: a `WouldBlock`
+//!    or `TimedOut` between frames — or mid-frame — simply returns
+//!    [`Poll::Pending`] and the next call resumes where it left off.
+//! 2. **Payload codecs** — typed encode/decode for each op's request
+//!    and reply body ([`SearchBody`], [`WriteBody`], [`NetStats`], …),
+//!    mapping 1:1 onto the in-process [`Router`](crate::server::Router)
+//!    contract so loopback replies can be compared bit-for-bit against
+//!    in-process ones.
+//!
+//! All integers are little-endian; `f32` scores travel as their IEEE-754
+//! bit pattern (`to_bits`/`from_bits`), so scores survive the wire
+//! bit-identically — the equivalence suite depends on this.
+
+use crate::index::{EncodeParams, SearchParams};
+use crate::server::{Response, RouterError, Stats, WriteOp, WriteOutcome, WriteResponse};
+use crate::tensor::Matrix;
+use std::time::Duration;
+
+/// Frame magic: first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"QNC2";
+/// Protocol version this build speaks (strict: any other is rejected).
+pub const VERSION: u8 = 1;
+/// Fixed header size: magic(4) + version(1) + op(1) + status(1) +
+/// reserved(1) + request_id(8) + payload_len(4).
+pub const HEADER_LEN: usize = 20;
+/// Default payload-size ceiling (8 MiB) — `--frame-max-bytes 0` maps here.
+pub const DEFAULT_FRAME_MAX: usize = 8 << 20;
+/// Smallest accepted `--frame-max-bytes`: below this, even a modest
+/// search request (dim-1536 query + params) could not be framed.
+pub const MIN_FRAME_MAX: usize = 4096;
+/// `request_id` reserved for connection-level notices (protocol errors,
+/// connection refusal) — never assigned to a request by any client.
+pub const CONN_NOTICE_ID: u64 = 0;
+
+// ---------------------------------------------------------------------
+// ops + statuses
+// ---------------------------------------------------------------------
+
+/// Frame operation — what the payload means.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Request: [`SearchBody`]. Reply: search results / router error.
+    Search = 1,
+    /// Request: [`WriteBody`]. Reply: write outcome / router error.
+    Write = 2,
+    /// Request: empty. Reply: [`NetStats`] snapshot.
+    Stats = 3,
+    /// Request: arbitrary bytes. Reply: the same bytes (liveness probe;
+    /// also the op carried by connection-level notices).
+    Ping = 4,
+    /// Request: empty. Reply: empty `Ok`, then the server drains.
+    Drain = 5,
+}
+
+impl Op {
+    /// Every defined op, for exhaustive roundtrip tests.
+    pub const ALL: [Op; 5] = [Op::Search, Op::Write, Op::Stats, Op::Ping, Op::Drain];
+
+    pub fn from_u8(v: u8) -> Option<Op> {
+        match v {
+            1 => Some(Op::Search),
+            2 => Some(Op::Write),
+            3 => Some(Op::Stats),
+            4 => Some(Op::Ping),
+            5 => Some(Op::Drain),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Reply status — request frames always carry [`WireStatus::Ok`]; reply
+/// frames encode the outcome, mapping every [`RouterError`] variant and
+/// the `degraded` flag to a distinct code (see the [`crate::net`] table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireStatus {
+    /// Success; payload is the op's reply body.
+    Ok = 0,
+    /// Success under deadline pressure: the reply is the flagged
+    /// stage-1/2 shortlist (`Response::degraded == true`).
+    OkDegraded = 1,
+    /// [`RouterError::Stopped`] — the router refused the request.
+    Stopped = 2,
+    /// [`RouterError::Saturated`] — the bounded ingress queue was full.
+    Saturated = 3,
+    /// [`RouterError::WorkerDied`] — the serving thread died first.
+    WorkerDied = 4,
+    /// [`RouterError::DeadlineExceeded`] — expired before serving began.
+    DeadlineExceeded = 5,
+    /// [`RouterError::Overloaded`] — admission shed; payload carries the
+    /// `retry_after_hint` in nanoseconds (u64).
+    Overloaded = 6,
+    /// The request was well-framed but semantically invalid (wrong query
+    /// dimension, …); payload is a UTF-8 message. The connection stays
+    /// open — this is the caller's bug, not a framing violation.
+    BadRequest = 7,
+    /// Framing/codec violation notice; payload is a UTF-8 message. Sent
+    /// best-effort with [`CONN_NOTICE_ID`] just before the server closes
+    /// the offending connection.
+    Protocol = 8,
+}
+
+impl WireStatus {
+    /// Every defined status, for exhaustive roundtrip tests.
+    pub const ALL: [WireStatus; 9] = [
+        WireStatus::Ok,
+        WireStatus::OkDegraded,
+        WireStatus::Stopped,
+        WireStatus::Saturated,
+        WireStatus::WorkerDied,
+        WireStatus::DeadlineExceeded,
+        WireStatus::Overloaded,
+        WireStatus::BadRequest,
+        WireStatus::Protocol,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<WireStatus> {
+        match v {
+            0 => Some(WireStatus::Ok),
+            1 => Some(WireStatus::OkDegraded),
+            2 => Some(WireStatus::Stopped),
+            3 => Some(WireStatus::Saturated),
+            4 => Some(WireStatus::WorkerDied),
+            5 => Some(WireStatus::DeadlineExceeded),
+            6 => Some(WireStatus::Overloaded),
+            7 => Some(WireStatus::BadRequest),
+            8 => Some(WireStatus::Protocol),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// The status a [`RouterError`] travels as.
+    pub fn of_router_error(e: &RouterError) -> WireStatus {
+        match e {
+            RouterError::Stopped => WireStatus::Stopped,
+            RouterError::Saturated => WireStatus::Saturated,
+            RouterError::WorkerDied => WireStatus::WorkerDied,
+            RouterError::DeadlineExceeded => WireStatus::DeadlineExceeded,
+            RouterError::Overloaded { .. } => WireStatus::Overloaded,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// protocol errors
+// ---------------------------------------------------------------------
+
+/// A framing/codec violation — typed so the server can count it, notify
+/// the peer, and close exactly the offending connection (never a panic,
+/// never a hang, never another connection).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version byte differs from [`VERSION`] (the protocol is strict-v1).
+    BadVersion(u8),
+    /// Reserved header byte was non-zero.
+    BadReserved(u8),
+    /// Op byte maps to no [`Op`].
+    UnknownOp(u8),
+    /// Status byte maps to no [`WireStatus`].
+    UnknownStatus(u8),
+    /// Declared payload length exceeds the connection's frame-max.
+    Oversized { len: usize, max: usize },
+    /// The stream ended mid-frame (`got` of `need` bytes buffered).
+    Truncated { got: usize, need: usize },
+    /// The frame was well-formed but its payload did not decode as the
+    /// op's declared body.
+    BadPayload(String),
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            ProtocolError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            ProtocolError::BadReserved(v) => write!(f, "non-zero reserved header byte {v:#04x}"),
+            ProtocolError::UnknownOp(v) => write!(f, "unknown op byte {v:#04x}"),
+            ProtocolError::UnknownStatus(v) => write!(f, "unknown status byte {v:#04x}"),
+            ProtocolError::Oversized { len, max } => {
+                write!(f, "declared payload of {len} bytes exceeds frame-max-bytes {max}")
+            }
+            ProtocolError::Truncated { got, need } => {
+                write!(f, "stream ended mid-frame ({got} of {need} bytes)")
+            }
+            ProtocolError::BadPayload(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// What [`FrameReader::poll`] can fail with: a transport error or a
+/// protocol violation. Both are fatal to the connection; only the latter
+/// is the peer's fault (and counted as such).
+#[derive(Debug)]
+pub enum FrameIoError {
+    Io(std::io::Error),
+    Protocol(ProtocolError),
+}
+
+impl std::fmt::Display for FrameIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameIoError::Io(e) => write!(f, "transport error: {e}"),
+            FrameIoError::Protocol(e) => write!(f, "protocol error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameIoError {}
+
+// ---------------------------------------------------------------------
+// frame + incremental reader
+// ---------------------------------------------------------------------
+
+/// One wire frame: fixed header + opaque payload. The payload's meaning
+/// is `(op, status)`-dependent — see the payload codecs below.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub op: Op,
+    pub status: WireStatus,
+    pub request_id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A request frame (requests always carry status `Ok`).
+    pub fn request(op: Op, request_id: u64, payload: Vec<u8>) -> Frame {
+        Frame { op, status: WireStatus::Ok, request_id, payload }
+    }
+
+    /// A reply frame echoing the request's op and id.
+    pub fn reply(op: Op, status: WireStatus, request_id: u64, payload: Vec<u8>) -> Frame {
+        Frame { op, status, request_id, payload }
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.encoded_len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.op.as_u8());
+        out.push(self.status.as_u8());
+        out.push(0); // reserved
+        out.extend_from_slice(&self.request_id.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+}
+
+/// One step of incremental decoding.
+#[derive(Debug)]
+pub enum Poll {
+    /// A complete frame was decoded (more may be buffered — poll again).
+    Frame(Frame),
+    /// No complete frame yet and the source would block / timed out;
+    /// call again later, no bytes were lost.
+    Pending,
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+}
+
+/// Incremental frame decoder: accumulates bytes from any `Read` source
+/// and yields complete frames. Header fields are validated eagerly — a
+/// bad magic or version is reported as soon as those bytes arrive, an
+/// oversized declared length as soon as the header completes — so a
+/// hostile peer cannot make the server buffer unbounded garbage.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_payload: usize,
+}
+
+impl FrameReader {
+    pub fn new(max_payload: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max_payload }
+    }
+
+    /// `true` when no partial frame is buffered — the stream sits at a
+    /// frame boundary (the server's drain logic keys off this).
+    pub fn is_idle(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total bytes the currently-buffered frame needs (header estimate
+    /// until the header is complete).
+    fn expected_total(&self) -> usize {
+        if self.buf.len() < HEADER_LEN {
+            HEADER_LEN
+        } else {
+            let len =
+                u32::from_le_bytes(self.buf[16..HEADER_LEN].try_into().expect("4-byte slice"));
+            HEADER_LEN + len as usize
+        }
+    }
+
+    /// Try to cut one complete frame off the front of the buffer,
+    /// validating header fields as far as the buffered bytes reach.
+    fn try_parse(&mut self) -> Result<Option<Frame>, ProtocolError> {
+        let buf = &self.buf;
+        if buf.len() >= 4 && buf[..4] != MAGIC {
+            return Err(ProtocolError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        if buf.len() >= 5 && buf[4] != VERSION {
+            return Err(ProtocolError::BadVersion(buf[4]));
+        }
+        if buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let op = Op::from_u8(buf[5]).ok_or(ProtocolError::UnknownOp(buf[5]))?;
+        let status = WireStatus::from_u8(buf[6]).ok_or(ProtocolError::UnknownStatus(buf[6]))?;
+        if buf[7] != 0 {
+            return Err(ProtocolError::BadReserved(buf[7]));
+        }
+        let request_id = u64::from_le_bytes(buf[8..16].try_into().expect("8-byte slice"));
+        let len = u32::from_le_bytes(buf[16..HEADER_LEN].try_into().expect("4-byte slice")) as usize;
+        if len > self.max_payload {
+            return Err(ProtocolError::Oversized { len, max: self.max_payload });
+        }
+        let total = HEADER_LEN + len;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let payload = buf[HEADER_LEN..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(Frame { op, status, request_id, payload }))
+    }
+
+    /// Advance the decoder: drain buffered frames first, then read more
+    /// bytes. A `WouldBlock`/`TimedOut`/`Interrupted` read maps to
+    /// [`Poll::Pending`] with all buffered bytes intact; a clean EOF at a
+    /// frame boundary is [`Poll::Eof`]; an EOF mid-frame is a
+    /// [`ProtocolError::Truncated`].
+    pub fn poll<R: std::io::Read>(&mut self, src: &mut R) -> Result<Poll, FrameIoError> {
+        use std::io::ErrorKind;
+        loop {
+            if let Some(f) = self.try_parse().map_err(FrameIoError::Protocol)? {
+                return Ok(Poll::Frame(f));
+            }
+            let mut scratch = [0u8; 16 * 1024];
+            match src.read(&mut scratch) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(Poll::Eof)
+                    } else {
+                        Err(FrameIoError::Protocol(ProtocolError::Truncated {
+                            got: self.buf.len(),
+                            need: self.expected_total(),
+                        }))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&scratch[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                    ) =>
+                {
+                    return Ok(Poll::Pending);
+                }
+                Err(e) => return Err(FrameIoError::Io(e)),
+            }
+        }
+    }
+}
+
+/// Decode a complete byte buffer into its frames (test/diagnostic
+/// helper). Trailing partial bytes are a [`ProtocolError::Truncated`].
+pub fn decode_all(bytes: &[u8], max_payload: usize) -> Result<Vec<Frame>, ProtocolError> {
+    let mut reader = FrameReader::new(max_payload);
+    let mut src = bytes;
+    let mut out = Vec::new();
+    loop {
+        match reader.poll(&mut src) {
+            Ok(Poll::Frame(f)) => out.push(f),
+            Ok(Poll::Eof) => return Ok(out),
+            // a slice source never blocks; Pending is unreachable but
+            // harmless to loop on
+            Ok(Poll::Pending) => {}
+            Err(FrameIoError::Protocol(e)) => return Err(e),
+            Err(FrameIoError::Io(e)) => {
+                return Err(ProtocolError::BadPayload(format!("slice read failed: {e}")))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// payload primitives
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Cursor over a reply/request payload; every read is bounds-checked
+/// into a typed [`ProtocolError::BadPayload`], and [`finish`] enforces
+/// exact consumption (strict v1: trailing bytes are a violation).
+///
+/// [`finish`]: PayloadReader::finish
+struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn new(buf: &'a [u8]) -> PayloadReader<'a> {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtocolError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtocolError::BadPayload(format!(
+                "need {n} bytes at offset {}, payload has {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtocolError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtocolError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtocolError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtocolError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn string(&mut self) -> Result<String, ProtocolError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| ProtocolError::BadPayload("string is not valid UTF-8".into()))
+    }
+
+    /// Read `n` f32s (bounds-checked as one slice before allocating).
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ProtocolError> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| ProtocolError::BadPayload("f32 count overflows".into()))?;
+        let s = self.take(bytes)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4-byte chunk"))))
+            .collect())
+    }
+
+    fn finish(self) -> Result<(), ProtocolError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ProtocolError::BadPayload(format!(
+                "{} trailing bytes after the declared body",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// search bodies
+// ---------------------------------------------------------------------
+
+/// A search request's payload: the full [`SearchParams`] knob set, the
+/// request deadline (milliseconds from server receipt; 0 = none, same
+/// convention as [`Deadline::from_ms`](crate::util::deadline::Deadline::from_ms)),
+/// and the query vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchBody {
+    pub sp: SearchParams,
+    pub deadline_ms: u64,
+    pub query: Vec<f32>,
+}
+
+impl SearchBody {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(6 * 4 + 8 + 4 + 4 * self.query.len());
+        for v in [
+            self.sp.nprobe,
+            self.sp.ef_search,
+            self.sp.n_aq,
+            self.sp.n_pairs,
+            self.sp.n_final,
+            self.sp.batch_threads,
+        ] {
+            put_u32(&mut out, v as u32);
+        }
+        put_u64(&mut out, self.deadline_ms);
+        put_u32(&mut out, self.query.len() as u32);
+        for &x in &self.query {
+            put_f32(&mut out, x);
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<SearchBody, ProtocolError> {
+        let mut r = PayloadReader::new(payload);
+        let sp = SearchParams {
+            nprobe: r.u32()? as usize,
+            ef_search: r.u32()? as usize,
+            n_aq: r.u32()? as usize,
+            n_pairs: r.u32()? as usize,
+            n_final: r.u32()? as usize,
+            batch_threads: r.u32()? as usize,
+        };
+        let deadline_ms = r.u64()?;
+        let n = r.u32()? as usize;
+        let query = r.f32s(n)?;
+        r.finish()?;
+        Ok(SearchBody { sp, deadline_ms, query })
+    }
+}
+
+/// A successful search reply as decoded by the client: the same
+/// `(score, id)` list, `degraded` flag, and server-side latency an
+/// in-process caller gets from [`Response`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSearchReply {
+    pub results: Vec<(f32, u32)>,
+    pub degraded: bool,
+    pub server_latency: Duration,
+}
+
+/// Encode a router [`Response`] as a reply body; the status carries the
+/// `degraded` flag ([`WireStatus::OkDegraded`] vs [`WireStatus::Ok`]).
+pub fn encode_search_ok(resp: &Response) -> (WireStatus, Vec<u8>) {
+    let status = if resp.degraded { WireStatus::OkDegraded } else { WireStatus::Ok };
+    let mut out = Vec::with_capacity(8 + 4 + 8 * resp.results.len());
+    put_u64(&mut out, resp.latency.as_nanos() as u64);
+    put_u32(&mut out, resp.results.len() as u32);
+    for &(score, id) in &resp.results {
+        put_f32(&mut out, score);
+        put_u32(&mut out, id);
+    }
+    (status, out)
+}
+
+pub fn decode_search_ok(
+    status: WireStatus,
+    payload: &[u8],
+) -> Result<NetSearchReply, ProtocolError> {
+    let degraded = match status {
+        WireStatus::Ok => false,
+        WireStatus::OkDegraded => true,
+        other => {
+            return Err(ProtocolError::BadPayload(format!(
+                "status {other:?} is not a successful search reply"
+            )))
+        }
+    };
+    let mut r = PayloadReader::new(payload);
+    let server_latency = Duration::from_nanos(r.u64()?);
+    let n = r.u32()? as usize;
+    let mut results = Vec::with_capacity(n.min(payload.len() / 8 + 1));
+    for _ in 0..n {
+        let score = r.f32()?;
+        let id = r.u32()?;
+        results.push((score, id));
+    }
+    r.finish()?;
+    Ok(NetSearchReply { results, degraded, server_latency })
+}
+
+// ---------------------------------------------------------------------
+// router errors on the wire
+// ---------------------------------------------------------------------
+
+/// The error-status payload: empty for every variant except
+/// [`WireStatus::Overloaded`], which carries `retry_after_hint` in ns.
+pub fn error_payload(e: &RouterError) -> Vec<u8> {
+    match e {
+        RouterError::Overloaded { retry_after_hint } => {
+            let mut out = Vec::with_capacity(8);
+            put_u64(&mut out, retry_after_hint.as_nanos() as u64);
+            out
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// Build the reply frame a [`RouterError`] travels as.
+pub fn error_frame(op: Op, request_id: u64, e: &RouterError) -> Frame {
+    Frame::reply(op, WireStatus::of_router_error(e), request_id, error_payload(e))
+}
+
+/// Reconstruct the exact [`RouterError`] from an error-status reply —
+/// the inverse of [`error_frame`], pinned by the equivalence suite.
+pub fn decode_router_error(
+    status: WireStatus,
+    payload: &[u8],
+) -> Result<RouterError, ProtocolError> {
+    let mut r = PayloadReader::new(payload);
+    let e = match status {
+        WireStatus::Stopped => RouterError::Stopped,
+        WireStatus::Saturated => RouterError::Saturated,
+        WireStatus::WorkerDied => RouterError::WorkerDied,
+        WireStatus::DeadlineExceeded => RouterError::DeadlineExceeded,
+        WireStatus::Overloaded => {
+            RouterError::Overloaded { retry_after_hint: Duration::from_nanos(r.u64()?) }
+        }
+        other => {
+            return Err(ProtocolError::BadPayload(format!(
+                "status {other:?} is not a router error"
+            )))
+        }
+    };
+    r.finish()?;
+    Ok(e)
+}
+
+/// A connection-level protocol notice: sent best-effort (op `Ping`,
+/// request id [`CONN_NOTICE_ID`]) just before closing the connection.
+pub fn protocol_notice(msg: &str) -> Frame {
+    Frame::reply(Op::Ping, WireStatus::Protocol, CONN_NOTICE_ID, msg.as_bytes().to_vec())
+}
+
+/// A per-request rejection (semantic, not framing): connection stays up.
+pub fn bad_request_frame(op: Op, request_id: u64, msg: &str) -> Frame {
+    Frame::reply(op, WireStatus::BadRequest, request_id, msg.as_bytes().to_vec())
+}
+
+// ---------------------------------------------------------------------
+// write bodies
+// ---------------------------------------------------------------------
+
+/// A write request's payload: the [`WriteOp`] plus a deadline (same
+/// 0-disables convention as [`SearchBody::deadline_ms`]).
+#[derive(Clone, Debug)]
+pub struct WriteBody {
+    pub op: WriteOp,
+    pub deadline_ms: u64,
+}
+
+const WRITE_INSERT: u8 = 0;
+const WRITE_DELETE: u8 = 1;
+const WRITE_COMPACT: u8 = 2;
+
+impl WriteBody {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u64(&mut out, self.deadline_ms);
+        match &self.op {
+            WriteOp::Insert { vectors, ep } => {
+                out.push(WRITE_INSERT);
+                put_u32(&mut out, ep.a as u32);
+                put_u32(&mut out, ep.b as u32);
+                put_u32(&mut out, vectors.rows as u32);
+                put_u32(&mut out, vectors.cols as u32);
+                for &x in &vectors.data {
+                    put_f32(&mut out, x);
+                }
+            }
+            WriteOp::Delete { ids } => {
+                out.push(WRITE_DELETE);
+                put_u32(&mut out, ids.len() as u32);
+                for &id in ids {
+                    put_u32(&mut out, id);
+                }
+            }
+            WriteOp::Compact => out.push(WRITE_COMPACT),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WriteBody, ProtocolError> {
+        let mut r = PayloadReader::new(payload);
+        let deadline_ms = r.u64()?;
+        let op = match r.u8()? {
+            WRITE_INSERT => {
+                let ep = EncodeParams { a: r.u32()? as usize, b: r.u32()? as usize };
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                let n = rows.checked_mul(cols).ok_or_else(|| {
+                    ProtocolError::BadPayload("insert matrix shape overflows".into())
+                })?;
+                let data = r.f32s(n)?;
+                WriteOp::Insert { vectors: Matrix::from_vec(rows, cols, data), ep }
+            }
+            WRITE_DELETE => {
+                let n = r.u32()? as usize;
+                let bytes = r.take(n.checked_mul(4).ok_or_else(|| {
+                    ProtocolError::BadPayload("delete id count overflows".into())
+                })?)?;
+                let ids = bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect();
+                WriteOp::Delete { ids }
+            }
+            WRITE_COMPACT => WriteOp::Compact,
+            other => {
+                return Err(ProtocolError::BadPayload(format!("unknown write kind {other:#04x}")))
+            }
+        };
+        r.finish()?;
+        Ok(WriteBody { op, deadline_ms })
+    }
+}
+
+/// A write reply as decoded by the client — mirror of [`WriteResponse`].
+#[derive(Clone, Debug)]
+pub struct NetWriteReply {
+    /// The op's outcome, or the index's validation error as a string —
+    /// exactly [`WriteResponse::outcome`].
+    pub outcome: Result<WriteOutcome, String>,
+    pub server_latency: Duration,
+}
+
+const OUTCOME_INSERTED: u8 = 0;
+const OUTCOME_DELETED: u8 = 1;
+const OUTCOME_COMPACTED: u8 = 2;
+const OUTCOME_REJECTED: u8 = 3;
+
+pub fn encode_write_ok(resp: &WriteResponse) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, resp.latency.as_nanos() as u64);
+    match &resp.outcome {
+        Ok(WriteOutcome::Inserted(ids)) => {
+            out.push(OUTCOME_INSERTED);
+            put_u32(&mut out, ids.len() as u32);
+            for &id in ids {
+                put_u32(&mut out, id);
+            }
+        }
+        Ok(WriteOutcome::Deleted(n)) => {
+            out.push(OUTCOME_DELETED);
+            put_u64(&mut out, *n as u64);
+        }
+        Ok(WriteOutcome::Compacted(n)) => {
+            out.push(OUTCOME_COMPACTED);
+            put_u64(&mut out, *n as u64);
+        }
+        Err(msg) => {
+            out.push(OUTCOME_REJECTED);
+            put_str(&mut out, msg);
+        }
+    }
+    out
+}
+
+pub fn decode_write_ok(payload: &[u8]) -> Result<NetWriteReply, ProtocolError> {
+    let mut r = PayloadReader::new(payload);
+    let server_latency = Duration::from_nanos(r.u64()?);
+    let outcome = match r.u8()? {
+        OUTCOME_INSERTED => {
+            let n = r.u32()? as usize;
+            let bytes = r.take(n.checked_mul(4).ok_or_else(|| {
+                ProtocolError::BadPayload("inserted id count overflows".into())
+            })?)?;
+            Ok(WriteOutcome::Inserted(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
+            ))
+        }
+        OUTCOME_DELETED => Ok(WriteOutcome::Deleted(r.u64()? as usize)),
+        OUTCOME_COMPACTED => Ok(WriteOutcome::Compacted(r.u64()? as usize)),
+        OUTCOME_REJECTED => Err(r.string()?),
+        other => {
+            return Err(ProtocolError::BadPayload(format!(
+                "unknown write outcome tag {other:#04x}"
+            )))
+        }
+    };
+    r.finish()?;
+    Ok(NetWriteReply { outcome, server_latency })
+}
+
+// ---------------------------------------------------------------------
+// stats body
+// ---------------------------------------------------------------------
+
+/// The stats-op reply: the router's full [`Stats`] snapshot (net
+/// counters filled in by the [`NetServer`](crate::net::NetServer)) plus
+/// the two index facts a client needs to shape requests — the vector
+/// dimension and the live row count.
+#[derive(Clone, Debug)]
+pub struct NetStats {
+    pub stats: Stats,
+    pub dim: u32,
+    pub live_rows: u64,
+}
+
+pub fn encode_stats(ns: &NetStats) -> Vec<u8> {
+    let s = &ns.stats;
+    let mut out = Vec::with_capacity(16 * 8 + 4 + 8 * s.shard_scans.len() + 12);
+    for v in [
+        s.served,
+        s.mean_latency.as_nanos() as u64,
+        s.p50.as_nanos() as u64,
+        s.p99.as_nanos() as u64,
+        s.inserted,
+        s.deleted,
+        s.epoch,
+        s.panics,
+        s.respawns,
+        s.shed,
+        s.deadline_exceeded,
+        s.degraded,
+        s.connections,
+        s.frames_in,
+        s.frames_out,
+        s.protocol_errors,
+    ] {
+        put_u64(&mut out, v);
+    }
+    put_u32(&mut out, s.shard_scans.len() as u32);
+    for &v in &s.shard_scans {
+        put_u64(&mut out, v);
+    }
+    put_u32(&mut out, ns.dim);
+    put_u64(&mut out, ns.live_rows);
+    out
+}
+
+pub fn decode_stats(payload: &[u8]) -> Result<NetStats, ProtocolError> {
+    let mut r = PayloadReader::new(payload);
+    let served = r.u64()?;
+    let mean_latency = Duration::from_nanos(r.u64()?);
+    let p50 = Duration::from_nanos(r.u64()?);
+    let p99 = Duration::from_nanos(r.u64()?);
+    let inserted = r.u64()?;
+    let deleted = r.u64()?;
+    let epoch = r.u64()?;
+    let panics = r.u64()?;
+    let respawns = r.u64()?;
+    let shed = r.u64()?;
+    let deadline_exceeded = r.u64()?;
+    let degraded = r.u64()?;
+    let connections = r.u64()?;
+    let frames_in = r.u64()?;
+    let frames_out = r.u64()?;
+    let protocol_errors = r.u64()?;
+    let n_shards = r.u32()? as usize;
+    let mut shard_scans = Vec::with_capacity(n_shards.min(payload.len() / 8 + 1));
+    for _ in 0..n_shards {
+        shard_scans.push(r.u64()?);
+    }
+    let dim = r.u32()?;
+    let live_rows = r.u64()?;
+    r.finish()?;
+    Ok(NetStats {
+        stats: Stats {
+            served,
+            mean_latency,
+            p50,
+            p99,
+            shard_scans,
+            inserted,
+            deleted,
+            epoch,
+            panics,
+            respawns,
+            shed,
+            deadline_exceeded,
+            degraded,
+            connections,
+            frames_in,
+            frames_out,
+            protocol_errors,
+        },
+        dim,
+        live_rows,
+    })
+}
+
+// ---------------------------------------------------------------------
+// unit tests (property/hardening coverage lives in tests/net_protocol.rs)
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_through_decode_all() {
+        let frames = vec![
+            Frame::request(Op::Ping, 7, b"hello".to_vec()),
+            Frame::reply(Op::Search, WireStatus::OkDegraded, u64::MAX, vec![1, 2, 3]),
+            Frame::request(Op::Drain, 9, Vec::new()),
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            f.encode_into(&mut bytes);
+        }
+        assert_eq!(decode_all(&bytes, DEFAULT_FRAME_MAX).unwrap(), frames);
+    }
+
+    #[test]
+    fn truncated_stream_is_a_typed_error() {
+        let bytes = Frame::request(Op::Search, 1, vec![0; 64]).encode();
+        for cut in 1..bytes.len() {
+            match decode_all(&bytes[..cut], DEFAULT_FRAME_MAX) {
+                Err(
+                    ProtocolError::Truncated { .. }
+                    | ProtocolError::BadMagic(_)
+                    | ProtocolError::BadVersion(_),
+                ) => {}
+                other => panic!("cut at {cut}: expected a typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_from_the_header() {
+        let f = Frame::request(Op::Ping, 3, vec![0; 100]);
+        let bytes = f.encode();
+        // header-only prefix already carries the oversized declaration
+        let err = decode_all(&bytes[..HEADER_LEN], 64).unwrap_err();
+        assert_eq!(err, ProtocolError::Oversized { len: 100, max: 64 });
+    }
+
+    #[test]
+    fn search_body_roundtrips() {
+        let body = SearchBody {
+            sp: SearchParams {
+                nprobe: 4,
+                ef_search: 32,
+                n_aq: 64,
+                n_pairs: 8,
+                n_final: 5,
+                batch_threads: 2,
+            },
+            deadline_ms: 1234,
+            query: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+        };
+        let back = SearchBody::decode(&body.encode()).unwrap();
+        assert_eq!(back, body);
+    }
+
+    #[test]
+    fn router_errors_roundtrip_exactly() {
+        let errors = [
+            RouterError::Stopped,
+            RouterError::Saturated,
+            RouterError::WorkerDied,
+            RouterError::DeadlineExceeded,
+            RouterError::Overloaded { retry_after_hint: Duration::from_micros(250) },
+        ];
+        for e in errors {
+            let f = error_frame(Op::Search, 42, &e);
+            assert_eq!(decode_router_error(f.status, &f.payload).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn payload_reader_rejects_trailing_bytes() {
+        let mut body = SearchBody {
+            sp: SearchParams::default(),
+            deadline_ms: 0,
+            query: vec![1.0],
+        }
+        .encode();
+        body.push(0xFF);
+        assert!(matches!(
+            SearchBody::decode(&body),
+            Err(ProtocolError::BadPayload(_))
+        ));
+    }
+}

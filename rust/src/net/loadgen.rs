@@ -1,0 +1,311 @@
+//! Load generator for the TCP front-end (`bench-net` on the CLI):
+//! N connections × (closed-loop | fixed-rate), reporting wire-level
+//! QPS/p50/p99 plus typed outcome counts (shed / deadline-exceeded /
+//! degraded / worker-died), so overload behavior is visible — not just
+//! the happy path.
+//!
+//! - **Closed loop** (`rate == 0`): each connection keeps `pipeline`
+//!   requests in flight and issues its share of `requests` as fast as
+//!   replies come back — measures capacity.
+//! - **Fixed rate** (`rate > 0` QPS, split across connections): each
+//!   connection fires on its own clock for `duration`, pumping replies
+//!   between ticks — measures latency at an offered load, and keeps
+//!   submitting while the server sheds (the typed counters make the
+//!   shed visible).
+//!
+//! Latency is measured client-side, submit → reply, so it includes the
+//! wire. Percentiles are nearest-rank over the merged per-connection
+//! samples — the same estimator the router's own [`Stats`] uses, so the
+//! two views are comparable.
+//!
+//! Every successful reply is validated: the `(score, id)` list must be
+//! sorted under the engine's total order (ascending score, id as the
+//! tie-break). A violation fails the run loudly — the load generator
+//! doubles as a wire-level conformance check.
+//!
+//! [`Stats`]: crate::server::Stats
+
+use super::client::NetClient;
+use super::frame::NetSearchReply;
+use crate::index::SearchParams;
+use crate::server::{percentile, RouterError};
+use crate::tensor::Matrix;
+use std::time::{Duration, Instant};
+
+/// One load run's shape.
+#[derive(Clone, Debug)]
+pub struct LoadCfg {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent connections.
+    pub conns: usize,
+    /// Total requests (closed-loop mode; split across connections).
+    pub requests: usize,
+    /// Per-connection in-flight window (closed-loop mode).
+    pub pipeline: usize,
+    /// Target offered load in QPS across all connections; `0` selects
+    /// closed-loop mode.
+    pub rate: f64,
+    /// Wall-clock run time (fixed-rate mode).
+    pub duration: Duration,
+    /// Search knobs carried on every request.
+    pub sp: SearchParams,
+    /// Per-request deadline (ms; 0 = none).
+    pub deadline_ms: u64,
+    /// Query pool; connections walk it round-robin from staggered
+    /// offsets.
+    pub queries: Matrix,
+}
+
+/// Aggregated outcome of a load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    /// replies received (every outcome)
+    pub completed: u64,
+    pub ok: u64,
+    /// subset of `ok` flagged degraded
+    pub degraded: u64,
+    /// `Overloaded` + `Saturated` replies
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub worker_died: u64,
+    pub stopped: u64,
+    pub wall: Duration,
+    /// completed replies per second of wall time
+    pub qps: f64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// Per-connection accumulator, merged into the [`LoadReport`].
+#[derive(Default)]
+struct PerConn {
+    sent: u64,
+    completed: u64,
+    ok: u64,
+    degraded: u64,
+    shed: u64,
+    deadline_exceeded: u64,
+    worker_died: u64,
+    stopped: u64,
+    latencies_ns: Vec<u64>,
+}
+
+impl PerConn {
+    fn record(
+        &mut self,
+        latency: Duration,
+        outcome: &Result<NetSearchReply, RouterError>,
+    ) -> anyhow::Result<()> {
+        self.completed += 1;
+        self.latencies_ns.push(latency.as_nanos() as u64);
+        match outcome {
+            Ok(reply) => {
+                for w in reply.results.windows(2) {
+                    let ordered =
+                        w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 <= w[1].1);
+                    if !ordered {
+                        anyhow::bail!(
+                            "reply violates the (score, id) total order: {:?} before {:?}",
+                            w[0],
+                            w[1]
+                        );
+                    }
+                }
+                self.ok += 1;
+                if reply.degraded {
+                    self.degraded += 1;
+                }
+            }
+            Err(RouterError::Overloaded { .. } | RouterError::Saturated) => self.shed += 1,
+            Err(RouterError::DeadlineExceeded) => self.deadline_exceeded += 1,
+            Err(RouterError::WorkerDied) => self.worker_died += 1,
+            Err(RouterError::Stopped) => self.stopped += 1,
+        }
+        Ok(())
+    }
+}
+
+/// Pop the submit timestamp for `id` out of the in-flight window.
+fn take_inflight(inflight: &mut Vec<(u64, Instant)>, id: u64) -> anyhow::Result<Instant> {
+    match inflight.iter().position(|(i, _)| *i == id) {
+        Some(pos) => Ok(inflight.swap_remove(pos).1),
+        None => anyhow::bail!("reply for unknown request id {id}"),
+    }
+}
+
+fn closed_loop(
+    addr: &str,
+    quota: usize,
+    pipeline: usize,
+    sp: SearchParams,
+    deadline_ms: u64,
+    queries: &Matrix,
+    offset: usize,
+) -> anyhow::Result<PerConn> {
+    let mut client = NetClient::connect(addr)?;
+    let mut acc = PerConn::default();
+    let mut inflight: Vec<(u64, Instant)> = Vec::new();
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    while done < quota {
+        while sent < quota && inflight.len() < pipeline {
+            let row = (offset + sent) % queries.rows;
+            let id = client.submit_search(queries.row(row), &sp, deadline_ms)?;
+            inflight.push((id, Instant::now()));
+            sent += 1;
+            acc.sent += 1;
+        }
+        if let Some((id, outcome)) = client.recv_any_search(None)? {
+            let t0 = take_inflight(&mut inflight, id)?;
+            acc.record(t0.elapsed(), &outcome)?;
+            done += 1;
+        }
+    }
+    Ok(acc)
+}
+
+fn rate_loop(
+    addr: &str,
+    rate_per_conn: f64,
+    duration: Duration,
+    sp: SearchParams,
+    deadline_ms: u64,
+    queries: &Matrix,
+    offset: usize,
+) -> anyhow::Result<PerConn> {
+    let mut client = NetClient::connect(addr)?;
+    let mut acc = PerConn::default();
+    let mut inflight: Vec<(u64, Instant)> = Vec::new();
+    let interval = Duration::from_secs_f64(1.0 / rate_per_conn);
+    let start = Instant::now();
+    let mut next_fire = start;
+    let mut sent = 0usize;
+    while start.elapsed() < duration {
+        let now = Instant::now();
+        if now >= next_fire {
+            let row = (offset + sent) % queries.rows;
+            let id = client.submit_search(queries.row(row), &sp, deadline_ms)?;
+            inflight.push((id, Instant::now()));
+            sent += 1;
+            acc.sent += 1;
+            next_fire += interval;
+            if next_fire < now {
+                // fell behind (slow replies): re-anchor instead of
+                // bursting an unbounded backlog of catch-up sends
+                next_fire = now;
+            }
+            continue;
+        }
+        // pump replies until the next scheduled send (set_read_timeout
+        // rejects a zero duration, hence the 1 ms floor)
+        let wait = (next_fire - now).max(Duration::from_millis(1));
+        if let Some((id, outcome)) = client.recv_any_search(Some(wait))? {
+            let t0 = take_inflight(&mut inflight, id)?;
+            acc.record(t0.elapsed(), &outcome)?;
+        }
+    }
+    // the offered-load window is over; collect every outstanding reply
+    while !inflight.is_empty() {
+        match client.recv_any_search(Some(Duration::from_secs(30)))? {
+            Some((id, outcome)) => {
+                let t0 = take_inflight(&mut inflight, id)?;
+                acc.record(t0.elapsed(), &outcome)?;
+            }
+            None => anyhow::bail!(
+                "timed out draining {} in-flight replies after the run",
+                inflight.len()
+            ),
+        }
+    }
+    Ok(acc)
+}
+
+/// Run the configured load and aggregate. Any connection-level failure
+/// (transport error, malformed reply, order violation) fails the whole
+/// run with that error.
+pub fn run(cfg: &LoadCfg) -> anyhow::Result<LoadReport> {
+    if cfg.conns == 0 {
+        anyhow::bail!("LoadCfg::conns must be >= 1");
+    }
+    if cfg.queries.rows == 0 {
+        anyhow::bail!("LoadCfg::queries must have at least one row");
+    }
+    if cfg.rate == 0.0 && cfg.requests == 0 {
+        anyhow::bail!("closed-loop mode needs LoadCfg::requests >= 1");
+    }
+    let pipeline = cfg.pipeline.max(1);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.conns);
+    for c in 0..cfg.conns {
+        // per-connection share: requests split evenly, remainder to the
+        // first threads; query offsets staggered so connections don't
+        // all replay the same rows in lockstep
+        let quota = cfg.requests / cfg.conns + usize::from(c < cfg.requests % cfg.conns);
+        let addr = cfg.addr.clone();
+        let sp = cfg.sp;
+        let deadline_ms = cfg.deadline_ms;
+        let queries = cfg.queries.clone();
+        let rate_per_conn = cfg.rate / cfg.conns as f64;
+        let duration = cfg.duration;
+        let offset = c * queries.rows / cfg.conns.max(1);
+        handles.push(std::thread::spawn(move || {
+            if rate_per_conn > 0.0 {
+                rate_loop(&addr, rate_per_conn, duration, sp, deadline_ms, &queries, offset)
+            } else if quota > 0 {
+                closed_loop(&addr, quota, pipeline, sp, deadline_ms, &queries, offset)
+            } else {
+                Ok(PerConn::default())
+            }
+        }));
+    }
+    let mut merged = PerConn::default();
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(pc)) => {
+                merged.sent += pc.sent;
+                merged.completed += pc.completed;
+                merged.ok += pc.ok;
+                merged.degraded += pc.degraded;
+                merged.shed += pc.shed;
+                merged.deadline_exceeded += pc.deadline_exceeded;
+                merged.worker_died += pc.worker_died;
+                merged.stopped += pc.stopped;
+                merged.latencies_ns.extend(pc.latencies_ns);
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or_else(|| Some(anyhow::Error::msg("a load thread panicked")))
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = t0.elapsed();
+    merged.latencies_ns.sort_unstable();
+    let mean_ns = if merged.latencies_ns.is_empty() {
+        0
+    } else {
+        merged.latencies_ns.iter().sum::<u64>() / merged.latencies_ns.len() as u64
+    };
+    Ok(LoadReport {
+        sent: merged.sent,
+        completed: merged.completed,
+        ok: merged.ok,
+        degraded: merged.degraded,
+        shed: merged.shed,
+        deadline_exceeded: merged.deadline_exceeded,
+        worker_died: merged.worker_died,
+        stopped: merged.stopped,
+        wall,
+        qps: merged.completed as f64 / wall.as_secs_f64().max(1e-9),
+        mean: Duration::from_nanos(mean_ns),
+        p50: percentile(&merged.latencies_ns, 0.50),
+        p99: percentile(&merged.latencies_ns, 0.99),
+    })
+}

@@ -1,0 +1,106 @@
+//! Network serving tier: the wire protocol in front of the
+//! [`Router`](crate::server::Router).
+//!
+//! This subsystem turns in-process serving into a socket boundary
+//! without changing its semantics: frames map 1:1 onto the router
+//! contract, and loopback replies are **bit-identical** to in-process
+//! ones — results, `degraded` flag, and every typed
+//! [`RouterError`](crate::server::RouterError) included (pinned by
+//! `tests/net_equivalence.rs`).
+//!
+//! | piece | file | role |
+//! |---|---|---|
+//! | [`frame`] | codec | frame layout + typed payload bodies (pure, no I/O) |
+//! | [`NetServer`] | server | accept loop + per-connection reader/writer pairs |
+//! | [`NetClient`] | client | blocking client, pipelining + reply stash |
+//! | [`loadgen`] | load | `bench-net`: N conns × closed-loop / fixed-rate |
+//!
+//! # Wire protocol v1
+//!
+//! Every message is one **frame**: a fixed 20-byte header followed by
+//! `payload_len` payload bytes. All integers are little-endian; `f32`
+//! values travel as IEEE-754 bit patterns, so scores cross the wire
+//! bit-identically.
+//!
+//! ```text
+//! offset  size  field        notes
+//!      0     4  magic        "QNC2"
+//!      4     1  version      1 (strict: anything else is rejected)
+//!      5     1  op           Search=1 Write=2 Stats=3 Ping=4 Drain=5
+//!      6     1  status       requests: 0; replies: table below
+//!      7     1  reserved     must be 0
+//!      8     8  request_id   client-chosen; echoed on the reply.
+//!                            0 is reserved for connection notices
+//!     16     4  payload_len  bytes that follow (≤ frame-max-bytes)
+//!     20     …  payload      op/status-specific body (frame.rs)
+//! ```
+//!
+//! Requests on one connection may be **pipelined**; replies are tagged
+//! with the originating `request_id` and may interleave in any order —
+//! clients must key on the id, not on arrival order.
+//!
+//! ## Status codes ↔ `RouterError`
+//!
+//! Every router outcome is a distinct wire status, so the client can
+//! reconstruct the exact in-process result:
+//!
+//! | code | status | in-process equivalent | payload |
+//! |---|---|---|---|
+//! | 0 | `Ok` | `Ok(Response { degraded: false, .. })` | reply body |
+//! | 1 | `OkDegraded` | `Ok(Response { degraded: true, .. })` | reply body |
+//! | 2 | `Stopped` | `Err(RouterError::Stopped)` | empty |
+//! | 3 | `Saturated` | `Err(RouterError::Saturated)` | empty |
+//! | 4 | `WorkerDied` | `Err(RouterError::WorkerDied)` | empty |
+//! | 5 | `DeadlineExceeded` | `Err(RouterError::DeadlineExceeded)` | empty |
+//! | 6 | `Overloaded` | `Err(RouterError::Overloaded { .. })` | `retry_after_hint` ns (u64) |
+//! | 7 | `BadRequest` | — (semantic rejection; connection stays open) | UTF-8 message |
+//! | 8 | `Protocol` | — (framing violation; connection closes) | UTF-8 message |
+//!
+//! ## Protocol errors
+//!
+//! Malformed input — bad magic/version, unknown op or status, a
+//! declared length over `frame-max-bytes`, a stream ending mid-frame,
+//! or a payload that does not decode — is a typed
+//! [`ProtocolError`](frame::ProtocolError). The server counts it,
+//! sends a best-effort status-8 notice (request id 0 for framing-level
+//! violations, the offending id for payload-level ones), and closes
+//! **only that connection**. Never a panic, never a hang, never
+//! another connection.
+//!
+//! ## Backpressure
+//!
+//! Three nested limits: `--max-conns` (further connects get a typed
+//! `Overloaded` notice and close), the per-connection in-flight cap
+//! (the reader stops pulling frames when the cap is reached, so TCP
+//! flow control pushes back on the sender), and the router's own
+//! admission/queue gates (`Overloaded`/`Saturated`, surfaced as wire
+//! statuses per request). `--frame-max-bytes` bounds per-frame memory
+//! before any allocation happens.
+//!
+//! ## Drain semantics
+//!
+//! Triggered by a `Drain` frame, [`NetServer::drain`], or dropping the
+//! server:
+//!
+//! 1. the listener closes — new connections are refused from that
+//!    instant;
+//! 2. each reader stops pulling new frames at its next frame boundary
+//!    (a partially-received frame gets a bounded grace to complete);
+//!    requests already buffered in the socket are answered with a
+//!    typed `Stopped` status (pings/stats still answered for real);
+//! 3. each writer drains its queue: every accepted in-flight request
+//!    gets its reply — a result or a typed status — **exactly once**;
+//! 4. sockets close, threads join. The router is left running:
+//!    draining the network tier never tears down in-process serving.
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod server;
+
+pub use client::NetClient;
+pub use frame::{
+    Frame, FrameReader, NetSearchReply, NetStats, NetWriteReply, Op, ProtocolError, WireStatus,
+};
+pub use loadgen::{LoadCfg, LoadReport};
+pub use server::{NetCfg, NetServer};

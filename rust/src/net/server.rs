@@ -1,0 +1,518 @@
+//! The TCP front-end: a multi-threaded accept loop feeding the
+//! in-process [`Router`] through per-connection reader/writer pairs.
+//!
+//! ## Per-connection architecture
+//!
+//! Each accepted connection gets **two** threads:
+//!
+//! - the **reader** owns the receive half: it pumps a [`FrameReader`]
+//!   (50 ms read timeout so drain is noticed promptly; partial reads
+//!   lose nothing), validates each frame, and submits through
+//!   [`Router::try_submit_within`] / [`Router::try_submit_write_within`]
+//!   — *never* the blocking submit, so a saturated router answers with
+//!   a typed wire status instead of stalling the connection;
+//! - the **writer** owns the send half: it consumes a **bounded**
+//!   channel of either finished frames or pending router reply
+//!   receivers, waits for each reply with a bounded `recv_timeout`
+//!   (deadline + grace, or a backstop — mirroring the router's own
+//!   discipline, so a wedged worker becomes a typed `WorkerDied` frame,
+//!   never a hung connection), and streams the encoded replies out.
+//!
+//! The bounded channel **is** the per-connection in-flight cap
+//! ([`NetCfg::conn_inflight`]): when a client pipelines more requests
+//! than the cap, the reader blocks handing the next one to the writer,
+//! stops pulling frames, and TCP backpressure propagates to the sender
+//! — per-connection flow control with no extra bookkeeping. Replies are
+//! written in submission order per connection (the protocol permits
+//! interleaving and clients key on `request_id`, so FIFO is merely the
+//! simplest legal schedule).
+//!
+//! ## Failure containment
+//!
+//! A framing violation ([`ProtocolError`]) increments
+//! `protocol_errors`, sends a best-effort [`WireStatus::Protocol`]
+//! notice, and closes **only the offending connection** — the accept
+//! loop and every other connection keep serving. Transport errors
+//! (reset, broken pipe, write timeout) close the connection silently;
+//! pending router replies are still drained so the router's reply
+//! guards resolve, they are just not written.
+//!
+//! ## Drain
+//!
+//! [`NetServer::drain`] (also triggered by dropping the server or by a
+//! wire [`Op::Drain`] frame) stops the accept loop (the listener socket
+//! closes, so new connections are refused by the OS), then every reader
+//! stops pulling new frames at its next frame boundary — requests
+//! already buffered in the socket are answered with a typed
+//! [`RouterError::Stopped`] status (pings/stats still answered for
+//! real), a partially-received frame gets a bounded grace to complete —
+//! and the writers drain every in-flight reply exactly once before the
+//! sockets close. The router itself stays alive: draining the network
+//! tier does not tear down in-process serving.
+
+use super::frame::{
+    bad_request_frame, encode_search_ok, encode_stats, encode_write_ok, error_frame,
+    protocol_notice, Frame, FrameIoError, FrameReader, NetStats, Op, Poll, ProtocolError,
+    SearchBody, WireStatus, WriteBody, CONN_NOTICE_ID, DEFAULT_FRAME_MAX, MIN_FRAME_MAX,
+};
+use crate::server::{Reply, Router, RouterError, WriteOp, WriteReply};
+use crate::util::deadline::Deadline;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Reader poll tick: how quickly a connection notices drain.
+const POLL_TICK: Duration = Duration::from_millis(50);
+/// Read tick for the post-drain sweep over already-buffered frames.
+const SWEEP_TICK: Duration = Duration::from_millis(10);
+/// How long a partially-received frame may complete after drain begins.
+const DRAIN_MIDFRAME_GRACE: Duration = Duration::from_secs(2);
+/// Writer-side socket timeout: a peer that stops reading cannot wedge
+/// drain — the write fails and the connection is marked dead.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Grace added to a request's deadline when the writer waits for its
+/// router reply (covers the batching window, like the router's own
+/// bounded recv).
+const RECV_GRACE: Duration = Duration::from_secs(1);
+/// Reply-wait backstop for deadline-less requests.
+const RECV_BACKSTOP: Duration = Duration::from_secs(60);
+/// `retry_after_hint` sent when a connection is refused at the
+/// `max_conns` cap (the router was never consulted, so no live
+/// estimate exists).
+const REFUSAL_HINT: Duration = Duration::from_millis(50);
+
+/// Network-tier knobs (the CLI's `--max-conns`/`--frame-max-bytes`/
+/// `--conn-inflight`; `0` on the CLI selects these defaults).
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    /// Accepted connections served concurrently; further connects get a
+    /// best-effort [`WireStatus::Overloaded`] notice and are closed.
+    pub max_conns: usize,
+    /// Per-frame payload ceiling; an oversized declared length is a
+    /// protocol error rejected from the header alone.
+    pub frame_max_bytes: usize,
+    /// Per-connection in-flight request cap (the bounded reader→writer
+    /// channel's capacity — see the module docs).
+    pub conn_inflight: usize,
+}
+
+impl Default for NetCfg {
+    fn default() -> NetCfg {
+        NetCfg { max_conns: 64, frame_max_bytes: DEFAULT_FRAME_MAX, conn_inflight: 32 }
+    }
+}
+
+/// Network-tier counters, surfaced through [`Stats`](crate::server::Stats)
+/// by the stats frame op and by `cmd_serve`.
+#[derive(Default)]
+struct NetCounters {
+    connections: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    router: Arc<Router>,
+    cfg: NetCfg,
+    counters: NetCounters,
+    draining: AtomicBool,
+}
+
+/// The TCP front-end. Binds, accepts, serves; dropping it (or calling
+/// [`drain`](Self::drain)) runs the graceful-drain protocol described
+/// in the module docs.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting. The router is shared — in-process callers keep
+    /// working, and it survives the server's drain.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: NetCfg) -> anyhow::Result<NetServer> {
+        if cfg.max_conns == 0 {
+            anyhow::bail!("NetCfg::max_conns must be >= 1");
+        }
+        if cfg.frame_max_bytes < MIN_FRAME_MAX {
+            anyhow::bail!(
+                "NetCfg::frame_max_bytes must be >= {MIN_FRAME_MAX}, got {}",
+                cfg.frame_max_bytes
+            );
+        }
+        if cfg.conn_inflight == 0 {
+            anyhow::bail!("NetCfg::conn_inflight must be >= 1");
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| anyhow::anyhow!("cannot read bound address: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("cannot set the listener non-blocking: {e}"))?;
+        let shared = Arc::new(Shared {
+            router,
+            cfg,
+            counters: NetCounters::default(),
+            draining: AtomicBool::new(false),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(&shared, listener))
+        };
+        Ok(NetServer { shared, local_addr, accept: Some(accept) })
+    }
+
+    /// The bound address — the ephemeral port when bound to `:0`.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Signal drain without waiting: stop accepting, let connections
+    /// finish their in-flight work (see the module docs).
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Snapshot the router's stats with the net counters filled in,
+    /// plus the index dim / live-row facts clients need.
+    pub fn stats(&self) -> NetStats {
+        stats_of(&self.shared)
+    }
+
+    /// Graceful shutdown: refuse new connections, answer every
+    /// in-flight frame exactly once, close every socket, join every
+    /// thread. Returns the final stats snapshot. The router is left
+    /// running.
+    pub fn drain(mut self) -> NetStats {
+        self.begin_drain();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        stats_of(&self.shared)
+    }
+}
+
+/// Dropping the server IS graceful drain (mirror of `Router`'s drop
+/// contract) — pinned by the shutdown-drain-over-the-wire test.
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.begin_drain();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn stats_of(shared: &Shared) -> NetStats {
+    let mut stats = shared.router.stats();
+    stats.connections = shared.counters.connections.load(Ordering::Relaxed);
+    stats.frames_in = shared.counters.frames_in.load(Ordering::Relaxed);
+    stats.frames_out = shared.counters.frames_out.load(Ordering::Relaxed);
+    stats.protocol_errors = shared.counters.protocol_errors.load(Ordering::Relaxed);
+    let index = shared.router.index();
+    NetStats { stats, dim: index.params.cfg.d as u32, live_rows: index.live_len() as u64 }
+}
+
+/// Accept until drain: non-blocking accepts on a short tick (so drain
+/// is noticed within ~5 ms), per-connection threads, and a typed
+/// refusal at the connection cap. On drain the listener drops first —
+/// the OS refuses new connects from that instant — then every live
+/// connection thread is joined.
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.draining.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conns.retain(|h| !h.is_finished());
+                if conns.len() >= shared.cfg.max_conns {
+                    refuse(stream);
+                    continue;
+                }
+                shared.counters.connections.fetch_add(1, Ordering::Relaxed);
+                let shared = shared.clone();
+                conns.push(std::thread::spawn(move || conn_loop(&shared, stream)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // transient accept failure (EMFILE, aborted handshake…):
+                // back off briefly, keep serving existing connections
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    // refuse-new-connections must hold before in-flight draining starts
+    drop(listener);
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Best-effort typed refusal at the connection cap: one `Overloaded`
+/// notice frame (op `Ping`, the connection-notice id), then close.
+fn refuse(mut stream: TcpStream) {
+    let f = error_frame(
+        Op::Ping,
+        CONN_NOTICE_ID,
+        &RouterError::Overloaded { retry_after_hint: REFUSAL_HINT },
+    );
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.write_all(&f.encode());
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// What the reader hands the writer: either a frame ready to send, or a
+/// pending router reply to wait on (bounded) and encode.
+enum ConnMsg {
+    Immediate(Frame),
+    Search { id: u64, rx: Receiver<Reply>, deadline: Deadline },
+    Write { id: u64, rx: Receiver<WriteReply>, deadline: Deadline },
+}
+
+/// One connection's reader side (runs on the connection thread; spawns
+/// and joins its writer).
+fn conn_loop(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = sync_channel::<ConnMsg>(shared.cfg.conn_inflight);
+    let writer = {
+        let shared = shared.clone();
+        std::thread::spawn(move || writer_loop(write_half, &rx, &shared))
+    };
+    let mut stream = stream;
+    let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let mut reader = FrameReader::new(shared.cfg.frame_max_bytes);
+    let mut drain_mark: Option<Instant> = None;
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            if reader.is_idle() {
+                final_sweep(shared, &mut stream, &mut reader, &tx);
+                break;
+            }
+            // mid-frame: a bounded grace for the frame to complete, so a
+            // slow sender is not cut mid-request the instant drain starts
+            let mark = *drain_mark.get_or_insert_with(Instant::now);
+            if mark.elapsed() > DRAIN_MIDFRAME_GRACE {
+                break;
+            }
+        }
+        match reader.poll(&mut stream) {
+            Ok(Poll::Frame(f)) => {
+                shared.counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                if handle_frame(shared, &tx, f).is_err() {
+                    break;
+                }
+            }
+            Ok(Poll::Pending) => {}
+            Ok(Poll::Eof) => break,
+            Err(FrameIoError::Protocol(pe)) => {
+                shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(ConnMsg::Immediate(protocol_notice(&pe.to_string())));
+                break;
+            }
+            Err(FrameIoError::Io(_)) => break,
+        }
+    }
+    // closing the channel lets the writer drain its queue and exit;
+    // every accepted in-flight request still gets its reply written
+    drop(tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// After drain: requests the client already pushed into the socket get
+/// a typed `Stopped` status (pings/stats/drain still answered for
+/// real) instead of a silent close. Best-effort — the sweep stops at
+/// the first quiet tick.
+fn final_sweep(
+    shared: &Arc<Shared>,
+    stream: &mut TcpStream,
+    reader: &mut FrameReader,
+    tx: &SyncSender<ConnMsg>,
+) {
+    let _ = stream.set_read_timeout(Some(SWEEP_TICK));
+    loop {
+        match reader.poll(stream) {
+            Ok(Poll::Frame(f)) => {
+                shared.counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                let reply = match f.op {
+                    Op::Ping => Frame::reply(Op::Ping, WireStatus::Ok, f.request_id, f.payload),
+                    Op::Drain => Frame::reply(Op::Drain, WireStatus::Ok, f.request_id, Vec::new()),
+                    Op::Stats => Frame::reply(
+                        Op::Stats,
+                        WireStatus::Ok,
+                        f.request_id,
+                        encode_stats(&stats_of(shared)),
+                    ),
+                    Op::Search | Op::Write => {
+                        error_frame(f.op, f.request_id, &RouterError::Stopped)
+                    }
+                };
+                if tx.send(ConnMsg::Immediate(reply)).is_err() {
+                    return;
+                }
+            }
+            _ => return,
+        }
+    }
+}
+
+/// Decode one request frame and route it. `Err(())` closes the
+/// connection (payload-level protocol violation, or the writer died).
+fn handle_frame(shared: &Arc<Shared>, tx: &SyncSender<ConnMsg>, f: Frame) -> Result<(), ()> {
+    let send = |msg: ConnMsg| tx.send(msg).map_err(|_| ());
+    match f.op {
+        Op::Ping => send(ConnMsg::Immediate(Frame::reply(
+            Op::Ping,
+            WireStatus::Ok,
+            f.request_id,
+            f.payload,
+        ))),
+        Op::Drain => {
+            // ack first, then flip the flag: the ack is already queued,
+            // so it is flushed before this connection's writer exits
+            let out = send(ConnMsg::Immediate(Frame::reply(
+                Op::Drain,
+                WireStatus::Ok,
+                f.request_id,
+                Vec::new(),
+            )));
+            shared.draining.store(true, Ordering::SeqCst);
+            out
+        }
+        Op::Stats => send(ConnMsg::Immediate(Frame::reply(
+            Op::Stats,
+            WireStatus::Ok,
+            f.request_id,
+            encode_stats(&stats_of(shared)),
+        ))),
+        Op::Search => {
+            let body = match SearchBody::decode(&f.payload) {
+                Ok(b) => b,
+                Err(pe) => return payload_violation(shared, &send, f.op, f.request_id, &pe),
+            };
+            let dim = shared.router.index().params.cfg.d;
+            if body.query.len() != dim {
+                return send(ConnMsg::Immediate(bad_request_frame(
+                    Op::Search,
+                    f.request_id,
+                    &format!("query has {} dims, the index expects {dim}", body.query.len()),
+                )));
+            }
+            let deadline = Deadline::from_ms(body.deadline_ms);
+            match shared.router.try_submit_within(body.query, body.sp, deadline) {
+                Ok(rx) => send(ConnMsg::Search { id: f.request_id, rx, deadline }),
+                Err(e) => send(ConnMsg::Immediate(error_frame(Op::Search, f.request_id, &e))),
+            }
+        }
+        Op::Write => {
+            let body = match WriteBody::decode(&f.payload) {
+                Ok(b) => b,
+                Err(pe) => return payload_violation(shared, &send, f.op, f.request_id, &pe),
+            };
+            if let WriteOp::Insert { vectors, .. } = &body.op {
+                let dim = shared.router.index().params.cfg.d;
+                if vectors.cols != dim {
+                    return send(ConnMsg::Immediate(bad_request_frame(
+                        Op::Write,
+                        f.request_id,
+                        &format!("insert rows have {} dims, the index expects {dim}", vectors.cols),
+                    )));
+                }
+            }
+            let deadline = Deadline::from_ms(body.deadline_ms);
+            match shared.router.try_submit_write_within(body.op, deadline) {
+                Ok(rx) => send(ConnMsg::Write { id: f.request_id, rx, deadline }),
+                Err(e) => send(ConnMsg::Immediate(error_frame(Op::Write, f.request_id, &e))),
+            }
+        }
+    }
+}
+
+/// A well-framed request whose payload does not decode is a protocol
+/// violation like any other: count it, tell the peer (tagged with the
+/// offending request id so a pipelined client can attribute it), close.
+fn payload_violation(
+    shared: &Arc<Shared>,
+    send: &dyn Fn(ConnMsg) -> Result<(), ()>,
+    op: Op,
+    request_id: u64,
+    pe: &ProtocolError,
+) -> Result<(), ()> {
+    shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    let _ = send(ConnMsg::Immediate(Frame::reply(
+        op,
+        WireStatus::Protocol,
+        request_id,
+        pe.to_string().into_bytes(),
+    )));
+    Err(())
+}
+
+/// Bounded reply wait, mirroring `Router`'s own recv discipline: the
+/// guard protocol delivers *something* for every accepted request, so a
+/// timeout here means a wedged serving thread — typed `WorkerDied`,
+/// never a hung connection.
+fn bounded_recv<T>(
+    rx: &Receiver<Result<T, RouterError>>,
+    deadline: Deadline,
+) -> Result<T, RouterError> {
+    let timeout = match deadline.remaining() {
+        Some(rem) => rem + RECV_GRACE,
+        None => RECV_BACKSTOP,
+    };
+    match rx.recv_timeout(timeout) {
+        Ok(reply) => reply,
+        Err(_) => Err(RouterError::WorkerDied),
+    }
+}
+
+/// One connection's writer side: encode and send replies in queue
+/// order. A failed/timed-out socket write marks the connection dead;
+/// pending router replies are still consumed (their guards resolve) but
+/// no longer written.
+fn writer_loop(mut stream: TcpStream, rx: &Receiver<ConnMsg>, shared: &Arc<Shared>) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut dead = false;
+    while let Ok(msg) = rx.recv() {
+        let frame = match msg {
+            ConnMsg::Immediate(f) => f,
+            ConnMsg::Search { id, rx, deadline } => match bounded_recv(&rx, deadline) {
+                Ok(resp) => {
+                    let (status, payload) = encode_search_ok(&resp);
+                    Frame::reply(Op::Search, status, id, payload)
+                }
+                Err(e) => error_frame(Op::Search, id, &e),
+            },
+            ConnMsg::Write { id, rx, deadline } => match bounded_recv(&rx, deadline) {
+                Ok(resp) => Frame::reply(Op::Write, WireStatus::Ok, id, encode_write_ok(&resp)),
+                Err(e) => error_frame(Op::Write, id, &e),
+            },
+        };
+        if !dead {
+            if stream.write_all(&frame.encode()).is_err() {
+                dead = true;
+            } else {
+                shared.counters.frames_out.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    let _ = stream.flush();
+}

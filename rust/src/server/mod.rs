@@ -499,13 +499,27 @@ pub struct Stats {
     pub deadline_exceeded: u64,
     /// replies delivered with `degraded: true`
     pub degraded: u64,
+    /// connections accepted by the network tier
+    /// ([`NetServer`](crate::net::NetServer)); zero when this snapshot
+    /// came straight from [`Router::stats`] — the router itself has no
+    /// sockets. The four net counters are filled in by
+    /// `NetServer::stats` and travel on the stats frame op.
+    pub connections: u64,
+    /// frames decoded off accepted connections (requests + notices)
+    pub frames_in: u64,
+    /// reply frames successfully written back
+    pub frames_out: u64,
+    /// framing/codec violations (each one closed its connection)
+    pub protocol_errors: u64,
 }
 
 /// Nearest-rank percentile of an ascending-sorted latency vector: the
 /// smallest element with at least `p·len` samples at or below it. Unlike
 /// the floored `((len-1)·p)` index, this is never biased low — with
 /// fewer than 100 samples p99 is the maximum, as it should be.
-fn percentile(sorted: &[u64], p: f64) -> Duration {
+/// `pub(crate)` so the network load generator ranks its wire-level
+/// samples with the same estimator.
+pub(crate) fn percentile(sorted: &[u64], p: f64) -> Duration {
     if sorted.is_empty() {
         return Duration::ZERO;
     }
@@ -854,12 +868,25 @@ impl Router {
     /// Non-blocking write submit: fails fast when the write queue is
     /// saturated.
     pub fn try_submit_write(&self, op: WriteOp) -> Result<Receiver<WriteReply>, RouterError> {
+        self.try_submit_write_within(op, Deadline::none())
+    }
+
+    /// [`Self::try_submit_write`] with a deadline carried on the op —
+    /// the write-lane mirror of [`Self::try_submit_within`] (the
+    /// network tier submits exclusively through the two `try_*_within`
+    /// entry points so a saturated lane becomes a typed wire status,
+    /// never a blocked connection).
+    pub fn try_submit_write_within(
+        &self,
+        op: WriteOp,
+        deadline: Deadline,
+    ) -> Result<Receiver<WriteReply>, RouterError> {
         self.admit_write()?;
         let (tx, rx) = sync_channel(1);
         self.metrics.write_inflight.fetch_add(1, Ordering::Relaxed);
         let req = WriteRequest {
             op,
-            deadline: Deadline::none(),
+            deadline,
             reply: ReplyGuard::new(tx, self.metrics.clone(), Lane::Write),
             t_submit: Instant::now(),
         };
@@ -929,7 +956,20 @@ impl Router {
             shed: self.metrics.shed.load(Ordering::Relaxed),
             deadline_exceeded: self.metrics.deadline_exceeded.load(Ordering::Relaxed),
             degraded: self.metrics.degraded.load(Ordering::Relaxed),
+            // the router has no sockets; the network tier overlays its
+            // own counters onto this snapshot (NetServer::stats)
+            connections: 0,
+            frames_in: 0,
+            frames_out: 0,
+            protocol_errors: 0,
         }
+    }
+
+    /// The shared index this router serves — the network tier reads the
+    /// vector dimension and live row count off it to validate requests
+    /// and answer the stats op.
+    pub fn index(&self) -> &Arc<SearchIndex> {
+        &self.index
     }
 
     /// Graceful shutdown: equivalent to dropping the router. Close both

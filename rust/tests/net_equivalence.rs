@@ -1,0 +1,369 @@
+//! The network tier's pinned invariant: a loopback request through
+//! [`NetServer`]/[`NetClient`] returns **bit-identical** results to the
+//! in-process [`Router`] — `(score, id)` lists, the `degraded` flag,
+//! and every typed [`RouterError`] included — plus the graceful-drain
+//! contract (every accepted in-flight frame answered exactly once, new
+//! connections refused, the router left alive). Deterministic parity
+//! for the error/degraded outcomes lives in the `fault_parity` module
+//! (built with `--features fault-injection`).
+
+use qinco2::data::{generate, Flavor};
+use qinco2::index::{BuildCfg, EncodeParams, SearchIndex, SearchParams};
+use qinco2::net::{NetCfg, NetClient, NetServer};
+use qinco2::server::{Router, RouterError, ServerCfg, WriteOp, WriteOutcome};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Tiny engine-free index (reference encoder, no PJRT), same recipe as
+/// `tests/coordinator_props.rs`.
+fn tiny_index() -> SearchIndex {
+    use qinco2::qinco::ParamStore;
+    use qinco2::runtime::manifest::Manifest;
+
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
+    let train = generate(Flavor::Deep, 250, spec.cfg.d, 11);
+    let db = generate(Flavor::Deep, 180, spec.cfg.d, 12);
+    let params = ParamStore::init(&spec, "test", &train, 13);
+    let cfg = BuildCfg { k_ivf: 8, m_tilde: 1, fit_sample: 150, shards: 2, ..Default::default() };
+    SearchIndex::build_reference(params, &train, &db, &cfg)
+}
+
+fn sp() -> SearchParams {
+    SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() }
+}
+
+/// Index + router + network front-end on an ephemeral loopback port.
+fn serve() -> (Arc<SearchIndex>, Arc<Router>, NetServer, String) {
+    let index = Arc::new(tiny_index());
+    let router =
+        Arc::new(Router::start(index.clone(), ServerCfg { workers: 2, ..Default::default() }));
+    let server = NetServer::bind("127.0.0.1:0", router.clone(), NetCfg::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (index, router, server, addr)
+}
+
+#[test]
+fn loopback_search_replies_are_bit_identical_to_in_process() {
+    let (index, router, server, addr) = serve();
+    let queries = generate(Flavor::Deep, 24, index.params.cfg.d, 71);
+    let mut client = NetClient::connect(&addr).unwrap();
+    for i in 0..queries.rows {
+        let q = queries.row(i);
+        let wire = client.search(q, &sp(), 0).unwrap().expect("typed reply");
+        let direct = router.search_blocking(q, sp()).expect("typed reply");
+        // scores travel as IEEE-754 bit patterns: assert_eq on the f32
+        // tuples IS the bit-identity check
+        assert_eq!(wire.results, direct.results, "query {i} diverged over the wire");
+        assert_eq!(wire.degraded, direct.degraded, "query {i} degraded flag");
+        assert_eq!(wire.results, index.search(q, &sp()), "query {i} vs direct index search");
+        assert!(!wire.degraded, "no deadline was set");
+    }
+    let stats = server.drain();
+    assert_eq!(stats.stats.served, 2 * queries.rows as u64);
+    assert!(stats.stats.frames_in >= queries.rows as u64);
+    assert!(stats.stats.frames_out >= queries.rows as u64);
+}
+
+#[test]
+fn pipelined_replies_resolve_out_of_order() {
+    let (index, _router, server, addr) = serve();
+    let queries = generate(Flavor::Deep, 12, index.params.cfg.d, 72);
+    let mut client = NetClient::connect(&addr).unwrap();
+    let ids: Vec<u64> = (0..queries.rows)
+        .map(|i| client.submit_search(queries.row(i), &sp(), 0).unwrap())
+        .collect();
+    // collect in REVERSE submission order: the client must key replies
+    // on request_id (stashing interleaved ones), not on arrival order
+    for (i, &id) in ids.iter().enumerate().rev() {
+        let reply = client.recv_search(id).unwrap().expect("typed reply");
+        assert_eq!(reply.results, index.search(queries.row(i), &sp()), "request {id}");
+    }
+    drop(server);
+}
+
+#[test]
+fn writes_over_the_wire_match_in_process_semantics() {
+    let (index, router, server, addr) = serve();
+    let d = index.params.cfg.d;
+    let mut client = NetClient::connect(&addr).unwrap();
+    let live0 = client.stats().unwrap().live_rows;
+
+    // insert over the wire (greedy defaults: a=0, b=0 -> A=K, B=1)
+    let fresh = generate(Flavor::Deep, 6, d, 73);
+    let op = WriteOp::Insert { vectors: fresh, ep: EncodeParams { a: 0, b: 0 } };
+    let reply = client.write(op, 0).unwrap().expect("typed write reply");
+    let ids = match reply.outcome {
+        Ok(WriteOutcome::Inserted(ids)) => ids,
+        other => panic!("expected Inserted, got {other:?}"),
+    };
+    assert_eq!(ids.len(), 6);
+    assert_eq!(client.stats().unwrap().live_rows, live0 + 6);
+
+    // post-mutation searches still agree with in-process serving
+    let queries = generate(Flavor::Deep, 8, d, 74);
+    for i in 0..queries.rows {
+        let q = queries.row(i);
+        let wire = client.search(q, &sp(), 0).unwrap().expect("typed reply");
+        assert_eq!(wire.results, router.search_blocking(q, sp()).unwrap().results);
+    }
+
+    // delete half of what we inserted, then compact
+    let victims: Vec<u32> = ids.iter().step_by(2).copied().collect();
+    let n_victims = victims.len();
+    let reply = client.write(WriteOp::Delete { ids: victims }, 0).unwrap().unwrap();
+    assert!(
+        matches!(reply.outcome, Ok(WriteOutcome::Deleted(n)) if n == n_victims),
+        "{:?}",
+        reply.outcome
+    );
+    assert_eq!(client.stats().unwrap().live_rows, live0 + 6 - n_victims as u64);
+    let reply = client.write(WriteOp::Compact, 0).unwrap().unwrap();
+    assert!(matches!(reply.outcome, Ok(WriteOutcome::Compacted(_))), "{:?}", reply.outcome);
+
+    // a dimension-mismatched insert is a BadRequest (outer error), and
+    // the connection survives it
+    let bad = WriteOp::Insert {
+        vectors: generate(Flavor::Deep, 2, d + 1, 75),
+        ep: EncodeParams { a: 0, b: 0 },
+    };
+    let err = client.write(bad, 0).unwrap_err().to_string();
+    assert!(err.contains("rejected") && err.contains("dims"), "{err}");
+    assert_eq!(client.ping(b"alive").unwrap(), b"alive");
+
+    let stats = server.drain();
+    assert_eq!(stats.stats.protocol_errors, 0);
+    assert!(stats.stats.inserted >= 6);
+}
+
+#[test]
+fn stats_frame_reflects_traffic_and_the_index() {
+    let (index, _router, server, addr) = serve();
+    let d = index.params.cfg.d;
+    let mut client = NetClient::connect(&addr).unwrap();
+    let queries = generate(Flavor::Deep, 5, d, 76);
+    for i in 0..queries.rows {
+        client.search(queries.row(i), &sp(), 0).unwrap().unwrap();
+    }
+    let ns = client.stats().unwrap();
+    assert_eq!(ns.dim as usize, d);
+    assert_eq!(ns.live_rows as usize, index.live_len());
+    assert_eq!(ns.stats.served, 5);
+    assert_eq!(ns.stats.connections, 1);
+    // 5 searches + the stats request itself have been read by now; the
+    // 5 search replies have been written (the stats reply is in flight)
+    assert!(ns.stats.frames_in >= 6, "frames_in {}", ns.stats.frames_in);
+    assert!(ns.stats.frames_out >= 5, "frames_out {}", ns.stats.frames_out);
+    assert_eq!(ns.stats.protocol_errors, 0);
+    assert_eq!(ns.stats.shard_scans.len(), 2, "one scan counter per shard");
+    drop(server);
+}
+
+/// Satellite 3: the shutdown-drain contract over the wire.
+#[test]
+fn drain_frame_answers_in_flight_exactly_once_then_closes() {
+    let (index, router, server, addr) = serve();
+    let d = index.params.cfg.d;
+    let queries = generate(Flavor::Deep, 8, d, 77);
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    // pipeline 8 searches, then drain — all 8 were accepted before the
+    // drain frame, so each must be answered (for real) exactly once
+    let ids: Vec<u64> = (0..queries.rows)
+        .map(|i| client.submit_search(queries.row(i), &sp(), 0).unwrap())
+        .collect();
+    client.drain_server().unwrap(); // ack arrives after the 8 replies (FIFO)
+    for (i, &id) in ids.iter().enumerate() {
+        let reply = client.recv_search(id).unwrap().expect("typed reply");
+        assert_eq!(reply.results, index.search(queries.row(i), &sp()), "request {id}");
+    }
+    // the server has answered everything it accepted. The post-drain
+    // sweep may briefly answer pings, but a search is never served for
+    // real again: each probe gets a typed Stopped until the sweep's
+    // quiet tick passes and the connection closes for good.
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(15)); // let the sweep go quiet
+        let outcome =
+            client.submit_search(queries.row(0), &sp(), 0).and_then(|id| client.recv_search(id));
+        match outcome {
+            Ok(Err(RouterError::Stopped)) => {} // swept: typed, not served
+            Ok(Err(other)) => panic!("expected Stopped, got {other:?}"),
+            Ok(Ok(_)) => panic!("a drained server must not serve new searches"),
+            Err(_) => break, // connection closed
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "connection never closed after drain");
+    }
+
+    // new connections are refused once the listener is gone (a racing
+    // accept may still slip one through momentarily; it gets closed
+    // without service, so a ping on it fails)
+    let t0 = Instant::now();
+    loop {
+        match NetClient::connect(&addr) {
+            Err(_) => break, // refused at the socket level: drained
+            Ok(mut late) => {
+                assert!(
+                    late.ping(b"x").is_err(),
+                    "a post-drain connection must never be served"
+                );
+            }
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "listener never closed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // the router survives the network tier's drain
+    let q = queries.row(0);
+    assert_eq!(router.search_blocking(q, sp()).unwrap().results, index.search(q, &sp()));
+    let stats = server.drain();
+    assert!(stats.stats.served >= 8);
+}
+
+#[test]
+fn dropping_the_server_is_graceful_drain() {
+    let (index, router, server, addr) = serve();
+    let d = index.params.cfg.d;
+    let queries = generate(Flavor::Deep, 6, d, 78);
+    let mut client = NetClient::connect(&addr).unwrap();
+    let ids: Vec<u64> = (0..queries.rows)
+        .map(|i| client.submit_search(queries.row(i), &sp(), 0).unwrap())
+        .collect();
+    // drop with 6 requests in flight: Drop == drain, so the replies are
+    // flushed into the socket before the connection closes
+    drop(server);
+    for (i, &id) in ids.iter().enumerate() {
+        let reply = client.recv_search(id).unwrap().expect("typed reply");
+        assert_eq!(reply.results, index.search(queries.row(i), &sp()), "request {id}");
+    }
+    assert!(client.ping(b"gone").is_err(), "connection must close after the drop-drain");
+    // in-process serving is untouched
+    let q = queries.row(0);
+    assert_eq!(router.search_blocking(q, sp()).unwrap().results, index.search(q, &sp()));
+}
+
+#[test]
+fn requests_racing_a_drain_get_a_typed_stop_or_a_clean_close() {
+    let (index, _router, server, addr) = serve();
+    let d = index.params.cfg.d;
+    let queries = generate(Flavor::Deep, 1, d, 79);
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.drain_server().unwrap();
+    // fire a search immediately after the drain ack: depending on where
+    // the reader is, it lands in the post-drain sweep (typed Stopped) or
+    // after the close (send/recv error). Both are legal; a hang or an
+    // answered-for-real reply after "drained" is not.
+    let outcome = client
+        .submit_search(queries.row(0), &sp(), 0)
+        .and_then(|id| client.recv_search(id));
+    match outcome {
+        Ok(Err(RouterError::Stopped)) => {} // the final sweep answered it
+        Ok(Err(other)) => panic!("expected Stopped, got {other:?}"),
+        Ok(Ok(_)) => panic!("a drained server must not serve new requests"),
+        Err(_) => {} // connection already closed — equally clean
+    }
+    server.drain();
+}
+
+/// Deterministic error/degraded parity, driven by the seeded fault
+/// injector (process-global plans; each test's `install` guard
+/// serializes it against the others).
+#[cfg(feature = "fault-injection")]
+mod fault_parity {
+    use super::*;
+    use qinco2::util::deadline::Deadline;
+    use qinco2::util::fault::{install, FaultPlan, FaultPoint, FaultRule};
+
+    #[test]
+    fn deadline_exceeded_is_bit_identical_across_the_wire() {
+        let (index, router, server, addr) = serve();
+        let q = generate(Flavor::Deep, 1, index.params.cfg.d, 81);
+        let mut client = NetClient::connect(&addr).unwrap();
+        {
+            // a 30 ms injected dispatch stall against 5 ms budgets: both
+            // paths must produce the same typed error
+            let _g = install(
+                FaultPlan::new(21).with(FaultPoint::BatcherDelay, FaultRule::delay(10, 30)),
+            );
+            let wire = client.search(q.row(0), &sp(), 5).unwrap();
+            assert_eq!(wire, Err(RouterError::DeadlineExceeded));
+            let rx = router
+                .submit_within(q.row(0).to_vec(), sp(), Deadline::from_ms(5))
+                .unwrap();
+            assert_eq!(rx.recv().unwrap().map(|r| r.results), Err(RouterError::DeadlineExceeded));
+        }
+        // plan gone: the wire serves again, bit-identical
+        let wire = client.search(q.row(0), &sp(), 0).unwrap().unwrap();
+        assert_eq!(wire.results, index.search(q.row(0), &sp()));
+        server.drain();
+    }
+
+    #[test]
+    fn worker_died_is_bit_identical_across_the_wire() {
+        let (index, router, server, addr) = serve();
+        let q = generate(Flavor::Deep, 1, index.params.cfg.d, 82);
+        let mut client = NetClient::connect(&addr).unwrap();
+        {
+            let _g = install(FaultPlan::new(22).with(FaultPoint::DecoderError, FaultRule::first(1)));
+            let wire = client.search(q.row(0), &sp(), 0).unwrap();
+            assert_eq!(wire, Err(RouterError::WorkerDied));
+        }
+        {
+            let _g = install(FaultPlan::new(23).with(FaultPoint::DecoderError, FaultRule::first(1)));
+            let rx = router.submit(q.row(0).to_vec(), sp()).unwrap();
+            assert_eq!(rx.recv().unwrap().map(|r| r.results), Err(RouterError::WorkerDied));
+        }
+        // both rules exhausted: service recovers on the same connection
+        let wire = client.search(q.row(0), &sp(), 0).unwrap().unwrap();
+        assert_eq!(wire.results, index.search(q.row(0), &sp()));
+        server.drain();
+    }
+
+    #[test]
+    fn overloaded_hint_travels_the_wire_inside_its_clamp() {
+        let (index, router, server, addr) = serve();
+        let q = generate(Flavor::Deep, 1, index.params.cfg.d, 83);
+        let mut client = NetClient::connect(&addr).unwrap();
+        let clamp = Duration::from_micros(100)..=Duration::from_secs(1);
+        {
+            let _g = install(FaultPlan::new(24).with(FaultPoint::QueueFull, FaultRule::first(1)));
+            match client.search(q.row(0), &sp(), 0).unwrap() {
+                Err(RouterError::Overloaded { retry_after_hint }) => {
+                    assert!(clamp.contains(&retry_after_hint), "wire hint {retry_after_hint:?}");
+                }
+                other => panic!("expected Overloaded over the wire, got {other:?}"),
+            }
+        }
+        {
+            let _g = install(FaultPlan::new(25).with(FaultPoint::QueueFull, FaultRule::first(1)));
+            match router.try_submit(q.row(0).to_vec(), sp()) {
+                Err(RouterError::Overloaded { retry_after_hint }) => {
+                    assert!(clamp.contains(&retry_after_hint), "local hint {retry_after_hint:?}");
+                }
+                other => panic!("expected Overloaded in-process, got {other:?}"),
+            }
+        }
+        server.drain();
+    }
+
+    #[test]
+    fn degraded_flag_parity_under_deadline_pressure() {
+        let (_index, router, server, addr) = serve();
+        let index = router.index().clone();
+        let q = generate(Flavor::Deep, 2, index.params.cfg.d, 84);
+        let mut client = NetClient::connect(&addr).unwrap();
+        let _g = install(FaultPlan::new(26).with(FaultPoint::SlowScan, FaultRule::delay(100, 40)));
+        // a 40 ms injected scan stall against a 15 ms budget: both paths
+        // must return an Ok reply explicitly flagged degraded (stage 3
+        // skipped whole). Where exactly the deadline fires mid-scan is
+        // timing-dependent, so the flag — not the shortlist — is the
+        // contract compared here.
+        let wire = client.search(q.row(0), &sp(), 15).unwrap().expect("degraded is a reply");
+        assert!(wire.degraded, "wire reply must carry the degraded flag");
+        let rx = router.submit_within(q.row(1).to_vec(), sp(), Deadline::from_ms(15)).unwrap();
+        let local = rx.recv().unwrap().expect("degraded is a reply");
+        assert!(local.degraded, "in-process reply must carry the degraded flag");
+        assert!(router.stats().degraded >= 2);
+        server.drain();
+    }
+}

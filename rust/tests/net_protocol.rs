@@ -1,0 +1,513 @@
+//! Wire-protocol hardening (satellite of the network serving tier):
+//! codec properties over random frames and chunked delivery, plus
+//! malformed-input behavior against a live loopback [`NetServer`] —
+//! every violation must become a typed [`ProtocolError`] that closes
+//! **only** the offending connection, never a panic, a hang, or
+//! collateral damage to a well-behaved peer.
+
+use qinco2::net::frame::{
+    decode_all, decode_router_error, decode_stats, encode_stats, Frame, FrameReader, NetStats, Op,
+    Poll, ProtocolError, SearchBody, WireStatus, WriteBody, CONN_NOTICE_ID, DEFAULT_FRAME_MAX,
+    HEADER_LEN, MAGIC, MIN_FRAME_MAX, VERSION,
+};
+use qinco2::index::SearchParams;
+use qinco2::net::{NetCfg, NetClient, NetServer};
+use qinco2::server::{Router, RouterError, ServerCfg, Stats, WriteOp};
+use qinco2::util::prop::{check, Gen};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// codec properties (no sockets)
+// ---------------------------------------------------------------------
+
+/// A `Read` source that hands out at most `chunk` bytes per call and
+/// interleaves `WouldBlock` hiccups — the shape of a nonblocking socket
+/// under small MTUs, which the incremental [`FrameReader`] must absorb
+/// without losing bytes.
+struct Chunked<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    chunk: usize,
+    hiccup: bool,
+}
+
+impl Read for Chunked<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.bytes.len() {
+            return Ok(0);
+        }
+        if self.hiccup {
+            self.hiccup = false;
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        self.hiccup = true;
+        let n = self.chunk.min(buf.len()).min(self.bytes.len() - self.pos);
+        buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn random_frame(g: &mut Gen) -> Frame {
+    let op = Op::ALL[g.rng.below(Op::ALL.len())];
+    let status = WireStatus::ALL[g.rng.below(WireStatus::ALL.len())];
+    let len = g.usize_in(0, 4 * g.size);
+    let payload: Vec<u8> = (0..len).map(|_| g.rng.below(256) as u8).collect();
+    Frame { op, status, request_id: g.rng.next_u64(), payload }
+}
+
+#[test]
+fn prop_random_frames_roundtrip_through_chunked_delivery() {
+    check("frame-chunked-roundtrip", 40, 40, |g| {
+        let frames: Vec<Frame> = (0..g.usize_in(1, 6)).map(|_| random_frame(g)).collect();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            f.encode_into(&mut bytes);
+        }
+        let mut src =
+            Chunked { bytes: &bytes, pos: 0, chunk: g.usize_in(1, 64), hiccup: false };
+        let mut reader = FrameReader::new(DEFAULT_FRAME_MAX);
+        let mut out = Vec::new();
+        loop {
+            match reader.poll(&mut src) {
+                Ok(Poll::Frame(f)) => out.push(f),
+                Ok(Poll::Pending) => continue, // the hiccup path — bytes kept
+                Ok(Poll::Eof) => break,
+                Err(e) => return Err(format!("typed failure on valid input: {e}")),
+            }
+        }
+        if out != frames {
+            return Err(format!("{} frames in, {} out", frames.len(), out.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_op_and_status_byte_roundtrips() {
+    for op in Op::ALL {
+        assert_eq!(Op::from_u8(op.as_u8()), Some(op));
+        for status in WireStatus::ALL {
+            assert_eq!(WireStatus::from_u8(status.as_u8()), Some(status));
+            let f = Frame { op, status, request_id: 7, payload: vec![0xAB; 3] };
+            let back = decode_all(&f.encode(), DEFAULT_FRAME_MAX).unwrap();
+            assert_eq!(back, vec![f], "op {op:?} status {status:?}");
+        }
+    }
+    // the bytes adjacent to the defined ranges are rejected
+    assert_eq!(Op::from_u8(0), None);
+    assert_eq!(Op::from_u8(6), None);
+    assert_eq!(WireStatus::from_u8(9), None);
+}
+
+#[test]
+fn prop_truncation_at_every_prefix_is_a_typed_error() {
+    check("frame-truncation", 25, 30, |g| {
+        let f = random_frame(g);
+        let bytes = f.encode();
+        for cut in 1..bytes.len() {
+            match decode_all(&bytes[..cut], DEFAULT_FRAME_MAX) {
+                Err(_) => {} // any *typed* protocol error is acceptable
+                Ok(frames) => {
+                    return Err(format!("cut at {cut}/{}: decoded {frames:?}", bytes.len()))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A valid header for op `Ping`, then corrupt one field at a time: each
+/// corruption must map to its own [`ProtocolError`] variant.
+#[test]
+fn each_header_corruption_is_its_own_typed_error() {
+    let good = Frame::request(Op::Ping, 5, b"x".to_vec()).encode();
+    assert_eq!(&good[..4], &MAGIC);
+
+    let mut bad_magic = good.clone();
+    bad_magic[0] = b'X';
+    assert!(matches!(
+        decode_all(&bad_magic, DEFAULT_FRAME_MAX),
+        Err(ProtocolError::BadMagic(_))
+    ));
+
+    let mut bad_version = good.clone();
+    bad_version[4] = VERSION + 1;
+    assert_eq!(
+        decode_all(&bad_version, DEFAULT_FRAME_MAX),
+        Err(ProtocolError::BadVersion(VERSION + 1))
+    );
+
+    let mut bad_op = good.clone();
+    bad_op[5] = 0x7F;
+    assert_eq!(decode_all(&bad_op, DEFAULT_FRAME_MAX), Err(ProtocolError::UnknownOp(0x7F)));
+
+    let mut bad_status = good.clone();
+    bad_status[6] = 0x7F;
+    assert_eq!(
+        decode_all(&bad_status, DEFAULT_FRAME_MAX),
+        Err(ProtocolError::UnknownStatus(0x7F))
+    );
+
+    let mut bad_reserved = good.clone();
+    bad_reserved[7] = 1;
+    assert_eq!(
+        decode_all(&bad_reserved, DEFAULT_FRAME_MAX),
+        Err(ProtocolError::BadReserved(1))
+    );
+
+    // magic and version are validated before the header completes —
+    // a hostile prefix is rejected from its first 5 bytes
+    assert!(matches!(
+        decode_all(&bad_magic[..4], DEFAULT_FRAME_MAX),
+        Err(ProtocolError::BadMagic(_))
+    ));
+    assert!(matches!(
+        decode_all(&bad_version[..5], DEFAULT_FRAME_MAX),
+        Err(ProtocolError::BadVersion(_))
+    ));
+}
+
+#[test]
+fn oversized_declared_length_is_rejected_against_the_configured_max() {
+    let f = Frame::request(Op::Search, 2, vec![0u8; 5000]);
+    let bytes = f.encode();
+    // fits the default ceiling…
+    assert_eq!(decode_all(&bytes, DEFAULT_FRAME_MAX).unwrap().len(), 1);
+    // …but a connection configured tighter rejects it from the header
+    // alone, before any payload byte is buffered
+    assert_eq!(
+        decode_all(&bytes[..HEADER_LEN], MIN_FRAME_MAX),
+        Err(ProtocolError::Oversized { len: 5000, max: MIN_FRAME_MAX })
+    );
+}
+
+#[test]
+fn prop_search_and_write_bodies_roundtrip() {
+    use qinco2::index::EncodeParams;
+    use qinco2::tensor::Matrix;
+    check("body-roundtrip", 30, 40, |g| {
+        let body = SearchBody {
+            sp: SearchParams {
+                nprobe: g.usize_in(0, 64),
+                ef_search: g.usize_in(0, 128),
+                n_aq: g.usize_in(0, 256),
+                n_pairs: g.usize_in(0, 32),
+                n_final: g.usize_in(0, 100),
+                batch_threads: g.usize_in(0, 8),
+            },
+            deadline_ms: g.rng.below(10_000) as u64,
+            query: g.vec_f32(g.usize_in(0, 2 * g.size), -10.0, 10.0),
+        };
+        if SearchBody::decode(&body.encode()).map_err(|e| e.to_string())? != body {
+            return Err("search body mangled".into());
+        }
+        let rows = g.usize_in(0, 5);
+        let cols = g.usize_in(1, 8);
+        let ops = [
+            WriteOp::Insert {
+                vectors: Matrix::from_vec(rows, cols, g.vec_f32(rows * cols, -1.0, 1.0)),
+                ep: EncodeParams { a: g.usize_in(0, 16), b: g.usize_in(0, 16) },
+            },
+            WriteOp::Delete {
+                ids: (0..g.usize_in(0, 20)).map(|_| g.rng.below(1 << 20) as u32).collect(),
+            },
+            WriteOp::Compact,
+        ];
+        for op in ops {
+            let wb = WriteBody { op, deadline_ms: g.rng.below(10_000) as u64 };
+            let back = WriteBody::decode(&wb.encode()).map_err(|e| e.to_string())?;
+            if back.deadline_ms != wb.deadline_ms {
+                return Err("write deadline mangled".into());
+            }
+            match (&wb.op, &back.op) {
+                (WriteOp::Insert { vectors: a, ep: ea }, WriteOp::Insert { vectors: b, ep: eb }) => {
+                    if a.rows != b.rows || a.cols != b.cols || a.data != b.data || ea != eb {
+                        return Err("insert op mangled".into());
+                    }
+                }
+                (WriteOp::Delete { ids: a }, WriteOp::Delete { ids: b }) => {
+                    if a != b {
+                        return Err("delete op mangled".into());
+                    }
+                }
+                (WriteOp::Compact, WriteOp::Compact) => {}
+                _ => return Err("write op kind mangled".into()),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stats_body_roundtrips() {
+    check("stats-roundtrip", 20, 30, |g| {
+        let ns = NetStats {
+            stats: Stats {
+                served: g.rng.next_u64() >> 1,
+                mean_latency: Duration::from_nanos(g.rng.below(1 << 40) as u64),
+                p50: Duration::from_nanos(g.rng.below(1 << 40) as u64),
+                p99: Duration::from_nanos(g.rng.below(1 << 40) as u64),
+                shard_scans: (0..g.usize_in(0, 6)).map(|_| g.rng.next_u64() >> 1).collect(),
+                inserted: g.rng.below(1 << 30) as u64,
+                deleted: g.rng.below(1 << 30) as u64,
+                epoch: g.rng.below(1 << 30) as u64,
+                panics: g.rng.below(100) as u64,
+                respawns: g.rng.below(100) as u64,
+                shed: g.rng.below(1 << 30) as u64,
+                deadline_exceeded: g.rng.below(1 << 30) as u64,
+                degraded: g.rng.below(1 << 30) as u64,
+                connections: g.rng.below(1 << 30) as u64,
+                frames_in: g.rng.below(1 << 30) as u64,
+                frames_out: g.rng.below(1 << 30) as u64,
+                protocol_errors: g.rng.below(1 << 30) as u64,
+            },
+            dim: g.rng.below(4096) as u32,
+            live_rows: g.rng.below(1 << 30) as u64,
+        };
+        let back = decode_stats(&encode_stats(&ns)).map_err(|e| e.to_string())?;
+        if back.dim != ns.dim
+            || back.live_rows != ns.live_rows
+            || back.stats.served != ns.stats.served
+            || back.stats.mean_latency != ns.stats.mean_latency
+            || back.stats.p50 != ns.stats.p50
+            || back.stats.p99 != ns.stats.p99
+            || back.stats.shard_scans != ns.stats.shard_scans
+            || back.stats.connections != ns.stats.connections
+            || back.stats.frames_in != ns.stats.frames_in
+            || back.stats.frames_out != ns.stats.frames_out
+            || back.stats.protocol_errors != ns.stats.protocol_errors
+        {
+            return Err("stats body mangled".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// server-side hardening over real loopback sockets
+// ---------------------------------------------------------------------
+
+/// Tiny engine-free index (reference encoder, no PJRT) — the recipe the
+/// router/coordinator suites share.
+fn tiny_index() -> qinco2::index::SearchIndex {
+    use qinco2::data::{generate, Flavor};
+    use qinco2::index::{BuildCfg, SearchIndex};
+    use qinco2::qinco::ParamStore;
+    use qinco2::runtime::manifest::Manifest;
+
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
+    let train = generate(Flavor::Deep, 250, spec.cfg.d, 11);
+    let db = generate(Flavor::Deep, 180, spec.cfg.d, 12);
+    let params = ParamStore::init(&spec, "test", &train, 13);
+    let cfg = BuildCfg { k_ivf: 8, m_tilde: 1, fit_sample: 150, shards: 2, ..Default::default() };
+    SearchIndex::build_reference(params, &train, &db, &cfg)
+}
+
+fn sp() -> SearchParams {
+    SearchParams { nprobe: 4, ef_search: 32, n_aq: 32, n_pairs: 8, n_final: 5, ..Default::default() }
+}
+
+fn tiny_server(cfg: NetCfg) -> (Arc<Router>, NetServer) {
+    let router = Arc::new(Router::start(
+        Arc::new(tiny_index()),
+        ServerCfg { workers: 2, ..Default::default() },
+    ));
+    let server = NetServer::bind("127.0.0.1:0", router.clone(), cfg).unwrap();
+    (router, server)
+}
+
+fn query_of_dim(d: usize) -> Vec<f32> {
+    (0..d).map(|i| (i as f32 * 0.37).sin()).collect()
+}
+
+/// Read exactly one frame off a raw test socket (bounded by a read
+/// timeout so a misbehaving server fails the test instead of hanging).
+fn read_one_frame(stream: &mut TcpStream) -> Result<Frame, String> {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = FrameReader::new(DEFAULT_FRAME_MAX);
+    loop {
+        match reader.poll(stream) {
+            Ok(Poll::Frame(f)) => return Ok(f),
+            Ok(Poll::Pending) => return Err("timed out waiting for a frame".into()),
+            Ok(Poll::Eof) => return Err("eof before a frame".into()),
+            Err(e) => return Err(format!("{e}")),
+        }
+    }
+}
+
+/// After the notice the server must close; a bounded read observing EOF
+/// proves it (any stray frame is a failure).
+fn assert_closed(stream: &mut TcpStream) {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut scratch = [0u8; 64];
+    match stream.read(&mut scratch) {
+        Ok(0) => {}
+        other => panic!("expected the server to close the connection, got {other:?}"),
+    }
+}
+
+#[test]
+fn garbage_bytes_close_only_the_offending_connection() {
+    let (_router, server) = tiny_server(NetCfg::default());
+    let addr = server.local_addr().to_string();
+    let d = server.stats().dim as usize;
+
+    // a healthy client, connected before the attack
+    let mut good = NetClient::connect(&addr).unwrap();
+    let first = good.search(&query_of_dim(d), &sp(), 0).unwrap().unwrap();
+    assert!(!first.results.is_empty());
+
+    // the attacker: bytes that cannot be a frame header
+    let mut evil = TcpStream::connect(&addr).unwrap();
+    evil.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    let notice = read_one_frame(&mut evil).expect("a protocol notice");
+    assert_eq!(notice.status, WireStatus::Protocol);
+    assert_eq!(notice.request_id, CONN_NOTICE_ID);
+    let msg = String::from_utf8_lossy(&notice.payload).to_string();
+    assert!(msg.contains("magic"), "notice should name the violation: {msg}");
+    assert_closed(&mut evil);
+
+    // the healthy connection is untouched and answers identically
+    let again = good.search(&query_of_dim(d), &sp(), 0).unwrap().unwrap();
+    assert_eq!(again.results, first.results);
+    assert!(server.stats().stats.protocol_errors >= 1);
+    let final_stats = server.drain();
+    assert!(final_stats.stats.connections >= 2);
+}
+
+#[test]
+fn oversized_declared_length_is_refused_from_the_header_alone() {
+    let (_router, server) =
+        tiny_server(NetCfg { frame_max_bytes: MIN_FRAME_MAX, ..NetCfg::default() });
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // header only: declares a 1 MiB payload we never send — the server
+    // must reject without waiting for (or buffering) the payload
+    let mut header = Vec::new();
+    header.extend_from_slice(&MAGIC);
+    header.push(VERSION);
+    header.push(Op::Ping.as_u8());
+    header.push(WireStatus::Ok.as_u8());
+    header.push(0);
+    header.extend_from_slice(&1u64.to_le_bytes());
+    header.extend_from_slice(&(1u32 << 20).to_le_bytes());
+    stream.write_all(&header).unwrap();
+
+    let notice = read_one_frame(&mut stream).expect("a protocol notice");
+    assert_eq!(notice.status, WireStatus::Protocol);
+    let msg = String::from_utf8_lossy(&notice.payload).to_string();
+    assert!(msg.contains("frame-max-bytes"), "{msg}");
+    assert_closed(&mut stream);
+    assert_eq!(server.drain().stats.protocol_errors, 1);
+}
+
+#[test]
+fn truncated_stream_midframe_is_a_typed_protocol_error() {
+    let (_router, server) = tiny_server(NetCfg::default());
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let bytes = Frame::request(Op::Ping, 3, vec![0u8; 256]).encode();
+    stream.write_all(&bytes[..bytes.len() / 2]).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap(); // EOF mid-frame
+
+    let notice = read_one_frame(&mut stream).expect("a protocol notice");
+    assert_eq!(notice.status, WireStatus::Protocol);
+    let msg = String::from_utf8_lossy(&notice.payload).to_string();
+    assert!(msg.contains("mid-frame"), "{msg}");
+    assert_closed(&mut stream);
+    assert_eq!(server.drain().stats.protocol_errors, 1);
+}
+
+#[test]
+fn unparseable_payload_closes_with_the_offending_request_id() {
+    let (_router, server) = tiny_server(NetCfg::default());
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // a perfectly-framed Search whose payload is not a SearchBody
+    let evil = Frame::request(Op::Search, 42, vec![0xDE, 0xAD]);
+    stream.write_all(&evil.encode()).unwrap();
+
+    let notice = read_one_frame(&mut stream).expect("a protocol notice");
+    assert_eq!(notice.status, WireStatus::Protocol);
+    assert_eq!(
+        notice.request_id, 42,
+        "payload-level violations are attributed to the offending request"
+    );
+    assert_closed(&mut stream);
+    assert_eq!(server.drain().stats.protocol_errors, 1);
+}
+
+#[test]
+fn connection_cap_refuses_with_a_typed_overloaded_notice() {
+    let (_router, server) = tiny_server(NetCfg { max_conns: 1, ..NetCfg::default() });
+    let addr = server.local_addr().to_string();
+
+    // occupy the only slot (a ping proves the connection is live)
+    let mut occupant = NetClient::connect(&addr).unwrap();
+    assert_eq!(occupant.ping(b"hold").unwrap(), b"hold");
+
+    // the refused connection gets exactly one Overloaded notice + close
+    let mut refused = TcpStream::connect(&addr).unwrap();
+    let notice = read_one_frame(&mut refused).expect("a refusal notice");
+    assert_eq!(notice.request_id, CONN_NOTICE_ID);
+    assert_eq!(notice.status, WireStatus::Overloaded);
+    let e = decode_router_error(notice.status, &notice.payload).unwrap();
+    match e {
+        RouterError::Overloaded { retry_after_hint } => {
+            assert!(retry_after_hint > Duration::ZERO);
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert_closed(&mut refused);
+
+    // the occupant was never disturbed
+    assert_eq!(occupant.ping(b"still here").unwrap(), b"still here");
+
+    // once the slot frees, a new connection is admitted (the accept
+    // loop prunes finished connection threads lazily — retry briefly)
+    drop(occupant);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut retry = NetClient::connect(&addr).unwrap();
+        match retry.ping(b"again") {
+            Ok(echo) => {
+                assert_eq!(echo, b"again");
+                break;
+            }
+            Err(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => panic!("slot never freed: {e}"),
+        }
+    }
+    server.drain();
+}
+
+#[test]
+fn bad_request_keeps_the_connection_open() {
+    let (_router, server) = tiny_server(NetCfg::default());
+    let addr = server.local_addr().to_string();
+    let d = server.stats().dim as usize;
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    // wrong dimension: semantically invalid, but well-framed — the
+    // reply is BadRequest (an *outer* client error) and the connection
+    // survives for the next, valid request
+    let err = client.search(&query_of_dim(d + 3), &sp(), 0).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("rejected"), "{msg}");
+    assert!(msg.contains("dims"), "{msg}");
+
+    let ok = client.search(&query_of_dim(d), &sp(), 0).unwrap().unwrap();
+    assert!(!ok.results.is_empty());
+    let stats = server.drain();
+    assert_eq!(stats.stats.protocol_errors, 0, "BadRequest is not a protocol error");
+}
