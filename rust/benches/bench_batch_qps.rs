@@ -17,7 +17,9 @@
 //! Engine-free: the index is built with the pure-Rust reference encoder
 //! and the in-repo `test` model spec, so this bench runs without HLO
 //! artifacts or an XLA runtime (unlike the fig6 bench, which sweeps real
-//! QINCo2 models).
+//! QINCo2 models). A final stage-3 section times the exact decoders
+//! head-to-head (scalar-oracle `ReferenceDecoder` vs nn-kernel
+//! `RustDecoder`) over the same weights and codes.
 
 #[path = "common.rs"]
 mod common;
@@ -30,6 +32,7 @@ use qinco2::index::{
 use qinco2::metrics::{ids_only, recall_at};
 use qinco2::net::{LoadCfg, NetCfg, NetClient, NetServer};
 use qinco2::qinco::ParamStore;
+use qinco2::quantizers::StageDecoder;
 use qinco2::runtime::manifest::Manifest;
 use qinco2::server::{Router, ServerCfg, WriteOp, WriteOutcome};
 use std::sync::Arc;
@@ -614,6 +617,42 @@ fn main() -> anyhow::Result<()> {
             net_stats.stats.protocol_errors
         );
         drop(router);
+    }
+    common::hr(72);
+
+    // ---- stage-3 decode: scalar oracle vs native nn kernels ----
+    // the re-rank stage decodes shortlist codes every query; this is the
+    // per-decoder throughput behind `--stage3 reference` vs `--stage3 rust`
+    {
+        println!("\n[stage-3] exact decode throughput over {} db codes", 4096);
+        let sample = data::generate(Flavor::Deep, 4096, spec.cfg.d, 29);
+        let codes = qinco2::qinco::reference::encode_greedy(&index.params, &sample);
+        let reference_dec = qinco2::qinco::ReferenceDecoder { params: index.params.clone() };
+        let rust_dec = qinco2::qinco::RustDecoder { params: index.params.clone() };
+        let a = reference_dec.decode(&codes)?;
+        let b = rust_dec.decode(&codes)?;
+        let worst =
+            a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(worst <= 1e-5, "stage-3 decoders disagree: max |Δ| = {worst}");
+        println!("{:<18} {:>12} {:>9}", "decoder", "vec/s", "speedup");
+        common::hr(42);
+        let mut base = 0.0f64;
+        let pair: [(&str, &dyn StageDecoder); 2] =
+            [("reference", &reference_dec), ("rust", &rust_dec)];
+        for (name, dec) in pair {
+            dec.decode(&codes)?; // warm
+            let reps = 5;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                dec.decode(&codes)?;
+            }
+            let vps = (reps * codes.n) as f64 / t0.elapsed().as_secs_f64();
+            if base == 0.0 {
+                base = vps;
+            }
+            println!("{name:<18} {vps:>12.0} {:>8.2}x", vps / base);
+            csv.push(format!("stage3:{name},,,,{vps:.0},"));
+        }
     }
     common::hr(72);
 

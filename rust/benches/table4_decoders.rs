@@ -1,24 +1,78 @@
-//! Table 4 + Table S3: approximate decoders for QINCo2 codes.
+//! Table 4 + Table S3: approximate decoders for QINCo2 codes — plus a
+//! stage-3 exact-decoder shootout (reference scalar oracle vs the native
+//! nn-kernel RustDecoder).
 //!
 //! Compares, on fixed QINCo2-S codes: the AQ joint-least-squares decoder,
 //! the sequential RQ refit, consecutive code-pairs (M/2 pairs) and the
 //! optimized pairwise decoder (2M pairs) — both by direct R@1 and by the
 //! recall of QINCo2 re-ranking a 10-element shortlist built by each
 //! method. Then prints the pairwise pair-selection trace with IVF codes
-//! (Table S3).
+//! (Table S3). The stage-3 shootout is engine-free and always runs; the
+//! approximate-decoder sweep needs trained models (PJRT-only training
+//! artifacts) and skips gracefully without them.
 
 #[path = "common.rs"]
 mod common;
 
-use qinco2::data::brute_force_gt_k;
+use qinco2::data::{brute_force_gt_k, generate, Flavor};
 use qinco2::experiments as exp;
 use qinco2::index::{BuildCfg, SearchIndex, SearchParams};
 use qinco2::metrics::recall_at;
-use qinco2::qinco::{reference, Codec, TrainCfg};
+use qinco2::qinco::{reference, Codec, ParamStore, ReferenceDecoder, RustDecoder, TrainCfg};
 use qinco2::quantizers::aq_lut::AdditiveDecoder;
 use qinco2::quantizers::pairwise::PairwiseDecoder;
+use qinco2::quantizers::StageDecoder;
+use qinco2::runtime::manifest::Manifest;
 use qinco2::runtime::Engine;
 use qinco2::tensor::{self, Matrix};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Stage-3 exact decoders head-to-head on the in-repo `test` model:
+/// same weights, same codes — vec/s per decoder plus the speedup of the
+/// blocked/fused nn kernels over the scalar oracle, and a max-abs-diff
+/// agreement check against the documented 1e-5 contract.
+fn stage3_decoder_shootout(csv: &mut Vec<String>) -> anyhow::Result<()> {
+    println!("\n--- stage-3 exact decoders: reference (scalar oracle) vs rust (nn kernels) ---");
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p)?.model("test")?.clone();
+    let train = generate(Flavor::Deep, 2000, spec.cfg.d, 41);
+    let params = Arc::new(ParamStore::init(&spec, "test", &train, 41));
+    let db = generate(Flavor::Deep, 4096, spec.cfg.d, 43);
+    let codes = reference::encode_greedy(&params, &db);
+
+    let reference_dec = ReferenceDecoder { params: params.clone() };
+    let rust_dec = RustDecoder { params: params.clone() };
+    let decoders: [(&str, &dyn StageDecoder); 2] = [("reference", &reference_dec), ("rust", &rust_dec)];
+
+    // agreement first, so the timing rows are known-comparable
+    let a = reference_dec.decode(&codes)?;
+    let b = rust_dec.decode(&codes)?;
+    let worst = a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(worst <= 1e-5, "decoders disagree: max |Δ| = {worst}");
+
+    println!("{:<12} {:>12} {:>10}", "decoder", "vec/s", "speedup");
+    common::hr(36);
+    let mut base = 0.0f64;
+    for (name, dec) in decoders {
+        // warm up once, then time enough reps for a stable figure
+        dec.decode(&codes)?;
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            dec.decode(&codes)?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let vps = (reps * codes.n) as f64 / secs;
+        if base == 0.0 {
+            base = vps;
+        }
+        let speedup = vps / base;
+        println!("{name:<12} {vps:>12.0} {speedup:>9.2}x");
+        csv.push(format!("stage3,{name},decode,{:.4},{vps:.0},{speedup:.3}", worst));
+    }
+    Ok(())
+}
 
 /// Rank the db for each query by a decoded approximation, then optionally
 /// re-rank the top `shortlist` with the exact QINCo2 reconstruction.
@@ -52,24 +106,43 @@ fn main() -> anyhow::Result<()> {
     let mut engine = Engine::open(exp::artifacts_dir())?;
     let mut csv = Vec::new();
 
+    stage3_decoder_shootout(&mut csv)?;
+
+    if let Err(e) = trained_sweep(&mut engine, &scale, &mut csv) {
+        println!(
+            "\n[skip] approximate-decoder sweep needs trained models \
+             (training artifacts execute only under the `pjrt` feature): {e:#}"
+        );
+    }
+    let path = exp::write_csv("table4.csv",
+        "dataset,rate,decoder,r1_noshort,r1,r1_short10", &csv)?;
+    println!("\n[csv] {}", path.display());
+    Ok(())
+}
+
+fn trained_sweep(
+    engine: &mut Engine,
+    scale: &exp::Scale,
+    csv: &mut Vec<String>,
+) -> anyhow::Result<()> {
     for flavor in common::flavors() {
-        let ds = exp::dataset(flavor, 32, &scale);
+        let ds = exp::dataset(flavor, 32, scale);
         let cfg = TrainCfg { epochs: scale.epochs, a: 8, b: 8, ..Default::default() };
         let params = exp::trained_model(
-            &mut engine, "qinco2_xs", &format!("{}_t4", flavor.name()), &ds.train, &cfg)?;
-        let codec = Codec::new(&engine, "qinco2_xs", 8, 8)?;
+            engine, "qinco2_xs", &format!("{}_t4", flavor.name()), &ds.train, &cfg)?;
+        let codec = Codec::new(engine, "qinco2_xs", 8, 8)?;
 
         for (rate_label, m_rate) in [("8 codes", 8usize), ("16 codes", 16)] {
             // db codes + exact neural reconstruction at this rate
-            let (codes_full, _, _) = codec.encode(&mut engine, &params, &ds.database)?;
+            let (codes_full, _, _) = codec.encode(engine, &params, &ds.database)?;
             let codes = codes_full.truncate(m_rate);
-            let partials = codec.decode_partial(&mut engine, &params, &codes_full)?;
+            let partials = codec.decode_partial(engine, &params, &codes_full)?;
             let exact = partials[m_rate - 1].clone();
             // decoder fitting needs samples per K^2 bucket: use a large
             // dedicated split from the same distribution (the paper fits
             // on millions of training vectors)
             let fit_x = ds.extra_split(4 * ds.train.rows.max(4000), 7);
-            let (tr_codes_full, _, _) = codec.encode(&mut engine, &params, &fit_x)?;
+            let (tr_codes_full, _, _) = codec.encode(engine, &params, &fit_x)?;
             let tr_codes = tr_codes_full.truncate(m_rate);
 
             let no_short = {
@@ -113,10 +186,10 @@ fn main() -> anyhow::Result<()> {
             let residuals = ivf.residuals(&ds.train);
             let cfg2 = TrainCfg { epochs: scale.epochs, a: 8, b: 8, seed: cfg.seed ^ 0x1F, ..Default::default() };
             let params_r = exp::trained_model(
-                &mut engine, "qinco2_xs", &format!("{}_ivfres_t4", flavor.name()),
+                engine, "qinco2_xs", &format!("{}_ivfres_t4", flavor.name()),
                 &residuals, &cfg2)?;
             let index = SearchIndex::build(
-                &mut engine, &codec, params_r, &ds.train, &ds.database, &bcfg)?;
+                engine, &codec, params_r, &ds.train, &ds.database, &bcfg)?;
             let m = index.code_positions();
             print!("  pairs: ");
             for (i, j, mse) in index.pairwise_trace.iter().take(16) {
@@ -131,8 +204,5 @@ fn main() -> anyhow::Result<()> {
                      common::pct(recall_at(&res, &ds.ground_truth, 10)));
         }
     }
-    let path = exp::write_csv("table4.csv",
-        "dataset,rate,decoder,r1_noshort,r1,r1_short10", &csv)?;
-    println!("\n[csv] {}", path.display());
     Ok(())
 }

@@ -214,10 +214,14 @@ PIPELINE FLAGS (search + serve)
                          own table with --stage1-m subspaces/steps)
   --stage1-m 4           sub-quantizers/steps for a pq/opq/lsq/rq stage 1
   --no-stage2            skip the pairwise re-ranker
-  --stage3 reference|none|runtime
-                         exact re-rank decoder; "none" returns the stage-2
-                         order; "runtime" (serve only) gives each worker a
-                         thread-local PJRT engine via DecoderFactory
+  --stage3 reference|rust|none|runtime
+                         exact re-rank decoder; "reference" is the scalar
+                         oracle, "rust" the native nn-kernel decoder,
+                         "none" returns the stage-2 order; "runtime"
+                         additionally gives each serve worker a
+                         thread-local artifact-runtime engine via
+                         DecoderFactory (native backend by default; HLO
+                         under the pjrt feature)
   --batch-threads 1      intra-batch parallelism of one batched execute:
                          the stage-1 bucket-group scan (and per-query
                          stage-2/3 loops) split across N threads, results
@@ -744,26 +748,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_ms = args.usize_or("deadline-ms", 0)? as u64;
     let shed_watermark = args.usize_or("shed-watermark", 0)?;
     let retries = args.usize_or("retries", 0)?;
-    // --stage3 runtime: hand every worker thread its own PJRT engine +
-    // codec through the factory (engine-per-worker; see server docs).
-    // Workers fall back to the reference decoder if the runtime is
-    // unavailable (e.g. the vendored stub xla crate). The reference
-    // encoder path stays engine-free, so no factory there.
+    // --stage3 rust/runtime: hand every worker its own stage-3 decoder
+    // through a factory. "rust" shares the in-memory weights (cheap,
+    // infallible, engine-free); "runtime" gives each worker thread its
+    // own artifact-runtime engine + codec (engine-per-worker; native
+    // backend by default, so this no longer requires HLO artifacts or
+    // PJRT — see server docs). Workers fall back to the index-held
+    // decoder if a factory's make() fails.
     let decoder_factory: Option<Arc<dyn crate::quantizers::DecoderFactory>> =
-        if args.str_or("stage3", "reference") == "runtime"
-            && args.str_or("encoder", "runtime") == "runtime"
-        {
-            let scale = scale_of(args)?;
-            let cfg = train_cfg(args, &scale)?;
-            Some(Arc::new(RuntimeDecoderFactory {
-                artifacts_dir: exp::artifacts_dir(),
-                model: model.clone(),
-                a: args.usize_or("a", cfg.a)?,
-                b: args.usize_or("b", cfg.b)?,
+        match args.str_or("stage3", "reference").as_str() {
+            "rust" => Some(Arc::new(crate::qinco::RustDecoderFactory {
                 params: index.params.clone(),
-            }))
-        } else {
-            None
+            })),
+            "runtime" => {
+                let scale = scale_of(args)?;
+                let cfg = train_cfg(args, &scale)?;
+                Some(Arc::new(RuntimeDecoderFactory {
+                    artifacts_dir: exp::artifacts_dir(),
+                    model: model.clone(),
+                    a: args.usize_or("a", cfg.a)?,
+                    b: args.usize_or("b", cfg.b)?,
+                    params: index.params.clone(),
+                }))
+            }
+            _ => None,
         };
     let router = Arc::new(Router::start(
         Arc::new(index),

@@ -39,9 +39,11 @@
 //!      [`StageDecoder`], while [`BatchSearcher::execute_with_decoder`]
 //!      accepts any `&dyn StageDecoder` — this is how server workers
 //!      route the union through their thread-local
-//!      [`RuntimeDecoder`](crate::qinco::RuntimeDecoder) (one padded XLA
-//!      dispatch per batch, engine-per-worker). Either way a decode
-//!      failure surfaces as an `Err`, never a panic inside the engine.
+//!      [`RuntimeDecoder`](crate::qinco::RuntimeDecoder) (one engine
+//!      dispatch per batch — native nn kernels by default, one padded
+//!      XLA dispatch under the `pjrt` feature; engine-per-worker).
+//!      Either way a decode failure surfaces as an `Err`, never a panic
+//!      inside the engine.
 //!
 //! # Intra-batch parallelism
 //!

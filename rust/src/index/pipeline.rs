@@ -19,11 +19,18 @@
 //!   [`PairwiseDecoder`] (Sec. 3.3, Eqs. 8-9); `None` forwards the
 //!   stage-1 shortlist unchanged.
 //! * **stage 3** — `Box<dyn StageDecoder>`: one batch decode of the
-//!   surviving codes, then exact distances. The default is the pure-Rust
-//!   [`ReferenceDecoder`]; [`crate::qinco::RuntimeDecoder`] routes the
-//!   same call through one padded XLA dispatch per batch. With
-//!   [`Stage3Kind::Disabled`] ("pairwise-only fast mode") the stage-2
-//!   ranking is returned directly, truncated to `n_final`.
+//!   surviving codes, then exact distances. Three decoders share the
+//!   model's `Arc<ParamStore>`: the scalar-oracle [`ReferenceDecoder`]
+//!   ([`Stage3Kind::Reference`], the default), the native
+//!   [`crate::qinco::RustDecoder`] over the shared [`crate::nn`] kernels
+//!   ([`Stage3Kind::Rust`], `--stage3 rust`), and the engine-backed
+//!   [`crate::qinco::RuntimeDecoder`] that routes the same call through
+//!   the artifact ABI — native kernels by default, AOT-compiled HLO
+//!   under the `pjrt` feature ([`Stage3Kind::Runtime`]; the index itself
+//!   holds a `RustDecoder` since engines are thread-confined, and serve
+//!   workers get per-thread runtime decoders via a `DecoderFactory`).
+//!   With [`Stage3Kind::Disabled`] ("pairwise-only fast mode") the
+//!   stage-2 ranking is returned directly, truncated to `n_final`.
 //!
 //! # Shards
 //!
@@ -81,7 +88,7 @@
 
 use super::ivf::Ivf;
 use super::shard::{RowPayload, ShardSet, DEAD_LOCAL};
-use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder};
+use crate::qinco::{reference, Codec, ParamStore, ReferenceDecoder, RustDecoder};
 use crate::quantizers::aq_lut::AdditiveDecoder;
 use crate::quantizers::lsq::{Lsq, LsqScorer};
 use crate::quantizers::opq::{Opq, OpqScorer};
@@ -157,8 +164,18 @@ pub enum Stage1Kind {
 /// Which [`StageDecoder`] the index holds for stage 3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage3Kind {
-    /// Pure-Rust reference QINCo2 decoder (infallible, thread-shared).
+    /// Scalar-oracle reference QINCo2 decoder (infallible, thread-shared;
+    /// deliberately naive — the baseline every faster path is pinned to).
     Reference,
+    /// Native QINCo2 decoder over the shared [`crate::nn`] kernels
+    /// ([`crate::qinco::RustDecoder`]) — the production pure-Rust path.
+    Rust,
+    /// Serve through the artifact runtime: the index itself holds a
+    /// [`crate::qinco::RustDecoder`] (engines are thread-confined, so a
+    /// thread-shared index can't carry one), and the server hands each
+    /// worker its own [`crate::qinco::RuntimeDecoder`] via a
+    /// [`DecoderFactory`](crate::quantizers::DecoderFactory).
+    Runtime,
     /// No exact re-rank: the stage-2 ranking is final ("pairwise-only
     /// fast mode"). `n_final > 0` truncates it.
     Disabled,
@@ -185,10 +202,9 @@ impl Default for PipelineConfig {
 impl PipelineConfig {
     /// Parse CLI-level flags: `stage1 ∈ {aq, pq, opq, lsq, rq}`
     /// (`stage1_m` sub-quantizers/steps for everything but aq),
-    /// `stage3 ∈ {reference, runtime, none}`. `"runtime"` builds a
-    /// reference-decoding index — the runtime path is selected per
-    /// worker thread at serve time through a `DecoderFactory`, never
-    /// baked into the (thread-shared) index.
+    /// `stage3 ∈ {reference, rust, runtime, none}`. Every stage-3 name
+    /// resolves to its own [`Stage3Kind`] — an unknown name is a hard
+    /// error naming the flag, never a silent fallback.
     pub fn from_flags(
         stage1: &str,
         stage1_m: usize,
@@ -211,9 +227,13 @@ impl PipelineConfig {
             other => bail!("unknown stage-1 scorer {other:?} (expected aq|pq|opq|lsq|rq)"),
         };
         let s3 = match stage3 {
-            "reference" | "runtime" => Stage3Kind::Reference,
+            "reference" => Stage3Kind::Reference,
+            "rust" => Stage3Kind::Rust,
+            "runtime" => Stage3Kind::Runtime,
             "none" | "disabled" => Stage3Kind::Disabled,
-            other => bail!("unknown stage-3 decoder {other:?} (expected reference|runtime|none)"),
+            other => bail!(
+                "--stage3: unknown stage-3 decoder {other:?} (expected reference|rust|runtime|none)"
+            ),
         };
         Ok(PipelineConfig { stage1: s1, stage2, stage3: s3 })
     }
@@ -618,13 +638,22 @@ impl SearchIndex {
             (None, Codes::zeros(0, 0), Vec::new(), trace)
         };
 
-        // ---- stage 3: the index-held decoder is always the infallible,
-        // thread-shared reference decoder; Disabled keeps it around (the
-        // batched engine still compiles against it) but never invokes it.
-        // Runtime decoders are per-worker-thread, via DecoderFactory.
+        // ---- stage 3: the index-held decoder is infallible and
+        // thread-shared — the scalar oracle for Reference, the native
+        // nn-kernel RustDecoder for Rust and Runtime (engines are
+        // thread-confined, so Runtime's per-worker decoders arrive at
+        // serve time via DecoderFactory); Disabled keeps the oracle
+        // around (the batched engine still compiles against it) but
+        // never invokes it.
         let params = Arc::new(params);
-        let stage3: Box<dyn StageDecoder + Send + Sync> =
-            Box::new(ReferenceDecoder { params: params.clone() });
+        let stage3: Box<dyn StageDecoder + Send + Sync> = match cfg.pipeline.stage3 {
+            Stage3Kind::Rust | Stage3Kind::Runtime => {
+                Box::new(RustDecoder { params: params.clone() })
+            }
+            Stage3Kind::Reference | Stage3Kind::Disabled => {
+                Box::new(ReferenceDecoder { params: params.clone() })
+            }
+        };
         let stage3_enabled = cfg.pipeline.stage3 != Stage3Kind::Disabled;
 
         // ---- partition the per-bucket state into bucket-owned shards:
@@ -686,11 +715,16 @@ impl SearchIndex {
             // PipelineSpec is a complete three-stage pipeline; execution
             // always decodes through the index-level stage 3 (asserted
             // equal above), never through this box
-            let o_spec = PipelineSpec {
-                stage1: o_stage1,
-                stage2: o_s2_scorer,
-                stage3: Box::new(ReferenceDecoder { params: params.clone() }),
+            let o_stage3: Box<dyn StageDecoder + Send + Sync> = match pcfg.stage3 {
+                Stage3Kind::Rust | Stage3Kind::Runtime => {
+                    Box::new(RustDecoder { params: params.clone() })
+                }
+                Stage3Kind::Reference | Stage3Kind::Disabled => {
+                    Box::new(ReferenceDecoder { params: params.clone() })
+                }
             };
+            let o_spec =
+                PipelineSpec { stage1: o_stage1, stage2: o_s2_scorer, stage3: o_stage3 };
             shards.install_override(*s, o_spec, o_side, o_terms, o_s2_codes, o_s2_norms);
         }
 
@@ -1270,4 +1304,34 @@ pub fn gather_codes(codes: &Codes, idx: &[usize]) -> Codes {
         out.row_mut(o).copy_from_slice(codes.row(i));
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage3_flag_names_resolve_to_their_own_kinds() {
+        // regression: "runtime" used to silently alias Reference, so a
+        // `--stage3 runtime` index decoded through the wrong path
+        for (name, want) in [
+            ("reference", Stage3Kind::Reference),
+            ("rust", Stage3Kind::Rust),
+            ("runtime", Stage3Kind::Runtime),
+            ("none", Stage3Kind::Disabled),
+            ("disabled", Stage3Kind::Disabled),
+        ] {
+            let cfg = PipelineConfig::from_flags("aq", 0, true, name).unwrap();
+            assert_eq!(cfg.stage3, want, "--stage3 {name}");
+        }
+    }
+
+    #[test]
+    fn unknown_stage3_name_is_a_hard_error_naming_the_flag() {
+        let err = PipelineConfig::from_flags("aq", 0, true, "xla").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--stage3"), "error should name the flag: {msg}");
+        assert!(msg.contains("\"xla\""), "error should name the bad value: {msg}");
+        assert!(msg.contains("reference|rust|runtime|none"), "error should list options: {msg}");
+    }
 }

@@ -15,10 +15,15 @@
 //! - **L1 (`python/compile/kernels/`)**: Pallas kernels for the
 //!   f_theta candidate evaluator and pre-selection scoring.
 //!
-//! The [`runtime`] module loads the HLO artifacts through the PJRT C API
-//! (`xla` crate — vendored as a stub when the real bindings are absent;
-//! see `rust/vendor/xla`) and exposes them as plain Rust functions;
-//! [`qinco`] wraps them into a trainer and codec; [`index`] and
+//! The [`runtime`] module executes the manifest's model artifacts as
+//! plain Rust functions behind a backend seam: the default **native**
+//! backend dispatches every inference artifact to the in-crate [`nn`]
+//! kernels (blocked matmul + fused QINCo2 step — no HLO files, no FFI),
+//! while the off-by-default `pjrt` cargo feature swaps in the HLO
+//! artifacts through the PJRT C API (`xla` crate — vendored as a stub
+//! when the real bindings are absent; see `rust/vendor/xla`; training
+//! artifacts only execute there). [`qinco`] wraps the runtime into a
+//! trainer and codec; [`index`] and
 //! [`server`] build the billion-scale-search pipeline of the paper's
 //! Figure 3; [`quantizers`] holds the classical baselines (PQ, OPQ, RQ,
 //! LSQ) and the paper's pairwise additive decoder.
@@ -30,14 +35,15 @@
 //! [`quantizers::StageDecoder`] for the exact decode stage) into an
 //! [`index::PipelineSpec`] — stage 1 defaults to the unitary additive
 //! decoder, stage 2 to the paper's pairwise decoder, stage 3 to the
-//! pure-Rust reference QINCo2 decoder, and each slot accepts any
+//! scalar-oracle reference QINCo2 decoder, and each slot accepts any
 //! conforming implementation (PQ/OPQ flat-LUT adapters for stage 1,
-//! stage-2-final "pairwise-only" mode, a PJRT-backed runtime decoder
+//! stage-2-final "pairwise-only" mode, the native [`nn`]-kernel
+//! [`qinco::RustDecoder`] or the engine-backed [`qinco::RuntimeDecoder`]
 //! for stage 3). [`index::PipelineConfig`] selects stages by
 //! configuration from the CLI, the benches, and the tests; the
 //! [`quantizers::DecoderFactory`] trait hands every server worker its
-//! own thread-local stage-3 decoder (engine-per-worker — PJRT clients
-//! are `Rc`-based and cannot cross threads). See [`index::pipeline`]
+//! own thread-local stage-3 decoder (engine-per-worker — engines are
+//! thread-confined and cannot cross threads). See [`index::pipeline`]
 //! for the trait contracts and extension points.
 //!
 //! # Sharded index: scatter/gather over bucket-owned shards
@@ -141,6 +147,7 @@ pub mod index;
 pub mod linalg;
 pub mod metrics;
 pub mod net;
+pub mod nn;
 pub mod qinco;
 pub mod quantizers;
 pub mod runtime;

@@ -1,0 +1,380 @@
+//! Native neural-network kernels: the QINCo2 `f_theta` forward pass as
+//! plain Rust, shared by every bulk decode/encode path in the crate.
+//!
+//! This is the CPU twin of `python/compile/kernels/qinco_step.py` — the
+//! same fused step (input projection, concat-conditioning, statically
+//! unrolled residual ReLU blocks, output projection, codeword add) over
+//! the same weight layout, so the [`crate::runtime`] native backend can
+//! execute the manifest's decode/encode artifacts without PJRT.
+//!
+//! # Kernel shape
+//!
+//! [`matmul`] is a cache-blocked `y = x @ w`: the weight matrix is
+//! walked in [`LANES`]-wide column panels (one panel is `cin × 8` floats
+//! — L1-resident for every layer of the model family), and each panel is
+//! swept over all rows with a fixed-width 8-lane accumulator, the same
+//! unrolled-lane idiom as the scan kernel's `score_block_lanes`. The
+//! trailing `cout % LANES` columns take a scalar remainder path.
+//!
+//! # Numerics
+//!
+//! Every output element accumulates its `cin` products in ascending-`i`
+//! order — exactly the summation order of the scalar oracle loop in
+//! [`crate::qinco::reference`] (`f_theta_scalar`). IEEE f32 addition in
+//! a fixed order is deterministic, so for finite weights the blocked
+//! kernel is expected to match the oracle bit for bit; the documented
+//! *contract*, pinned by the `rust_decoder_matches_reference` suite, is
+//! agreement within `1e-5` absolute. Greedy/beam encode both route
+//! through [`qinco_step`], so `encode_beam(A=K, B=1)` stays bit-identical
+//! to greedy — the invariant live-index ingest relies on.
+//!
+//! # Tail handling
+//!
+//! [`qinco_step`] mirrors the Python kernel's zero-pad tail: the batch
+//! is padded with zero rows up to a whole number of [`ROW_TILE`]-row
+//! tiles (`t = min(ROW_TILE, max(n, 1))`, `pad = (-n) % t`) and the pad
+//! is stripped from the output. The kernels are row-independent, so the
+//! pad is mathematically transparent — it exists so the blocking matches
+//! the artifact semantics exactly, including `n = 0` and `n < tile`.
+//! One deliberate difference: `qinco_step.py` lowers `L = 0` as a single
+//! *zeroed* residual block because Pallas rejects zero-sized blocks
+//! (`v + relu(v @ 0) @ 0 = v`); native code just skips the block loop,
+//! which is the same function.
+
+/// Column lanes per accumulator block of [`matmul`] — the same width as
+/// the scan kernel's `SCORE_BLOCK`.
+pub const LANES: usize = 8;
+
+/// Row-tile granularity of [`qinco_step`]'s zero-pad batching, matching
+/// the Pallas kernel's TPU tile. Batches are processed (and padded) in
+/// tiles of `min(ROW_TILE, max(n, 1))` rows so scratch buffers stay
+/// cache-resident for arbitrarily large decodes.
+pub const ROW_TILE: usize = 512;
+
+/// `y[rows, cout] = x[rows, cin] @ w[cin, cout]`, all row-major flat
+/// slices. Overwrites `y[..rows * cout]`.
+///
+/// Blocked as described in the module docs; each `y[r, o]` is the
+/// ascending-`i` sum of `x[r, i] * w[i, o]`, so results are bit-stable
+/// across batch sizes and identical to a naive scalar triple loop.
+pub fn matmul(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, y: &mut [f32]) {
+    debug_assert!(x.len() >= rows * cin, "matmul: x too short");
+    debug_assert!(w.len() >= cin * cout, "matmul: w too short");
+    debug_assert!(y.len() >= rows * cout, "matmul: y too short");
+    let full = cout - cout % LANES;
+    let mut o = 0;
+    while o < full {
+        // one cin×LANES weight panel, swept over every row while hot
+        for r in 0..rows {
+            let xr = &x[r * cin..(r + 1) * cin];
+            let mut acc = [0.0f32; LANES];
+            for (i, &xv) in xr.iter().enumerate() {
+                let wp = &w[i * cout + o..i * cout + o + LANES];
+                acc[0] += xv * wp[0];
+                acc[1] += xv * wp[1];
+                acc[2] += xv * wp[2];
+                acc[3] += xv * wp[3];
+                acc[4] += xv * wp[4];
+                acc[5] += xv * wp[5];
+                acc[6] += xv * wp[6];
+                acc[7] += xv * wp[7];
+            }
+            y[r * cout + o..r * cout + o + LANES].copy_from_slice(&acc);
+        }
+        o += LANES;
+    }
+    // remainder columns (cout % LANES): scalar lanes, same i-order
+    for o in full..cout {
+        for r in 0..rows {
+            let xr = &x[r * cin..(r + 1) * cin];
+            let mut a = 0.0f32;
+            for (i, &xv) in xr.iter().enumerate() {
+                a += xv * w[i * cout + o];
+            }
+            y[r * cout + o] = a;
+        }
+    }
+}
+
+/// One decode step's weight slices (already sliced to step `m` out of
+/// the `[M, ...]` parameter tensors — see
+/// `crate::qinco::native::step_weights` for the `ParamStore` adapter).
+/// Layouts match the manifest ABI: `in_w [d, de]`, `cond_w [de+d, de]`,
+/// `cond_b [de]`, `up_w [l, de, dh]`, `down_w [l, dh, de]`,
+/// `out_w [de, d]`, all row-major flat.
+pub struct StepWeights<'a> {
+    pub d: usize,
+    pub de: usize,
+    pub dh: usize,
+    pub l: usize,
+    pub in_w: &'a [f32],
+    pub cond_w: &'a [f32],
+    pub cond_b: &'a [f32],
+    pub up_w: &'a [f32],
+    pub down_w: &'a [f32],
+    pub out_w: &'a [f32],
+}
+
+impl StepWeights<'_> {
+    fn debug_validate(&self) {
+        debug_assert_eq!(self.in_w.len(), self.d * self.de);
+        debug_assert_eq!(self.cond_w.len(), (self.de + self.d) * self.de);
+        debug_assert_eq!(self.cond_b.len(), self.de);
+        debug_assert_eq!(self.up_w.len(), self.l * self.de * self.dh);
+        debug_assert_eq!(self.down_w.len(), self.l * self.dh * self.de);
+        debug_assert_eq!(self.out_w.len(), self.de * self.d);
+    }
+}
+
+/// Fused `f_theta(c | xhat)` for a batch: returns `[rows, d]` flat.
+///
+/// ```text
+/// c_emb = c @ in_w
+/// v     = c_emb + ([c_emb ; xhat] @ cond_w + cond_b)
+/// L ×   { v += relu(v @ up_w[i]) @ down_w[i] }
+/// out   = c + v @ out_w
+/// ```
+///
+/// `c` and `xhat` are `[rows, d]` flat. Mirrors the Pallas kernel's
+/// zero-pad tail handling (module docs); the pad rows are stripped
+/// before returning.
+pub fn qinco_step(sw: &StepWeights, c: &[f32], xhat: &[f32], rows: usize) -> Vec<f32> {
+    let (d, de, dh, l) = (sw.d, sw.de, sw.dh, sw.l);
+    sw.debug_validate();
+    debug_assert_eq!(c.len(), rows * d, "qinco_step: c shape");
+    debug_assert_eq!(xhat.len(), rows * d, "qinco_step: xhat shape");
+    // t = min(tile, max(n, 1)); pad = (-n) % t  — qinco_step.py verbatim
+    let t = ROW_TILE.min(rows.max(1));
+    let pad = (t - rows % t) % t;
+    let padded = rows + pad;
+    let (c_owned, xhat_owned);
+    let (c_all, xhat_all): (&[f32], &[f32]) = if pad == 0 {
+        (c, xhat)
+    } else {
+        c_owned = {
+            let mut v = c.to_vec();
+            v.resize(padded * d, 0.0);
+            v
+        };
+        xhat_owned = {
+            let mut v = xhat.to_vec();
+            v.resize(padded * d, 0.0);
+            v
+        };
+        (&c_owned, &xhat_owned)
+    };
+    let mut out = vec![0.0f32; padded * d];
+    // scratch reused across row tiles
+    let mut c_emb = vec![0.0f32; t * de];
+    let mut cat = vec![0.0f32; t * (de + d)];
+    let mut v = vec![0.0f32; t * de];
+    let mut hidden = vec![0.0f32; t * dh];
+    let mut delta = vec![0.0f32; t * de];
+    let mut lo = 0;
+    while lo < padded {
+        let ct = &c_all[lo * d..(lo + t) * d];
+        let xt = &xhat_all[lo * d..(lo + t) * d];
+        // c_emb = c @ in_w
+        matmul(ct, t, d, sw.in_w, de, &mut c_emb);
+        // v = c_emb + ([c_emb ; xhat] @ cond_w + cond_b)
+        for r in 0..t {
+            cat[r * (de + d)..r * (de + d) + de].copy_from_slice(&c_emb[r * de..(r + 1) * de]);
+            cat[r * (de + d) + de..(r + 1) * (de + d)].copy_from_slice(&xt[r * d..(r + 1) * d]);
+        }
+        matmul(&cat, t, de + d, sw.cond_w, de, &mut v);
+        for r in 0..t {
+            for j in 0..de {
+                v[r * de + j] += sw.cond_b[j] + c_emb[r * de + j];
+            }
+        }
+        // statically-unrolled residual ReLU blocks
+        for blk in 0..l {
+            let up = &sw.up_w[blk * de * dh..(blk + 1) * de * dh];
+            let down = &sw.down_w[blk * dh * de..(blk + 1) * dh * de];
+            matmul(&v, t, de, up, dh, &mut hidden);
+            for h in hidden.iter_mut() {
+                if *h < 0.0 {
+                    *h = 0.0;
+                }
+            }
+            matmul(&hidden, t, dh, down, de, &mut delta);
+            for (vv, &dv) in v.iter_mut().zip(&delta) {
+                *vv += dv;
+            }
+        }
+        // out = c + v @ out_w
+        let ot = &mut out[lo * d..(lo + t) * d];
+        matmul(&v, t, de, sw.out_w, d, ot);
+        for (o, &cv) in ot.iter_mut().zip(ct) {
+            *o += cv;
+        }
+        lo += t;
+    }
+    out.truncate(rows * d);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect()
+    }
+
+    /// The oracle: naive triple loop, ascending-i accumulation.
+    fn matmul_naive(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; rows * cout];
+        for r in 0..rows {
+            for o in 0..cout {
+                let mut a = 0.0f32;
+                for i in 0..cin {
+                    a += x[r * cin + i] * w[i * cout + o];
+                }
+                y[r * cout + o] = a;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn blocked_matmul_is_bit_identical_to_naive() {
+        let mut rng = Rng::new(7);
+        // cover full-lane, remainder-only, and mixed column counts plus
+        // row counts around the lane width
+        for &(rows, cin, cout) in &[
+            (1usize, 3usize, 1usize),
+            (4, 8, 8),
+            (7, 5, 7),
+            (8, 16, 24),
+            (9, 11, 17),
+            (16, 13, 9),
+            (33, 24, 16),
+        ] {
+            let x = randv(&mut rng, rows * cin);
+            let w = randv(&mut rng, cin * cout);
+            let mut y = vec![f32::NAN; rows * cout];
+            matmul(&x, rows, cin, &w, cout, &mut y);
+            assert_eq!(
+                y,
+                matmul_naive(&x, rows, cin, &w, cout),
+                "rows={rows} cin={cin} cout={cout}"
+            );
+        }
+    }
+
+    fn random_weights(rng: &mut Rng, d: usize, de: usize, dh: usize, l: usize) -> Vec<Vec<f32>> {
+        vec![
+            randv(rng, d * de),
+            randv(rng, (de + d) * de),
+            randv(rng, de),
+            randv(rng, l * de * dh),
+            randv(rng, l * dh * de),
+            randv(rng, de * d),
+        ]
+    }
+
+    fn weights_of(buf: &[Vec<f32>], d: usize, de: usize, dh: usize, l: usize) -> StepWeights<'_> {
+        StepWeights {
+            d,
+            de,
+            dh,
+            l,
+            in_w: &buf[0],
+            cond_w: &buf[1],
+            cond_b: &buf[2],
+            up_w: &buf[3],
+            down_w: &buf[4],
+            out_w: &buf[5],
+        }
+    }
+
+    #[test]
+    fn qinco_step_batch_is_row_independent_and_pad_transparent() {
+        // non-multiple-of-LANES dims exercise the remainder columns; the
+        // batch result must equal per-row evaluation exactly (row
+        // independence), which also proves the zero-pad tail transparent
+        let (d, de, dh, l) = (5usize, 7usize, 11usize, 2usize);
+        let mut rng = Rng::new(23);
+        let buf = random_weights(&mut rng, d, de, dh, l);
+        let sw = weights_of(&buf, d, de, dh, l);
+        let rows = 13;
+        let c = randv(&mut rng, rows * d);
+        let xhat = randv(&mut rng, rows * d);
+        let batch = qinco_step(&sw, &c, &xhat, rows);
+        assert_eq!(batch.len(), rows * d);
+        assert!(batch.iter().all(|v| v.is_finite()));
+        for r in 0..rows {
+            let one = qinco_step(&sw, &c[r * d..(r + 1) * d], &xhat[r * d..(r + 1) * d], 1);
+            assert_eq!(&batch[r * d..(r + 1) * d], &one[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn qinco_step_zero_network_is_pure_codeword_passthrough() {
+        // all-zero weights: v = 0, every block adds 0, out = c + 0 = c
+        let (d, de, dh, l) = (6usize, 9usize, 4usize, 1usize);
+        let buf = vec![
+            vec![0.0; d * de],
+            vec![0.0; (de + d) * de],
+            vec![0.0; de],
+            vec![0.0; l * de * dh],
+            vec![0.0; l * dh * de],
+            vec![0.0; de * d],
+        ];
+        let sw = weights_of(&buf, d, de, dh, l);
+        let mut rng = Rng::new(3);
+        let c = randv(&mut rng, 4 * d);
+        let xhat = randv(&mut rng, 4 * d);
+        assert_eq!(qinco_step(&sw, &c, &xhat, 4), c);
+    }
+
+    #[test]
+    fn qinco_step_l_zero_skips_residual_blocks() {
+        // L = 0 must behave as the identity on v (the Pallas kernel's
+        // zeroed-block workaround computes the same function)
+        let (d, de, dh) = (5usize, 7usize, 11usize);
+        let mut rng = Rng::new(41);
+        let mut buf = random_weights(&mut rng, d, de, dh, 1);
+        buf[3] = Vec::new(); // up_w: [0, de, dh]
+        buf[4] = Vec::new(); // down_w
+        let sw = weights_of(&buf, d, de, dh, 0);
+        let c = randv(&mut rng, 3 * d);
+        let xhat = randv(&mut rng, 3 * d);
+        let got = qinco_step(&sw, &c, &xhat, 3);
+        // oracle without blocks: out = c + (c_emb + cat @ cond_w + b) @ out_w
+        for r in 0..3 {
+            let cr = &c[r * d..(r + 1) * d];
+            let xr = &xhat[r * d..(r + 1) * d];
+            let c_emb = matmul_naive(cr, 1, d, &buf[0], de);
+            let mut cat = c_emb.clone();
+            cat.extend_from_slice(xr);
+            let mut v = matmul_naive(&cat, 1, de + d, &buf[1], de);
+            for j in 0..de {
+                v[j] += buf[2][j] + c_emb[j];
+            }
+            let mut want = matmul_naive(&v, 1, de, &buf[5], d);
+            for j in 0..d {
+                want[j] += cr[j];
+            }
+            for j in 0..d {
+                assert!(
+                    (got[r * d + j] - want[j]).abs() <= 1e-5,
+                    "row {r} col {j}: {} vs {}",
+                    got[r * d + j],
+                    want[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qinco_step_empty_batch_is_empty() {
+        let (d, de, dh, l) = (4usize, 4usize, 4usize, 1usize);
+        let mut rng = Rng::new(9);
+        let buf = random_weights(&mut rng, d, de, dh, l);
+        let sw = weights_of(&buf, d, de, dh, l);
+        assert!(qinco_step(&sw, &[], &[], 0).is_empty());
+    }
+}

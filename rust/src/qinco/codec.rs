@@ -1,5 +1,9 @@
-//! Batched encode/decode of QINCo2 codes through the PJRT runtime.
+//! Batched encode/decode of QINCo2 codes through the artifact runtime.
 //!
+//! The codec speaks the manifest ABI and is backend-agnostic: on the
+//! default native backend ([`Engine::open`]) every dispatch lands on the
+//! in-crate [`crate::nn`] kernels (no HLO files, no PJRT); under the
+//! `pjrt` feature the same calls execute the AOT-compiled HLO artifacts.
 //! Artifacts have fixed batch sizes; the codec pads the last batch (by
 //! repeating the first row) and strips the pad from the outputs, so any
 //! dataset size works. One `Codec` wraps one model + one (A, B) encode
@@ -195,13 +199,15 @@ impl Codec {
     }
 }
 
-/// [`StageDecoder`] over the PJRT runtime: one XLA dispatch per batch
-/// through [`Codec::decode`]. The engine inside is `Rc`-based (not
-/// `Send`), so a `RuntimeDecoder` is pinned to the thread that built it —
-/// construct one per serving worker via [`RuntimeDecoderFactory`], never
-/// share one across threads. The `RefCell` is sound for the same reason:
-/// the decoder is thread-local by construction and `decode` is the only
-/// borrower.
+/// [`StageDecoder`] over the artifact runtime: one engine dispatch per
+/// batch through [`Codec::decode`] — native kernels by default, one
+/// padded XLA dispatch under the `pjrt` feature. The engine inside is
+/// thread-confined (PJRT clients are `Rc`-based, and the executable
+/// cache uses `Rc` either way), so a `RuntimeDecoder` is pinned to the
+/// thread that built it — construct one per serving worker via
+/// [`RuntimeDecoderFactory`], never share one across threads. The
+/// `RefCell` is sound for the same reason: the decoder is thread-local
+/// by construction and `decode` is the only borrower.
 pub struct RuntimeDecoder {
     engine: RefCell<Engine>,
     codec: Codec,
@@ -235,11 +241,12 @@ impl StageDecoder for RuntimeDecoder {
 }
 
 /// Engine-per-worker factory: each server worker thread calls [`make`]
-/// once at startup and gets a [`RuntimeDecoder`] with its *own* PJRT
-/// client + compiled-artifact cache (clients are `Rc`-based and cannot
-/// cross threads). Construction fails cleanly when no runtime is
-/// available — e.g. under the vendored stub `xla` crate — and the server
-/// then falls back to the reference decoder for that worker.
+/// once at startup and gets a [`RuntimeDecoder`] with its *own* engine +
+/// artifact cache (engines are thread-confined). On the default native
+/// backend construction only needs `manifest.json`; construction fails
+/// cleanly when the manifest is absent or names no matching artifacts,
+/// and the server then falls back to the index-held decoder for that
+/// worker.
 ///
 /// [`make`]: DecoderFactory::make
 pub struct RuntimeDecoderFactory {

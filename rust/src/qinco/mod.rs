@@ -1,16 +1,38 @@
 //! The QINCo2 model driver: parameter store management, RQ-based
-//! initialization (App. A.2), batched encode/decode through the PJRT
-//! runtime, the full training loop (AdamW + cosine schedule + gradient
-//! clipping + dead-codeword resets), and a pure-Rust reference decoder
-//! used both for validating the HLO path and for decoding small
-//! shortlists without batch padding.
+//! initialization (App. A.2), batched encode/decode, and the full
+//! training loop (AdamW + cosine schedule + gradient clipping +
+//! dead-codeword resets).
+//!
+//! # Three stage-3 decoders, one weight store
+//!
+//! All decode paths consume the same [`ParamStore`] (shared via `Arc`):
+//!
+//! * [`ReferenceDecoder`] — the scalar oracle. Plain nested loops
+//!   ([`reference::f_theta_scalar`]), kept deliberately naive so every
+//!   other path has a trustworthy baseline to diff against.
+//! * [`RustDecoder`] — the production native path (`--stage3 rust`).
+//!   Same math routed through the shared [`crate::nn`] kernels
+//!   (blocked matmul + fused `qinco_step`); pinned to the oracle within
+//!   `1e-5` by `native::tests::rust_decoder_matches_reference`.
+//! * [`RuntimeDecoder`] — decode through the artifact runtime's
+//!   manifest ABI ([`crate::runtime::Engine`]). On the default native
+//!   backend this also lands on the [`crate::nn`] kernels (no HLO files
+//!   needed); under the `pjrt` feature it executes the AOT-compiled HLO
+//!   artifacts instead.
+//!
+//! Bulk encode ([`reference::encode_beam`] / `encode_greedy`) routes
+//! through the same nn kernels via [`reference::f_theta`], so encode and
+//! native decode share one numerical path; training runs either
+//! in-crate ([`Trainer`]) or through PJRT-only training artifacts.
 
 pub mod codec;
+pub mod native;
 pub mod params;
 pub mod reference;
 pub mod trainer;
 
 pub use codec::{Codec, RuntimeDecoder, RuntimeDecoderFactory};
+pub use native::{RustDecoder, RustDecoderFactory};
 pub use params::ParamStore;
 pub use reference::{ReferenceDecoder, ReferenceDecoderFactory};
 pub use trainer::{TrainCfg, TrainStats, Trainer};

@@ -1,0 +1,217 @@
+//! The native stage-3 decoder: QINCo2 decode through the shared
+//! [`crate::nn`] kernels, selected with `--stage3 rust`.
+//!
+//! Three stage-3 decoders now exist (see [`crate::qinco`] module docs):
+//! the scalar-oracle [`ReferenceDecoder`](super::reference::ReferenceDecoder),
+//! this [`RustDecoder`] (same weights, blocked/fused kernels), and the
+//! engine-backed [`RuntimeDecoder`](super::codec::RuntimeDecoder) that
+//! routes through the artifact ABI. All three consume the same
+//! `Arc<ParamStore>`-held weights; the `rust_decoder_matches_reference`
+//! suite below pins this decoder to the oracle within `1e-5` absolute
+//! (they are expected bit-identical — the kernels preserve the oracle's
+//! per-element summation order).
+
+use super::params::ParamStore;
+use super::reference;
+use crate::nn::StepWeights;
+use crate::quantizers::{Codes, DecoderFactory, StageDecoder};
+use crate::tensor::Matrix;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Borrow step `step`'s weight slices out of a parameter store, in the
+/// layout [`crate::nn::qinco_step`] consumes. The slicing matches the
+/// manifest ABI: every network tensor is `[M, ...]` with the step as the
+/// leading axis.
+pub fn step_weights(params: &ParamStore, step: usize) -> StepWeights<'_> {
+    let cfg = &params.cfg;
+    let (d, de, dh, l) = (cfg.d, cfg.de, cfg.dh, cfg.l);
+    StepWeights {
+        d,
+        de,
+        dh,
+        l,
+        in_w: &params.get("in_w").data_f32[step * d * de..(step + 1) * d * de],
+        cond_w: &params.get("cond_w").data_f32
+            [step * (de + d) * de..(step + 1) * (de + d) * de],
+        cond_b: &params.get("cond_b").data_f32[step * de..(step + 1) * de],
+        up_w: &params.get("up_w").data_f32[step * l * de * dh..(step + 1) * l * de * dh],
+        down_w: &params.get("down_w").data_f32[step * l * dh * de..(step + 1) * l * dh * de],
+        out_w: &params.get("out_w").data_f32[step * de * d..(step + 1) * de * d],
+    }
+}
+
+/// [`StageDecoder`] over the native nn kernels — the production stage-3
+/// for `--stage3 rust` (and the index-held decoder behind
+/// `--stage3 runtime`, whose per-worker engines are a serve-time
+/// concern). Thread-safe and infallible like the reference decoder: it
+/// holds only the shared parameter tensors.
+pub struct RustDecoder {
+    pub params: Arc<ParamStore>,
+}
+
+impl StageDecoder for RustDecoder {
+    fn decode(&self, codes: &Codes) -> Result<Matrix> {
+        Ok(reference::decode(&self.params, codes))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Factory handing every server worker a (cheap, parameter-sharing)
+/// [`RustDecoder`] — the `--stage3 rust` serve path. Infallible: no
+/// engine, no artifacts, just the weights already in memory.
+pub struct RustDecoderFactory {
+    pub params: Arc<ParamStore>,
+}
+
+impl DecoderFactory for RustDecoderFactory {
+    fn make(&self) -> Result<Box<dyn StageDecoder>> {
+        Ok(Box::new(RustDecoder { params: self.params.clone() }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Flavor};
+    use crate::nn;
+    use crate::quantizers::StageDecoder;
+    use crate::runtime::manifest::{ModelCfg, ModelSpec, TensorSpec};
+    use crate::util::prng::Rng;
+
+    /// Documented agreement contract between the nn kernels and the
+    /// scalar oracle (module docs; expected bit-identical in practice).
+    const TOL: f32 = 1e-5;
+
+    /// A synthetic model spec whose dims are *not* multiples of the
+    /// kernel lane width, so the blocked matmul's remainder columns and
+    /// the concat layout all get exercised (the in-repo `test` model is
+    /// all powers of two).
+    fn odd_spec() -> ModelSpec {
+        let cfg = ModelCfg { d: 5, m: 3, k: 6, l: 2, de: 7, dh: 11, ls: 0, dhg: 0 };
+        let (d, m, k, l, de, dh) = (cfg.d, cfg.m, cfg.k, cfg.l, cfg.de, cfg.dh);
+        let p = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype: "float32".to_string(),
+        };
+        let params = vec![
+            p("codebooks", vec![m, k, d]),
+            p("presel", vec![m, k, d]),
+            p("in_w", vec![m, d, de]),
+            p("cond_w", vec![m, de + d, de]),
+            p("cond_b", vec![m, de]),
+            p("up_w", vec![m, l, de, dh]),
+            p("down_w", vec![m, l, dh, de]),
+            p("out_w", vec![m, de, d]),
+        ];
+        let num_params = params.iter().map(|t| t.shape.iter().product::<usize>()).sum();
+        ModelSpec { cfg, params, num_params }
+    }
+
+    /// Init from training data, then overwrite every tensor with random
+    /// values so zero-initialized projections can't mask kernel bugs.
+    fn random_store(seed: u64) -> ParamStore {
+        let spec = odd_spec();
+        let train = generate(Flavor::Deep, 64, spec.cfg.d, seed);
+        let mut ps = ParamStore::init(&spec, "odd", &train, seed);
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        for name in ps.names.clone() {
+            for v in ps.get_mut(&name).data_f32.iter_mut() {
+                *v = rng.uniform(-0.4, 0.4);
+            }
+        }
+        ps
+    }
+
+    fn random_codes(rng: &mut Rng, n: usize, m: usize, k: usize) -> Codes {
+        let mut codes = Codes::zeros(n, m);
+        for v in codes.data.iter_mut() {
+            *v = rng.below(k) as u32;
+        }
+        codes
+    }
+
+    #[test]
+    fn rust_decoder_matches_reference() {
+        // RustDecoder (nn kernels) vs ReferenceDecoder (scalar oracle)
+        // over random stores × batch sizes straddling the kernel row
+        // tile (1, tile−1, tile, tile+1), so the zero-pad tail and the
+        // whole-tile path both run
+        for seed in [1u64, 2, 3] {
+            let params = Arc::new(random_store(seed));
+            let (m, k) = (params.cfg.m, params.cfg.k);
+            let rust = RustDecoder { params: params.clone() };
+            let reference = reference::ReferenceDecoder { params: params.clone() };
+            let mut rng = Rng::new(seed * 977);
+            for n in [1usize, nn::ROW_TILE - 1, nn::ROW_TILE, nn::ROW_TILE + 1] {
+                let codes = random_codes(&mut rng, n, m, k);
+                let got = rust.decode(&codes).unwrap();
+                let want = reference.decode(&codes).unwrap();
+                assert_eq!(got.rows, n);
+                let worst = got
+                    .data
+                    .iter()
+                    .zip(&want.data)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    worst <= TOL,
+                    "seed {seed} n {n}: max |rust − reference| = {worst} > {TOL}"
+                );
+                assert!(got.data.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn nn_f_theta_matches_scalar_oracle_per_step() {
+        // every step's weight slice, at batch sizes around the lane
+        // width, against the scalar loop directly
+        let params = random_store(7);
+        let (d, m) = (params.cfg.d, params.cfg.m);
+        let mut rng = Rng::new(101);
+        for step in 0..m {
+            for n in [1usize, 7, 8, 9] {
+                let c: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let xhat: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let fast = reference::f_theta(&params, step, &c, &xhat, n);
+                let slow = reference::f_theta_scalar(&params, step, &c, &xhat, n);
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        (a - b).abs() <= TOL,
+                        "step {step} n {n} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_ingest_path_stays_bit_identical_through_nn() {
+        // the live-index ingest contract: beam (A=K, B=1) == greedy,
+        // bit for bit, with both encoders routed through the nn kernels
+        let params = random_store(11);
+        let xs = generate(Flavor::Deep, 33, params.cfg.d, 5);
+        let greedy = reference::encode_greedy(&params, &xs);
+        let beam = reference::encode_beam(&params, &xs, params.cfg.k, 1);
+        assert_eq!(greedy, beam);
+        // and decoding those codes is deterministic across both decoders
+        // within the documented tolerance
+        let d_rust = reference::decode(&params, &greedy);
+        let d_ref = reference::decode_scalar(&params, &greedy);
+        for (a, b) in d_rust.data.iter().zip(&d_ref.data) {
+            assert!((a - b).abs() <= TOL);
+        }
+    }
+
+    #[test]
+    fn rust_decoder_factory_hands_out_named_decoder() {
+        let params = Arc::new(random_store(13));
+        let dec = RustDecoderFactory { params }.make().unwrap();
+        assert_eq!(dec.name(), "rust");
+    }
+}

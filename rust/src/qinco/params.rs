@@ -172,12 +172,24 @@ impl ParamStore {
         self.names.iter().map(|n| self.store.get(n).unwrap()).collect()
     }
 
+    /// Fetch a parameter tensor.
+    ///
+    /// # Panics
+    /// If `name` is not a parameter of this model — a programming error
+    /// (the manifest fixes the inventory at load time), reported with
+    /// the key and model so the bad call site is identifiable.
     pub fn get(&self, name: &str) -> &Tensor {
-        self.store.get(name).unwrap()
+        self.store.get(name).unwrap_or_else(|_| {
+            panic!("ParamStore::get: no parameter {name:?} in model {:?}", self.model)
+        })
     }
 
+    /// Mutable variant of [`ParamStore::get`]; same panic contract.
     pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
-        self.store.tensors.get_mut(name).unwrap()
+        let ParamStore { model, store, .. } = self;
+        store.tensors.get_mut(name).unwrap_or_else(|| {
+            panic!("ParamStore::get_mut: no parameter {name:?} in model {model:?}")
+        })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -315,6 +327,24 @@ mod tests {
                 assert_eq!(changed, step == 1 && c == 3, "step {step} code {c}");
             }
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "no parameter \"no_such_param\" in model \"test\"")]
+    fn get_panics_with_key_and_model() {
+        let man = manifest();
+        let spec = man.model("test").unwrap();
+        let ps = ParamStore::zeros_like(spec, "test");
+        let _ = ps.get("no_such_param");
+    }
+
+    #[test]
+    #[should_panic(expected = "no parameter \"no_such_param\" in model \"test\"")]
+    fn get_mut_panics_with_key_and_model() {
+        let man = manifest();
+        let spec = man.model("test").unwrap();
+        let mut ps = ParamStore::zeros_like(spec, "test");
+        let _ = ps.get_mut("no_such_param");
     }
 
     #[test]

@@ -1,10 +1,21 @@
-//! Pure-Rust reference implementation of the QINCo2 decoder (Eqs. 10-13).
+//! Reference implementation of the QINCo2 model (Eqs. 10-13): the
+//! scalar oracle plus the shared greedy/beam encoders.
 //!
-//! Serves two purposes: (1) an end-to-end numerical check of the whole
-//! Python→HLO→PJRT path (integration tests assert the XLA decode matches
-//! this to float tolerance), and (2) pad-free decoding of tiny shortlists
-//! on the search hot path where a fixed-batch artifact would waste work.
+//! Two numerically distinct `f_theta` paths live here on purpose:
+//!
+//! * [`f_theta_scalar`] / [`decode_scalar`] — the plain scalar loop, the
+//!   crate's *oracle*. [`ReferenceDecoder`] decodes through it, so the
+//!   default stage 3 stays an implementation-independent cross-check of
+//!   every other path (the `rust_decoder_matches_reference` suite and
+//!   the runtime round-trips compare against it).
+//! * [`f_theta`] / [`decode`] — the bulk path, routed through the shared
+//!   [`crate::nn`] kernels (blocked matmul + fused step). The encoders
+//!   ([`encode_greedy`], [`encode_beam`]) and the native runtime backend
+//!   use this; it accumulates in the oracle's summation order, so the
+//!   two agree within the documented `1e-5` tolerance (bit-identical for
+//!   finite weights in practice).
 
+use super::native;
 use super::params::ParamStore;
 use crate::quantizers::{Codes, DecoderFactory, StageDecoder};
 use crate::tensor::Matrix;
@@ -12,7 +23,8 @@ use anyhow::Result;
 use std::sync::Arc;
 
 /// y[rows, cols_out] = x[rows, cols_in] @ w[cols_in, cols_out], with w
-/// given as a flat slice.
+/// given as a flat slice. Oracle-side scalar matmul (ascending-i
+/// accumulation per output element — the order the nn kernels replicate).
 fn matmul_into(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, y: &mut [f32]) {
     y[..rows * cout].fill(0.0);
     for r in 0..rows {
@@ -30,9 +42,23 @@ fn matmul_into(x: &[f32], rows: usize, cin: usize, w: &[f32], cout: usize, y: &m
     }
 }
 
-/// f_theta(c | xhat) for a batch of rows, using step `step`'s weights.
+/// f_theta(c | xhat) for a batch of rows through the shared [`crate::nn`]
+/// kernels — the bulk path every encoder and the native runtime use.
 /// `c` and `xhat` are [rows, d] flattened; result is [rows, d].
 pub fn f_theta(params: &ParamStore, step: usize, c: &[f32], xhat: &[f32], rows: usize) -> Vec<f32> {
+    crate::nn::qinco_step(&native::step_weights(params, step), c, xhat, rows)
+}
+
+/// f_theta(c | xhat) as the scalar oracle loop: no blocking, no padding,
+/// no shared kernels — the independent cross-check the nn path is
+/// validated against. Same signature and weight slicing as [`f_theta`].
+pub fn f_theta_scalar(
+    params: &ParamStore,
+    step: usize,
+    c: &[f32],
+    xhat: &[f32],
+    rows: usize,
+) -> Vec<f32> {
     let cfg = &params.cfg;
     let (d, de, dh, l) = (cfg.d, cfg.de, cfg.dh, cfg.l);
     let in_w = &params.get("in_w").data_f32[step * d * de..(step + 1) * d * de];
@@ -85,8 +111,13 @@ pub fn f_theta(params: &ParamStore, step: usize, c: &[f32], xhat: &[f32], rows: 
     out
 }
 
-/// Full decode of a code table (Eq. 4): xhat^m = xhat^{m-1} + f_theta(c^m).
-pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
+/// Full decode of a code table (Eq. 4): xhat^m = xhat^{m-1} + f_theta(c^m),
+/// with `f_step` evaluating each step's batch.
+fn decode_with(
+    params: &ParamStore,
+    codes: &Codes,
+    f_step: impl Fn(&ParamStore, usize, &[f32], &[f32], usize) -> Vec<f32>,
+) -> Matrix {
     let cfg = &params.cfg;
     let (n, d, k, m) = (codes.n, cfg.d, cfg.k, cfg.m);
     assert_eq!(codes.m, m);
@@ -99,7 +130,7 @@ pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
             let src = (step * k + code) * d;
             c[i * d..(i + 1) * d].copy_from_slice(&cb[src..src + d]);
         }
-        let f = f_theta(params, step, &c, &xhat, n);
+        let f = f_step(params, step, &c, &xhat, n);
         for (x, &fv) in xhat.iter_mut().zip(&f) {
             *x += fv;
         }
@@ -107,17 +138,31 @@ pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
     Matrix::from_vec(n, d, xhat)
 }
 
-/// [`StageDecoder`] over the pure-Rust reference implementation of the
-/// QINCo2 decoder — the default (and infallible) stage-3 of every
-/// [`crate::index::SearchIndex`]. Thread-safe: it holds only parameter
-/// tensors, so one instance is shared across all serving workers.
+/// Bulk decode through the shared [`crate::nn`] kernels — what
+/// [`super::native::RustDecoder`] and the native runtime backend serve.
+pub fn decode(params: &ParamStore, codes: &Codes) -> Matrix {
+    decode_with(params, codes, f_theta)
+}
+
+/// Oracle decode through the scalar loop — what [`ReferenceDecoder`]
+/// serves, kept numerically independent of the nn kernels.
+pub fn decode_scalar(params: &ParamStore, codes: &Codes) -> Matrix {
+    decode_with(params, codes, f_theta_scalar)
+}
+
+/// [`StageDecoder`] over the scalar-oracle QINCo2 decode — the default
+/// (and infallible) stage-3 of every [`crate::index::SearchIndex`], and
+/// the numerical baseline the nn-backed
+/// [`RustDecoder`](super::native::RustDecoder) is validated against.
+/// Thread-safe: it holds only parameter tensors, so one instance is
+/// shared across all serving workers.
 pub struct ReferenceDecoder {
     pub params: Arc<ParamStore>,
 }
 
 impl StageDecoder for ReferenceDecoder {
     fn decode(&self, codes: &Codes) -> Result<Matrix> {
-        Ok(decode(&self.params, codes))
+        Ok(decode_scalar(&self.params, codes))
     }
 
     fn name(&self) -> &'static str {

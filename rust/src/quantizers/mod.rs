@@ -17,16 +17,18 @@
 //!   [`pq::PqScorer`] / [`opq::OpqScorer`]. Stage 1 and stage 2 of
 //!   [`crate::index::SearchIndex`] each hold one `Box<dyn ApproxScorer>`.
 //! * [`StageDecoder`] — a batch decoder `Codes → Matrix` for the exact
-//!   re-ranking stage. Implemented by the pure-Rust reference QINCo2
-//!   decoder ([`crate::qinco::ReferenceDecoder`]), by
-//!   [`pairwise::PairwiseDecoder`], and by the PJRT-backed
-//!   [`crate::qinco::RuntimeDecoder`].
+//!   re-ranking stage. Implemented by the scalar-oracle reference QINCo2
+//!   decoder ([`crate::qinco::ReferenceDecoder`]), the native nn-kernel
+//!   [`crate::qinco::RustDecoder`], [`pairwise::PairwiseDecoder`], and
+//!   the engine-backed [`crate::qinco::RuntimeDecoder`].
 //!
-//! PJRT clients are `Rc`-based (not `Send`), so a runtime decoder cannot
-//! be shared across serving threads. [`DecoderFactory`] closes that gap:
-//! the factory itself is `Send + Sync` and each server worker calls
-//! [`DecoderFactory::make`] **once at thread startup**, giving every
-//! worker its own engine-backed decoder (engine-per-worker).
+//! Artifact engines are thread-confined (PJRT clients are `Rc`-based),
+//! so a runtime decoder cannot be shared across serving threads.
+//! [`DecoderFactory`] closes that gap: the factory itself is
+//! `Send + Sync` and each server worker calls [`DecoderFactory::make`]
+//! **once at thread startup**, giving every worker its own decoder
+//! (engine-per-worker for `RuntimeDecoder`; `RustDecoder`'s factory just
+//! shares the weights).
 
 pub mod aq_lut;
 pub mod lsq;

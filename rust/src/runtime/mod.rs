@@ -1,63 +1,61 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and run them as
-//! plain Rust functions.
+//! Artifact runtime: execute the manifest's model artifacts as plain
+//! Rust functions, behind a backend seam.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format —
-//! jax ≥ 0.5 emits 64-bit instruction ids in serialized protos, which
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! An [`Engine`] binds an artifact directory (`manifest.json` + model
+//! specs) to one of two backends:
 //!
-//! Thread model: `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`]
-//! is pinned to one thread. The serving coordinator ([`crate::server`])
-//! runs each Engine on a dedicated model thread behind an mpsc channel;
-//! XLA itself parallelizes the compute internally.
+//! * **native** (the default, [`Engine::open`]) — every non-training
+//!   artifact kind (`f_step`, `decode`, `decode_partial`, `encode`) is
+//!   executed by the in-crate [`crate::nn`] kernels over the same
+//!   positional tensor ABI the HLO versions declare. No HLO files, no
+//!   PJRT runtime, no FFI: CI and the serving tier run a true neural
+//!   decode out of the box. Training kinds error with a message naming
+//!   the `pjrt` feature.
+//! * **pjrt** (feature `pjrt`, [`Engine::open_pjrt`]) — AOT-compiled HLO
+//!   text artifacts through the `xla` PJRT bindings ([`pjrt`] module).
+//!   The workspace vendors a stub `xla` crate that errors at runtime;
+//!   swap the path dependency for the real xla_extension bindings to
+//!   execute HLO (training included).
+//!
+//! Both backends validate inputs against the manifest and return the
+//! manifest-declared outputs, so [`Executable::run`] callers (the codec,
+//! the trainer, the benches) are backend-agnostic. The round-trip suite
+//! (`tests/runtime_roundtrip.rs`) pins native results to the scalar
+//! reference oracle.
+//!
+//! Thread model: an [`Engine`] is cheap and thread-confined (the PJRT
+//! client is `Rc`-based; the native backend simply has no shared state
+//! worth locking). The serving coordinator gives each worker its own
+//! engine-backed decoder via `DecoderFactory` when one is configured.
 
 pub mod manifest;
+mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::util::qnpz::{Dtype, Tensor};
+use crate::util::qnpz::Tensor;
 use anyhow::{bail, Context, Result};
-use manifest::{ArtifactSpec, Manifest};
+use manifest::{ArtifactSpec, Manifest, ModelCfg};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-/// Convert a host tensor into an XLA literal (zero-copy is not exposed by
-/// the C API wrapper; one memcpy per transfer).
-pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let ty = match t.dtype {
-        Dtype::F32 => xla::ElementType::F32,
-        Dtype::I32 => xla::ElementType::S32,
-    };
-    // storage is bit-exact for both dtypes (i32 stored as f32 bit patterns)
-    let bytes: Vec<u8> = t.data_f32.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
-    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)?)
+enum ExeImpl {
+    /// Dispatch to [`native::run`] at call time.
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
 }
 
-/// Convert an XLA literal back into a host tensor.
-pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let data = l.to_vec::<f32>()?;
-            Ok(Tensor::f32(dims, data))
-        }
-        xla::ElementType::S32 => {
-            let data = l.to_vec::<i32>()?;
-            Ok(Tensor::i32(dims, &data))
-        }
-        other => bail!("unsupported output element type {other:?}"),
-    }
-}
-
-/// A compiled artifact plus its manifest spec.
+/// A loaded artifact plus its manifest spec and model configuration.
 pub struct Executable {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    cfg: ModelCfg,
+    exe: ExeImpl,
 }
 
 impl Executable {
     /// Execute with positional inputs (manifest order). Shapes are
-    /// validated against the manifest before the FFI call.
+    /// validated against the manifest before dispatching to the backend.
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -78,45 +76,59 @@ impl Executable {
                 );
             }
         }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: output is always a tuple
-        let parts = result.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: got {} outputs, manifest says {}",
-                self.spec.name,
-                parts.len(),
-                self.spec.outputs.len()
-            );
+        match &self.exe {
+            ExeImpl::Native => native::run(&self.spec, &self.cfg, inputs),
+            #[cfg(feature = "pjrt")]
+            ExeImpl::Pjrt(exe) => pjrt::run(&self.spec, exe, inputs),
         }
-        parts.iter().map(from_literal).collect()
     }
 }
 
-/// Loads, compiles and caches HLO artifacts for one PJRT CPU client.
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtClient),
+}
+
+/// Loads and caches artifacts for one backend.
 pub struct Engine {
     pub manifest: Manifest,
     dir: PathBuf,
-    client: xla::PjRtClient,
+    backend: Backend,
     cache: HashMap<String, std::rc::Rc<Executable>>,
 }
 
 impl Engine {
-    /// Open an artifact directory (must contain `manifest.json`).
+    /// Open an artifact directory (must contain `manifest.json`) on the
+    /// native backend — the default everywhere; needs no HLO files.
     pub fn open(dir: impl Into<PathBuf>) -> Result<Engine> {
         let dir = dir.into();
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(Engine { manifest, dir, backend: Backend::Native, cache: HashMap::new() })
+    }
+
+    /// Open an artifact directory on the PJRT backend: artifacts load
+    /// from their `.hlo.txt` files and compile through the `xla` crate.
+    #[cfg(feature = "pjrt")]
+    pub fn open_pjrt(dir: impl Into<PathBuf>) -> Result<Engine> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Engine { manifest, dir, client, cache: HashMap::new() })
+        Ok(Engine { manifest, dir, backend: Backend::Pjrt(client), cache: HashMap::new() })
     }
 
+    /// Backend/platform name: `"native"` for the in-crate kernels,
+    /// otherwise whatever the PJRT client reports (`"cpu"` for real
+    /// xla_extension, `"stub"` for the vendored placeholder).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(client) => client.platform_name(),
+        }
     }
 
-    /// Fetch (compiling and caching on first use) an artifact by name.
+    /// Fetch (loading and caching on first use) an artifact by name.
     pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
         if let Some(e) = self.cache.get(name) {
             return Ok(e.clone());
@@ -126,12 +138,25 @@ impl Engine {
             .artifact(name)
             .with_context(|| format!("artifact {name:?} not in manifest"))?
             .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let e = std::rc::Rc::new(Executable { spec, exe });
+        let cfg = self
+            .manifest
+            .model(&spec.model)
+            .with_context(|| format!("artifact {name:?} references model {:?}", spec.model))?
+            .cfg
+            .clone();
+        let exe = match &self.backend {
+            Backend::Native => {
+                // artifact files are irrelevant natively; keep `dir` so
+                // the pjrt arm below can read them under the feature
+                let _ = &self.dir;
+                ExeImpl::Native
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(client) => {
+                ExeImpl::Pjrt(pjrt::compile(client, &self.dir.join(&spec.file))?)
+            }
+        };
+        let e = std::rc::Rc::new(Executable { spec, cfg, exe });
         self.cache.insert(name.to_string(), e.clone());
         Ok(e)
     }

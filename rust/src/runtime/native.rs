@@ -1,0 +1,224 @@
+//! Native artifact executor: run the manifest's decode/encode artifacts
+//! through the in-crate [`crate::nn`] kernels instead of PJRT.
+//!
+//! The manifest describes each artifact's ABI — kind, model, positional
+//! inputs/outputs with shapes — and every non-training kind maps onto a
+//! pure-Rust computation over the *same* positional tensors the HLO
+//! version consumes, so `Engine::run` behaves identically with either
+//! backend (the round-trip tests pin the semantics):
+//!
+//! * `f_step` — one fused [`crate::nn::qinco_step`] over per-step
+//!   weights passed as inputs.
+//! * `decode` / `decode_partial` — the Eq. 4 accumulation
+//!   `x̂ ← x̂ + f_theta(c_step | x̂)` over the full `[M, ...]` parameter
+//!   tensors.
+//! * `encode` — beam-search encode via
+//!   [`crate::qinco::reference::encode_beam`] with the artifact's
+//!   `(A, B)` setting, reconstructions from the native decode, and
+//!   per-row squared errors. One documented deviation from the lowered
+//!   model: codeword pre-selection uses the cheap RQ proxy over the base
+//!   codebooks, so the `presel`/`g_*` inputs are accepted (the ABI is
+//!   unchanged) but unused — the learned pre-selection networks remain a
+//!   `pjrt` feature concern.
+//! * `train_*` — not implemented natively (the AdamW/Adam steps are only
+//!   lowered to HLO); these error with a message naming the `pjrt`
+//!   feature.
+//!
+//! Artifact batch sizes are honored exactly like the HLO versions:
+//! inputs were already shape-checked against the manifest by
+//! [`super::Executable::run`], and row-independence of the kernels makes
+//! the codec's pad-and-strip batching transparent.
+
+use super::manifest::{ArtifactSpec, ModelCfg};
+use crate::nn::{self, StepWeights};
+use crate::qinco::params::ParamStore;
+use crate::qinco::reference;
+use crate::tensor::Matrix;
+use crate::util::qnpz::{Store, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// Positional input lookup by manifest name.
+fn input<'a>(spec: &ArtifactSpec, inputs: &[&'a Tensor], name: &str) -> Result<&'a Tensor> {
+    spec.inputs
+        .iter()
+        .position(|t| t.name == name)
+        .map(|i| inputs[i])
+        .with_context(|| format!("{}: no input named {name:?} in the manifest ABI", spec.name))
+}
+
+/// Step-`m` weight slices out of full `[M, ...]` parameter tensors.
+fn step_weights_of<'a>(
+    cfg: &ModelCfg,
+    step: usize,
+    in_w: &'a [f32],
+    cond_w: &'a [f32],
+    cond_b: &'a [f32],
+    up_w: &'a [f32],
+    down_w: &'a [f32],
+    out_w: &'a [f32],
+) -> StepWeights<'a> {
+    let (d, de, dh, l) = (cfg.d, cfg.de, cfg.dh, cfg.l);
+    StepWeights {
+        d,
+        de,
+        dh,
+        l,
+        in_w: &in_w[step * d * de..(step + 1) * d * de],
+        cond_w: &cond_w[step * (de + d) * de..(step + 1) * (de + d) * de],
+        cond_b: &cond_b[step * de..(step + 1) * de],
+        up_w: &up_w[step * l * de * dh..(step + 1) * l * de * dh],
+        down_w: &down_w[step * l * dh * de..(step + 1) * l * dh * de],
+        out_w: &out_w[step * de * d..(step + 1) * de * d],
+    }
+}
+
+/// Eq. 4 decode over raw parameter tensors; optionally records the
+/// reconstruction after every step (`decode_partial` layout `[M, n, d]`).
+#[allow(clippy::too_many_arguments)]
+fn decode_codes(
+    cfg: &ModelCfg,
+    codes: &[i32],
+    n: usize,
+    cb: &[f32],
+    in_w: &[f32],
+    cond_w: &[f32],
+    cond_b: &[f32],
+    up_w: &[f32],
+    down_w: &[f32],
+    out_w: &[f32],
+    mut partial: Option<&mut Vec<f32>>,
+) -> Result<Vec<f32>> {
+    let (d, k, m) = (cfg.d, cfg.k, cfg.m);
+    let mut xhat = vec![0.0f32; n * d];
+    let mut c = vec![0.0f32; n * d];
+    for step in 0..m {
+        for i in 0..n {
+            let code = codes[i * m + step];
+            if code < 0 || code as usize >= k {
+                bail!("decode: code {code} at row {i} step {step} outside 0..{k}");
+            }
+            let src = (step * k + code as usize) * d;
+            c[i * d..(i + 1) * d].copy_from_slice(&cb[src..src + d]);
+        }
+        let sw = step_weights_of(cfg, step, in_w, cond_w, cond_b, up_w, down_w, out_w);
+        let f = nn::qinco_step(&sw, &c, &xhat, n);
+        for (x, &fv) in xhat.iter_mut().zip(&f) {
+            *x += fv;
+        }
+        if let Some(acc) = partial.as_deref_mut() {
+            acc.extend_from_slice(&xhat);
+        }
+    }
+    Ok(xhat)
+}
+
+/// Execute one artifact natively. `inputs` are positional and already
+/// shape-validated against the manifest by the caller.
+pub(super) fn run(spec: &ArtifactSpec, cfg: &ModelCfg, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match spec.kind.as_str() {
+        "f_step" => {
+            let (c, xhat) = (input(spec, inputs, "c")?, input(spec, inputs, "xhat")?);
+            let n = spec.n;
+            // per-step weights arrive pre-sliced, so l is recovered from
+            // the up_w input shape ([l, de, dh]) rather than cfg
+            let up_w = input(spec, inputs, "up_w")?;
+            let l = up_w.shape.first().copied().unwrap_or(0);
+            let sw = StepWeights {
+                d: cfg.d,
+                de: cfg.de,
+                dh: cfg.dh,
+                l,
+                in_w: &input(spec, inputs, "in_w")?.data_f32,
+                cond_w: &input(spec, inputs, "cond_w")?.data_f32,
+                cond_b: &input(spec, inputs, "cond_b")?.data_f32,
+                up_w: &up_w.data_f32,
+                down_w: &input(spec, inputs, "down_w")?.data_f32,
+                out_w: &input(spec, inputs, "out_w")?.data_f32,
+            };
+            let f = nn::qinco_step(&sw, &c.data_f32, &xhat.data_f32, n);
+            Ok(vec![Tensor::f32(vec![n, cfg.d], f)])
+        }
+        "decode" | "decode_partial" => {
+            let codes = input(spec, inputs, "codes")?.as_i32();
+            let n = spec.n;
+            let mut partial =
+                (spec.kind == "decode_partial").then(|| Vec::with_capacity(cfg.m * n * cfg.d));
+            let xhat = decode_codes(
+                cfg,
+                &codes,
+                n,
+                &input(spec, inputs, "codebooks")?.data_f32,
+                &input(spec, inputs, "in_w")?.data_f32,
+                &input(spec, inputs, "cond_w")?.data_f32,
+                &input(spec, inputs, "cond_b")?.data_f32,
+                &input(spec, inputs, "up_w")?.data_f32,
+                &input(spec, inputs, "down_w")?.data_f32,
+                &input(spec, inputs, "out_w")?.data_f32,
+                partial.as_mut(),
+            )?;
+            Ok(match partial {
+                Some(steps) => vec![Tensor::f32(vec![cfg.m, n, cfg.d], steps)],
+                None => vec![Tensor::f32(vec![n, cfg.d], xhat)],
+            })
+        }
+        "encode" => {
+            // rebuild a ParamStore from the positional param inputs so the
+            // shared beam encoder runs unmodified — bit-identical to the
+            // in-crate reference encode by construction
+            let mut store = Store::new();
+            let mut names = Vec::new();
+            let mut x: Option<&Tensor> = None;
+            for (ts, t) in spec.inputs.iter().zip(inputs) {
+                if ts.name == "x" {
+                    x = Some(t);
+                } else {
+                    store.insert(&ts.name, (*t).clone());
+                    names.push(ts.name.clone());
+                }
+            }
+            let x = x.with_context(|| format!("{}: encode artifact has no x input", spec.name))?;
+            let params = ParamStore {
+                model: spec.model.clone(),
+                cfg: cfg.clone(),
+                names,
+                store,
+            };
+            let n = spec.n;
+            let xs = Matrix::from_vec(n, cfg.d, x.data_f32.clone());
+            let codes = reference::encode_beam(&params, &xs, spec.a, spec.b);
+            // reconstructions re-derive through the same nn decode the
+            // beam used incrementally — identical accumulation sequence
+            let codes_i32: Vec<i32> = codes.data.iter().map(|&c| c as i32).collect();
+            let xhat = decode_codes(
+                cfg,
+                &codes_i32,
+                n,
+                &params.get("codebooks").data_f32,
+                &params.get("in_w").data_f32,
+                &params.get("cond_w").data_f32,
+                &params.get("cond_b").data_f32,
+                &params.get("up_w").data_f32,
+                &params.get("down_w").data_f32,
+                &params.get("out_w").data_f32,
+                None,
+            )?;
+            let errs: Vec<f32> = (0..n)
+                .map(|i| {
+                    let (xr, hr) = (&x.data_f32[i * cfg.d..(i + 1) * cfg.d], &xhat[i * cfg.d..(i + 1) * cfg.d]);
+                    xr.iter().zip(hr).map(|(a, b)| (a - b) * (a - b)).sum()
+                })
+                .collect();
+            Ok(vec![
+                Tensor::i32(vec![n, cfg.m], &codes_i32),
+                Tensor::f32(vec![n, cfg.d], xhat),
+                Tensor::f32(vec![n], errs),
+            ])
+        }
+        other => bail!(
+            "artifact {:?} (kind {other:?}) has no native implementation: training steps \
+             are only lowered to HLO — build with `--features pjrt` against a real \
+             xla_extension runtime to execute it",
+            spec.name
+        ),
+    }
+}

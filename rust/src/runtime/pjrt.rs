@@ -1,0 +1,82 @@
+//! PJRT backend (feature `pjrt`): load AOT-compiled HLO text artifacts
+//! and run them through the `xla` bindings.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! jax ≥ 0.5 emits 64-bit instruction ids in serialized protos, which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Off by default: the workspace vendors a stub `xla` crate whose
+//! constructors error at runtime, so this backend only does real work
+//! when the path dependency is swapped for the actual bindings. The
+//! native backend ([`super::native`]) covers every non-training artifact
+//! without any of this.
+
+use super::manifest::ArtifactSpec;
+use crate::util::qnpz::{Dtype, Tensor};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Convert a host tensor into an XLA literal (zero-copy is not exposed by
+/// the C API wrapper; one memcpy per transfer).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::I32 => xla::ElementType::S32,
+    };
+    // storage is bit-exact for both dtypes (i32 stored as f32 bit patterns)
+    let bytes: Vec<u8> = t.data_f32.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)?)
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = l.to_vec::<f32>()?;
+            Ok(Tensor::f32(dims, data))
+        }
+        xla::ElementType::S32 => {
+            let data = l.to_vec::<i32>()?;
+            Ok(Tensor::i32(dims, &data))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}
+
+/// Compile one HLO text artifact for a client.
+pub(super) fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    use anyhow::Context;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Execute a compiled artifact with positional inputs.
+pub(super) fn run(
+    spec: &ArtifactSpec,
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let literals: Vec<xla::Literal> =
+        inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: output is always a tuple
+    let parts = result.to_tuple()?;
+    if parts.len() != spec.outputs.len() {
+        bail!(
+            "{}: got {} outputs, manifest says {}",
+            spec.name,
+            parts.len(),
+            spec.outputs.len()
+        );
+    }
+    parts.iter().map(from_literal).collect()
+}

@@ -87,13 +87,16 @@
 //! again on respawn after a panic). The factory defaults to the
 //! reference decoder ([`ReferenceDecoderFactory`]); configuring
 //! [`ServerCfg::decoder_factory`] with a
+//! [`RustDecoderFactory`](crate::qinco::RustDecoderFactory) shares the
+//! native nn-kernel decoder's weights per worker (`--stage3 rust`),
+//! while a
 //! [`RuntimeDecoderFactory`](crate::qinco::RuntimeDecoderFactory) gives
-//! each worker a thread-local PJRT engine + codec — PJRT clients are
-//! `Rc`-based (not `Send`), so this per-thread construction is the only
-//! sound way to decode through XLA under concurrent load. If a worker's
-//! factory or decoder fails (e.g. the vendored stub `xla` crate), that
-//! worker degrades to the index's own infallible decoder; no request is
-//! ever dropped.
+//! each worker a thread-local artifact-runtime engine + codec — engines
+//! are thread-confined (PJRT clients are `Rc`-based, not `Send`), so
+//! per-thread construction is the only sound way to decode through one
+//! under concurrent load. If a worker's factory or decoder fails (e.g.
+//! a missing artifact manifest), that worker degrades to the index's
+//! own infallible decoder; no request is ever dropped.
 //!
 //! # Reads share the index lock-free; writes get their own lane
 //!

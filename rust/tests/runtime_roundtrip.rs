@@ -1,21 +1,31 @@
-//! Integration tests over the full Python→HLO→PJRT path using the tiny
-//! `test` model artifacts: the XLA encode/decode/train artifacts must
-//! agree with the pure-Rust reference implementation and satisfy the
-//! paper's algebraic invariants.
+//! Integration tests over the artifact runtime using the tiny `test`
+//! model manifest: on the default **native** backend every inference
+//! artifact (f_step, encode, decode, decode_partial) executes through
+//! the in-crate `nn` kernels over the manifest ABI and must agree with
+//! the pure-Rust scalar oracle and satisfy the paper's algebraic
+//! invariants. No HLO files or PJRT runtime are needed — this suite
+//! runs in default CI. Training artifacts are only lowered to HLO, so
+//! their tests live behind the `pjrt` feature (still `#[ignore]`d until
+//! a real xla_extension runtime replaces the vendored stub), and the
+//! native backend's refusal to run them is itself pinned here.
 
 use qinco2::data::{generate, Flavor};
-use qinco2::qinco::{codec::decode_params, reference, Codec, ParamStore, TrainCfg, Trainer};
-use qinco2::quantizers::Codes;
+use qinco2::qinco::{codec::decode_params, reference, Codec, ParamStore};
 use qinco2::runtime::Engine;
 use qinco2::tensor::{self, Matrix};
 use qinco2::util::qnpz::Tensor;
+
+/// Native-vs-oracle agreement bound: the nn kernels preserve the
+/// oracle's per-element summation order, so in practice they are
+/// bit-identical; 1e-5 is the documented contract (see `crate::nn`).
+const TOL: f32 = 1e-5;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
 fn setup(seed: u64) -> (Engine, ParamStore, Matrix) {
-    let engine = Engine::open(artifacts_dir()).expect("run `make artifacts` first");
+    let engine = Engine::open(artifacts_dir()).expect("artifacts/manifest.json is in-repo");
     let spec = engine.manifest.model("test").unwrap();
     let train = generate(Flavor::Deep, 300, spec.cfg.d, seed);
     let params = ParamStore::init(spec, "test", &train, seed);
@@ -23,17 +33,13 @@ fn setup(seed: u64) -> (Engine, ParamStore, Matrix) {
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
 fn engine_loads_and_reports_platform() {
     let engine = Engine::open(artifacts_dir()).unwrap();
-    assert_eq!(engine.platform(), "cpu");
+    assert_eq!(engine.platform(), "native");
     assert!(engine.manifest.artifacts.len() >= 10);
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
 fn f_step_artifact_matches_rust_reference() {
     let (mut engine, params, _) = setup(1);
     let cfg = params.cfg.clone();
@@ -64,44 +70,40 @@ fn f_step_artifact_matches_rust_reference() {
         &slice("out_w", de * d),
     ];
     let out = engine.run("fstep_test_N16", &inputs).unwrap();
-    let want = reference::f_theta(&params, 0, &c, &xh, n);
+    let want = reference::f_theta_scalar(&params, 0, &c, &xh, n);
     for (a, b) in out[0].data_f32.iter().zip(&want) {
-        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        assert!((a - b).abs() <= TOL, "{a} vs {b}");
     }
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn xla_decode_matches_rust_reference() {
+fn native_decode_matches_rust_reference() {
     let (mut engine, params, train) = setup(2);
     let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
     let codec = Codec::new(&engine, "test", 4, 4).unwrap();
     let (codes, xhat, err) = codec.encode(&mut engine, &params, &xs).unwrap();
-    // decode through XLA
-    let dec_xla = codec.decode(&mut engine, &params, &codes).unwrap();
-    // decode through the Rust reference
-    let dec_ref = reference::decode(&params, &codes);
-    for (a, b) in dec_xla.data.iter().zip(&dec_ref.data) {
-        assert!((a - b).abs() < 1e-3, "xla {a} vs ref {b}");
+    // decode through the runtime's native backend
+    let dec_rt = codec.decode(&mut engine, &params, &codes).unwrap();
+    // decode through the scalar oracle
+    let dec_ref = reference::decode_scalar(&params, &codes);
+    for (a, b) in dec_rt.data.iter().zip(&dec_ref.data) {
+        assert!((a - b).abs() <= TOL, "native {a} vs oracle {b}");
     }
     // the encoder's claimed xhat/err must match its own decode
-    for (a, b) in dec_xla.data.iter().zip(&xhat.data) {
-        assert!((a - b).abs() < 1e-3);
+    for (a, b) in dec_rt.data.iter().zip(&xhat.data) {
+        assert!((a - b).abs() <= TOL);
     }
     for i in 0..xs.rows {
-        let exact = tensor::l2_sq(xs.row(i), dec_xla.row(i));
-        assert!((err[i] - exact).abs() < 1e-2, "{} vs {}", err[i], exact);
+        let exact = tensor::l2_sq(xs.row(i), dec_rt.row(i));
+        assert!((err[i] - exact).abs() < 1e-4, "{} vs {}", err[i], exact);
     }
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn greedy_xla_encode_matches_rust_reference() {
+fn greedy_native_encode_matches_rust_reference() {
     let (mut engine, params, train) = setup(3);
     let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
-    // A = K = 8, B = 1: exact greedy — must equal the Rust reference
+    // A = K = 8, B = 1: exact greedy — must equal the in-crate reference
     let codec = Codec::new(&engine, "test", 8, 1).unwrap();
     let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
     let codes_ref = reference::encode_greedy(&params, &xs);
@@ -109,9 +111,7 @@ fn greedy_xla_encode_matches_rust_reference() {
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn beam_search_no_worse_than_greedy_through_xla() {
+fn beam_search_no_worse_than_greedy_through_runtime() {
     let (mut engine, params, train) = setup(4);
     let xs = train.gather_rows(&(0..32).collect::<Vec<_>>());
     let greedy = Codec::new(&engine, "test", 4, 1).unwrap();
@@ -124,8 +124,6 @@ fn beam_search_no_worse_than_greedy_through_xla() {
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
 fn batch_padding_is_transparent() {
     // encode 21 rows through an N=16 artifact: two batches with padding
     let (mut engine, params, train) = setup(5);
@@ -140,8 +138,6 @@ fn batch_padding_is_transparent() {
 }
 
 #[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
 fn decode_partial_last_step_equals_full_decode() {
     let (mut engine, params, train) = setup(6);
     let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
@@ -151,7 +147,7 @@ fn decode_partial_last_step_equals_full_decode() {
     assert_eq!(partials.len(), params.cfg.m);
     let full = codec.decode(&mut engine, &params, &codes).unwrap();
     for (a, b) in partials.last().unwrap().data.iter().zip(&full.data) {
-        assert!((a - b).abs() < 1e-3);
+        assert!((a - b).abs() <= TOL);
     }
     // per-step error must be finite and generally shrink on trained init
     let e_first = tensor::mse(&xs, &partials[0]);
@@ -160,10 +156,88 @@ fn decode_partial_last_step_equals_full_decode() {
 }
 
 #[test]
+fn g_network_model_encodes_through_runtime() {
+    // the native encode accepts the g-network ABI (presel/g_* inputs)
+    // but pre-selects with the cheap RQ proxy — a documented deviation;
+    // codes must still be valid and reconstructions finite
+    let mut engine = Engine::open(artifacts_dir()).unwrap();
+    let spec = engine.manifest.model("test_g").unwrap().clone();
+    let train = generate(Flavor::Deep, 150, spec.cfg.d, 9);
+    let params = ParamStore::init(&spec, "test_g", &train, 10);
+    let codec = Codec::new(&engine, "test_g", 4, 2).unwrap();
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let (codes, _, err) = codec.encode(&mut engine, &params, &xs).unwrap();
+    assert!(codes.data.iter().all(|&c| (c as usize) < spec.cfg.k));
+    assert!(err.iter().all(|e| e.is_finite()));
+}
+
+#[test]
+fn decode_params_subset_is_correct_abi() {
+    let (engine, params, _) = setup(11);
+    let subset = decode_params(&params);
+    let spec = engine.manifest.artifact("dec_test_N16").unwrap();
+    assert_eq!(subset.len() + 1, spec.inputs.len()); // + codes input
+    for (t, s) in subset.iter().zip(&spec.inputs) {
+        assert_eq!(t.shape, s.shape, "{}", s.name);
+    }
+}
+
+#[test]
+fn multirate_truncated_codes_decode_with_prefix_model() {
+    // Fig. S3 machinery: the last decode_partial step equals the full
+    // reference decode (prefix steps replay the same Eq. 4 recursion)
+    let (mut engine, params, train) = setup(12);
+    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
+    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
+    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
+    let partials = codec.decode_partial(&mut engine, &params, &codes).unwrap();
+    let m = params.cfg.m;
+    let ref_full = reference::decode_scalar(&params, &codes);
+    for (a, b) in partials[m - 1].data.iter().zip(&ref_full.data) {
+        assert!((a - b).abs() <= TOL);
+    }
+}
+
+#[test]
+fn training_artifacts_error_natively_naming_the_pjrt_feature() {
+    // training steps are only lowered to HLO; the native backend must
+    // refuse them with an actionable message, not silently no-op
+    let (mut engine, _params, _train) = setup(13);
+    let exe = engine.load("train_adamw_test_N16").unwrap();
+    let spec = exe.spec.clone();
+    // assemble shape-correct inputs so the refusal comes from the
+    // backend dispatch, not the manifest shape validation
+    let zeros: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|t| {
+            let numel = t.shape.iter().product::<usize>();
+            if t.dtype == "i32" {
+                Tensor::i32(t.shape.clone(), &vec![0i32; numel])
+            } else {
+                Tensor::f32(t.shape.clone(), vec![0.0f32; numel])
+            }
+        })
+        .collect();
+    let refs: Vec<&Tensor> = zeros.iter().collect();
+    let err = exe.run(&refs).unwrap_err().to_string();
+    assert!(err.contains("pjrt"), "error should name the pjrt feature: {err}");
+    assert!(err.contains("train_adamw_test_N16"), "error should name the artifact: {err}");
+}
+
+/// The PJRT backend compiles the HLO text artifacts; the vendored stub
+/// `xla` crate cannot execute them, so this stays ignored until the path
+/// dependency is swapped for real xla_extension bindings.
+#[cfg(feature = "pjrt")]
+#[test]
 #[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
             (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn training_reduces_loss_and_mse() {
-    let (mut engine, mut params, train) = setup(7);
+fn training_reduces_loss_and_mse_through_pjrt() {
+    use qinco2::qinco::{TrainCfg, Trainer};
+    let mut engine = Engine::open_pjrt(artifacts_dir()).unwrap();
+    let spec = engine.manifest.model("test").unwrap();
+    let train = generate(Flavor::Deep, 300, spec.cfg.d, 7);
+    let mut params = ParamStore::init(spec, "test", &train, 7);
     let codec = Codec::new(&engine, "test", 4, 4).unwrap();
     let mse_before = {
         let (codes, _, _) = codec.encode(&mut engine, &params, &train).unwrap();
@@ -179,77 +253,24 @@ fn training_reduces_loss_and_mse() {
         let dec = codec.decode(&mut engine, &params, &codes).unwrap();
         tensor::mse(&train, &dec)
     };
-    assert!(
-        mse_after < mse_before,
-        "training must reduce MSE: {mse_after} !< {mse_before}"
-    );
-    // loss trace should improve from first to last epoch
+    assert!(mse_after < mse_before, "training must reduce MSE: {mse_after} !< {mse_before}");
     let first = stats.epoch_losses.first().unwrap();
     let last = stats.epoch_losses.last().unwrap();
     assert!(last < first, "loss {last} !< {first}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 #[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
             (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn old_recipe_adam_also_trains() {
-    let (mut engine, mut params, train) = setup(8);
-    let cfg = TrainCfg {
-        epochs: 2,
-        a: 4,
-        b: 4,
-        optimizer: "adam".into(),
-        ..Default::default()
-    };
+fn old_recipe_adam_also_trains_through_pjrt() {
+    use qinco2::qinco::{TrainCfg, Trainer};
+    let mut engine = Engine::open_pjrt(artifacts_dir()).unwrap();
+    let spec = engine.manifest.model("test").unwrap();
+    let train = generate(Flavor::Deep, 300, spec.cfg.d, 8);
+    let mut params = ParamStore::init(spec, "test", &train, 8);
+    let cfg = TrainCfg { epochs: 2, a: 4, b: 4, optimizer: "adam".into(), ..Default::default() };
     let trainer = Trainer::new(&engine, "test", cfg).unwrap();
     let stats = trainer.train(&mut engine, &mut params, &train).unwrap();
     assert!(stats.epoch_losses.iter().all(|l| l.is_finite()));
-}
-
-#[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn g_network_model_encodes_through_xla() {
-    let mut engine = Engine::open(artifacts_dir()).unwrap();
-    let spec = engine.manifest.model("test_g").unwrap().clone();
-    let train = generate(Flavor::Deep, 150, spec.cfg.d, 9);
-    let params = ParamStore::init(&spec, "test_g", &train, 10);
-    let codec = Codec::new(&engine, "test_g", 4, 2).unwrap();
-    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
-    let (codes, _, err) = codec.encode(&mut engine, &params, &xs).unwrap();
-    assert!(codes.data.iter().all(|&c| (c as usize) < spec.cfg.k));
-    assert!(err.iter().all(|e| e.is_finite()));
-}
-
-#[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn decode_params_subset_is_correct_abi() {
-    let (engine, params, _) = setup(11);
-    let subset = decode_params(&params);
-    let spec = engine.manifest.artifact("dec_test_N16").unwrap();
-    assert_eq!(subset.len() + 1, spec.inputs.len()); // + codes input
-    for (t, s) in subset.iter().zip(&spec.inputs) {
-        assert_eq!(t.shape, s.shape, "{}", s.name);
-    }
-}
-
-#[test]
-#[ignore = "needs compiled HLO artifacts and a real xla_extension runtime \
-            (the vendored stub xla crate cannot execute HLO; see rust/vendor/xla)"]
-fn multirate_truncated_codes_decode_with_prefix_model() {
-    // Fig. S3 machinery: decoding the first m codes via decode_partial
-    // equals what a prefix decode would produce
-    let (mut engine, params, train) = setup(12);
-    let xs = train.gather_rows(&(0..16).collect::<Vec<_>>());
-    let codec = Codec::new(&engine, "test", 4, 4).unwrap();
-    let (codes, _, _) = codec.encode(&mut engine, &params, &xs).unwrap();
-    let partials = codec.decode_partial(&mut engine, &params, &codes).unwrap();
-    // reference prefix decode: replay f steps 0..m in rust
-    let m = params.cfg.m;
-    let _ = Codes::zeros(1, m);
-    let ref_full = reference::decode(&params, &codes);
-    for (a, b) in partials[m - 1].data.iter().zip(&ref_full.data) {
-        assert!((a - b).abs() < 1e-3);
-    }
 }
