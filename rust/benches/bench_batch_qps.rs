@@ -26,8 +26,8 @@ mod common;
 
 use qinco2::data::{self, Flavor};
 use qinco2::index::{
-    BatchSearcher, BuildCfg, EncodeParams, PipelineConfig, QueryPlan, SearchIndex, SearchParams,
-    Stage1Kind, Stage3Kind,
+    BatchSearcher, BuildCfg, EncodeParams, PipelineConfig, QueryPlan, ScanLayout, SearchIndex,
+    SearchParams, Stage1Kind, Stage3Kind,
 };
 use qinco2::metrics::{ids_only, recall_at};
 use qinco2::net::{LoadCfg, NetCfg, NetClient, NetServer};
@@ -195,6 +195,107 @@ fn main() -> anyhow::Result<()> {
             csv.push(format!("kernel:{label},{nprobe},{n_aq},,{qps:.0},"));
         }
         common::hr(56);
+    }
+
+    // ---- scan layouts: flat vs query-major transposed vs 4-bit packed ----
+    // The physical layout of the same scan: "flat" gathers each member's
+    // LUT entry with a strided load, "transposed" repacks each ≤8-member
+    // chunk query-major so the inner loop reads unit-stride (contractually
+    // bit-identical), "packed4" scans nibble-packed codes against
+    // u8-quantized LUTs — a versioned bounded-error scoring mode.
+    // Correctness is pinned before any timing: transposed shortlists and
+    // end-to-end results must equal flat exactly; packed4 must keep its
+    // top-k rank agreement. The pins double as kernel warm-up, so the
+    // best-of-3 timings below never include a cold first run.
+    println!();
+    common::banner(
+        "SCAN LAYOUTS — flat vs transposed vs packed4 over a pq stage 1",
+        "transposed bit-identical; packed4 quantized with rank agreement",
+    );
+    {
+        // a PQ stage 1 over the K=8 test model fits the packed4 nibble
+        // contract; a Packed4 build serves all three layout requests
+        let bcfg = BuildCfg {
+            k_ivf: 64,
+            m_tilde: 2,
+            fit_sample: 1_000,
+            pipeline: PipelineConfig {
+                stage1: Stage1Kind::Pq { m: 4 },
+                stage2: true,
+                stage3: Stage3Kind::Reference,
+            },
+            scan_layout: ScanLayout::Packed4,
+            ..Default::default()
+        };
+        let params_l = ParamStore::init(&spec, "test", &ds.train, 23);
+        let lidx = SearchIndex::build_reference(params_l, &ds.train, &ds.database, &bcfg);
+        let lsearcher = BatchSearcher::new(&lidx);
+        println!(
+            "{:<18} {:>7} {:>6} {:>12} {:>10} {:>9}",
+            "layout", "nprobe", "naq", "scan rows/s", "QPS", "overlap"
+        );
+        common::hr(72);
+        for (nprobe, n_aq) in [(8usize, 128usize), (16, 256)] {
+            let flat_sp = SearchParams {
+                nprobe,
+                ef_search: 64,
+                n_aq,
+                n_pairs: 32,
+                n_final: 10,
+                ..Default::default()
+            };
+            let plans: Vec<QueryPlan> = (0..ds.queries.rows)
+                .map(|i| lsearcher.plan(ds.queries.row(i), &flat_sp))
+                .collect();
+            let flat_lists = lsearcher.scan_stage1(&plans, &flat_sp, 1, true);
+            let flat_ids = ids_only(&lidx.search_batch(&ds.queries, &flat_sp)?);
+            for layout in [ScanLayout::Flat, ScanLayout::Transposed, ScanLayout::Packed4] {
+                let sp = SearchParams { scan_layout: layout, ..flat_sp };
+                let lists = lsearcher.scan_stage1(&plans, &sp, 1, true);
+                let ids = ids_only(&lidx.search_batch(&ds.queries, &sp)?);
+                let overlap = match layout {
+                    ScanLayout::Flat => 1.0,
+                    ScanLayout::Transposed => {
+                        assert_eq!(lists, flat_lists, "transposed shortlists diverged from flat");
+                        assert_eq!(ids, flat_ids, "transposed results diverged from flat");
+                        1.0
+                    }
+                    ScanLayout::Packed4 => {
+                        let o = mean_overlap(&ids, &flat_ids);
+                        assert!(
+                            o >= 0.5,
+                            "packed4 rank agreement collapsed: mean top-k overlap {o:.2}"
+                        );
+                        o
+                    }
+                };
+                // rows/sec over the scan stage alone (already warm from
+                // the pins above), best of 3; the per-shard scan counters
+                // give the exact scored-row count per run
+                let before: u64 = lidx.snapshot().scan_counts().iter().sum();
+                let mut best = f64::INFINITY;
+                for _ in 0..3 {
+                    let t0 = Instant::now();
+                    let l = lsearcher.scan_stage1(&plans, &sp, 1, true);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                    std::hint::black_box(l);
+                }
+                let rows_per_run: u64 =
+                    (lidx.snapshot().scan_counts().iter().sum::<u64>() - before) / 3;
+                let rps = rows_per_run as f64 / best;
+                let t0 = Instant::now();
+                let r = lidx.search_batch(&ds.queries, &sp)?;
+                let qps = ds.queries.rows as f64 / t0.elapsed().as_secs_f64();
+                std::hint::black_box(r);
+                println!(
+                    "{:<18} {nprobe:>7} {n_aq:>6} {rps:>12.0} {qps:>10.0} {:>9.3}",
+                    layout.name(),
+                    overlap
+                );
+                csv.push(format!("layout:{},{nprobe},{n_aq},,{rps:.0},", layout.name()));
+            }
+            common::hr(72);
+        }
     }
 
     // ---- pipeline matrix: cost of each stage swap (trait API) ----
@@ -663,4 +764,24 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("[csv] {}", path.display());
     Ok(())
+}
+
+/// Mean per-query fraction of `base`'s result ids that also appear in
+/// `other`'s list for the same query — order-insensitive top-k rank
+/// agreement, the bench-level sanity pin for the packed4 quantized
+/// scoring mode (the strict versioned contract lives in
+/// `tests/layout_equivalence.rs`).
+fn mean_overlap(other: &[Vec<u32>], base: &[Vec<u32>]) -> f64 {
+    assert_eq!(other.len(), base.len());
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    for (o, b) in other.iter().zip(base) {
+        if b.is_empty() {
+            continue;
+        }
+        let hits = b.iter().filter(|id| o.contains(id)).count();
+        total += hits as f64 / b.len() as f64;
+        counted += 1;
+    }
+    if counted == 0 { 1.0 } else { total / counted as f64 }
 }

@@ -13,7 +13,9 @@
 
 use crate::data::Flavor;
 use crate::experiments as exp;
-use crate::index::{BuildCfg, EncodeParams, PipelineConfig, SearchIndex, SearchParams};
+use crate::index::{
+    packed4_support, BuildCfg, EncodeParams, PipelineConfig, ScanLayout, SearchIndex, SearchParams,
+};
 use crate::net::{frame::MIN_FRAME_MAX, LoadCfg, NetCfg, NetClient, NetServer};
 use crate::qinco::{Codec, ParamStore, RuntimeDecoderFactory, TrainCfg, Trainer};
 use crate::runtime::Engine;
@@ -132,7 +134,8 @@ fn train_cfg(args: &Args, scale: &exp::Scale) -> Result<TrainCfg> {
 }
 
 /// Search-time knobs shared by `search` and `serve` (the Fig. 6 axes
-/// plus the engine's intra-batch `--batch-threads` parallelism).
+/// plus the engine's intra-batch `--batch-threads` parallelism and the
+/// `--scan-layout` kernel selection).
 fn search_params(args: &Args) -> Result<SearchParams> {
     Ok(SearchParams {
         nprobe: args.usize_or("nprobe", 8)?,
@@ -141,7 +144,16 @@ fn search_params(args: &Args) -> Result<SearchParams> {
         n_pairs: args.usize_or("n-pairs", 32)?,
         n_final: args.usize_or("topk", 10)?,
         batch_threads: args.usize_or("batch-threads", 1)?,
+        scan_layout: scan_layout_of(args)?,
     })
+}
+
+/// Parse `--scan-layout`. Unknown layout names are hard errors naming
+/// the flag ([`ScanLayout::parse`]), matching the malformed-flag policy
+/// of [`Args::usize_or`] — a silent fallback to `flat` would benchmark
+/// (or serve) a different kernel than the one the operator asked for.
+fn scan_layout_of(args: &Args) -> Result<ScanLayout> {
+    ScanLayout::parse(&args.str_or("scan-layout", "flat"))
 }
 
 pub fn run(argv: Vec<String>) -> Result<()> {
@@ -226,6 +238,16 @@ PIPELINE FLAGS (search + serve)
                          the stage-1 bucket-group scan (and per-query
                          stage-2/3 loops) split across N threads, results
                          bit-identical for every N
+  --scan-layout flat|transposed|packed4
+                         physical layout of the batched stage-1 scan:
+                         "flat" is the per-slot LUT pack, "transposed"
+                         repacks each bucket-group chunk query-major
+                         (unit-stride loads, results bit-identical to
+                         flat), "packed4" scans 4-bit packed codes
+                         against u8-quantized LUTs — a bounded-error
+                         quantized scoring mode that needs a pq/rq
+                         stage 1 with K <= 16 and builds packed code
+                         tables into the index
 LIVE MUTATION FLAGS (insert / delete / compact)
   --a 0 / --b 0          ingest-encode pre-selection width A and beam width B
                          (0 = default: A=K, B=1 — greedy, bit-identical to a
@@ -476,8 +498,14 @@ fn build_index(
         m_tilde: args.usize_or("m-tilde", 2)?,
         pipeline: pipeline_of(args)?,
         shards: shards_of(args, k_ivf)?,
+        scan_layout: scan_layout_of(args)?,
         ..Default::default()
     };
+    // a packed4 request against an incompatible stage-1 family must be
+    // a clean CLI error naming the family, before any expensive work
+    if bcfg.scan_layout == ScanLayout::Packed4 {
+        packed4_support(&bcfg.pipeline.stage1, spec.cfg.k)?;
+    }
     // the fine quantizer is trained on IVF residuals (Fig. 3 pipeline)
     let ivf = crate::index::ivf::Ivf::build(&ds.train, &ds.train, bcfg.k_ivf, bcfg.seed);
     let residuals = ivf.residuals(&ds.train);
@@ -511,8 +539,12 @@ fn build_index_reference(
         m_tilde: args.usize_or("m-tilde", 2)?,
         pipeline: pipeline_of(args)?,
         shards: shards_of(args, k_ivf)?,
+        scan_layout: scan_layout_of(args)?,
         ..Default::default()
     };
+    if bcfg.scan_layout == ScanLayout::Packed4 {
+        packed4_support(&bcfg.pipeline.stage1, spec.cfg.k)?;
+    }
     Ok((SearchIndex::build_reference(params, &ds.train, &ds.database, &bcfg), ds))
 }
 
@@ -1016,6 +1048,37 @@ mod tests {
         let bad = Args::parse(&["--shards".to_string(), "two".to_string()]);
         let err = shards_of(&bad, 16).unwrap_err().to_string();
         assert!(err.contains("shards") && err.contains("two"), "{err}");
+    }
+
+    #[test]
+    fn scan_layout_flag_is_validated() {
+        // absent: flat (the seed layout) is the default
+        assert_eq!(scan_layout_of(&Args::parse(&[])).unwrap(), ScanLayout::Flat);
+        for (name, layout) in [
+            ("flat", ScanLayout::Flat),
+            ("transposed", ScanLayout::Transposed),
+            ("packed4", ScanLayout::Packed4),
+        ] {
+            let a = Args::parse(&["--scan-layout".to_string(), name.to_string()]);
+            assert_eq!(scan_layout_of(&a).unwrap(), layout);
+        }
+        // unknown names are hard errors naming the flag, not fallbacks
+        let bad = Args::parse(&["--scan-layout".to_string(), "diagonal".to_string()]);
+        let err = scan_layout_of(&bad).unwrap_err().to_string();
+        assert!(err.contains("--scan-layout") && err.contains("diagonal"), "{err}");
+    }
+
+    #[test]
+    fn packed4_build_requests_are_validated_against_the_family() {
+        use crate::index::Stage1Kind;
+        // the CLI-level guard reuses packed4_support: incompatible
+        // stage-1 families error naming the family, never fall back
+        let err = packed4_support(&Stage1Kind::Aq, 8).unwrap_err().to_string();
+        assert!(err.contains("packed4") && err.contains("\"aq\""), "{err}");
+        let err = packed4_support(&Stage1Kind::Pq { m: 4 }, 32).unwrap_err().to_string();
+        assert!(err.contains("K=32"), "{err}");
+        assert!(packed4_support(&Stage1Kind::Pq { m: 4 }, 16).is_ok());
+        assert!(packed4_support(&Stage1Kind::Rq { m: 3 }, 8).is_ok());
     }
 
     #[test]

@@ -26,7 +26,13 @@
 //!      per-query shortlists — bounded binary max-heaps with a total
 //!      (score, id) order, so neither the scan-order change, the block
 //!      kernel, nor the shard partition changes results (gather =
-//!      shortlist merge under that total order).
+//!      shortlist merge under that total order). The pack's physical
+//!      layout follows [`SearchParams::scan_layout`]: `Flat` is the
+//!      seed layout, `Transposed` re-packs each scanned chunk
+//!      query-major for unit-stride loads (bit-identical to `Flat` by
+//!      contract), and `Packed4` quantizes the LUTs to `u8` against the
+//!      shards' nibble-packed code tables (bounded-error scoring mode —
+//!      see [`ScanLayout`](crate::quantizers::ScanLayout)).
 //!   3. **Stage 2**: per-query re-scoring through the shared
 //!      (crate-private) `SearchIndex::stage2_rescore` — a per-query joint
 //!      LUT or direct dots, chosen by the scorer's
@@ -71,7 +77,7 @@
 
 use super::pipeline::{SearchIndex, SearchParams};
 use super::shard::ShardSet;
-use crate::quantizers::StageDecoder;
+use crate::quantizers::{LutPack, QuantLutPack, ScanLayout, ScanPack, StageDecoder};
 use crate::util::deadline::Deadline;
 use crate::util::fault::{self, FaultPoint};
 use crate::util::pool;
@@ -204,9 +210,18 @@ impl<'a> BatchSearcher<'a> {
         if plans.is_empty() {
             return Ok(BatchOutput { results: Vec::new(), degraded: false });
         }
+        // the packed layout needs the nibble-packed tables only a
+        // packed4 assembly builds — a typed request error, not a panic
+        // deep inside the scan
+        if sp.scan_layout == ScanLayout::Packed4 && !self.set.packed4_ready() {
+            anyhow::bail!(
+                "scan layout \"packed4\" requires an index built with --scan-layout packed4 \
+                 (this index has no packed stage-1 tables)"
+            );
+        }
         let threads = idx.batch_threads(sp);
 
-        // ---- stage 1: flat LUT packs + scattered shard-group scan ----
+        // ---- stage 1: per-layout LUT packs + scattered shard-group scan ----
         let (shortlists, scan_complete) =
             self.scan_shortlists_within(plans, sp, threads, true, deadline);
         let mut degraded = !scan_complete;
@@ -298,10 +313,13 @@ impl<'a> BatchSearcher<'a> {
     /// shard-group scan, returning each plan's stage-1 shortlist in
     /// ascending (score, id) order. `block` selects the multi-query
     /// [`score_block`](crate::quantizers::ApproxScorer::score_block)
-    /// kernel vs the scalar per-member `score` loop and `threads` the
-    /// group parallelism — every combination returns bit-identical
-    /// lists; the knobs exist so `bench_batch_qps` can measure the
-    /// kernels against each other.
+    /// kernel vs the scalar per-member `score` loop, `threads` the
+    /// group parallelism, and [`SearchParams::scan_layout`] the pack
+    /// layout — every `threads`/`block` combination returns
+    /// bit-identical lists, as do the `Flat` and `Transposed` layouts;
+    /// `Packed4` scores in its bounded-error quantized mode. The knobs
+    /// exist so `bench_batch_qps` can measure the kernels against each
+    /// other.
     pub fn scan_stage1(
         &self,
         plans: &[QueryPlan],
@@ -339,12 +357,19 @@ impl<'a> BatchSearcher<'a> {
         // every co-probed inverted list is scanned once for the batch
         let groups = set.plan(plans);
 
-        // flat LUT packs, one per LUT slot (slot 0 = the shared spec,
-        // one extra slot per heterogeneous override shard). A slot's
-        // pack only fills the LUT rows of queries whose probes actually
+        // scan packs, one per LUT slot (slot 0 = the shared spec, one
+        // extra slot per heterogeneous override shard). A slot's pack
+        // only fills the LUT rows of queries whose probes actually
         // reach that slot's shard(s) — a batch that rarely (or never)
         // touches an override shard pays nothing for its scorer; rows
-        // left unfilled are never read by the scan
+        // left unfilled are never read by the scan. The flat pack is
+        // always built first (its constructor is the bounds proof the
+        // scan kernels rely on), then wrapped per the request's
+        // [`ScanLayout`]: `Transposed` carries the same flat floats
+        // (transposition is chunk-local at scan time), `Packed4`
+        // quantizes them to `u8` with the slot scorer's packed geometry.
+        // An unused slot gets the empty pack — scanning it would fail
+        // `check_members` loudly instead of reading out of bounds.
         let nslots = set.n_lut_slots;
         let mut query_uses_slot = vec![false; nslots * plans.len()];
         for group in &groups {
@@ -353,11 +378,11 @@ impl<'a> BatchSearcher<'a> {
                 query_uses_slot[slot * plans.len() + qi as usize] = true;
             }
         }
-        let packs: Vec<(usize, Vec<f32>)> = (0..nslots)
+        let packs: Vec<ScanPack> = (0..nslots)
             .map(|slot| {
                 let used = &query_uses_slot[slot * plans.len()..(slot + 1) * plans.len()];
                 if !used.iter().any(|&u| u) {
-                    return (0, Vec::new());
+                    return ScanPack::Flat(LutPack::empty());
                 }
                 let scorer = set.slot_spec(slot, &idx.pipeline).stage1.as_ref();
                 let stride = scorer.lut_len();
@@ -367,7 +392,18 @@ impl<'a> BatchSearcher<'a> {
                         scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
                     }
                 }
-                (stride, luts)
+                let flat = LutPack::new(stride, plans.len(), luts);
+                match sp.scan_layout {
+                    ScanLayout::Flat => ScanPack::Flat(flat),
+                    ScanLayout::Transposed => ScanPack::Transposed(flat),
+                    ScanLayout::Packed4 => {
+                        let (m, k) = scorer.packed4_geometry().expect(
+                            "packed4 scan with a stage-1 family that has no packed \
+                             geometry (build-time validation missed?)",
+                        );
+                        ScanPack::Packed4(QuantLutPack::quantize(&flat, m, k))
+                    }
+                }
             })
             .collect();
 
@@ -388,8 +424,8 @@ impl<'a> BatchSearcher<'a> {
                 }
                 let sh = &set.shards[group.shard as usize];
                 let scorer = sh.spec(&idx.pipeline).stage1.as_ref();
-                let (stride, luts) = &packs[set.lut_slot[group.shard as usize] as usize];
-                if !sh.scan_group(scorer, luts, *stride, group, block, deadline, shortlists) {
+                let pack = &packs[set.lut_slot[group.shard as usize] as usize];
+                if !sh.scan_group(scorer, pack, group, block, deadline, shortlists) {
                     return false;
                 }
             }

@@ -69,7 +69,12 @@
 //! [`SearchIndex::search`] and the batched [`batch::BatchSearcher`]
 //! engine (per-batch LUT packs, scattered shard-group scans, union
 //! stage-3 decode) that the serving router dispatches whole batches
-//! through.
+//! through. The batched scan's physical layout is selectable per
+//! request ([`SearchParams::scan_layout`], CLI `--scan-layout`): flat
+//! (seed), query-major transposed (bit-identical, unit-stride loads),
+//! or the 4-bit packed fast scan (bounded-error quantized mode over
+//! nibble-packed code tables; requires a
+//! [`BuildCfg::scan_layout`]` = `[`ScanLayout::Packed4`] build).
 //!
 //! Both batched entry points are deadline-aware
 //! ([`BatchSearcher::execute_within`](batch::BatchSearcher::execute_within),
@@ -89,7 +94,7 @@ pub mod shard;
 
 pub use batch::{stage2_use_lut, BatchOutput, BatchSearcher, QueryPlan};
 pub use pipeline::{
-    BuildCfg, EncodeParams, PipelineConfig, PipelineSpec, SearchIndex, SearchParams, Stage1Kind,
-    Stage3Kind,
+    packed4_support, BuildCfg, EncodeParams, PipelineConfig, PipelineSpec, ScanLayout,
+    SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
 };
 pub use shard::{IndexShard, RowPayload, ShardGroup, ShardSet, DEAD_LOCAL};

@@ -96,6 +96,10 @@ use crate::quantizers::pairwise::{append_positions, PairwiseDecoder};
 use crate::quantizers::pq::{Pq, PqScorer};
 use crate::quantizers::rq::{Rq, RqScorer};
 use crate::quantizers::{ApproxScorer, Codes, StageDecoder, VectorQuantizer};
+
+// the scan-layout selector lives with the kernels it names; re-exported
+// here (and from `crate::index`) because it is a build/search knob
+pub use crate::quantizers::ScanLayout;
 use crate::runtime::Engine;
 use crate::tensor::{self, Matrix};
 use crate::util::prng::Rng;
@@ -127,6 +131,15 @@ pub struct SearchParams {
     /// parallelizes across workers instead); `0` = inherit the index's
     /// [`BuildCfg::batch_threads`] default. CLI: `--batch-threads`.
     pub batch_threads: usize,
+    /// physical layout of the batched stage-1 scan (CLI:
+    /// `--scan-layout`). `Flat` (the default) and `Transposed` are
+    /// bit-identical by contract; `Packed4` is the bounded-error
+    /// quantized fast scan and requires an index built with
+    /// [`BuildCfg::scan_layout`] `= Packed4` (a typed request error
+    /// otherwise, never a silent fallback). The per-query
+    /// [`SearchIndex::search`] path always scans exact flat LUTs — this
+    /// knob shapes the batched engine's packs.
+    pub scan_layout: ScanLayout,
 }
 
 impl Default for SearchParams {
@@ -138,6 +151,7 @@ impl Default for SearchParams {
             n_pairs: 32,
             n_final: 10,
             batch_threads: 1,
+            scan_layout: ScanLayout::Flat,
         }
     }
 }
@@ -286,6 +300,14 @@ pub struct BuildCfg {
     /// `0` here means "all cores" (`pool::default_threads`); the
     /// out-of-the-box default is `1` (single-threaded per execute).
     pub batch_threads: usize,
+    /// scan layout the index is assembled for. `Flat` / `Transposed`
+    /// need no extra build state (both scan the same tables — the
+    /// layout is chosen per request); `Packed4` additionally builds the
+    /// nibble-packed stage-1 tables and **validates every stage-1
+    /// family** with [`packed4_support`] — an incompatible family
+    /// (AQ/OPQ/LSQ, or `K > 16`) is a hard build error naming the
+    /// family, never a silent fallback. CLI: `--scan-layout` on build.
+    pub scan_layout: ScanLayout,
 }
 
 impl Default for BuildCfg {
@@ -300,6 +322,7 @@ impl Default for BuildCfg {
             shards: 1,
             shard_pipelines: Vec::new(),
             batch_threads: 1,
+            scan_layout: ScanLayout::Flat,
         }
     }
 }
@@ -360,6 +383,40 @@ pub struct EncodeParams {
 struct Stage2Fit {
     pairwise: PairwiseDecoder,
     bucket_codes: Codes,
+}
+
+/// Build-time eligibility of a stage-1 family for the
+/// [`ScanLayout::Packed4`] fast scan: only the plain additive
+/// position-major families (PQ / RQ) with `k ≤ 16` codewords per
+/// position can nibble-pack their code tables. Everything else errs
+/// **naming the family** — requesting packed4 with an incompatible
+/// stage 1 is a hard error at build time (the CLI surfaces it before
+/// assembly; [`SearchIndex::assemble`] panics with the same message),
+/// never a silent fallback to another layout.
+pub fn packed4_support(kind: &Stage1Kind, k: usize) -> Result<()> {
+    let family = match kind {
+        Stage1Kind::Pq { .. } => "pq",
+        Stage1Kind::Rq { .. } => "rq",
+        Stage1Kind::Aq => bail!(
+            "--scan-layout packed4 does not support the \"aq\" stage-1 family (it scans \
+             full-width QINCo2 codes, not nibble-sized codewords); use --stage1 pq or rq"
+        ),
+        Stage1Kind::Opq { .. } => bail!(
+            "--scan-layout packed4 does not support the \"opq\" stage-1 family; \
+             use --stage1 pq or rq"
+        ),
+        Stage1Kind::Lsq { .. } => bail!(
+            "--scan-layout packed4 does not support the \"lsq\" stage-1 family; \
+             use --stage1 pq or rq"
+        ),
+    };
+    if k > 16 {
+        bail!(
+            "--scan-layout packed4 requires k <= 16 codewords per position for the \
+             \"{family}\" stage-1 family, but this model has K={k} (does not fit a nibble)"
+        );
+    }
+    Ok(())
 }
 
 /// Fit the configured stage-1 scorer on the decoder-fit split and encode
@@ -583,6 +640,19 @@ impl SearchIndex {
         assert_eq!(fit_x.rows, fit_codes.n, "fit split size mismatch");
         assert_eq!(fit_x.rows, fit_assign.len(), "fit split size mismatch");
         let k = params.cfg.k;
+        // packed4 eligibility is checked before any table is built —
+        // every scanned stage-1 family (shared + overrides) must
+        // nibble-pack, or the build dies here naming the family
+        if cfg.scan_layout == ScanLayout::Packed4 {
+            if let Err(e) = packed4_support(&cfg.pipeline.stage1, k) {
+                panic!("{e}");
+            }
+            for (s, pcfg) in &cfg.shard_pipelines {
+                if let Err(e) = packed4_support(&pcfg.stage1, k) {
+                    panic!("shard {s} pipeline override: {e}");
+                }
+            }
+        }
         // the per-row bucket assignment moves into the snapshot (like the
         // inverted lists below) so ingest can extend it per epoch
         let assign = std::mem::take(&mut ivf.assign);
@@ -726,6 +796,14 @@ impl SearchIndex {
             let o_spec =
                 PipelineSpec { stage1: o_stage1, stage2: o_s2_scorer, stage3: o_stage3 };
             shards.install_override(*s, o_spec, o_side, o_terms, o_s2_codes, o_s2_norms);
+        }
+
+        // ---- packed4 layout: nibble-pack every shard's stage-1 scan
+        // table. Runs after the override installs (which replace scan
+        // tables and reset their packed mirrors); the families were
+        // validated up front, so every codeword fits a nibble ----
+        if cfg.scan_layout == ScanLayout::Packed4 {
+            shards.build_packed_tables();
         }
 
         SearchIndex {
@@ -1333,5 +1411,35 @@ mod tests {
         assert!(msg.contains("--stage3"), "error should name the flag: {msg}");
         assert!(msg.contains("\"xla\""), "error should name the bad value: {msg}");
         assert!(msg.contains("reference|rust|runtime|none"), "error should list options: {msg}");
+    }
+
+    #[test]
+    fn packed4_accepts_the_nibble_sized_additive_families() {
+        assert!(packed4_support(&Stage1Kind::Pq { m: 4 }, 16).is_ok());
+        assert!(packed4_support(&Stage1Kind::Rq { m: 3 }, 8).is_ok());
+    }
+
+    #[test]
+    fn packed4_rejects_incompatible_families_naming_them() {
+        // never a silent fallback: each excluded family errs by name
+        for (kind, family) in [
+            (Stage1Kind::Aq, "aq"),
+            (Stage1Kind::Opq { m: 4, iters: 4 }, "opq"),
+            (Stage1Kind::Lsq { m: 4 }, "lsq"),
+        ] {
+            let msg = packed4_support(&kind, 8).unwrap_err().to_string();
+            assert!(msg.contains("packed4"), "error should name the layout: {msg}");
+            assert!(
+                msg.contains(&format!("\"{family}\"")),
+                "error should name the family: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed4_rejects_codewords_wider_than_a_nibble() {
+        let msg = packed4_support(&Stage1Kind::Pq { m: 4 }, 32).unwrap_err().to_string();
+        assert!(msg.contains("K=32"), "error should report the model's K: {msg}");
+        assert!(msg.contains("\"pq\""), "error should name the family: {msg}");
     }
 }

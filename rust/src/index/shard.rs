@@ -49,8 +49,8 @@
 //! [`ShardSet::plan`] routes a batch's probed buckets to their owning
 //! shards as [`ShardGroup`]s, in ascending bucket order — which, because
 //! shards own contiguous ranges, is also shard-major order.
-//! [`IndexShard::scan_group`] then runs the existing multi-query
-//! block-scan kernel over the shard's *local* rows, pushing
+//! [`IndexShard::scan_group`] then runs the request's scan-layout
+//! kernel over the shard's *local* rows, pushing
 //! `(score, global id)` pairs into the per-query shortlists. Per-shard
 //! shortlists merge under the total (score, id) order of
 //! [`Shortlist`] (see [`Shortlist::merge_from`]), so the merged stage-1
@@ -58,6 +58,31 @@
 //! the unsharded index for every shard count**: each (query, candidate)
 //! pair is scored with identical floats wherever its row is stored, and
 //! the order is total.
+//!
+//! # Scan layouts
+//!
+//! [`IndexShard::scan_group`] dispatches on the batch engine's per-slot
+//! [`ScanPack`]:
+//!
+//! * [`ScanPack::Flat`] — the seed kernel: per-member strided gathers
+//!   from the flat LUT pack (`luts[qi·stride + off]`), bit-exact scalar
+//!   and block paths.
+//! * [`ScanPack::Transposed`] — per ≤8-member chunk the flat LUT slices
+//!   are transposed once (`tlut[off·8 + lane]`,
+//!   [`LutPack::fill_transposed`]) so the inner loop of every scored
+//!   row becomes unit-stride 8-wide loads; **bit-identical** to `Flat`
+//!   because each lane accumulates the same offsets in the same order
+//!   (see [`crate::quantizers::ScanLayout`]).
+//! * [`ScanPack::Packed4`] — u8-quantized LUT chunks
+//!   ([`QuantLutPack`]) scored against the shard's nibble-packed
+//!   [`IndexShard::stage1_packed`] table: bounded-error quantized
+//!   scoring, explicitly versioned by
+//!   [`crate::quantizers::PACKED4_SCORING_VERSION`], never bit-exact.
+//!
+//! Every layout runs the same tombstone skip and the same
+//! [`DEADLINE_CHECK_ROWS`] abort granularity (one deadline tick per
+//! scored code row), so the degraded-ladder semantics of deadline
+//! requests are layout-independent.
 //!
 //! # The global-id remap invariant
 //!
@@ -97,7 +122,10 @@
 
 use super::batch::QueryPlan;
 use super::pipeline::{gather_codes, PipelineSpec};
-use crate::quantizers::{ApproxScorer, Codes, SCORE_BLOCK};
+use crate::quantizers::{
+    score_packed4_lanes, ApproxScorer, Codes, LutPack, PackedCodes, QuantLutPack, ScanPack,
+    SCORE_BLOCK,
+};
 use crate::util::deadline::Deadline;
 use crate::util::topk::Shortlist;
 use std::collections::BTreeMap;
@@ -114,6 +142,40 @@ pub const DEADLINE_CHECK_ROWS: usize = 1024;
 /// `local_of` sentinel for a global id whose row was reclaimed by
 /// compaction: the id stays allocated (never reused) but maps to no row.
 pub const DEAD_LOCAL: u32 = u32::MAX;
+
+/// The one deadline-abort policy shared by every scan-layout path: one
+/// tick per scored code row, an `Instant::now()` probe every
+/// [`DEADLINE_CHECK_ROWS`] ticks, a dead branch when the request
+/// carries no deadline. Factoring the counter out keeps the abort
+/// granularity provably identical across layouts.
+struct DeadlineTicker {
+    deadline: Deadline,
+    check: bool,
+    rows_since_check: usize,
+}
+
+impl DeadlineTicker {
+    #[inline]
+    fn new(deadline: Deadline) -> DeadlineTicker {
+        DeadlineTicker { check: !deadline.is_none(), rows_since_check: 0, deadline }
+    }
+
+    /// Tick once for the row about to be scored; `true` means the
+    /// deadline expired and the scan must abort before scoring it.
+    #[inline]
+    fn expired(&mut self) -> bool {
+        if !self.check {
+            return false;
+        }
+        self.rows_since_check += 1;
+        if self.rows_since_check >= DEADLINE_CHECK_ROWS {
+            self.rows_since_check = 0;
+            self.deadline.expired()
+        } else {
+            false
+        }
+    }
+}
 
 /// One scatter unit produced by [`ShardSet::plan`]: a probed bucket, its
 /// owning shard, and the batch members interested in it.
@@ -166,6 +228,12 @@ pub struct IndexShard {
     /// side code table scanned by stage 1 when the scorer owns one
     /// (PQ/OPQ/LSQ/RQ); `None` means stage 1 scans [`Self::codes`]
     pub stage1_side_codes: Option<Codes>,
+    /// nibble-packed copy of the stage-1 scan table, present iff the
+    /// index was assembled for [`crate::quantizers::ScanLayout::Packed4`]
+    /// (see [`ShardSet::build_packed_tables`]); kept in sync by every
+    /// mutation path so the packed scan sees exactly the rows the flat
+    /// scan would
+    pub stage1_packed: Option<PackedCodes>,
     /// cached stage-1 terms: ||x̂_r||² + 2⟨cent, x̂_r⟩ per local row
     pub stage1_terms: Vec<f32>,
     /// extended code table scored by stage 2 (empty when stage 2 is off)
@@ -236,35 +304,65 @@ impl IndexShard {
     }
 
     /// Scan one owned bucket group with the given stage-1 scorer and
-    /// flat LUT pack, pushing `(score, global id)` into each member's
-    /// shortlist — the existing block-scan machinery, unchanged, over
-    /// shard-local rows. Tombstoned rows are skipped (and not counted in
-    /// [`Self::scanned`]). `block` selects the multi-query
-    /// [`ApproxScorer::score_block`] kernel vs the scalar per-member
-    /// loop; both are bit-identical by the trait contract.
+    /// scan-layout pack, pushing `(score, global id)` into each member's
+    /// shortlist. Dispatches on the [`ScanPack`] variant (see the module
+    /// docs' layout section); `block` selects the multi-query block
+    /// kernel vs the scalar per-member loop on the flat-pack layouts
+    /// (both bit-identical by the trait contract — the scalar path
+    /// serves `Flat` and `Transposed` alike since both carry the flat
+    /// pack), while `Packed4` always runs its packed kernel: the
+    /// quantized layout *is* the scoring mode, there is no scalar twin.
+    ///
+    /// Tombstoned rows are skipped (and not counted in
+    /// [`Self::scanned`]) in every layout.
     ///
     /// `deadline` bounds the scan: every [`DEADLINE_CHECK_ROWS`] scored
-    /// rows the deadline is re-checked, and on expiry the scan returns
-    /// `false` with the shortlists ranking whatever was scored so far
-    /// (the caller marks the batch degraded). With [`Deadline::none()`]
-    /// the check is a dead branch and the return is always `true` —
-    /// bit-identity preserved. [`Self::scanned`] counts pairs *actually
-    /// scored*, so an aborted scan does not over-report.
+    /// rows the deadline is re-checked (one `DeadlineTicker` tick per
+    /// row in every layout), and on expiry the scan returns `false` with
+    /// the shortlists ranking whatever was scored so far (the caller
+    /// marks the batch degraded). With [`Deadline::none()`] the check is
+    /// a dead branch and the return is always `true` — bit-identity
+    /// preserved. [`Self::scanned`] counts pairs *actually scored*, so
+    /// an aborted scan does not over-report.
     pub(crate) fn scan_group(
         &self,
         scorer: &dyn ApproxScorer,
-        luts: &[f32],
-        stride: usize,
+        pack: &ScanPack,
         group: &ShardGroup,
         block: bool,
         deadline: Deadline,
         shortlists: &mut [Shortlist],
     ) -> bool {
+        match pack {
+            ScanPack::Flat(p) => self.scan_group_flat(scorer, p, group, block, deadline, shortlists),
+            ScanPack::Transposed(p) => {
+                if block {
+                    self.scan_group_transposed(scorer, p, group, deadline, shortlists)
+                } else {
+                    self.scan_group_flat(scorer, p, group, false, deadline, shortlists)
+                }
+            }
+            ScanPack::Packed4(q) => self.scan_group_packed4(q, group, deadline, shortlists),
+        }
+    }
+
+    /// The seed scan: per-member strided gathers from the flat LUT pack.
+    fn scan_group_flat(
+        &self,
+        scorer: &dyn ApproxScorer,
+        pack: &LutPack,
+        group: &ShardGroup,
+        block: bool,
+        deadline: Deadline,
+        shortlists: &mut [Shortlist],
+    ) -> bool {
+        // the once-per-group bounds proof behind the unchecked kernels
+        pack.check_members(scorer.lut_len(), group.members.iter().map(|&(qi, _)| qi));
+        let (luts, stride) = (pack.luts(), pack.stride());
         let list = self.list(group.bucket);
         let codes = self.stage1_codes();
         let any_dead = self.n_dead > 0;
-        let check = !deadline.is_none();
-        let mut rows_since_check = 0usize;
+        let mut ticker = DeadlineTicker::new(deadline);
         let mut scored: u64 = 0;
         let mut complete = true;
         if block {
@@ -281,15 +379,9 @@ impl IndexShard {
                     if any_dead && self.tombstones[i] {
                         continue;
                     }
-                    if check {
-                        rows_since_check += 1;
-                        if rows_since_check >= DEADLINE_CHECK_ROWS {
-                            rows_since_check = 0;
-                            if deadline.expired() {
-                                complete = false;
-                                break 'chunks;
-                            }
-                        }
+                    if ticker.expired() {
+                        complete = false;
+                        break 'chunks;
                     }
                     scorer.score_block(
                         luts,
@@ -312,15 +404,9 @@ impl IndexShard {
                 if any_dead && self.tombstones[i] {
                     continue;
                 }
-                if check {
-                    rows_since_check += 1;
-                    if rows_since_check >= DEADLINE_CHECK_ROWS {
-                        rows_since_check = 0;
-                        if deadline.expired() {
-                            complete = false;
-                            break 'rows;
-                        }
-                    }
+                if ticker.expired() {
+                    complete = false;
+                    break 'rows;
                 }
                 let code = codes.row(i);
                 let term = self.stage1_terms[i];
@@ -330,6 +416,123 @@ impl IndexShard {
                         .push(probe_d + scorer.score(lut, code, term), self.global_ids[i]);
                 }
                 scored += group.members.len() as u64;
+            }
+        }
+        self.scanned.fetch_add(scored, Ordering::Relaxed);
+        complete
+    }
+
+    /// The query-major transposed scan: the chunk's ≤[`SCORE_BLOCK`]
+    /// member LUT slices are transposed once per chunk
+    /// ([`LutPack::fill_transposed`], amortized over the whole inverted
+    /// list), then every scored row runs unit-stride 8-wide loads
+    /// through [`ApproxScorer::score_block_transposed`]. Bit-identical
+    /// to the flat paths: each lane accumulates the same offsets in the
+    /// same order and finishes with the same expression.
+    fn scan_group_transposed(
+        &self,
+        scorer: &dyn ApproxScorer,
+        pack: &LutPack,
+        group: &ShardGroup,
+        deadline: Deadline,
+        shortlists: &mut [Shortlist],
+    ) -> bool {
+        pack.check_members(scorer.lut_len(), group.members.iter().map(|&(qi, _)| qi));
+        let list = self.list(group.bucket);
+        let codes = self.stage1_codes();
+        let any_dead = self.n_dead > 0;
+        let mut ticker = DeadlineTicker::new(deadline);
+        let mut scored: u64 = 0;
+        let mut complete = true;
+        let mut tlut = vec![0.0f32; pack.stride() * SCORE_BLOCK];
+        let mut mq = [0u32; SCORE_BLOCK];
+        let mut scores = [0.0f32; SCORE_BLOCK];
+        'chunks: for chunk in group.members.chunks(SCORE_BLOCK) {
+            for (l, &(qi, _)) in chunk.iter().enumerate() {
+                mq[l] = qi;
+            }
+            pack.fill_transposed(&mq[..chunk.len()], &mut tlut);
+            for &local in list {
+                let i = local as usize;
+                if any_dead && self.tombstones[i] {
+                    continue;
+                }
+                if ticker.expired() {
+                    complete = false;
+                    break 'chunks;
+                }
+                scorer.score_block_transposed(
+                    &tlut,
+                    codes.row(i),
+                    self.stage1_terms[i],
+                    &mut scores[..chunk.len()],
+                );
+                for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
+                    shortlists[qi as usize].push(probe_d + scores[l], self.global_ids[i]);
+                }
+                scored += chunk.len() as u64;
+            }
+        }
+        self.scanned.fetch_add(scored, Ordering::Relaxed);
+        complete
+    }
+
+    /// The 4-bit fast scan: u8-quantized transposed LUT chunks
+    /// ([`QuantLutPack::fill_transposed`]) against the shard's
+    /// nibble-packed [`Self::stage1_packed`] rows. Quantized scoring —
+    /// bounded error, not bit-exact; the layout validation at build time
+    /// guarantees the packed table exists and every codeword fits a
+    /// nibble, so a missing table here is a logic error.
+    fn scan_group_packed4(
+        &self,
+        qpack: &QuantLutPack,
+        group: &ShardGroup,
+        deadline: Deadline,
+        shortlists: &mut [Shortlist],
+    ) -> bool {
+        let packed = self
+            .stage1_packed
+            .as_ref()
+            .expect("Packed4 scan on a shard without a packed stage-1 table (build-time validation missed?)");
+        qpack.check_members(packed.m(), group.members.iter().map(|&(qi, _)| qi));
+        let m = packed.m();
+        let list = self.list(group.bucket);
+        let any_dead = self.n_dead > 0;
+        let mut ticker = DeadlineTicker::new(deadline);
+        let mut scored: u64 = 0;
+        let mut complete = true;
+        let mut t8 = vec![0u8; m * 16 * SCORE_BLOCK];
+        let mut lo8 = [0.0f32; SCORE_BLOCK];
+        let mut delta8 = [0.0f32; SCORE_BLOCK];
+        let mut mq = [0u32; SCORE_BLOCK];
+        let mut scores = [0.0f32; SCORE_BLOCK];
+        'chunks: for chunk in group.members.chunks(SCORE_BLOCK) {
+            for (l, &(qi, _)) in chunk.iter().enumerate() {
+                mq[l] = qi;
+            }
+            qpack.fill_transposed(&mq[..chunk.len()], &mut t8, &mut lo8, &mut delta8);
+            for &local in list {
+                let i = local as usize;
+                if any_dead && self.tombstones[i] {
+                    continue;
+                }
+                if ticker.expired() {
+                    complete = false;
+                    break 'chunks;
+                }
+                score_packed4_lanes(
+                    &t8,
+                    packed.row(i),
+                    m,
+                    &lo8,
+                    &delta8,
+                    self.stage1_terms[i],
+                    &mut scores[..chunk.len()],
+                );
+                for (l, &(qi, probe_d)) in chunk.iter().enumerate() {
+                    shortlists[qi as usize].push(probe_d + scores[l], self.global_ids[i]);
+                }
+                scored += chunk.len() as u64;
             }
         }
         self.scanned.fetch_add(scored, Ordering::Relaxed);
@@ -348,6 +551,7 @@ impl IndexShard {
         let mut global_ids = self.global_ids.clone();
         let mut codes = self.codes.clone();
         let mut side = self.stage1_side_codes.clone();
+        let mut packed = self.stage1_packed.clone();
         let mut terms = self.stage1_terms.clone();
         let mut s2_codes = self.stage2_codes.clone();
         let mut s2_norms = self.stage2_norms.clone();
@@ -367,6 +571,11 @@ impl IndexShard {
                 tbl.data.extend_from_slice(sc);
                 tbl.n += 1;
             }
+            if let Some(pk) = packed.as_mut() {
+                // mirror whatever table stage 1 scans so the packed scan
+                // sees the ingested row at the same epoch the flat one does
+                pk.push_row(row.side_code.as_deref().unwrap_or(&row.code));
+            }
             terms.push(row.term);
             if has_s2 {
                 assert_eq!(row.stage2_code.len(), s2_codes.m, "stage-2 width mismatch");
@@ -383,6 +592,7 @@ impl IndexShard {
             global_ids,
             codes,
             stage1_side_codes: side,
+            stage1_packed: packed,
             stage1_terms: terms,
             stage2_codes: s2_codes,
             stage2_norms: s2_norms,
@@ -412,6 +622,7 @@ impl IndexShard {
             global_ids: self.global_ids.clone(),
             codes: self.codes.clone(),
             stage1_side_codes: self.stage1_side_codes.clone(),
+            stage1_packed: self.stage1_packed.clone(),
             stage1_terms: self.stage1_terms.clone(),
             stage2_codes: self.stage2_codes.clone(),
             stage2_norms: self.stage2_norms.clone(),
@@ -450,6 +661,7 @@ impl IndexShard {
             global_ids: keep.iter().map(|&i| self.global_ids[i]).collect(),
             codes: gather_codes(&self.codes, &keep),
             stage1_side_codes: self.stage1_side_codes.as_ref().map(|c| gather_codes(c, &keep)),
+            stage1_packed: self.stage1_packed.as_ref().map(|p| p.gather(&keep)),
             stage1_terms: keep.iter().map(|&i| self.stage1_terms[i]).collect(),
             stage2_codes: if self.stage2_codes.m > 0 {
                 gather_codes(&self.stage2_codes, &keep)
@@ -594,6 +806,7 @@ impl ShardSet {
                 lists: local_lists,
                 codes: gather_codes(&codes, &rows),
                 stage1_side_codes: stage1_side_codes.as_ref().map(|c| gather_codes(c, &rows)),
+                stage1_packed: None,
                 stage1_terms: rows.iter().map(|&i| stage1_terms[i]).collect(),
                 stage2_codes: sh_s2_codes,
                 stage2_norms: sh_s2_norms,
@@ -660,10 +873,39 @@ impl ShardSet {
         }
         sh.pipeline = Some(Arc::new(spec));
         sh.stage1_side_codes = stage1_side_codes;
+        // the packed table mirrors the stage-1 scan table just replaced;
+        // assembly rebuilds it (build_packed_tables) after all overrides
+        sh.stage1_packed = None;
         sh.stage1_terms = stage1_terms;
         sh.stage2_codes = stage2_codes;
         sh.stage2_norms = stage2_norms;
         self.recompute_slots();
+    }
+
+    /// Build each shard's nibble-packed stage-1 table for
+    /// [`crate::quantizers::ScanLayout::Packed4`]. Assembly-time only —
+    /// like [`Self::install_override`], the shards must not yet be
+    /// shared with any snapshot reader (and it must run *after* every
+    /// override install, which resets the packed table it replaces).
+    /// The caller validated `k ≤ 16` for every shard's stage-1 family
+    /// first; [`PackedCodes::pack`] still panics on any codeword that
+    /// does not fit a nibble.
+    pub fn build_packed_tables(&mut self) {
+        for sh in &mut self.shards {
+            let sh = Arc::get_mut(sh)
+                .expect("build_packed_tables requires exclusive shard ownership (assembly time)");
+            let packed = PackedCodes::pack(sh.stage1_codes());
+            sh.stage1_packed = Some(packed);
+        }
+    }
+
+    /// Does every shard carry the packed stage-1 table a
+    /// [`crate::quantizers::ScanLayout::Packed4`] scan needs? False for
+    /// any index not assembled with the packed layout — the batch
+    /// engine turns that into a typed request error instead of letting
+    /// the scan hit the missing-table panic.
+    pub fn packed4_ready(&self) -> bool {
+        self.shards.iter().all(|sh| sh.stage1_packed.is_some())
     }
 
     fn recompute_slots(&mut self) {
@@ -895,6 +1137,44 @@ mod tests {
         assert_eq!(compacted.stage1_terms, vec![1.0, 2.0]);
         // the shared scan counter survives both rebuilds
         assert!(Arc::ptr_eq(&set.shards[2].scanned, &compacted.scanned));
+    }
+
+    #[test]
+    fn packed_table_follows_append_tombstone_compact() {
+        // the tiny_set codes (10..=15) all fit a nibble, so the packed
+        // table mirrors the stage-1 scan table through every mutation
+        let mut set = tiny_set();
+        assert!(!set.packed4_ready());
+        set.build_packed_tables();
+        assert!(set.packed4_ready());
+        // shard 2 locals 0,1,2 = codes 11,14,12 (m=1 → one byte per row)
+        let sh2 = &set.shards[2];
+        assert_eq!(sh2.stage1_packed.as_ref().unwrap().row(1), &[14u8]);
+        // append keeps packing in lockstep with the code table
+        let rows = vec![RowPayload {
+            gid: 6,
+            bucket: 2,
+            code: vec![7],
+            side_code: None,
+            term: 6.0,
+            stage2_code: Vec::new(),
+            stage2_norm: 0.0,
+        }];
+        let appended = sh2.with_rows_appended(&rows);
+        let pk = appended.stage1_packed.as_ref().unwrap();
+        assert_eq!(pk.n(), 4);
+        assert_eq!(pk.row(3), &[7u8]);
+        // tombstones keep the table; compaction gathers live rows in the
+        // canonical bucket-major order (bucket 2's appended row first)
+        let dead = appended.with_tombstones(&[1]);
+        assert_eq!(dead.stage1_packed.as_ref().unwrap().n(), 4);
+        let comp = dead.compacted();
+        let cpk = comp.stage1_packed.as_ref().unwrap();
+        assert_eq!(cpk.n(), 3);
+        assert_eq!(
+            (0..3).map(|i| cpk.row(i)[0]).collect::<Vec<u8>>(),
+            comp.stage1_codes().data.iter().map(|&c| c as u8).collect::<Vec<u8>>()
+        );
     }
 
     #[test]

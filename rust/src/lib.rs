@@ -94,6 +94,31 @@
 //!   and `search` return the same `Vec<(score, id)>` shape per query,
 //!   ranked under the total (score, id) order of [`util::topk`].
 //!
+//! # Scan layouts
+//!
+//! The batched scan's *physical* layout is selectable per request
+//! ([`index::SearchParams::scan_layout`], CLI `--scan-layout`):
+//! - **flat** (the default): per-query LUT slices from the batch pack,
+//!   scored lane by lane;
+//! - **transposed**: each ≤8-member bucket-group chunk repacks the
+//!   co-probed queries' LUTs query-major
+//!   ([`quantizers::LutPack::fill_transposed`]) so entry `off` of all
+//!   lanes is one contiguous 8-wide load — contractually
+//!   **bit-identical** to flat, pinned by `tests/scorer_conformance.rs`
+//!   and `tests/batch_equivalence.rs`;
+//! - **packed4**: additive stage-1 families with `k ≤ 16` (PQ/RQ) scan
+//!   nibble-packed code tables ([`quantizers::PackedCodes`]) against
+//!   u8-quantized LUTs ([`quantizers::QuantLutPack`]) — an explicitly
+//!   versioned ([`quantizers::PACKED4_SCORING_VERSION`]) bounded-error
+//!   scoring mode (`|quantized − exact| ≤ m·delta`, rank agreement
+//!   pinned by `tests/layout_equivalence.rs`). Requires an index
+//!   assembled with [`index::BuildCfg::scan_layout`]` = Packed4`;
+//!   requesting it against any other index is a typed error, never a
+//!   silent fallback.
+//!
+//! Deadline checks and the degraded ladder below are layout-independent:
+//! all three scan paths share the same per-row ticker granularity.
+//!
 //! # Failure model: deadlines, shedding, supervision
 //!
 //! The serving layer carries an explicit end-to-end failure model (the

@@ -25,7 +25,7 @@
 //! bit pattern (`to_bits`/`from_bits`), so scores survive the wire
 //! bit-identically — the equivalence suite depends on this.
 
-use crate::index::{EncodeParams, SearchParams};
+use crate::index::{EncodeParams, ScanLayout, SearchParams};
 use crate::server::{Response, RouterError, Stats, WriteOp, WriteOutcome, WriteResponse};
 use crate::tensor::Matrix;
 use std::time::Duration;
@@ -529,7 +529,7 @@ pub struct SearchBody {
 
 impl SearchBody {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(6 * 4 + 8 + 4 + 4 * self.query.len());
+        let mut out = Vec::with_capacity(7 * 4 + 8 + 4 + 4 * self.query.len());
         for v in [
             self.sp.nprobe,
             self.sp.ef_search,
@@ -540,6 +540,7 @@ impl SearchBody {
         ] {
             put_u32(&mut out, v as u32);
         }
+        put_u32(&mut out, self.sp.scan_layout.wire_code());
         put_u64(&mut out, self.deadline_ms);
         put_u32(&mut out, self.query.len() as u32);
         for &x in &self.query {
@@ -550,13 +551,28 @@ impl SearchBody {
 
     pub fn decode(payload: &[u8]) -> Result<SearchBody, ProtocolError> {
         let mut r = PayloadReader::new(payload);
+        let nprobe = r.u32()? as usize;
+        let ef_search = r.u32()? as usize;
+        let n_aq = r.u32()? as usize;
+        let n_pairs = r.u32()? as usize;
+        let n_final = r.u32()? as usize;
+        let batch_threads = r.u32()? as usize;
+        // Strict v1: an unrecognised scan-layout code is a typed protocol
+        // error, never a silent fall-back to flat — a newer client asking
+        // for a layout this build lacks must hear "no", not get different
+        // scores.
+        let layout_code = r.u32()?;
+        let scan_layout = ScanLayout::from_wire(layout_code).ok_or_else(|| {
+            ProtocolError::BadPayload(format!("unknown scan-layout code {layout_code}"))
+        })?;
         let sp = SearchParams {
-            nprobe: r.u32()? as usize,
-            ef_search: r.u32()? as usize,
-            n_aq: r.u32()? as usize,
-            n_pairs: r.u32()? as usize,
-            n_final: r.u32()? as usize,
-            batch_threads: r.u32()? as usize,
+            nprobe,
+            ef_search,
+            n_aq,
+            n_pairs,
+            n_final,
+            batch_threads,
+            scan_layout,
         };
         let deadline_ms = r.u64()?;
         let n = r.u32()? as usize;
@@ -968,20 +984,41 @@ mod tests {
 
     #[test]
     fn search_body_roundtrips() {
-        let body = SearchBody {
-            sp: SearchParams {
-                nprobe: 4,
-                ef_search: 32,
-                n_aq: 64,
-                n_pairs: 8,
-                n_final: 5,
-                batch_threads: 2,
-            },
-            deadline_ms: 1234,
-            query: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
-        };
-        let back = SearchBody::decode(&body.encode()).unwrap();
-        assert_eq!(back, body);
+        for scan_layout in [ScanLayout::Flat, ScanLayout::Transposed, ScanLayout::Packed4] {
+            let body = SearchBody {
+                sp: SearchParams {
+                    nprobe: 4,
+                    ef_search: 32,
+                    n_aq: 64,
+                    n_pairs: 8,
+                    n_final: 5,
+                    batch_threads: 2,
+                    scan_layout,
+                },
+                deadline_ms: 1234,
+                query: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+            };
+            let back = SearchBody::decode(&body.encode()).unwrap();
+            assert_eq!(back, body);
+        }
+    }
+
+    #[test]
+    fn unknown_scan_layout_code_is_a_typed_error() {
+        let mut bytes = SearchBody {
+            sp: SearchParams::default(),
+            deadline_ms: 0,
+            query: vec![1.0],
+        }
+        .encode();
+        // the scan-layout word is the 7th u32 of the params block
+        bytes[24..28].copy_from_slice(&99u32.to_le_bytes());
+        match SearchBody::decode(&bytes) {
+            Err(ProtocolError::BadPayload(msg)) => {
+                assert!(msg.contains("scan-layout"), "msg: {msg}")
+            }
+            other => panic!("expected BadPayload, got {other:?}"),
+        }
     }
 
     #[test]

@@ -183,6 +183,22 @@ impl ApproxScorer for AdditiveDecoder {
         );
     }
 
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        debug_assert_eq!(tlut.len(), AdditiveDecoder::lut_len(self) * super::SCORE_BLOCK);
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
+        let k = self.k;
+        super::score_tblock_lanes(
+            tlut,
+            || code.iter().enumerate().map(move |(p, &c)| p * k + c as usize),
+            term,
+            out,
+        );
+    }
+
+    // no packed4_geometry override: the AQ decoder scans full-width
+    // QINCo2 codes (k is the model's K, not a nibble), so Packed4
+    // stays a build-time error for this family
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let mut ip = 0.0f32;
         for (p, &c) in code.iter().enumerate() {

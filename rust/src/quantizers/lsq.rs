@@ -159,6 +159,21 @@ impl ApproxScorer for LsqScorer {
         );
     }
 
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        debug_assert_eq!(tlut.len(), self.lut_len() * super::SCORE_BLOCK);
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        super::score_tblock_lanes(
+            tlut,
+            || code.iter().enumerate().map(move |(p, &c)| p * k + c as usize),
+            term,
+            out,
+        );
+    }
+
+    // no packed4_geometry override: LSQ rides with the excluded families
+    // (its ICM encoder is also the one non-deterministic ingest path)
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let mut ip = 0.0f32;
         for (p, &c) in code.iter().enumerate() {

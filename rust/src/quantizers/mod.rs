@@ -22,6 +22,59 @@
 //!   [`crate::qinco::RustDecoder`], [`pairwise::PairwiseDecoder`], and
 //!   the engine-backed [`crate::qinco::RuntimeDecoder`].
 //!
+//! # Scan layouts
+//!
+//! The stage-1 bucket scan is the hot loop of every request, and the
+//! memory layout its kernels walk is a first-class, explicitly chosen
+//! artifact: [`ScanLayout`] selects it per request (threaded through
+//! `SearchParams`), and this module owns the pack containers and lane
+//! kernels for all three layouts.
+//!
+//! **`Flat`** (the default, and the bit-exact reference): one
+//! [`ApproxScorer::lut_into`] slice per query, packed back to back in a
+//! [`LutPack`]. The block kernel's member base offsets are a *virtual*
+//! transpose — each accumulate gathers at stride `lut_len`:
+//!
+//! ```text
+//! luts:  [ q0: e0 e1 e2 … | q1: e0 e1 e2 … | q2: e0 e1 e2 … | … ]
+//! kernel: acc[l] += luts[member[l]·stride + off]        (strided gather)
+//! ```
+//!
+//! **`Transposed`**: per bucket group and per ≤[`SCORE_BLOCK`]-member
+//! chunk, [`LutPack::fill_transposed`] physically transposes the chunk's
+//! LUT slices so entry `off` of all co-probed members is contiguous.
+//! The inner loop becomes one unit-stride 8-wide load per code position
+//! — same values, same per-lane add order, **bit-identical to `Flat` by
+//! contract** (pinned by `tests/scorer_conformance.rs` and
+//! `tests/layout_equivalence.rs`):
+//!
+//! ```text
+//! tlut:  [ e0: m0 m1 … m7 | e1: m0 m1 … m7 | e2: m0 m1 … m7 | … ]
+//! kernel: acc[l] += tlut[off·8 + l]                (unit-stride 8-wide)
+//! ```
+//!
+//! **`Packed4`**: the André-et-al.-style 4-bit fast-scan endpoint for
+//! the cheap additive stage-1 families (PQ/RQ with k ≤ 16 codewords per
+//! position — [`ApproxScorer::packed4_geometry`]). Code rows are
+//! nibble-packed two positions per byte ([`PackedCodes`]) and the LUTs
+//! are u8-quantized per query ([`QuantLutPack`], 16 entries per position
+//! so a position's sub-table stays register/L1-resident), transposed per
+//! chunk exactly like `Transposed`:
+//!
+//! ```text
+//! codes: [ p1p0 | p3p2 | … ]            (two 4-bit positions per byte)
+//! t8:    [ p0c0: m0…m7 | p0c1: m0…m7 | … p0c15 | p1c0: m0…m7 | … ]
+//! kernel: acc[l] += t8[(p·16 + c_p)·8 + l] as u32
+//! score:  term − 2·(lo[l] + delta[l]·acc[l])
+//! ```
+//!
+//! Quantized scores cannot be bit-identical to exact ones, so `Packed4`
+//! is a **versioned scoring mode** ([`PACKED4_SCORING_VERSION`]) with a
+//! documented bounded-error contract instead: per query the absolute
+//! score error is at most `m·delta` (see [`QuantLutPack`]), and
+//! `tests/layout_equivalence.rs` pins both the bound and top-k rank
+//! agreement against the exact layouts.
+//!
 //! Artifact engines are thread-confined (PJRT clients are `Rc`-based),
 //! so a runtime decoder cannot be shared across serving threads.
 //! [`DecoderFactory`] closes that gap: the factory itself is
@@ -38,7 +91,7 @@ pub mod pq;
 pub mod rq;
 
 use crate::tensor::Matrix;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Code array: n vectors x m code positions, values in [0, K).
 #[derive(Clone, Debug, PartialEq)]
@@ -127,6 +180,409 @@ pub fn stage2_use_lut(n_cands: usize, n_steps: usize, k: usize, d: usize) -> boo
 /// splits a bucket group's co-probed queries into blocks of this size.
 pub const SCORE_BLOCK: usize = 8;
 
+/// Memory layout of the stage-1 bucket scan — see the module-level
+/// [scan layouts](self#scan-layouts) section for the diagrams.
+///
+/// Selected per request through `SearchParams::scan_layout` (and at
+/// build time through `BuildCfg::scan_layout`, which decides whether
+/// the shards carry the nibble-packed side table `Packed4` scans).
+/// `Flat` and `Transposed` are **bit-identical by contract** for every
+/// scorer; `Packed4` is the explicitly versioned quantized mode
+/// ([`PACKED4_SCORING_VERSION`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ScanLayout {
+    /// One flat LUT slice per query; the block kernel gathers entries
+    /// at stride `lut_len`. The default and the bit-exact reference.
+    #[default]
+    Flat,
+    /// Query-major transposed LUT pack per bucket-group chunk:
+    /// unit-stride 8-wide loads, bit-identical to `Flat`.
+    Transposed,
+    /// 4-bit packed codes + u8-quantized transposed LUTs (PQ/RQ with
+    /// k ≤ 16 only). Quantized scores under the versioned bounded-error
+    /// contract; requires an index built with this layout.
+    Packed4,
+}
+
+impl ScanLayout {
+    /// The `--scan-layout` flag spelling of this layout.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScanLayout::Flat => "flat",
+            ScanLayout::Transposed => "transposed",
+            ScanLayout::Packed4 => "packed4",
+        }
+    }
+
+    /// Parse a `--scan-layout` flag value. Unknown names are a hard
+    /// error naming the flag (matching the CLI's malformed-flag policy
+    /// — a silent fallback would benchmark the wrong kernel).
+    pub fn parse(name: &str) -> Result<ScanLayout> {
+        match name {
+            "flat" => Ok(ScanLayout::Flat),
+            "transposed" => Ok(ScanLayout::Transposed),
+            "packed4" => Ok(ScanLayout::Packed4),
+            other => bail!(
+                "--scan-layout: unknown scan layout {other:?} (expected flat|transposed|packed4)"
+            ),
+        }
+    }
+
+    /// Stable wire discriminant (the frame protocol serializes
+    /// `SearchParams` field by field).
+    pub fn wire_code(self) -> u32 {
+        match self {
+            ScanLayout::Flat => 0,
+            ScanLayout::Transposed => 1,
+            ScanLayout::Packed4 => 2,
+        }
+    }
+
+    /// Inverse of [`wire_code`](Self::wire_code); `None` for codes this
+    /// build does not know (the frame decoder turns that into a typed
+    /// protocol error, never a silent default).
+    pub fn from_wire(code: u32) -> Option<ScanLayout> {
+        match code {
+            0 => Some(ScanLayout::Flat),
+            1 => Some(ScanLayout::Transposed),
+            2 => Some(ScanLayout::Packed4),
+            _ => None,
+        }
+    }
+}
+
+/// Version of the `Packed4` quantized scoring mode. Bump this whenever
+/// the quantization scheme (per-position min, global per-query `delta`,
+/// round-to-nearest u8, `score = term − 2·(lo + delta·acc)`) or its
+/// error bound changes, and re-review `tests/layout_equivalence.rs` —
+/// the suite asserts against this exact contract.
+pub const PACKED4_SCORING_VERSION: u32 = 1;
+
+/// The batch engine's flat per-slot LUT pack: one
+/// [`ApproxScorer::lut_into`] slice of length `stride` per query,
+/// `n_queries` slices back to back.
+///
+/// The constructor is the **bounds proof** for the scan kernels: it
+/// checks `luts.len() == stride · n_queries` once at pack build, and
+/// [`check_members`](Self::check_members) pins each scanned group's
+/// member indices inside `n_queries` once per group. After those two
+/// checks every `member·stride + off` access with `off < stride` is in
+/// bounds, so the per-row inner loops stay unchecked without trusting a
+/// bad `lut_slot` in release builds (this replaced a per-call
+/// `debug_assert!` that vanished in release).
+#[derive(Clone, Debug)]
+pub struct LutPack {
+    stride: usize,
+    n_queries: usize,
+    luts: Vec<f32>,
+}
+
+impl LutPack {
+    /// Wrap a filled flat pack. Panics unless
+    /// `luts.len() == stride · n_queries` — the invariant every scan
+    /// kernel relies on.
+    pub fn new(stride: usize, n_queries: usize, luts: Vec<f32>) -> LutPack {
+        let want = stride
+            .checked_mul(n_queries)
+            .expect("LutPack: stride * n_queries overflows usize");
+        assert_eq!(
+            luts.len(),
+            want,
+            "LutPack: buffer holds {} floats, want stride {stride} * n_queries {n_queries}",
+            luts.len()
+        );
+        LutPack { stride, n_queries, luts }
+    }
+
+    /// The pack of an unused LUT slot: zero queries, zero stride. Any
+    /// attempt to scan it fails [`check_members`](Self::check_members)
+    /// loudly instead of reading out of bounds.
+    pub fn empty() -> LutPack {
+        LutPack { stride: 0, n_queries: 0, luts: Vec::new() }
+    }
+
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    #[inline]
+    pub fn n_queries(&self) -> usize {
+        self.n_queries
+    }
+
+    #[inline]
+    pub fn luts(&self) -> &[f32] {
+        &self.luts
+    }
+
+    /// Once-per-group scan precondition: the pack was built for this
+    /// scorer (`stride == lut_len`) and every member query index owns a
+    /// slice inside the pack. O(members) — amortized over the
+    /// `rows × members` scores the group scan then computes unchecked.
+    pub fn check_members(&self, lut_len: usize, members: impl IntoIterator<Item = u32>) {
+        assert_eq!(
+            self.stride, lut_len,
+            "LutPack: pack stride {} does not match the scorer's lut_len {lut_len} \
+             (wrong lut_slot?)",
+            self.stride
+        );
+        for qi in members {
+            assert!(
+                (qi as usize) < self.n_queries,
+                "LutPack: member query {qi} outside the pack's {} queries",
+                self.n_queries
+            );
+        }
+    }
+
+    /// Transpose one ≤[`SCORE_BLOCK`]-member chunk into the query-major
+    /// layout: `tlut[off·SCORE_BLOCK + l] = lut_of(members[l])[off]`.
+    /// Unused lanes of a partial chunk are zero-filled so the lane
+    /// kernels can run branch-free over all [`SCORE_BLOCK`] lanes.
+    /// `tlut.len()` must be `stride · SCORE_BLOCK`.
+    pub fn fill_transposed(&self, members: &[u32], tlut: &mut [f32]) {
+        assert!(members.len() <= SCORE_BLOCK);
+        assert_eq!(tlut.len(), self.stride * SCORE_BLOCK);
+        if members.len() < SCORE_BLOCK {
+            tlut.fill(0.0);
+        }
+        for (l, &qi) in members.iter().enumerate() {
+            let src = &self.luts[qi as usize * self.stride..][..self.stride];
+            for (off, &v) in src.iter().enumerate() {
+                tlut[off * SCORE_BLOCK + l] = v;
+            }
+        }
+    }
+}
+
+/// u8-quantized per-slot LUT pack for [`ScanLayout::Packed4`] —
+/// scoring-mode version [`PACKED4_SCORING_VERSION`].
+///
+/// Per query `qi`, position `p` and codeword `c` of an additive
+/// position-major LUT (`m` positions × `k ≤ 16` codewords, padded to 16
+/// entries per position):
+///
+/// ```text
+/// delta[qi] = max_p (max_c lut[p,c] − min_c lut[p,c]) / 255   (≥ tiny)
+/// q8[qi][p·16 + c] = round((lut[p,c] − min_c lut[p,c]) / delta[qi])
+/// lo[qi] = Σ_p min_c lut[p,c]
+/// ```
+///
+/// so `lo + delta·Σ_p q8[p, c_p]` reconstructs the inner product with
+/// per-position error ≤ `delta/2`, and the score
+/// `term − 2·(lo + delta·acc)` deviates from the exact
+/// [`ApproxScorer::score`] by at most
+/// [`score_error_bound`](Self::score_error_bound)` = m·delta`.
+#[derive(Clone, Debug)]
+pub struct QuantLutPack {
+    m: usize,
+    n_queries: usize,
+    /// `n_queries · m · 16` codes, position-major, 16-padded per position.
+    q8: Vec<u8>,
+    /// Per-query `Σ_p min_p`.
+    lo: Vec<f32>,
+    /// Per-query quantization step.
+    delta: Vec<f32>,
+}
+
+impl QuantLutPack {
+    /// Quantize a flat pack built for an additive scorer with geometry
+    /// `(m, k)` (see [`ApproxScorer::packed4_geometry`]). Panics if
+    /// `k > 16` or the pack's stride is not `m·k` — both are build-time
+    /// validated long before a scan gets here.
+    pub fn quantize(pack: &LutPack, m: usize, k: usize) -> QuantLutPack {
+        assert!(k <= 16, "QuantLutPack: k={k} codewords per position do not fit a nibble");
+        assert_eq!(
+            pack.stride(),
+            m * k,
+            "QuantLutPack: pack stride {} is not m {m} * k {k}",
+            pack.stride()
+        );
+        let nq = pack.n_queries();
+        let mut q8 = vec![0u8; nq * m * 16];
+        let mut lo = vec![0.0f32; nq];
+        let mut delta = vec![0.0f32; nq];
+        let mut mins = vec![0.0f32; m];
+        for qi in 0..nq {
+            let lut = &pack.luts()[qi * pack.stride()..][..pack.stride()];
+            let mut span = 0.0f32;
+            for (p, mn) in mins.iter_mut().enumerate() {
+                let row = &lut[p * k..(p + 1) * k];
+                let lo_p = row.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+                let hi_p = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                *mn = lo_p;
+                span = span.max(hi_p - lo_p);
+            }
+            // a zero span (constant LUT) quantizes exactly with any
+            // positive step; 1.0 keeps the error bound finite
+            let d = if span > 0.0 { span / 255.0 } else { 1.0 };
+            lo[qi] = mins.iter().sum();
+            delta[qi] = d;
+            let dst = &mut q8[qi * m * 16..(qi + 1) * m * 16];
+            for (p, &mn) in mins.iter().enumerate() {
+                for c in 0..k {
+                    let q = ((lut[p * k + c] - mn) / d).round().clamp(0.0, 255.0);
+                    dst[p * 16 + c] = q as u8;
+                }
+            }
+        }
+        QuantLutPack { m, n_queries: nq, q8, lo, delta }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn n_queries(&self) -> usize {
+        self.n_queries
+    }
+
+    /// The documented bound on `|quantized score − exact score|` for
+    /// query `qi`: `m · delta` (each of `m` positions rounds by at most
+    /// `delta/2`, and the score doubles the inner product).
+    pub fn score_error_bound(&self, qi: u32) -> f32 {
+        self.m as f32 * self.delta[qi as usize]
+    }
+
+    /// Once-per-group precondition, mirroring [`LutPack::check_members`].
+    pub fn check_members(&self, m: usize, members: impl IntoIterator<Item = u32>) {
+        assert_eq!(
+            self.m, m,
+            "QuantLutPack: pack built for {} positions, scorer scans {m}",
+            self.m
+        );
+        for qi in members {
+            assert!(
+                (qi as usize) < self.n_queries,
+                "QuantLutPack: member query {qi} outside the pack's {} queries",
+                self.n_queries
+            );
+        }
+    }
+
+    /// Transpose one ≤[`SCORE_BLOCK`]-member chunk: `t8[(p·16 + c)·8 +
+    /// l]` plus the per-lane `lo`/`delta`. Unused lanes zero-fill like
+    /// [`LutPack::fill_transposed`]. `t8.len()` must be
+    /// `m · 16 · SCORE_BLOCK`; `lo`/`delta` hold `SCORE_BLOCK` lanes.
+    pub fn fill_transposed(&self, members: &[u32], t8: &mut [u8], lo: &mut [f32], delta: &mut [f32]) {
+        assert!(members.len() <= SCORE_BLOCK);
+        assert_eq!(t8.len(), self.m * 16 * SCORE_BLOCK);
+        assert_eq!(lo.len(), SCORE_BLOCK);
+        assert_eq!(delta.len(), SCORE_BLOCK);
+        if members.len() < SCORE_BLOCK {
+            t8.fill(0);
+            lo.fill(0.0);
+            delta.fill(0.0);
+        }
+        for (l, &qi) in members.iter().enumerate() {
+            let qi = qi as usize;
+            let src = &self.q8[qi * self.m * 16..][..self.m * 16];
+            for (e, &v) in src.iter().enumerate() {
+                t8[e * SCORE_BLOCK + l] = v;
+            }
+            lo[l] = self.lo[qi];
+            delta[l] = self.delta[qi];
+        }
+    }
+}
+
+/// Nibble-packed stage-1 code table for [`ScanLayout::Packed4`]: two
+/// 4-bit positions per byte, position `2j` in the low nibble of byte
+/// `j`, position `2j+1` in the high nibble (an odd last position leaves
+/// the final high nibble zero). Built at index assembly from the
+/// stage-1 scan table and kept in sync by the live mutation paths
+/// (append on ingest, gather on compaction).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    n: usize,
+    m: usize,
+    data: Vec<u8>,
+}
+
+impl PackedCodes {
+    /// Bytes per packed row for `m` code positions.
+    pub fn bytes_per_row(m: usize) -> usize {
+        m.div_ceil(2)
+    }
+
+    /// An empty table ready for [`push_row`](Self::push_row).
+    pub fn new(m: usize) -> PackedCodes {
+        PackedCodes { n: 0, m, data: Vec::new() }
+    }
+
+    /// Pack a full code table. Panics if any codeword exceeds a nibble
+    /// — build-time validation guarantees `k ≤ 16` first.
+    pub fn pack(codes: &Codes) -> PackedCodes {
+        let mut out = PackedCodes {
+            n: 0,
+            m: codes.m,
+            data: Vec::with_capacity(codes.n * Self::bytes_per_row(codes.m)),
+        };
+        for i in 0..codes.n {
+            out.push_row(codes.row(i));
+        }
+        out
+    }
+
+    /// Append one row (the live-ingest hook).
+    pub fn push_row(&mut self, code: &[u32]) {
+        assert_eq!(code.len(), self.m, "PackedCodes: row has {} positions, table {}", code.len(), self.m);
+        for pair in code.chunks(2) {
+            let lo = pair[0];
+            let hi = if pair.len() == 2 { pair[1] } else { 0 };
+            assert!(
+                lo < 16 && hi < 16,
+                "PackedCodes: codeword does not fit a nibble (k must be <= 16)"
+            );
+            self.data.push(lo as u8 | (hi as u8) << 4);
+        }
+        self.n += 1;
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u8] {
+        let bpr = Self::bytes_per_row(self.m);
+        &self.data[i * bpr..(i + 1) * bpr]
+    }
+
+    /// Row-gather for compaction: the packed analogue of
+    /// `gather_codes`.
+    pub fn gather(&self, keep: &[usize]) -> PackedCodes {
+        let bpr = Self::bytes_per_row(self.m);
+        let mut data = Vec::with_capacity(keep.len() * bpr);
+        for &i in keep {
+            data.extend_from_slice(self.row(i));
+        }
+        PackedCodes { n: keep.len(), m: self.m, data }
+    }
+}
+
+/// One LUT slot's scan-ready pack, shaped by the request's
+/// [`ScanLayout`]. Built by the batch engine's `scan_shortlists` and
+/// consumed by `IndexShard::scan_group`, which dispatches to the
+/// matching kernel. The `Transposed` variant carries the *flat* pack —
+/// transposition happens per bucket-group chunk at scan time (the
+/// transposed view is chunk-local by construction).
+#[derive(Debug)]
+pub enum ScanPack {
+    Flat(LutPack),
+    Transposed(LutPack),
+    Packed4(QuantLutPack),
+}
+
 /// Shared lane-parallel kernel behind the [`ApproxScorer::score_block`]
 /// overrides: score one code row against up to [`SCORE_BLOCK`] member
 /// queries per pass. `offsets` yields the LUT entry offsets the code row
@@ -139,6 +595,14 @@ pub const SCORE_BLOCK: usize = 8;
 /// accumulates in exactly the scalar order and finishes with the same
 /// `t − 2·ip` expression, keeping block scores bit-identical to
 /// [`ApproxScorer::score`].
+///
+/// # Safety of the unchecked loads
+///
+/// Member-index and pack-length bounds are proven **once at pack
+/// build** by [`LutPack::new`] + [`LutPack::check_members`] (the
+/// once-per-group scan precondition), not re-checked per call — the
+/// inner loop stays unchecked in release builds without a window for a
+/// bad `lut_slot` to read out of bounds.
 #[inline]
 pub(crate) fn score_block_lanes<I: Iterator<Item = usize>>(
     luts: &[f32],
@@ -149,9 +613,6 @@ pub(crate) fn score_block_lanes<I: Iterator<Item = usize>>(
     out: &mut [f32],
 ) {
     debug_assert_eq!(members.len(), out.len());
-    debug_assert!(members
-        .iter()
-        .all(|&qi| (qi as usize + 1) * stride <= luts.len()));
     for (mchunk, ochunk) in members.chunks(SCORE_BLOCK).zip(out.chunks_mut(SCORE_BLOCK)) {
         let mut base = [0usize; SCORE_BLOCK];
         for (l, &qi) in mchunk.iter().enumerate() {
@@ -175,6 +636,85 @@ pub(crate) fn score_block_lanes<I: Iterator<Item = usize>>(
         for (o, &a) in ochunk.iter_mut().zip(&acc) {
             *o = term - 2.0 * a;
         }
+    }
+}
+
+/// Transposed twin of [`score_block_lanes`]: the pack is already
+/// query-major (`tlut[off·SCORE_BLOCK + l]`, one chunk of ≤8 members —
+/// [`LutPack::fill_transposed`]), so every offset the code row selects
+/// is one unit-stride 8-wide load. Unused lanes of a partial chunk are
+/// zero-filled by the pack fill, letting the accumulate run branch-free
+/// over all [`SCORE_BLOCK`] lanes; only `out.len()` lanes are written
+/// back. Per-lane add order equals the flat kernel's (same offsets
+/// sequence, one add per offset), keeping scores **bit-identical** to
+/// [`ApproxScorer::score_block`] and the scalar
+/// [`ApproxScorer::score`].
+///
+/// Bounds: `tlut` spans `stride · SCORE_BLOCK` entries
+/// ([`LutPack::fill_transposed`] asserts it) and `offsets` yields
+/// values `< stride` (the scorer's code-validity precondition), so the
+/// unchecked loads stay in bounds.
+#[inline]
+pub(crate) fn score_tblock_lanes<I: Iterator<Item = usize>>(
+    tlut: &[f32],
+    offsets: impl Fn() -> I,
+    term: f32,
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() <= SCORE_BLOCK);
+    debug_assert_eq!(tlut.len() % SCORE_BLOCK, 0);
+    let mut acc = [0.0f32; SCORE_BLOCK];
+    for off in offsets() {
+        let base = off * SCORE_BLOCK;
+        for l in 0..SCORE_BLOCK {
+            acc[l] += unsafe { *tlut.get_unchecked(base + l) };
+        }
+    }
+    for (o, &a) in out.iter_mut().zip(&acc) {
+        *o = term - 2.0 * a;
+    }
+}
+
+/// The [`ScanLayout::Packed4`] row kernel: score one nibble-packed code
+/// row against a transposed u8 chunk (`t8[(p·16 + c)·SCORE_BLOCK + l]`,
+/// filled by [`QuantLutPack::fill_transposed`]) with per-lane
+/// dequantization `term − 2·(lo[l] + delta[l]·acc[l])`. Accumulates in
+/// `u32` (exact for any realistic `m`: ≤ 255·m per lane), branch-free
+/// over all [`SCORE_BLOCK`] lanes; only `out.len()` lanes are written.
+///
+/// Bounds: every nibble is < 16 and `p < m`, so `(p·16 + c)·8 + l <
+/// m·16·8 == t8.len()` — the loads stay unchecked on the strength of
+/// the pack-fill assertion.
+#[inline]
+pub(crate) fn score_packed4_lanes(
+    t8: &[u8],
+    prow: &[u8],
+    m: usize,
+    lo: &[f32],
+    delta: &[f32],
+    term: f32,
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() <= SCORE_BLOCK);
+    debug_assert_eq!(t8.len(), m * 16 * SCORE_BLOCK);
+    debug_assert_eq!(prow.len(), PackedCodes::bytes_per_row(m));
+    debug_assert!(lo.len() >= SCORE_BLOCK && delta.len() >= SCORE_BLOCK);
+    let mut acc = [0u32; SCORE_BLOCK];
+    for (j, &byte) in prow.iter().enumerate() {
+        let p = 2 * j;
+        let base = (p * 16 + (byte & 0x0F) as usize) * SCORE_BLOCK;
+        for l in 0..SCORE_BLOCK {
+            acc[l] += unsafe { *t8.get_unchecked(base + l) } as u32;
+        }
+        if p + 1 < m {
+            let base = ((p + 1) * 16 + (byte >> 4) as usize) * SCORE_BLOCK;
+            for l in 0..SCORE_BLOCK {
+                acc[l] += unsafe { *t8.get_unchecked(base + l) } as u32;
+            }
+        }
+    }
+    for (l, o) in out.iter_mut().enumerate() {
+        *o = term - 2.0 * (lo[l] + delta[l] * acc[l] as f32);
     }
 }
 
@@ -271,7 +811,7 @@ pub trait ApproxScorer: Send + Sync {
     fn score(&self, lut: &[f32], code: &[u32], t: f32) -> f32;
 
     /// Multi-query fast path: score **one code row** against a block of
-    /// co-probed queries' LUT slices in one pass.
+    /// co-probed queries' LUT slices in one pass ([`ScanLayout::Flat`]).
     ///
     /// `luts` is the batch engine's flat LUT pack — one
     /// [`lut_into`](Self::lut_into) slice of length `stride ==
@@ -286,7 +826,9 @@ pub trait ApproxScorer: Send + Sync {
     /// vectorize the LUT gathers across members.
     ///
     /// Same preconditions as `score`, plus `members.len() == out.len()`
-    /// and every member index addressing a full slice inside `luts`.
+    /// and every member index addressing a full slice inside `luts` —
+    /// the batch engine proves the latter once per pack/group through
+    /// [`LutPack`].
     fn score_block(
         &self,
         luts: &[f32],
@@ -301,6 +843,47 @@ pub trait ApproxScorer: Send + Sync {
             let lo = qi as usize * stride;
             *o = self.score(&luts[lo..lo + stride], code, term);
         }
+    }
+
+    /// [`ScanLayout::Transposed`] twin of [`score_block`](Self::score_block):
+    /// score one code row against one query-major transposed chunk
+    /// (`tlut[off·SCORE_BLOCK + lane]`, built by
+    /// [`LutPack::fill_transposed`] for `out.len() ≤ SCORE_BLOCK`
+    /// members; unused lanes zero-filled). Must be **bit-identical** to
+    /// the flat paths — same per-lane accumulation order, same
+    /// `t − 2·ip` finish (pinned by `tests/scorer_conformance.rs`).
+    ///
+    /// The default de-transposes each lane back into a scratch flat LUT
+    /// and calls [`score`](Self::score) — bit-exact for any third-party
+    /// scorer, but slow; the in-tree scorers override it with the
+    /// unit-stride `score_tblock_lanes` kernel.
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        let stride = self.lut_len();
+        debug_assert_eq!(tlut.len(), stride * SCORE_BLOCK);
+        debug_assert!(out.len() <= SCORE_BLOCK);
+        let mut flat = vec![0.0f32; stride];
+        for (l, o) in out.iter_mut().enumerate() {
+            for (off, f) in flat.iter_mut().enumerate() {
+                *f = tlut[off * SCORE_BLOCK + l];
+            }
+            *o = self.score(&flat, code, term);
+        }
+    }
+
+    /// [`ScanLayout::Packed4`] eligibility: `Some((m, k))` iff this
+    /// scorer walks an additive position-major LUT of `m` positions ×
+    /// `k ≤ 16` codewords (offset `p·k + c`), so its codes nibble-pack
+    /// and its LUTs quantize into a [`QuantLutPack`]. The default
+    /// `None` marks the layout unsupported — index assembly turns that
+    /// into a hard error naming the stage-1 family, never a silent
+    /// fallback. In tree only the PQ and RQ adapters (with small
+    /// enough k) qualify; AQ scans full-width QINCo2 codes, OPQ rotates
+    /// the query (its inner PQ geometry is not the scan geometry
+    /// callers see), LSQ is excluded with them as the non-deterministic
+    /// encoder, and the pairwise stage-2 scorer walks joint `k²`
+    /// sub-tables.
+    fn packed4_geometry(&self) -> Option<(usize, usize)> {
+        None
     }
 
     /// LUT-free scoring: `t − 2⟨q, decode(code)⟩` via direct dot
@@ -413,5 +996,129 @@ mod tests {
         let t = c.truncate(2);
         assert_eq!(t.row(0), &[1, 2]);
         assert_eq!(t.row(1), &[4, 5]);
+    }
+
+    #[test]
+    fn scan_layout_parse_and_wire_roundtrip() {
+        for layout in [ScanLayout::Flat, ScanLayout::Transposed, ScanLayout::Packed4] {
+            assert_eq!(ScanLayout::parse(layout.name()).unwrap(), layout);
+            assert_eq!(ScanLayout::from_wire(layout.wire_code()), Some(layout));
+        }
+        assert_eq!(ScanLayout::default(), ScanLayout::Flat);
+        // unknown names hard-error naming the flag
+        let err = ScanLayout::parse("simd").unwrap_err().to_string();
+        assert!(err.contains("--scan-layout") && err.contains("simd"), "{err}");
+        // unknown wire codes are None, not a default
+        assert_eq!(ScanLayout::from_wire(3), None);
+        assert_eq!(ScanLayout::from_wire(u32::MAX), None);
+    }
+
+    #[test]
+    fn lut_pack_constructor_is_the_bounds_proof() {
+        let p = LutPack::new(3, 2, vec![0.0; 6]);
+        assert_eq!((p.stride(), p.n_queries()), (3, 2));
+        p.check_members(3, [0u32, 1, 1, 0]);
+        // length mismatch: caught at build, not at scan
+        let bad = std::panic::catch_unwind(|| LutPack::new(3, 2, vec![0.0; 5]));
+        assert!(bad.is_err());
+        // stride mismatch (wrong lut_slot) and member out of range:
+        // caught by the once-per-group check
+        let p2 = LutPack::new(3, 2, vec![0.0; 6]);
+        assert!(std::panic::catch_unwind(|| p2.check_members(4, [0u32])).is_err());
+        let p3 = LutPack::new(3, 2, vec![0.0; 6]);
+        assert!(std::panic::catch_unwind(|| p3.check_members(3, [2u32])).is_err());
+        // the empty pack refuses every scan
+        let e = LutPack::empty();
+        assert!(std::panic::catch_unwind(|| e.check_members(3, [0u32])).is_err());
+    }
+
+    #[test]
+    fn transposed_fill_matches_the_flat_pack() {
+        // 2 queries x stride 4, recognizable values
+        let luts: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let p = LutPack::new(4, 2, luts);
+        let mut tlut = vec![f32::NAN; 4 * SCORE_BLOCK];
+        // partial chunk with a duplicated member
+        let members = [1u32, 0, 1];
+        p.fill_transposed(&members, &mut tlut);
+        for (l, &qi) in members.iter().enumerate() {
+            for off in 0..4 {
+                assert_eq!(tlut[off * SCORE_BLOCK + l], (qi as usize * 4 + off) as f32);
+            }
+        }
+        // unused lanes are zeroed, not stale
+        for off in 0..4 {
+            for l in members.len()..SCORE_BLOCK {
+                assert_eq!(tlut[off * SCORE_BLOCK + l], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_codes_roundtrip_gather_and_nibble_guard() {
+        // odd m: last byte's high nibble stays zero
+        let c = Codes::from_vec(2, 3, vec![1, 2, 3, 15, 0, 7]);
+        let p = PackedCodes::pack(&c);
+        assert_eq!((p.n(), p.m()), (2, 3));
+        assert_eq!(PackedCodes::bytes_per_row(3), 2);
+        assert_eq!(p.row(0), &[0x21, 0x03]);
+        assert_eq!(p.row(1), &[0x0F, 0x07]);
+        // gather keeps row payloads byte-identical
+        let g = p.gather(&[1]);
+        assert_eq!(g.row(0), p.row(1));
+        // push_row appends the same encoding pack() produces
+        let mut inc = PackedCodes::new(3);
+        inc.push_row(c.row(0));
+        inc.push_row(c.row(1));
+        assert_eq!(inc, p);
+        // a codeword outside the nibble range is a loud panic
+        let wide = Codes::from_vec(1, 2, vec![16, 0]);
+        assert!(std::panic::catch_unwind(|| PackedCodes::pack(&wide)).is_err());
+    }
+
+    #[test]
+    fn quantized_pack_respects_the_error_bound() {
+        // a deliberately uneven additive LUT: 2 queries, m=3, k=4
+        let (m, k, nq) = (3usize, 4usize, 2usize);
+        let mut luts = Vec::new();
+        for qi in 0..nq {
+            for e in 0..m * k {
+                luts.push(((qi * 31 + e * 7) % 13) as f32 * 0.37 - 1.9);
+            }
+        }
+        let flat = LutPack::new(m * k, nq, luts.clone());
+        let q = QuantLutPack::quantize(&flat, m, k);
+        assert_eq!((q.m(), q.n_queries()), (m, nq));
+        // reconstruct every (query, code row) score and compare to exact
+        let mut t8 = vec![0u8; m * 16 * SCORE_BLOCK];
+        let mut lo = vec![0.0f32; SCORE_BLOCK];
+        let mut delta = vec![0.0f32; SCORE_BLOCK];
+        let members = [0u32, 1];
+        q.fill_transposed(&members, &mut t8, &mut lo, &mut delta);
+        let codes: [&[u32]; 3] = [&[0, 0, 0], &[3, 1, 2], &[1, 3, 3]];
+        for code in codes {
+            let packed = {
+                let mut pc = PackedCodes::new(m);
+                pc.push_row(code);
+                pc
+            };
+            let mut out = vec![0.0f32; members.len()];
+            score_packed4_lanes(&t8, packed.row(0), m, &lo, &delta, 0.5, &mut out);
+            for (l, &qi) in members.iter().enumerate() {
+                let lut = &luts[qi as usize * m * k..(qi as usize + 1) * m * k];
+                let exact = additive_flat_score(k, lut, code, 0.5);
+                let bound = q.score_error_bound(qi) + 1e-5;
+                assert!(
+                    (out[l] - exact).abs() <= bound,
+                    "query {qi} code {code:?}: |{} - {exact}| > {bound}",
+                    out[l]
+                );
+            }
+        }
+        // the bound itself is the documented m·delta
+        assert_eq!(PACKED4_SCORING_VERSION, 1);
+        // geometry mismatches are loud
+        let flat2 = LutPack::new(m * k, nq, luts);
+        assert!(std::panic::catch_unwind(|| QuantLutPack::quantize(&flat2, m, 17)).is_err());
     }
 }

@@ -89,6 +89,17 @@ impl ApproxScorer for OpqScorer {
         self.pq_scorer.score_block(luts, stride, members, code, term, out)
     }
 
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        // like score_block: the rotation is baked into the pack at LUT
+        // build time, so the transposed kernel is the inner PQ one
+        self.pq_scorer.score_block_transposed(tlut, code, term, out)
+    }
+
+    // no packed4_geometry override: deliberately NOT delegated to the
+    // inner PQ — OPQ is excluded from Packed4 (requesting it must be a
+    // build-time error naming the family, never a silent fallback), so
+    // the default None stands even though the inner PQ would qualify
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         self.pq_scorer.score_direct(&self.rotate_q(q), code, t)
     }

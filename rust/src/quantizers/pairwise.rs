@@ -283,6 +283,25 @@ impl ApproxScorer for PairwiseDecoder {
         );
     }
 
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        debug_assert_eq!(tlut.len(), PairwiseDecoder::lut_len(self) * super::SCORE_BLOCK);
+        debug_assert!(code.iter().all(|&c| (c as usize) < self.k));
+        let (k, kk) = (self.k, self.k * self.k);
+        super::score_tblock_lanes(
+            tlut,
+            || {
+                self.steps.iter().enumerate().map(move |(s_idx, s)| {
+                    s_idx * kk + code[s.i] as usize * k + code[s.j] as usize
+                })
+            },
+            term,
+            out,
+        );
+    }
+
+    // no packed4_geometry override: joint k² sub-tables are not the
+    // additive position-major walk Packed4 nibble-packs
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let mut ip = 0.0f32;
         for s in &self.steps {

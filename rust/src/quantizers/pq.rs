@@ -131,6 +131,24 @@ impl ApproxScorer for PqScorer {
         );
     }
 
+    fn score_block_transposed(&self, tlut: &[f32], code: &[u32], term: f32, out: &mut [f32]) {
+        debug_assert_eq!(tlut.len(), self.lut_len() * super::SCORE_BLOCK);
+        debug_assert!(code.len() <= self.0.m && code.iter().all(|&c| (c as usize) < self.0.k));
+        let k = self.0.k;
+        super::score_tblock_lanes(
+            tlut,
+            || code.iter().enumerate().map(move |(s, &c)| s * k + c as usize),
+            term,
+            out,
+        );
+    }
+
+    // subspace-major `s·k + c` offsets are exactly the additive
+    // position-major walk, so PQ nibble-packs when k fits
+    fn packed4_geometry(&self) -> Option<(usize, usize)> {
+        (self.0.k <= 16).then_some((self.0.m, self.0.k))
+    }
+
     fn score_direct(&self, q: &[f32], code: &[u32], t: f32) -> f32 {
         let pq = &self.0;
         let mut ip = 0.0f32;

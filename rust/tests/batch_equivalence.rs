@@ -19,7 +19,8 @@
 
 use qinco2::data::{generate, Flavor};
 use qinco2::index::{
-    BatchSearcher, BuildCfg, PipelineConfig, SearchIndex, SearchParams, Stage1Kind, Stage3Kind,
+    BatchSearcher, BuildCfg, PipelineConfig, ScanLayout, SearchIndex, SearchParams, Stage1Kind,
+    Stage3Kind,
 };
 use qinco2::qinco::ParamStore;
 use qinco2::runtime::manifest::Manifest;
@@ -125,6 +126,10 @@ fn prop_batched_engine_equals_per_query_search_for_every_pipeline() {
             n_final,
             // exercise the intra-batch group-parallel scan too
             batch_threads: [1, 2, 4][g.usize_in(0, 2)],
+            // the transposed layout is contractually bit-identical to
+            // flat, so it must be equally invisible against the
+            // per-query baseline
+            scan_layout: [ScanLayout::Flat, ScanLayout::Transposed][g.usize_in(0, 1)],
         };
         for (label, index) in &indexes {
             let searcher = BatchSearcher::new(index);
@@ -226,26 +231,45 @@ fn block_kernel_and_batch_threads_pinned_bit_identical() {
             n_pairs: 12,
             n_final: 6,
             batch_threads: 1,
+            ..Default::default()
         };
         let plans: Vec<_> =
             (0..queries.rows).map(|i| searcher.plan(queries.row(i), &base_sp)).collect();
         let scalar = searcher.scan_stage1(&plans, &base_sp, 1, false);
         let block = searcher.scan_stage1(&plans, &base_sp, 1, true);
         assert_eq!(scalar, block, "[{label}] block kernel diverged from scalar scan");
+        // the transposed layout is pinned bit-identical to flat at the
+        // shortlist level, for both the scalar and block kernels
+        let tr_sp = SearchParams { scan_layout: ScanLayout::Transposed, ..base_sp };
+        for block in [false, true] {
+            assert_eq!(
+                searcher.scan_stage1(&plans, &tr_sp, 1, block),
+                scalar,
+                "[{label}] transposed scan (block={block}) diverged from flat"
+            );
+        }
         for t in [1usize, 2, 4] {
             assert_eq!(
                 searcher.scan_stage1(&plans, &base_sp, t, true),
                 scalar,
                 "[{label}] group-parallel scan diverged at {t} threads"
             );
-            let sp = SearchParams { batch_threads: t, ..base_sp };
-            let batched = index.search_batch(&queries, &sp).unwrap();
-            for i in 0..queries.rows {
-                assert_eq!(
-                    batched[i],
-                    index.search(queries.row(i), &sp),
-                    "[{label}] batch_threads={t} row {i}"
-                );
+            assert_eq!(
+                searcher.scan_stage1(&plans, &tr_sp, t, true),
+                scalar,
+                "[{label}] transposed group-parallel scan diverged at {t} threads"
+            );
+            for scan_layout in [ScanLayout::Flat, ScanLayout::Transposed] {
+                let sp = SearchParams { batch_threads: t, scan_layout, ..base_sp };
+                let batched = index.search_batch(&queries, &sp).unwrap();
+                for i in 0..queries.rows {
+                    assert_eq!(
+                        batched[i],
+                        index.search(queries.row(i), &sp),
+                        "[{label}] batch_threads={t} layout={} row {i}",
+                        scan_layout.name()
+                    );
+                }
             }
         }
     }
@@ -311,12 +335,29 @@ fn shard_count_invariance_bit_identical_across_pipelines() {
     // shards must be invisible in the results — shards ∈ {1, 2, 3, 5}
     // (5 does not divide the 12 buckets) bit-identical to the unsharded
     // index for every pipeline configuration, for both `search` and
-    // `search_batch`, at batch_threads ∈ {1, 4}
+    // `search_batch`, at batch_threads ∈ {1, 4} and for both exact scan
+    // layouts (flat and transposed)
     let queries = generate(Flavor::Deep, 14, 8, 95);
     let sps = [
-        SearchParams { nprobe: 6, ef_search: 48, n_aq: 48, n_pairs: 12, n_final: 6, batch_threads: 1 },
+        SearchParams {
+            nprobe: 6,
+            ef_search: 48,
+            n_aq: 48,
+            n_pairs: 12,
+            n_final: 6,
+            batch_threads: 1,
+            ..Default::default()
+        },
         // degenerate knobs must stay invariant too
-        SearchParams { nprobe: 4, ef_search: 32, n_aq: 24, n_pairs: 0, n_final: 0, batch_threads: 1 },
+        SearchParams {
+            nprobe: 4,
+            ef_search: 32,
+            n_aq: 24,
+            n_pairs: 0,
+            n_final: 0,
+            batch_threads: 1,
+            ..Default::default()
+        },
     ];
     for (label, cfg) in configs() {
         let base = build_index_sharded(101, 240, 200, cfg.clone(), 1);
@@ -335,21 +376,25 @@ fn shard_count_invariance_bit_identical_across_pipelines() {
             assert_eq!(idx.snapshot().n_shards(), shards, "[{label}]");
             for (base_sp, (base_single, base_batch)) in sps.iter().zip(&baselines) {
                 for threads in [1usize, 4] {
-                    let sp = SearchParams { batch_threads: threads, ..*base_sp };
-                    for i in 0..queries.rows {
+                    for scan_layout in [ScanLayout::Flat, ScanLayout::Transposed] {
+                        let sp =
+                            SearchParams { batch_threads: threads, scan_layout, ..*base_sp };
+                        for i in 0..queries.rows {
+                            assert_eq!(
+                                idx.search(queries.row(i), &sp),
+                                base_single[i],
+                                "[{label}] shards={shards} threads={threads} query {i}: \
+                                 per-query search diverged from the unsharded index"
+                            );
+                        }
                         assert_eq!(
-                            idx.search(queries.row(i), &sp),
-                            base_single[i],
-                            "[{label}] shards={shards} threads={threads} query {i}: \
-                             per-query search diverged from the unsharded index"
+                            &idx.search_batch(&queries, &sp).unwrap(),
+                            base_batch,
+                            "[{label}] shards={shards} threads={threads} layout={}: \
+                             batched search diverged from the unsharded index",
+                            scan_layout.name()
                         );
                     }
-                    assert_eq!(
-                        &idx.search_batch(&queries, &sp).unwrap(),
-                        base_batch,
-                        "[{label}] shards={shards} threads={threads}: \
-                         batched search diverged from the unsharded index"
-                    );
                 }
             }
         }
@@ -447,9 +492,15 @@ fn heterogeneous_shard_pipelines_run_their_own_tables() {
         idx.pipeline.stage1.lut_len(),
         "override shard must expose its own LUT geometry"
     );
-    // batched == per-query, results well-formed
+    // batched == per-query, results well-formed — in both exact layouts
+    // (the transposed pack repacks per heterogeneous LUT slot too)
     let queries = generate(Flavor::Deep, 16, 8, 96);
-    for threads in [1usize, 4] {
+    for (threads, scan_layout) in [
+        (1usize, ScanLayout::Flat),
+        (4, ScanLayout::Flat),
+        (1, ScanLayout::Transposed),
+        (4, ScanLayout::Transposed),
+    ] {
         let sp = SearchParams {
             nprobe: 8,
             ef_search: 48,
@@ -457,6 +508,7 @@ fn heterogeneous_shard_pipelines_run_their_own_tables() {
             n_pairs: 12,
             n_final: 6,
             batch_threads: threads,
+            scan_layout,
         };
         let batched = idx.search_batch(&queries, &sp).unwrap();
         for i in 0..queries.rows {
@@ -503,6 +555,7 @@ fn full_override_matches_the_homogeneous_pipeline() {
         n_pairs: 12,
         n_final: 6,
         batch_threads: 1,
+        ..Default::default()
     };
     assert_eq!(
         over.search_batch(&queries, &sp).unwrap(),

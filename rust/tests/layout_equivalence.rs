@@ -1,0 +1,280 @@
+//! The `--scan-layout` contract, pinned at the engine level:
+//!
+//! - `Transposed` is **bit-identical** to `Flat` — same ids, same
+//!   scores, same order — for every stage-1 family, shard count, and
+//!   thread count, including on an index that was assembled with packed
+//!   tables (building them must not perturb the flat path).
+//! - `Packed4` scores in a *versioned* bounded-error quantized mode:
+//!   every shortlist score deviates from the exact flat score of the
+//!   same candidate by at most
+//!   [`QuantLutPack::score_error_bound`]` = m·delta`, and the ranking
+//!   it induces agrees with the exact ranking at the top (mean top-10
+//!   overlap). The quantization scheme is frozen under
+//!   [`PACKED4_SCORING_VERSION`]; bumping that constant is the signal
+//!   to re-derive the thresholds here.
+//! - A `Packed4` *request* against an index that was not assembled with
+//!   packed tables is a typed request error naming the layout — never a
+//!   silent fallback to flat.
+//!
+//! Like `batch_equivalence`, the indexes are built engine-free from the
+//! in-repo `artifacts/manifest.json` test model and the pure-Rust
+//! reference encoder.
+
+use std::collections::HashMap;
+
+use qinco2::data::{generate, Flavor};
+use qinco2::index::{
+    BatchSearcher, BuildCfg, PipelineConfig, ScanLayout, SearchIndex, SearchParams, Stage1Kind,
+    Stage3Kind,
+};
+use qinco2::qinco::ParamStore;
+use qinco2::quantizers::{ApproxScorer, LutPack, QuantLutPack, PACKED4_SCORING_VERSION};
+use qinco2::runtime::manifest::Manifest;
+use qinco2::tensor::Matrix;
+
+/// The packed4-eligible stage-1 families under test (additive, k ≤ 16
+/// over the 8-dim test model), with labels for failure messages.
+fn families() -> Vec<(&'static str, Stage1Kind)> {
+    vec![("pq-m4", Stage1Kind::Pq { m: 4 }), ("rq-m3", Stage1Kind::Rq { m: 3 })]
+}
+
+fn build_index(
+    seed: u64,
+    stage1: Stage1Kind,
+    shards: usize,
+    scan_layout: ScanLayout,
+) -> SearchIndex {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    let spec = Manifest::load(&p).unwrap().model("test").unwrap().clone();
+    let train = generate(Flavor::Deep, 260, spec.cfg.d, seed);
+    let db = generate(Flavor::Deep, 220, spec.cfg.d, seed ^ 1);
+    let params = ParamStore::init(&spec, "test", &train, seed ^ 2);
+    let cfg = BuildCfg {
+        k_ivf: 12,
+        m_tilde: 1,
+        fit_sample: 200,
+        pipeline: PipelineConfig { stage1, stage2: true, stage3: Stage3Kind::Reference },
+        shards,
+        scan_layout,
+        ..Default::default()
+    };
+    SearchIndex::build_reference(params, &train, &db, &cfg)
+}
+
+fn queries() -> Matrix {
+    generate(Flavor::Deep, 24, 8, 99)
+}
+
+/// Mean fraction of `base`'s top-`k` ids that `other`'s top-`k` also
+/// contains, averaged over queries with a non-empty base top-`k`.
+fn mean_topk_overlap(other: &[Vec<(f32, u32)>], base: &[Vec<(f32, u32)>], k: usize) -> f64 {
+    assert_eq!(other.len(), base.len());
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    for (o, b) in other.iter().zip(base) {
+        let b_top: Vec<u32> = b.iter().take(k).map(|&(_, id)| id).collect();
+        if b_top.is_empty() {
+            continue;
+        }
+        let o_top: Vec<u32> = o.iter().take(k).map(|&(_, id)| id).collect();
+        let hits = b_top.iter().filter(|id| o_top.contains(id)).count();
+        total += hits as f64 / b_top.len() as f64;
+        counted += 1;
+    }
+    if counted == 0 {
+        1.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[test]
+fn packed4_scoring_version_is_pinned() {
+    // This suite asserts the v1 contract (per-position min, per-query
+    // delta, round-to-nearest u8, bound = m·delta). A version bump
+    // means the scheme changed and these thresholds were re-derived —
+    // update this pin deliberately, in the same change.
+    assert_eq!(PACKED4_SCORING_VERSION, 1);
+}
+
+#[test]
+fn transposed_is_bit_identical_on_a_packed4_built_index() {
+    // Assembling packed tables must leave the exact layouts untouched:
+    // on a Packed4-built index, flat batched == per-query search, and
+    // transposed == flat bitwise, for every family / shard / thread
+    // combination.
+    let qs = queries();
+    for (label, stage1) in families() {
+        for shards in [1usize, 3] {
+            let idx = build_index(301, stage1.clone(), shards, ScanLayout::Packed4);
+            let per_query: Vec<Vec<(f32, u32)>> = (0..qs.rows)
+                .map(|r| idx.search(qs.row(r), &SearchParams::default()))
+                .collect();
+            for threads in [1usize, 4] {
+                for scan_layout in [ScanLayout::Flat, ScanLayout::Transposed] {
+                    let sp = SearchParams {
+                        batch_threads: threads,
+                        scan_layout,
+                        ..Default::default()
+                    };
+                    let batched = idx.search_batch(&qs, &sp).unwrap();
+                    assert_eq!(
+                        batched,
+                        per_query,
+                        "[{label}] shards={shards} threads={threads} layout={}: batched engine \
+                         diverged from per-query search on a packed4-built index",
+                        scan_layout.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed4_scores_stay_within_the_versioned_error_bound() {
+    let qs = queries();
+    for (label, stage1) in families() {
+        for shards in [1usize, 3] {
+            let idx = build_index(302, stage1.clone(), shards, ScanLayout::Packed4);
+            let searcher = BatchSearcher::new(&idx);
+
+            // Rebuild the exact quantized pack the engine builds for
+            // this batch (same lut_into fills, same quantize call), so
+            // the asserted bound is the engine's own, not a re-derived
+            // approximation.
+            let scorer = idx.pipeline.stage1.as_ref();
+            let (m, k) = scorer
+                .packed4_geometry()
+                .unwrap_or_else(|| panic!("[{label}] family lost its packed4 geometry"));
+
+            for threads in [1usize, 4] {
+                for n_aq in [8usize, 32, 128] {
+                    let sp = SearchParams { n_aq, ..Default::default() };
+                    let plans: Vec<_> =
+                        (0..qs.rows).map(|r| searcher.plan(qs.row(r), &sp)).collect();
+
+                    let stride = scorer.lut_len();
+                    let mut luts = vec![0.0f32; plans.len() * stride];
+                    for (qi, plan) in plans.iter().enumerate() {
+                        scorer.lut_into(&plan.query, &mut luts[qi * stride..(qi + 1) * stride]);
+                    }
+                    let qpack =
+                        QuantLutPack::quantize(&LutPack::new(stride, plans.len(), luts), m, k);
+
+                    // Exact reference: an effectively unbounded flat
+                    // shortlist holds the exact stage-1 score of every
+                    // candidate the probes reach, so each packed4
+                    // entry has an exact counterpart to compare with.
+                    let exact_sp = SearchParams { n_aq: 4096, ..Default::default() };
+                    let exact = searcher.scan_stage1(&plans, &exact_sp, threads, true);
+
+                    let flat_sp = SearchParams { n_aq, ..Default::default() };
+                    let flat = searcher.scan_stage1(&plans, &flat_sp, threads, true);
+                    let p4_sp = SearchParams {
+                        n_aq,
+                        scan_layout: ScanLayout::Packed4,
+                        ..Default::default()
+                    };
+                    let p4 = searcher.scan_stage1(&plans, &p4_sp, threads, true);
+
+                    for (qi, (p4_list, flat_list)) in p4.iter().zip(&flat).enumerate() {
+                        // Same probes, same tombstone-free rows: the
+                        // quantized scan must rank the same candidate
+                        // pool, so the bounded lists have equal length.
+                        assert_eq!(
+                            p4_list.len(),
+                            flat_list.len(),
+                            "[{label}] shards={shards} threads={threads} n_aq={n_aq} q{qi}: \
+                             packed4 scanned a different candidate count than flat"
+                        );
+                        let exact_by_id: HashMap<u32, f32> =
+                            exact[qi].iter().map(|&(s, id)| (id, s)).collect();
+                        let bound = qpack.score_error_bound(qi as u32);
+                        let tol = bound * 1.001 + 1e-3;
+                        for &(s, id) in p4_list {
+                            let &e = exact_by_id.get(&id).unwrap_or_else(|| {
+                                panic!(
+                                    "[{label}] q{qi}: packed4 returned id {id} the flat scan \
+                                     never scored"
+                                )
+                            });
+                            assert!(
+                                (s - e).abs() <= tol,
+                                "[{label}] shards={shards} threads={threads} n_aq={n_aq} q{qi} \
+                                 id {id}: quantized score {s} is {} from exact {e}, bound {bound}",
+                                (s - e).abs()
+                            );
+                        }
+                    }
+
+                    // At a generous shortlist the quantized top-10 must
+                    // agree with the exact top-10 — the rank-agreement
+                    // half of the v1 contract.
+                    if n_aq == 128 {
+                        let overlap = mean_topk_overlap(&p4, &flat, 10);
+                        assert!(
+                            overlap >= 0.7,
+                            "[{label}] shards={shards} threads={threads}: packed4 stage-1 \
+                             top-10 overlap {overlap:.3} < 0.7 vs exact flat"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed4_end_to_end_rank_agreement() {
+    // Full pipeline (stage 1 quantized shortlist → exact stage-2
+    // re-rank → reference stage-3): the final top-10 must agree with
+    // the all-exact flat pipeline's, since both re-rank their
+    // shortlists exactly and the shortlists largely coincide.
+    let qs = queries();
+    for (label, stage1) in families() {
+        let idx = build_index(303, stage1, 3, ScanLayout::Packed4);
+        for threads in [1usize, 4] {
+            let base = SearchParams {
+                n_aq: 128,
+                n_pairs: 32,
+                n_final: 10,
+                batch_threads: threads,
+                ..Default::default()
+            };
+            let flat = idx.search_batch(&qs, &base).unwrap();
+            let p4_sp = SearchParams { scan_layout: ScanLayout::Packed4, ..base };
+            let p4 = idx.search_batch(&qs, &p4_sp).unwrap();
+            let overlap = mean_topk_overlap(&p4, &flat, 10);
+            assert!(
+                overlap >= 0.8,
+                "[{label}] threads={threads}: packed4 end-to-end top-10 overlap {overlap:.3} \
+                 < 0.8 vs the exact flat pipeline"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed4_request_on_a_flat_built_index_is_a_typed_error() {
+    let qs = queries();
+    let idx = build_index(304, Stage1Kind::Pq { m: 4 }, 1, ScanLayout::Flat);
+
+    // The exact layouts still serve...
+    for scan_layout in [ScanLayout::Flat, ScanLayout::Transposed] {
+        let sp = SearchParams { scan_layout, ..Default::default() };
+        assert!(idx.search_batch(&qs, &sp).is_ok());
+    }
+
+    // ...but a packed4 request must be refused by name, both through
+    // the matrix front door and through an explicit engine execute —
+    // never silently downgraded to a flat scan.
+    let sp = SearchParams { scan_layout: ScanLayout::Packed4, ..Default::default() };
+    let err = idx.search_batch(&qs, &sp).unwrap_err().to_string();
+    assert!(err.contains("packed4"), "error does not name the layout: {err}");
+
+    let searcher = BatchSearcher::new(&idx);
+    let plans: Vec<_> = (0..qs.rows).map(|r| searcher.plan(qs.row(r), &sp)).collect();
+    let err = searcher.execute(&plans, &sp).unwrap_err().to_string();
+    assert!(err.contains("packed4"), "engine error does not name the layout: {err}");
+}

@@ -150,6 +150,7 @@ fn mutated_index_is_bit_identical_to_fresh_build_over_survivors() {
                     n_pairs: 12,
                     n_final: 6,
                     batch_threads: 1,
+                    ..Default::default()
                 },
                 // stage-2/3 disabled must stay identical too
                 SearchParams {
@@ -159,6 +160,7 @@ fn mutated_index_is_bit_identical_to_fresh_build_over_survivors() {
                     n_pairs: 0,
                     n_final: 0,
                     batch_threads: 1,
+                    ..Default::default()
                 },
             ];
             // phase 1: deletes are still tombstones; phase 2: compacted
@@ -284,6 +286,7 @@ fn pinned_readers_never_observe_a_mutation() {
         n_pairs: 16,
         n_final: 8,
         batch_threads: 1,
+        ..Default::default()
     };
 
     // pin a snapshot and a BatchSearcher before any mutation
@@ -387,6 +390,7 @@ fn beam_ingest_is_valid_and_encode_params_are_validated() {
         n_pairs: 32,
         n_final: 10,
         batch_threads: 1,
+        ..Default::default()
     };
     let res = idx.search_batch(&extra, &sp).unwrap();
     assert!(res.iter().all(|r| !r.is_empty() && r.iter().all(|&(_, id)| (id as usize) < idx.db_len())));

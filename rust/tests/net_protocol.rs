@@ -10,7 +10,7 @@ use qinco2::net::frame::{
     Poll, ProtocolError, SearchBody, WireStatus, WriteBody, CONN_NOTICE_ID, DEFAULT_FRAME_MAX,
     HEADER_LEN, MAGIC, MIN_FRAME_MAX, VERSION,
 };
-use qinco2::index::SearchParams;
+use qinco2::index::{ScanLayout, SearchParams};
 use qinco2::net::{NetCfg, NetClient, NetServer};
 use qinco2::server::{Router, RouterError, ServerCfg, Stats, WriteOp};
 use qinco2::util::prop::{check, Gen};
@@ -198,6 +198,8 @@ fn prop_search_and_write_bodies_roundtrip() {
                 n_pairs: g.usize_in(0, 32),
                 n_final: g.usize_in(0, 100),
                 batch_threads: g.usize_in(0, 8),
+                scan_layout: [ScanLayout::Flat, ScanLayout::Transposed, ScanLayout::Packed4]
+                    [g.usize_in(0, 2)],
             },
             deadline_ms: g.rng.below(10_000) as u64,
             query: g.vec_f32(g.usize_in(0, 2 * g.size), -10.0, 10.0),

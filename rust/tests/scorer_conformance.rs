@@ -13,6 +13,9 @@
 //! * `score_block` over a multi-query LUT pack is **bit-identical** to
 //!   scalar `score` per member — the batched engine's block kernel must
 //!   not perturb a single ULP, or batched results drift from per-query;
+//! * `score_block_transposed` over the query-major repack of the same
+//!   chunk is bit-identical to `score_block` lane for lane — the
+//!   `--scan-layout transposed` contract;
 //! * `lut` / `lut_into` / `lut_len` are consistent;
 //! * rankings are visit-order independent under the total (score, id)
 //!   order of `util::topk::Shortlist` — the invariant that keeps the
@@ -25,7 +28,7 @@ use qinco2::quantizers::opq::{Opq, OpqScorer};
 use qinco2::quantizers::pairwise::PairwiseDecoder;
 use qinco2::quantizers::pq::{Pq, PqScorer};
 use qinco2::quantizers::rq::{Rq, RqScorer};
-use qinco2::quantizers::{ApproxScorer, Codes};
+use qinco2::quantizers::{ApproxScorer, Codes, LutPack, SCORE_BLOCK};
 use qinco2::tensor::{self, Matrix};
 use qinco2::util::prop::{check, Gen};
 use qinco2::util::topk::Shortlist;
@@ -115,7 +118,10 @@ fn check_contract(
 /// The multi-query kernel property: for every code row, `score_block`
 /// over a flat pack of `qs` must write exactly the bits scalar `score`
 /// produces for each member — including duplicated members and blocks
-/// longer than the kernels' 8 accumulator lanes (chunking path).
+/// longer than the kernels' 8 accumulator lanes (chunking path) — and
+/// `score_block_transposed` over the query-major repack of the same
+/// chunk must write exactly the same bits again (the transposed scan
+/// layout is bit-identical to flat by contract).
 fn check_score_block(
     name: &str,
     scorer: &dyn ApproxScorer,
@@ -134,6 +140,9 @@ fn check_score_block(
     let members: Vec<u32> =
         (0..nq).chain(0..nq).chain([0, nq - 1, 0]).collect();
     let mut out = vec![0.0f32; members.len()];
+    let pack = LutPack::new(stride, qs.len(), luts.clone());
+    let mut tlut = vec![0.0f32; stride * SCORE_BLOCK];
+    let mut tout = vec![0.0f32; members.len()];
     for i in 0..codes.n {
         let code = codes.row(i);
         scorer.score_block(&luts, stride, &members, code, norms[i], &mut out);
@@ -145,6 +154,22 @@ fn check_score_block(
                     "{name}: score_block lane {b} (query {qi}, row {i}) = {} but scalar \
                      score = {want} — block kernel must be bit-identical",
                     out[b]
+                ));
+            }
+        }
+        // transposed repack, chunk by chunk exactly as the shard scan
+        // does: same bits as the flat block kernel, lane for lane
+        for (chunk, tchunk) in
+            members.chunks(SCORE_BLOCK).zip(tout.chunks_mut(SCORE_BLOCK))
+        {
+            pack.fill_transposed(chunk, &mut tlut);
+            scorer.score_block_transposed(&tlut, code, norms[i], &mut tchunk[..chunk.len()]);
+        }
+        for (b, (&t, &f)) in tout.iter().zip(&out).enumerate() {
+            if t.to_bits() != f.to_bits() {
+                return Err(format!(
+                    "{name}: score_block_transposed lane {b} (row {i}) = {t} but flat \
+                     score_block = {f} — the transposed layout must be bit-identical"
                 ));
             }
         }
